@@ -1,0 +1,111 @@
+//! End-to-end driver: the full HeM3D design campaign on all six
+//! benchmarks — the headline experiment (Fig 9) plus validation of every
+//! winner with the cycle-level NoC simulator and (when `artifacts/` has
+//! been built) a cross-check of the Pareto fronts through the AOT PJRT
+//! kernels.  The run is recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example design_hem3d`
+//! (set HEM3D_EFFORT=full for the figure-grade run; default is `quick`).
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{run_leg, Algo, Effort, LegWorld, Selection};
+use hem3d::coordinator::{batch, noc_validate};
+use hem3d::coordinator::report::{f, table};
+use hem3d::noc::routing::Routing;
+use hem3d::opt::Mode;
+use hem3d::runtime::Evaluator;
+
+const BENCHES: [&str; 6] = ["bp", "nw", "lv", "lud", "knn", "pf"];
+
+fn main() -> anyhow::Result<()> {
+    let effort = match std::env::var("HEM3D_EFFORT").as_deref() {
+        Ok("full") => Effort::full(),
+        _ => Effort::quick(),
+    };
+    let seed = 42u64;
+    let evaluator = Evaluator::load("artifacts").ok();
+    if evaluator.is_none() {
+        eprintln!("note: artifacts/ missing — run `make artifacts` for the PJRT cross-check");
+    }
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut gains = Vec::new();
+    let mut dts = Vec::new();
+
+    for bench in BENCHES {
+        // TSV baseline (= TSV-PT per §5.4) and HeM3D-PO.
+        let tsv_world = LegWorld::new(bench, Tech::Tsv, seed);
+        let bl = run_leg(&tsv_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, seed);
+        let m3d_world = LegWorld::new(bench, Tech::M3d, seed);
+        let po = run_leg(&m3d_world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, seed);
+
+        // Validate both winners with the cycle-level NoC simulator.
+        let ctx_bl = tsv_world.encode_ctx();
+        let r_bl = Routing::build(&bl.winner.design);
+        let sim_bl = noc_validate(&ctx_bl, &bl.winner.design, &r_bl, 20_000, seed);
+        let ctx_po = m3d_world.encode_ctx();
+        let r_po = Routing::build(&po.winner.design);
+        let sim_po = noc_validate(&ctx_po, &po.winner.design, &r_po, 20_000, seed);
+
+        // Optional: score the HeM3D Pareto front through the AOT kernels.
+        let mut xcheck = "-".to_string();
+        if let Some(ev) = &evaluator {
+            let designs: Vec<&hem3d::arch::Design> = po
+                .candidates
+                .iter()
+                .take(hem3d::runtime::dims::MOO_BATCH)
+                .map(|c| &c.design)
+                .collect();
+            let art = batch::artifact_scores(ev, &ctx_po, &designs)?;
+            let mut max_rel = 0.0f64;
+            for (d, a) in designs.iter().zip(art.iter()) {
+                let routing = Routing::build(d);
+                let n = hem3d::eval::objectives::evaluate(&ctx_po, d, &routing);
+                for (x, y) in a.as_vec().iter().zip(n.as_vec().iter()) {
+                    max_rel = max_rel.max((x - y).abs() / y.abs().max(1e-9));
+                }
+            }
+            anyhow::ensure!(max_rel < 1e-3, "artifact/native divergence {max_rel:.2e}");
+            xcheck = format!("{max_rel:.1e}");
+        }
+
+        let gain = 1.0 - po.winner.et / bl.winner.et;
+        let dt = bl.winner.temp_c - po.winner.temp_c;
+        gains.push(gain);
+        dts.push(dt);
+        rows.push(vec![
+            bench.to_string(),
+            f(bl.winner.et, 2),
+            f(po.winner.et, 2),
+            format!("{:.1}%", 100.0 * gain),
+            f(bl.winner.temp_c, 1),
+            f(po.winner.temp_c, 1),
+            f(dt, 1),
+            f(sim_bl.mean_latency, 1),
+            f(sim_po.mean_latency, 1),
+            xcheck,
+        ]);
+    }
+
+    println!("\nHeM3D-PO vs TSV-BL — end-to-end campaign (effort: {} )",
+        if matches!(std::env::var("HEM3D_EFFORT").as_deref(), Ok("full")) { "full" } else { "quick" });
+    println!(
+        "{}",
+        table(
+            &["bench", "ET(tsv)", "ET(hem3d)", "gain", "T(tsv)C", "T(hem3d)C", "dT", "simlat(tsv)", "simlat(m3d)", "pjrt-err"],
+            &rows
+        )
+    );
+    let avg_gain = gains.iter().sum::<f64>() / gains.len() as f64;
+    let max_gain = gains.iter().cloned().fold(f64::MIN, f64::max);
+    let avg_dt = dts.iter().sum::<f64>() / dts.len() as f64;
+    let max_dt = dts.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "headline: avg ET gain {:.1}% (paper 14.2%), max {:.1}% (paper 18.3%); avg dT {:.1}C (paper ~18C), max {:.1}C (paper ~19C)",
+        100.0 * avg_gain,
+        100.0 * max_gain,
+        avg_dt,
+        max_dt
+    );
+    Ok(())
+}

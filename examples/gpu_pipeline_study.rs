@@ -1,0 +1,74 @@
+//! GPU pipeline study (Fig 6 companion): runs the planar synthesis + M3D
+//! projection across several netlist seeds and tier counts, reporting the
+//! distribution of frequency and energy gains — the robustness check for
+//! the 0.70 -> 0.77 GHz claim.
+//!
+//! Run: `cargo run --release --example gpu_pipeline_study`
+
+use hem3d::timing::m3d::{block_energy_caps, time_block_m3d, M3dConfig};
+use hem3d::timing::netlist::{gpu_stage_specs, Process};
+use hem3d::timing::pipeline::analyze_gpu_pipeline;
+use hem3d::timing::sta::time_block_planar;
+
+fn main() {
+    // 1. Seed sweep: how stable are the projected gains?
+    println!("Seed sweep (planar 0.70 GHz anchor):");
+    println!("{:<6} {:>9} {:>9} {:>8} {:>8}", "seed", "m3d GHz", "gain%", "energy%", "crit");
+    let mut freq_gains = Vec::new();
+    for seed in [11u64, 42, 97, 1234, 31337] {
+        let r = analyze_gpu_pipeline(seed);
+        let gain = 100.0 * (r.m3d_freq_ghz / r.planar_freq_ghz - 1.0);
+        freq_gains.push(gain);
+        println!(
+            "{:<6} {:>9.3} {:>8.1}% {:>7.1}% {:>8}",
+            seed,
+            r.m3d_freq_ghz,
+            gain,
+            100.0 * (1.0 - r.energy_ratio),
+            r.m3d_critical_stage
+        );
+    }
+    let mean_gain = freq_gains.iter().sum::<f64>() / freq_gains.len() as f64;
+    println!("mean frequency gain: {mean_gain:.1}% (paper: 10%)\n");
+
+    // 2. Tier-count ablation on the two critical stages.
+    println!("Tier-count ablation (critical path, seed 42):");
+    println!("{:<8} {:>10} {:>10} {:>10}", "stage", "planar ps", "2-tier ps", "4-tier ps");
+    let proc_ = Process::default();
+    for spec in gpu_stage_specs() {
+        if spec.name != "simd" && spec.name != "lsu" {
+            continue;
+        }
+        let nl = spec.generate(42);
+        let planar = time_block_planar(&proc_, &nl);
+        let two = time_block_m3d(&proc_, &nl, &M3dConfig { n_tiers: 2, ..Default::default() });
+        let four = time_block_m3d(&proc_, &nl, &M3dConfig { n_tiers: 4, ..Default::default() });
+        println!(
+            "{:<8} {:>10.1} {:>10.1} {:>10.1}",
+            spec.name, planar.critical_ps, two.critical_ps, four.critical_ps
+        );
+    }
+
+    // 3. Modification ablation: what the paper's two netlist tricks buy.
+    println!("\nModification ablation (seed 42, all stages, 2 tiers):");
+    println!("{:<10} {:>12} {:>12} {:>10}", "stage", "plain-scale", "+mods ps", "extra%");
+    for spec in gpu_stage_specs() {
+        let nl = spec.generate(42);
+        let plain = M3dConfig { collapse_pairs: false, offload_branches: false, ..Default::default() };
+        let full = M3dConfig::default();
+        let a = time_block_m3d(&proc_, &nl, &plain).critical_ps;
+        let b = time_block_m3d(&proc_, &nl, &full).critical_ps;
+        println!("{:<10} {:>12.1} {:>12.1} {:>9.2}%", spec.name, a, b, 100.0 * (1.0 - b / a));
+    }
+
+    // 4. Energy decomposition for the largest block.
+    let spec = gpu_stage_specs().into_iter().find(|s| s.name == "simd").unwrap();
+    let nl = spec.generate(42);
+    let (planar_cap, m3d_cap) = block_energy_caps(&proc_, &nl, &M3dConfig::default());
+    println!(
+        "\nSIMD switched capacitance: planar {:.0} fF -> m3d {:.0} fF ({:.1}% saving)",
+        planar_cap,
+        m3d_cap,
+        100.0 * (1.0 - m3d_cap / planar_cap)
+    );
+}

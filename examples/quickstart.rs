@@ -1,0 +1,57 @@
+//! Quickstart: score one candidate HeM3D design end to end.
+//!
+//! Builds the paper's 64-tile configuration, generates a Backprop-like
+//! traffic trace, evaluates the four MOO objectives (Eqs. 1-8) for a mesh
+//! baseline and a small-world NoC, and prints the detailed temperature and
+//! execution-time estimates for both.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, Tech, TechParams};
+use hem3d::coordinator::validate::detailed_peak_temp;
+use hem3d::eval::objectives::evaluate;
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::perf::{exec_time, PerfCoeffs};
+use hem3d::traffic::{benchmark, generate};
+use hem3d::util::Rng;
+
+fn main() {
+    // 1. The paper's architecture (8 CPU + 40 GPU + 16 LLC over 4 tiers)
+    //    in both integration technologies.
+    let cfg = ArchConfig::paper();
+    let tiles = TileSet::from_arch(&cfg);
+    let profile = benchmark("bp").expect("bp profile");
+
+    for tech_kind in [Tech::Tsv, Tech::M3d] {
+        let tech = TechParams::for_tech(tech_kind);
+        let geo = Geometry::new(&cfg, &tech);
+        let trace = generate(&profile, &tiles, cfg.windows, 42);
+        let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+        // 2. Two candidate designs: 3D mesh and a seeded small-world NoC.
+        let mesh = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let mut rng = Rng::seed_from_u64(7);
+        let sw_links = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng);
+        let swnoc = Design::random_placement(&cfg, sw_links, &mut rng);
+
+        println!("=== {} ===", tech_kind.name());
+        for (name, design) in [("mesh", &mesh), ("swnoc", &swnoc)] {
+            let routing = Routing::build(design);
+            let scores = evaluate(&ctx, design, &routing);
+            let et = exec_time(&ctx, &profile, design, &routing, &scores, &PerfCoeffs::default());
+            let temp = detailed_peak_temp(&ctx, design);
+            println!(
+                "{name:>6}: lat={:8.2}  umean={:.4}  usigma={:.4}  ET={:8.2}  T={:5.1}C  (mean hops {:.2})",
+                scores.lat,
+                scores.umean,
+                scores.usigma,
+                et.total,
+                temp,
+                routing.mean_hops()
+            );
+        }
+        println!();
+    }
+    println!("next: `hem3d optimize --bench bp --tech m3d` runs the full DSE.");
+}

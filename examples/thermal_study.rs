@@ -1,0 +1,82 @@
+//! Thermal study: reproduce the paper's Fig 4 intuition quantitatively.
+//!
+//! Sweeps the same workload power across placements (GPUs near vs far from
+//! the heat sink), technologies (TSV wet/dry vs M3D) and cooling options,
+//! printing peak temperature and the per-tier temperature profile from the
+//! finite-volume solver (3D-ICE substitute).
+//!
+//! Run: `cargo run --release --example thermal_study`
+
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::coordinator::validate::{detailed_peak_temp, power_grid};
+use hem3d::noc::topology;
+use hem3d::runtime::evaluator::dims;
+use hem3d::thermal::{GridParams, ThermalGrid, T_AMBIENT_C};
+use hem3d::traffic::{benchmark, generate};
+
+fn gpu_placement(near_sink: bool, n: usize) -> Vec<usize> {
+    let mut v = Vec::with_capacity(n);
+    if near_sink {
+        v.extend(8..48); // GPUs at positions 0..40 (low tiers)
+        v.extend(0..8);
+        v.extend(48..64);
+    } else {
+        v.extend(48..64); // LLCs near sink, GPUs on top
+        v.extend(0..8);
+        v.extend(8..48);
+    }
+    v
+}
+
+fn main() {
+    let cfg = ArchConfig::paper();
+    let tiles = TileSet::from_arch(&cfg);
+    let trace = generate(&benchmark("lv").unwrap(), &tiles, cfg.windows, 42);
+    let links = topology::mesh_links(&cfg);
+
+    let mut dry_tsv = TechParams::tsv();
+    dry_tsv.cooled = false;
+    let variants: Vec<(&str, TechParams)> = vec![
+        ("tsv+microfluidics", TechParams::tsv()),
+        ("tsv dry", dry_tsv),
+        ("m3d", TechParams::m3d()),
+    ];
+
+    println!("LavaMD worst-window power, by technology and GPU placement:\n");
+    println!("{:<20} {:>14} {:>14}", "stack", "GPUs near sink", "GPUs far");
+    for (name, tech) in &variants {
+        let geo = Geometry::new(&cfg, tech);
+        let ctx = EncodeCtx::new(&geo, tech, &tiles, &trace);
+        let near = Design::new(gpu_placement(true, cfg.n_tiles()), links.clone());
+        let far = Design::new(gpu_placement(false, cfg.n_tiles()), links.clone());
+        println!(
+            "{:<20} {:>13.1}C {:>13.1}C",
+            name,
+            detailed_peak_temp(&ctx, &near),
+            detailed_peak_temp(&ctx, &far)
+        );
+    }
+
+    // Per-layer profile for the far placement (the paper's Fig 4 story:
+    // TSV accumulates heat across bonding layers, M3D does not).
+    println!("\nPer-layer peak temperature, GPUs far from sink:");
+    for (name, tech) in &variants {
+        let geo = Geometry::new(&cfg, tech);
+        let ctx = EncodeCtx::new(&geo, tech, &tiles, &trace);
+        let far = Design::new(gpu_placement(false, cfg.n_tiles()), links.clone());
+        let stack = tech.layer_stack();
+        let grid = ThermalGrid::new(stack.z(), dims::TH_Y, dims::TH_X, GridParams::from_stack(&stack));
+        let worst = &trace.windows[0];
+        let p = power_grid(&ctx, &far, worst, T_AMBIENT_C + 25.0);
+        let t = grid.solve(&p, 600);
+        print!("{name:<20}");
+        for z in 0..stack.z() {
+            let layer_peak = (0..dims::TH_Y * dims::TH_X)
+                .map(|i| t[z * dims::TH_Y * dims::TH_X + i])
+                .fold(f64::MIN, f64::max);
+            print!(" {:5.1}", T_AMBIENT_C + layer_peak);
+        }
+        println!("   (z=0 near sink)");
+    }
+}

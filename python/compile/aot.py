@@ -1,0 +1,91 @@
+"""AOT: lower the L2 models to HLO text for the rust PJRT runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Outputs (under --out, default ../artifacts):
+  moo_eval.hlo.txt       — batched Eq.(1)-(8) design scoring
+  thermal_solve.hlo.txt  — batched 3D-ICE-substitute Jacobi solve
+  meta.json              — shapes + layout contract checked by rust at load
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # --- moo_eval -----------------------------------------------------------
+    lowered = jax.jit(model.moo_eval_model).lower(*model.moo_eval_specs())
+    text = to_hlo_text(lowered)
+    path = os.path.join(args.out, "moo_eval.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {len(text)} chars to {path}")
+
+    # --- thermal_solve ------------------------------------------------------
+    lowered = jax.jit(model.thermal_solve_model).lower(
+        *model.thermal_solve_specs())
+    text = to_hlo_text(lowered)
+    path = os.path.join(args.out, "thermal_solve.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {len(text)} chars to {path}")
+
+    # --- meta ---------------------------------------------------------------
+    meta = {
+        "moo_eval": {
+            "batch": model.MOO_BATCH,
+            "tiles": model.N_TILES,
+            "links": model.N_LINKS,
+            "pairs": model.N_PAIRS,
+            "windows": model.N_WINDOWS,
+            "stacks": model.N_STACKS,
+            "inputs": ["q[B,L,P]", "f[W,P]", "latw[B,P]", "pact[B,W,N]",
+                       "cth[N]", "ssel[N,S]"],
+            "outputs": ["lat[B]", "umean[B]", "usigma[B]", "tmax[B]"],
+        },
+        "thermal_solve": {
+            "batch": model.TH_BATCH,
+            "z": model.TH_Z,
+            "y": model.TH_Y,
+            "x": model.TH_X,
+            "cycles": model.TH_CYCLES,
+            "it2d": model.TH_IT2D,
+            "it3d": model.TH_IT3D,
+            "inputs": ["pow[B,Z,Y,X]", "gdn[Z]", "gup[Z]", "glat[Z]", "gamb[Z]"],
+            "outputs": ["t[B,Z,Y,X]", "tpeak[B]"],
+        },
+    }
+    path = os.path.join(args.out, "meta.json")
+    with open(path, "w") as fh:
+        json.dump(meta, fh, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

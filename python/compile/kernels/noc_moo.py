@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: batched MOO objective evaluation (paper Eqs. (1)-(8)).
+
+One kernel invocation scores one candidate HeM3D design; the pallas grid
+batches B designs.  Per design the kernel computes:
+
+  * link utilisations  U[l, w] = sum_p Q[l, p] * F[w, p]        (Eq. 2)
+    — the many-to-few-to-many traffic pushed through each link, per
+    traffic window.  This is the MXU-shaped contraction: (L, P) @ (P, W)
+    with P = N^2 = 4096 as the K dimension.
+  * umean  = mean_{w,l} U                                        (Eq. 3, 5)
+  * usigma = mean_w std_l U[:, w]                                (Eq. 4, 6)
+  * lat    = mean_w sum_p LATW[p] * F[w, p]                      (Eq. 1)
+    where LATW already folds (r * h_ij + d_ij) * cpu_llc_mask / (C*M).
+  * tmax   = max_{w,s} sum_n PACT[w, n] * CTH[n] * SSEL[n, s]    (Eq. 7, 8)
+    — the vertical-stack resistive thermal model.  CTH[n] folds the
+    cumulative vertical resistance (sum_{j<=tier(n)} R_j + R_b) * T_H for
+    the position n; ambient offset is added by the caller (rust L3).
+
+TPU mapping (estimated; interpret=True on CPU for correctness): Q block of
+(L, P) tiles as 128x512 MXU feeds; U accumulator (L, W) lives in VMEM
+scratch (< 5 KB); the latency / thermal terms are rank-1 fused epilogues.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moo_kernel(q_ref, f_ref, latw_ref, pact_ref, cth_ref, ssel_ref,
+                lat_ref, umean_ref, usigma_ref, tmax_ref):
+    q = q_ref[0]          # (L, P) routing incidence for this design
+    f = f_ref[...]        # (W, P) windowed traffic frequencies
+    latw = latw_ref[0]    # (P,)   latency weights for this design
+    pact = pact_ref[0]    # (W, N) per-tile power per window
+    cth = cth_ref[...]    # (N,)   cumulative stack resistance coefficient
+    ssel = ssel_ref[...]  # (N, S) position -> vertical stack one-hot
+
+    # Eq. (2): expected utilisation of every link under every window.
+    u = jnp.dot(q, f.T, preferred_element_type=jnp.float32)     # (L, W)
+
+    # Eqs. (3)+(5): time-averaged mean link load.
+    umean_ref[...] = jnp.mean(u)[None]
+
+    # Eqs. (4)+(6): time-averaged stddev of link load (per-window sigma).
+    mu_w = jnp.mean(u, axis=0, keepdims=True)                    # (1, W)
+    usigma_ref[...] = jnp.mean(
+        jnp.sqrt(jnp.mean((u - mu_w) ** 2, axis=0)))[None]
+
+    # Eq. (1): CPU<->LLC latency, averaged over windows.
+    lat_ref[...] = jnp.mean(jnp.dot(f, latw))[None]
+
+    # Eqs. (7)+(8): per-stack cumulative heating, max over windows+stacks.
+    ts = jnp.dot(pact * cth[None, :], ssel,
+                 preferred_element_type=jnp.float32)             # (W, S)
+    tmax_ref[...] = jnp.max(ts)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moo_eval(q, f, latw, pact, cth, ssel, *, interpret=True):
+    """Batched design scoring.
+
+    Args:
+      q:    (B, L, P) float32 — link-pair incidence q_ijk per design.
+      f:    (W, P)    float32 — windowed communication frequency f_ij(t).
+      latw: (B, P)    float32 — latency weights (r*h+d)*mask/(C*M).
+      pact: (B, W, N) float32 — per-position power per window.
+      cth:  (N,)      float32 — Eq.(7) stack coefficient (incl. T_H factor).
+      ssel: (N, S)    float32 — position->stack one-hot.
+
+    Returns:
+      (lat, umean, usigma, tmax), each (B,) float32.  Ambient temperature is
+      NOT included in tmax — the caller adds T_amb.
+    """
+    b, l, p = q.shape
+    w = f.shape[0]
+    n, s = ssel.shape
+    out_shape = [jax.ShapeDtypeStruct((b,), jnp.float32) for _ in range(4)]
+    grid = (b,)
+    return pl.pallas_call(
+        _moo_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((w, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (i, 0)),
+            pl.BlockSpec((1, w, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, s), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1,), lambda i: (i,)) for _ in range(4)],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, f, latw, pact, cth, ssel)

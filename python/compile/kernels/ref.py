@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness bar.
+
+These are transliterations of the paper's Eqs. (1)-(8) and of the textbook
+Jacobi finite-volume update, written with no pallas, no clever reshaping, so
+that a mismatch unambiguously implicates the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moo_eval_ref(q, f, latw, pact, cth, ssel):
+    """Reference for kernels.noc_moo.moo_eval.  Shapes as documented there."""
+    # Eq. (2): u[b, w, l] = sum_p q[b, l, p] * f[w, p]
+    u = jnp.einsum("blp,wp->bwl", q, f)
+
+    # Eqs. (3)+(5)
+    umean = jnp.mean(u, axis=(1, 2))
+
+    # Eqs. (4)+(6): per-window population stddev over links, then window avg.
+    usigma = jnp.mean(jnp.std(u, axis=2), axis=1)
+
+    # Eq. (1): window-averaged weighted latency.
+    lat = jnp.mean(jnp.einsum("bp,wp->bw", latw, f), axis=1)
+
+    # Eqs. (7)+(8): stack heating, max over windows and stacks.
+    ts = jnp.einsum("bwn,n,ns->bws", pact, cth, ssel)
+    tmax = jnp.max(ts, axis=(1, 2))
+
+    return lat, umean, usigma, tmax
+
+
+def thermal_sweep_ref(pow_, t, gdn, gup, glat, gamb):
+    """One Jacobi sweep; shapes as in kernels.thermal (batched)."""
+    b, z, y, x = t.shape
+    zero_z = jnp.zeros((b, 1, y, x), t.dtype)
+    zero_y = jnp.zeros((b, z, 1, x), t.dtype)
+    zero_x = jnp.zeros((b, z, y, 1), t.dtype)
+
+    t_below = jnp.concatenate([zero_z, t[:, :-1]], axis=1)
+    t_above = jnp.concatenate([t[:, 1:], zero_z], axis=1)
+    t_n = jnp.concatenate([zero_y, t[:, :, :-1]], axis=2)
+    t_s = jnp.concatenate([t[:, :, 1:], zero_y], axis=2)
+    t_w = jnp.concatenate([zero_x, t[:, :, :, :-1]], axis=3)
+    t_e = jnp.concatenate([t[:, :, :, 1:], zero_x], axis=3)
+
+    ones = jnp.ones_like(t)
+    n_n = jnp.concatenate([zero_y, ones[:, :, :-1]], axis=2)
+    n_s = jnp.concatenate([ones[:, :, 1:], zero_y], axis=2)
+    n_w = jnp.concatenate([zero_x, ones[:, :, :, :-1]], axis=3)
+    n_e = jnp.concatenate([ones[:, :, :, 1:], zero_x], axis=3)
+    n_nbr = n_n + n_s + n_w + n_e
+
+    gdn4 = gdn[None, :, None, None]
+    gup4 = gup[None, :, None, None]
+    gl4 = glat[None, :, None, None]
+
+    num = pow_ + gdn4 * t_below + gup4 * t_above + gl4 * (t_n + t_s + t_w + t_e)
+    den = gdn4 + gup4 + gl4 * n_nbr + gamb[None, :, None, None]
+    return num / den
+
+
+def thermal_solve_ref(pow_, gdn, gup, glat, gamb, n_iters=600):
+    """Fixed-count Jacobi relaxation (reference for one kernel sweep chain)."""
+    t = jnp.zeros_like(pow_)
+    for _ in range(n_iters):
+        t = thermal_sweep_ref(pow_, t, gdn, gup, glat, gamb)
+    return t
+
+
+def thermal_solve_exact(pow_, gdn, gup, glat, gamb):
+    """Independent oracle: assemble the full conductance matrix and solve it
+    densely with numpy — no iteration, no shared code with the kernel.
+    Shapes as in kernels.thermal (batched)."""
+    import numpy as np
+
+    pow_ = np.asarray(pow_, dtype=np.float64)
+    gdn = np.asarray(gdn, dtype=np.float64)
+    gup = np.asarray(gup, dtype=np.float64)
+    glat = np.asarray(glat, dtype=np.float64)
+    gamb = np.asarray(gamb, dtype=np.float64)
+    b, z, y, x = pow_.shape
+    n = z * y * x
+
+    def idx(zz, yy, xx):
+        return (zz * y + yy) * x + xx
+
+    g = np.zeros((n, n))
+    for zz in range(z):
+        for yy in range(y):
+            for xx in range(x):
+                i = idx(zz, yy, xx)
+                diag = gdn[zz] + gamb[zz]
+                if zz > 0:
+                    g[i, idx(zz - 1, yy, xx)] -= gdn[zz]
+                if zz + 1 < z:
+                    diag += gup[zz]
+                    g[i, idx(zz + 1, yy, xx)] -= gup[zz]
+                for (ny_, nx_) in ((yy - 1, xx), (yy + 1, xx), (yy, xx - 1), (yy, xx + 1)):
+                    if 0 <= ny_ < y and 0 <= nx_ < x:
+                        diag += glat[zz]
+                        g[i, idx(zz, ny_, nx_)] -= glat[zz]
+                g[i, i] = diag
+
+    out = np.empty_like(pow_)
+    for bb in range(b):
+        out[bb] = np.linalg.solve(g, pow_[bb].ravel()).reshape(z, y, x)
+    return out

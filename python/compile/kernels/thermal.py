@@ -1,0 +1,185 @@
+"""L1 Pallas kernel: one Jacobi sweep of the 3D-ICE-substitute RC thermal grid.
+
+Finite-volume steady-state heat conduction over a (Z, Y, X) cell grid:
+
+    T'[z,y,x] = ( P[z,y,x]
+                 + g_dn[z] * T[z-1,y,x]      (toward the heat sink; z=0 couples
+                                              to ambient through g_dn[0])
+                 + g_up[z] * T[z+1,y,x]      (away from the sink; 0 at z=Z-1)
+                 + g_lat[z] * sum_4nbr T )   (lateral spreading, adiabatic
+                                              chip edges)
+                / ( g_dn[z] + g_up[z] + g_lat[z] * n_nbr + g_amb[z] )
+
+where g_amb[z] is a per-layer convective shunt straight to ambient — zero for
+a dry stack, non-zero at the inter-tier layers when the TSV design uses the
+paper's microfluidic cooling [20] (coolant at ambient temperature).
+
+Temperatures are rises over ambient.  The per-layer conductances encode the
+TSV-vs-M3D physical difference (Table 1): TSV inserts a poorly conducting
+bonding layer between tiers; M3D an extremely thin ILD.  The paper's Fig 4
+behaviour (lateral spreading + vertical accumulation in TSV) emerges from
+these constants.
+
+TPU mapping (estimated): red-black would fit the VPU directly; we use Jacobi
+(two buffers) because it keeps the sweep a pure shifted-add stencil, lanes
+padded to 128 along X.  Per-design state (2 fields x Z*Y*X f32 ~ 20 KB) is
+VMEM-resident across the whole fori_loop — zero HBM traffic between sweeps.
+interpret=True on CPU for correctness.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sweep_kernel(pow_ref, t_ref, gdn_ref, gup_ref, glat_ref, inv_den_ref,
+                  out_ref):
+    p = pow_ref[0]            # (Z, Y, X) heat input per cell [W]
+    t = t_ref[0]              # (Z, Y, X) current temperature rise [K]
+    gdn = gdn_ref[...]        # (Z,) conductance to layer below (z-1 / ambient)
+    gup = gup_ref[...]        # (Z,) conductance to layer above (z+1)
+    glat = glat_ref[...]      # (Z,) lateral conductance within the layer
+    inv_den = inv_den_ref[...]  # (Z, Y, X) precomputed 1/denominator
+
+    z, y, x = t.shape
+
+    # Vertical neighbours (zero-padded; gup[z-1]==gdn[z] symmetry is the
+    # caller's responsibility).
+    t_below = jnp.concatenate([jnp.zeros((1, y, x), t.dtype), t[:-1]], axis=0)
+    t_above = jnp.concatenate([t[1:], jnp.zeros((1, y, x), t.dtype)], axis=0)
+
+    # Lateral neighbours, zero-padded (adiabatic chip edges: the true
+    # neighbour multiplicity is already folded into inv_den).
+    t_n = jnp.concatenate([jnp.zeros((z, 1, x), t.dtype), t[:, :-1]], axis=1)
+    t_s = jnp.concatenate([t[:, 1:], jnp.zeros((z, 1, x), t.dtype)], axis=1)
+    t_w = jnp.concatenate([jnp.zeros((z, y, 1), t.dtype), t[:, :, :-1]], axis=2)
+    t_e = jnp.concatenate([t[:, :, 1:], jnp.zeros((z, y, 1), t.dtype)], axis=2)
+
+    gdn3 = gdn[:, None, None]
+    gup3 = gup[:, None, None]
+    gl3 = glat[:, None, None]
+
+    num = p + gdn3 * t_below + gup3 * t_above + gl3 * (t_n + t_s + t_w + t_e)
+    out_ref[0] = num * inv_den
+
+
+def _inv_denominator(z, y, x, gdn, gup, glat, gamb):
+    """(Z, Y, X) reciprocal Jacobi denominator — loop-invariant, computed
+    once at L2 instead of per sweep.  (Also sidesteps an xla_extension 0.5.1
+    miscompilation of concatenated-constant neighbour counts inside the
+    pallas-emulated kernel; see DESIGN.md §Perf.)"""
+    iy = jnp.arange(y)
+    ix = jnp.arange(x)
+    n_y = jnp.where(iy == 0, 1.0, jnp.where(iy == y - 1, 1.0, 2.0))
+    n_x = jnp.where(ix == 0, 1.0, jnp.where(ix == x - 1, 1.0, 2.0))
+    n_nbr = n_y[:, None] + n_x[None, :]                            # (Y, X)
+    den = (gdn[:, None, None] + gup[:, None, None] + gamb[:, None, None]
+           + glat[:, None, None] * n_nbr[None, :, :])
+    return 1.0 / den
+
+
+def _sweep(pow_, t, gdn, gup, glat, inv_den, *, interpret=True):
+    b, z, y, x = t.shape
+    return pl.pallas_call(
+        _sweep_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, z, y, x), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, z, y, x), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((z,), lambda i: (0,)),
+            pl.BlockSpec((z,), lambda i: (0,)),
+            pl.BlockSpec((z,), lambda i: (0,)),
+            pl.BlockSpec((z, y, x), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, z, y, x), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, z, y, x), jnp.float32),
+        interpret=interpret,
+    )(pow_, t, gdn, gup, glat, inv_den)
+
+
+def _residual(pow_, t, gdn, gup, glat, inv_den):
+    """r = P - G*T (same stencil as the sweep; plain jnp at L2)."""
+    zero_z = jnp.zeros_like(t[:, :1])
+    zero_y = jnp.zeros_like(t[:, :, :1])
+    zero_x = jnp.zeros_like(t[:, :, :, :1])
+    t_below = jnp.concatenate([zero_z, t[:, :-1]], axis=1)
+    t_above = jnp.concatenate([t[:, 1:], zero_z], axis=1)
+    lat = (jnp.concatenate([zero_y, t[:, :, :-1]], axis=2)
+           + jnp.concatenate([t[:, :, 1:], zero_y], axis=2)
+           + jnp.concatenate([zero_x, t[:, :, :, :-1]], axis=3)
+           + jnp.concatenate([t[:, :, :, 1:], zero_x], axis=3))
+    num = (pow_ + gdn[None, :, None, None] * t_below
+           + gup[None, :, None, None] * t_above
+           + glat[None, :, None, None] * lat)
+    return num - t / inv_den[None]
+
+
+def _jacobi2d(p2, gl2, gs, n_iters):
+    """Jacobi on the column-collapsed (B, Y, X) problem (coarse level)."""
+    b, y, x = p2.shape
+    iy = jnp.arange(y)
+    ix = jnp.arange(x)
+    n_y = jnp.where((iy == 0) | (iy == y - 1), 1.0, 2.0)
+    n_x = jnp.where((ix == 0) | (ix == x - 1), 1.0, 2.0)
+    inv_den2 = (1.0 / (gs + gl2 * (n_y[:, None] + n_x[None, :]))).astype(
+        jnp.float32)
+
+    def body(_, t2):
+        zero_y = jnp.zeros_like(t2[:, :1])
+        zero_x = jnp.zeros_like(t2[:, :, :1])
+        lat = (jnp.concatenate([zero_y, t2[:, :-1]], axis=1)
+               + jnp.concatenate([t2[:, 1:], zero_y], axis=1)
+               + jnp.concatenate([zero_x, t2[:, :, :-1]], axis=2)
+               + jnp.concatenate([t2[:, :, 1:], zero_x], axis=2))
+        return (p2 + gl2 * lat) * inv_den2[None]
+
+    return jax.lax.fori_loop(0, n_iters, body, jnp.zeros_like(p2))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cycles", "it2d", "it3d", "interpret"))
+def thermal_solve(pow_, gdn, gup, glat, gamb, *, cycles=3, it2d=300,
+                  it3d=400, interpret=True):
+    """Steady-state temperature-rise field by two-level relaxation.
+
+    Plain Jacobi stalls on the stiff M3D stack (huge inter-layer vs tiny
+    sink conductance => the laterally-varying global mode decays at
+    ~1e-3/sweep; 600 sweeps under-predict the peak 3x).  The fix is a
+    two-grid scheme: each cycle solves the column-collapsed (Y, X) problem
+    for the residual (columns are near-isothermal), broadcasts the
+    correction, and refines vertical structure with `it3d` Pallas sweeps.
+    3 cycles land within 0.03% of the exact dense solution for both
+    technology stacks (see tests/test_kernel.py).
+
+    Args:
+      pow_: (B, Z, Y, X) float32 — heat injected per cell [W].
+      gdn:  (Z,) float32 — conductance to the layer below (gdn[0]: to sink).
+      gup:  (Z,) float32 — conductance to the layer above (gup[Z-1] == 0).
+      glat: (Z,) float32 — lateral conductance within each layer.
+      gamb: (Z,) float32 — convective shunt to ambient (microfluidic cooling;
+            all-zero for a dry stack).
+
+    Returns:
+      (B, Z, Y, X) float32 temperature rise over ambient [K].
+    """
+    b, z, y, x = pow_.shape
+    inv_den = _inv_denominator(z, y, x, gdn, gup, glat, gamb).astype(jnp.float32)
+    gl2 = jnp.sum(glat)
+    gs = gdn[0] + jnp.sum(gamb)
+
+    t = jnp.zeros_like(pow_)
+    for _ in range(cycles):
+        r = _residual(pow_, t, gdn, gup, glat, inv_den)
+        t2 = _jacobi2d(jnp.sum(r, axis=1), gl2, gs, it2d)
+        t = t + t2[:, None, :, :]
+
+        def body(_, tt):
+            return _sweep(pow_, tt, gdn, gup, glat, inv_den,
+                          interpret=interpret)
+
+        t = jax.lax.fori_loop(0, it3d, body, t)
+    return t

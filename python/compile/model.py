@@ -1,0 +1,84 @@
+"""L2: the HeM3D design-evaluation compute graph (build-time JAX).
+
+Two exported entry points compose the L1 Pallas kernels:
+
+  * ``moo_eval_model``    — the DSE hot path.  Scores a batch of candidate
+    designs against the paper's four objectives (Eqs. (1)-(8)).  The rust
+    coordinator (L3) feeds it routing incidence / traffic / power tensors and
+    reads back (lat, umean, usigma, tmax).
+  * ``thermal_solve_model`` — the 3D-ICE-substitute detailed solve used to
+    validate Pareto winners (Eq. (10)'s Temp(d)).
+
+Both are lowered once by ``aot.py`` to HLO text; Python never runs on the
+DSE path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.noc_moo import moo_eval
+from compile.kernels.thermal import thermal_solve
+
+# Canonical artifact shapes — paper §5.1: 64 tiles (8 CPU + 40 GPU + 16 LLC),
+# SWNoC with mesh-equivalent link count over a 4x4x4 tile grid, 8 traffic
+# windows, 16 vertical stacks.  The batch sizes amortize PJRT dispatch.
+N_TILES = 64
+N_LINKS = 144
+N_PAIRS = N_TILES * N_TILES
+N_WINDOWS = 8
+N_STACKS = 16
+MOO_BATCH = 16
+
+# Thermal grid: 4 tile tiers -> Z cell layers (silicon + inter-tier material
+# pairs + base), XY at 2x2 cells per tile column (§ thermal/grid.rs mirrors
+# this exactly).
+TH_Z = 10
+TH_Y = 8
+TH_X = 8
+TH_BATCH = 8
+# Two-grid relaxation schedule (see kernels/thermal.py): 3 cycles of a
+# coarse column-collapsed solve + 400 fine Pallas sweeps.
+TH_CYCLES = 3
+TH_IT2D = 300
+TH_IT3D = 400
+
+
+def moo_eval_model(q, f, latw, pact, cth, ssel):
+    """Batched Eq.(1)-(8) objective evaluation; returns a 4-tuple of (B,)."""
+    lat, umean, usigma, tmax = moo_eval(q, f, latw, pact, cth, ssel)
+    return lat, umean, usigma, tmax
+
+
+def thermal_solve_model(pow_, gdn, gup, glat, gamb):
+    """Detailed steady-state solve; returns (B, Z, Y, X) rise and (B,) peak."""
+    t = thermal_solve(pow_, gdn, gup, glat, gamb,
+                      cycles=TH_CYCLES, it2d=TH_IT2D, it3d=TH_IT3D)
+    return t, jnp.max(t, axis=(1, 2, 3))
+
+
+def moo_eval_specs():
+    """ShapeDtypeStructs for lowering moo_eval_model."""
+    import jax
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((MOO_BATCH, N_LINKS, N_PAIRS), f32),
+        jax.ShapeDtypeStruct((N_WINDOWS, N_PAIRS), f32),
+        jax.ShapeDtypeStruct((MOO_BATCH, N_PAIRS), f32),
+        jax.ShapeDtypeStruct((MOO_BATCH, N_WINDOWS, N_TILES), f32),
+        jax.ShapeDtypeStruct((N_TILES,), f32),
+        jax.ShapeDtypeStruct((N_TILES, N_STACKS), f32),
+    )
+
+
+def thermal_solve_specs():
+    """ShapeDtypeStructs for lowering thermal_solve_model."""
+    import jax
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((TH_BATCH, TH_Z, TH_Y, TH_X), f32),
+        jax.ShapeDtypeStruct((TH_Z,), f32),
+        jax.ShapeDtypeStruct((TH_Z,), f32),
+        jax.ShapeDtypeStruct((TH_Z,), f32),
+        jax.ShapeDtypeStruct((TH_Z,), f32),
+    )

@@ -1,0 +1,166 @@
+"""Kernel-vs-oracle correctness — the CORE build-time signal.
+
+hypothesis sweeps shapes and magnitudes; every Pallas kernel must match its
+pure-jnp (or exact-numpy) oracle within float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.noc_moo import moo_eval
+from compile.kernels.thermal import thermal_solve
+
+
+def _rand(rng, shape, scale=1.0):
+    return (rng.random(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# moo_eval
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    l=st.integers(2, 24),
+    n=st.integers(4, 12),
+    w=st.integers(1, 6),
+    s=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moo_eval_matches_ref_across_shapes(b, l, n, w, s, seed):
+    rng = np.random.default_rng(seed)
+    p = n * n
+    q = (rng.random((b, l, p)) < 0.3).astype(np.float32)
+    f = _rand(rng, (w, p), 0.2)
+    latw = _rand(rng, (b, p))
+    pact = _rand(rng, (b, w, n), 4.0)
+    cth = _rand(rng, (n,)) + 0.1
+    ssel = np.zeros((n, s), np.float32)
+    for i in range(n):
+        ssel[i, rng.integers(0, s)] = 1.0
+
+    got = moo_eval(q, f, latw, pact, cth, ssel)
+    want = ref.moo_eval_ref(q, f, latw, pact, cth, ssel)
+    for g, wnt, name in zip(got, want, ["lat", "umean", "usigma", "tmax"]):
+        np.testing.assert_allclose(g, wnt, rtol=2e-5, atol=2e-5, err_msg=name)
+
+
+def test_moo_eval_zero_traffic_zeroes_link_objectives():
+    rng = np.random.default_rng(0)
+    b, l, n, w, s = 2, 6, 6, 3, 4
+    p = n * n
+    q = (rng.random((b, l, p)) < 0.5).astype(np.float32)
+    f = np.zeros((w, p), np.float32)
+    latw = _rand(rng, (b, p))
+    pact = _rand(rng, (b, w, n), 2.0)
+    cth = _rand(rng, (n,)) + 0.5
+    ssel = np.eye(n, s, dtype=np.float32)
+    lat, umean, usigma, tmax = moo_eval(q, f, latw, pact, cth, ssel)
+    assert np.allclose(lat, 0) and np.allclose(umean, 0) and np.allclose(usigma, 0)
+    assert np.all(np.asarray(tmax) > 0)  # thermal is traffic-independent here
+
+
+def test_moo_eval_is_deterministic():
+    rng = np.random.default_rng(7)
+    b, l, n, w, s = 2, 8, 8, 4, 4
+    p = n * n
+    args = (
+        (rng.random((b, l, p)) < 0.2).astype(np.float32),
+        _rand(rng, (w, p), 0.1),
+        _rand(rng, (b, p)),
+        _rand(rng, (b, w, n)),
+        _rand(rng, (n,)) + 0.1,
+        np.eye(n, s, dtype=np.float32),
+    )
+    a = moo_eval(*args)
+    b_ = moo_eval(*args)
+    for x, y in zip(a, b_):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# thermal_solve
+# ---------------------------------------------------------------------------
+
+def _ladder(rng, z, stiff):
+    """Random physically-plausible conductance vectors."""
+    if stiff:
+        gdn = np.concatenate(
+            [[0.05], (rng.random(z - 1) * 30 + 5)]).astype(np.float32)
+    else:
+        gdn = (rng.random(z) * 1.5 + 0.3).astype(np.float32)
+    gup = np.concatenate([gdn[1:], [0.0]]).astype(np.float32)
+    glat = (rng.random(z) * 0.05 + 0.005).astype(np.float32)
+    gamb = np.where(rng.random(z) < 0.3, rng.random(z) * 0.1, 0.0).astype(np.float32)
+    return gdn, gup, glat, gamb
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    z=st.integers(3, 8),
+    y=st.integers(2, 6),
+    x=st.integers(2, 6),
+    stiff=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_thermal_solve_matches_exact_oracle(b, z, y, x, stiff, seed):
+    rng = np.random.default_rng(seed)
+    gdn, gup, glat, gamb = _ladder(rng, z, stiff)
+    pw = (rng.random((b, z, y, x)) * 0.5).astype(np.float32)
+    got = np.asarray(thermal_solve(pw, gdn, gup, glat, gamb))
+    want = ref.thermal_solve_exact(pw, gdn, gup, glat, gamb)
+    peak = want.max()
+    np.testing.assert_allclose(got, want, rtol=0, atol=max(1e-2 * peak, 1e-4))
+
+
+def test_thermal_solve_is_linear_in_power():
+    rng = np.random.default_rng(3)
+    z = 6
+    gdn, gup, glat, gamb = _ladder(rng, z, True)
+    pw = (rng.random((2, z, 4, 4)) * 0.3).astype(np.float32)
+    t1 = np.asarray(thermal_solve(pw, gdn, gup, glat, gamb))
+    t2 = np.asarray(thermal_solve(2.0 * pw, gdn, gup, glat, gamb))
+    np.testing.assert_allclose(t2, 2.0 * t1, rtol=1e-4, atol=1e-5)
+
+
+def test_thermal_zero_power_is_cold():
+    rng = np.random.default_rng(4)
+    gdn, gup, glat, gamb = _ladder(rng, 5, False)
+    pw = np.zeros((1, 5, 3, 3), np.float32)
+    t = np.asarray(thermal_solve(pw, gdn, gup, glat, gamb))
+    assert np.allclose(t, 0.0)
+
+
+def test_ambient_shunt_cools():
+    rng = np.random.default_rng(5)
+    z = 6
+    gdn, gup, glat, _ = _ladder(rng, z, False)
+    pw = (rng.random((1, z, 4, 4)) * 0.5).astype(np.float32)
+    dry = np.asarray(thermal_solve(pw, gdn, gup, glat, np.zeros(z, np.float32)))
+    wet = np.asarray(
+        thermal_solve(pw, gdn, gup, glat, np.full(z, 0.2, np.float32)))
+    assert wet.max() < dry.max()
+
+
+def test_sweep_kernel_matches_ref_single_step():
+    """One raw Pallas sweep against the jnp reference sweep."""
+    from compile.kernels.thermal import _inv_denominator, _sweep
+
+    rng = np.random.default_rng(6)
+    b, z, y, x = 2, 4, 3, 5
+    gdn, gup, glat, gamb = _ladder(rng, z, False)
+    pw = _rand(rng, (b, z, y, x), 0.5)
+    t = _rand(rng, (b, z, y, x), 2.0)
+    inv_den = np.asarray(_inv_denominator(z, y, x, gdn, gup, glat, gamb),
+                         np.float32)
+    got = np.asarray(_sweep(pw, t, gdn, gup, glat, inv_den))
+    want = np.asarray(ref.thermal_sweep_ref(pw, t, gdn, gup, glat, gamb))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

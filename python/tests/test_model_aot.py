@@ -1,0 +1,65 @@
+"""L2 model shape checks + AOT lowering smoke: the artifacts must lower to
+parseable HLO text with the canonical shapes, without a rust toolchain."""
+
+import numpy as np
+import jax
+
+from compile import model
+from compile.aot import to_hlo_text
+
+
+def test_moo_eval_model_shapes():
+    specs = model.moo_eval_specs()
+    rng = np.random.default_rng(0)
+    args = [np.asarray(rng.random(s.shape), s.dtype) for s in specs]
+    out = model.moo_eval_model(*args)
+    assert len(out) == 4
+    for o in out:
+        assert o.shape == (model.MOO_BATCH,)
+        assert np.all(np.isfinite(np.asarray(o)))
+
+
+def test_thermal_solve_model_shapes():
+    specs = model.thermal_solve_specs()
+    rng = np.random.default_rng(1)
+    pw = np.asarray(rng.random(specs[0].shape) * 0.1, np.float32)
+    z = model.TH_Z
+    gdn = np.linspace(0.05, 2.0, z).astype(np.float32)
+    gup = np.concatenate([gdn[1:], [0.0]]).astype(np.float32)
+    glat = np.full(z, 0.02, np.float32)
+    gamb = np.zeros(z, np.float32)
+    t, peak = model.thermal_solve_model(pw, gdn, gup, glat, gamb)
+    assert t.shape == specs[0].shape
+    assert peak.shape == (model.TH_BATCH,)
+    np.testing.assert_allclose(
+        np.asarray(peak), np.asarray(t).max(axis=(1, 2, 3)), rtol=1e-6)
+
+
+def test_moo_eval_lowers_to_hlo_text():
+    lowered = jax.jit(model.moo_eval_model).lower(*model.moo_eval_specs())
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[16,144,4096]" in text  # Q input shape is part of the contract
+    assert len(text) > 1000
+
+
+def test_thermal_lowers_to_hlo_text():
+    lowered = jax.jit(model.thermal_solve_model).lower(
+        *model.thermal_solve_specs())
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[8,10,8,8]" in text
+    # The two-grid schedule embeds three fine while-loops.
+    assert text.count("while") >= 3
+
+
+def test_canonical_dims_match_rust_contract():
+    # These constants are mirrored in rust/src/runtime/evaluator.rs::dims —
+    # drift breaks the artifact contract.
+    assert model.N_TILES == 64
+    assert model.N_LINKS == 144
+    assert model.N_PAIRS == 4096
+    assert model.N_WINDOWS == 8
+    assert model.N_STACKS == 16
+    assert model.MOO_BATCH == 16
+    assert (model.TH_Z, model.TH_Y, model.TH_X, model.TH_BATCH) == (10, 8, 8, 8)

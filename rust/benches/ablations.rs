@@ -1,0 +1,95 @@
+//! Bench µ3 — design-choice ablations called out in DESIGN.md:
+//!   (a) SWNoC vs mesh under the same link budget (objective-level),
+//!   (b) MOO-STAGE's learned meta-start vs random restarts,
+//!   (c) traffic-window count sensitivity of the objectives,
+//!   (d) power-law exponent of the SWNoC generator.
+
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::eval::objectives::evaluate;
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::opt::{moo_stage, LocalConfig, Mode, Problem, StageConfig};
+use hem3d::traffic::{benchmark, generate};
+use hem3d::util::Rng;
+
+fn main() {
+    let cfg = ArchConfig::paper();
+    let tech = TechParams::m3d();
+    let geo = Geometry::new(&cfg, &tech);
+    let tiles = TileSet::from_arch(&cfg);
+    let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 42);
+    let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+    // (a) SWNoC vs mesh, matched link budget.
+    let mesh = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+    let rm = Routing::build(&mesh);
+    let sm = evaluate(&ctx, &mesh, &rm);
+    let mut rng = Rng::seed_from_u64(5);
+    let mut best = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..12 {
+        let d = Design::with_identity_placement(
+            cfg.n_tiles(),
+            topology::swnoc_links(&cfg, &geo, 1.8, &mut rng),
+        );
+        let r = Routing::build(&d);
+        let s = evaluate(&ctx, &d, &r);
+        if s.lat < best.0 {
+            best = (s.lat, s.usigma);
+        }
+    }
+    println!("(a) mesh lat {:.4} vs best-of-12 swnoc {:.4} ({}x)", sm.lat, best.0, sm.lat / best.0);
+
+    // (b) learned meta-start vs random restart: disable the tree by giving
+    // it one candidate (equivalent to a random restart).
+    let mk_cfg = |meta: usize| StageConfig {
+        local: LocalConfig { neighbors_per_step: 8, patience: 2, max_steps: 10 },
+        meta_candidates: meta,
+        max_iters: 4,
+        convergence_eps: 0.0,
+        convergence_window: 99,
+    };
+    let start = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+    let problem = Problem::new(&ctx, Mode::Pt);
+    let mut rng_a = Rng::seed_from_u64(11);
+    let learned = moo_stage(&problem, start.clone(), &mk_cfg(48), &mut rng_a);
+    let problem2 = Problem::new(&ctx, Mode::Pt);
+    let mut rng_b = Rng::seed_from_u64(11);
+    let random = moo_stage(&problem2, start, &mk_cfg(1), &mut rng_b);
+    println!(
+        "(b) final PHV: learned meta-start {:.4} vs random restart {:.4} (evals {} vs {})",
+        learned.history.last().unwrap().best_phv,
+        random.history.last().unwrap().best_phv,
+        problem.eval_count(),
+        problem2.eval_count()
+    );
+
+    // (c) window-count sensitivity: objectives from W=2 vs W=8 windows.
+    for w in [2usize, 4, 8] {
+        let tr = generate(&benchmark("lud").unwrap(), &tiles, w.max(8), 42);
+        // evaluate() always consumes N_WINDOWS=8; emulate fewer by zeroing.
+        let mut tr2 = tr.clone();
+        for win in tr2.windows.iter_mut().skip(w) {
+            let first = tr.windows[w - 1].clone();
+            *win = first;
+        }
+        let ctx_w = EncodeCtx::new(&geo, &tech, &tiles, &tr2);
+        let s = evaluate(&ctx_w, &mesh, &rm);
+        println!("(c) W={w}: lat {:.4} umean {:.4} usigma {:.4} tmax {:.2}", s.lat, s.umean, s.usigma, s.tmax);
+    }
+
+    // (d) SWNoC power-law exponent sweep.
+    for alpha in [0.5f64, 1.2, 1.8, 2.5, 3.5] {
+        let mut rng_d = Rng::seed_from_u64(21);
+        let mut lat_sum = 0.0;
+        let n = 6;
+        for _ in 0..n {
+            let d = Design::with_identity_placement(
+                cfg.n_tiles(),
+                topology::swnoc_links(&cfg, &geo, alpha, &mut rng_d),
+            );
+            let r = Routing::build(&d);
+            lat_sum += evaluate(&ctx, &d, &r).lat;
+        }
+        println!("(d) alpha={alpha:.1}: mean lat {:.4}", lat_sum / n as f64);
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench F10 — regenerates Fig 10: HeM3D PO vs PT when the PT winner is
+//! selected by the ET*Temp product (no thermal constraint); the paper's
+//! conclusion is that PT buys only 1-2°C for 2-3.5% ET on M3D.
+
+use hem3d::coordinator::campaign::Effort;
+use hem3d::coordinator::figures;
+
+fn main() {
+    let effort = match std::env::var("HEM3D_EFFORT").as_deref() {
+        Ok("full") => Effort::full(),
+        _ => Effort::quick(),
+    };
+    let benches = ["bp", "nw", "lv", "lud", "knn", "pf"];
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig10(&benches, &effort, 42);
+    println!("Fig 10 — HeM3D: PO vs PT (ET*T product selection)");
+    println!("{:<6} {:>9} {:>9} {:>6} {:>9}", "bench", "T(PO) C", "T(PT) C", "dT", "ET ratio");
+    for r in &rows {
+        println!(
+            "{:<6} {:>9.1} {:>9.1} {:>6.1} {:>9.3}",
+            r.bench,
+            r.temp_po_c,
+            r.temp_pt_c,
+            r.temp_po_c - r.temp_pt_c,
+            r.et_pt_over_po
+        );
+    }
+    let avg_dt = rows.iter().map(|r| r.temp_po_c - r.temp_pt_c).sum::<f64>() / rows.len() as f64;
+    let max_et = rows.iter().map(|r| r.et_pt_over_po).fold(f64::MIN, f64::max);
+    println!(
+        "PT buys {avg_dt:.1}C avg for up to {:.1}% ET (paper: 1-2C for 2-3.5%) — PT unnecessary on M3D",
+        100.0 * (max_et - 1.0)
+    );
+    println!("total bench time: {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,41 @@
+//! Bench F6 — regenerates Fig 6: planar vs M3D GPU pipeline stage
+//! latencies, the derived clock frequencies, and the energy saving; also
+//! times the synthesis + projection flow itself.
+//!
+//! Run: `cargo bench --bench fig6_gpu_pipeline`
+
+use hem3d::timing::analyze_gpu_pipeline;
+use hem3d::util::bench::bench;
+
+fn main() {
+    let r = analyze_gpu_pipeline(42);
+
+    println!("Fig 6 — GPU pipeline stage latencies (normalised to planar clock)");
+    println!("{:<10} {:>8} {:>8} {:>7}", "stage", "planar", "m3d", "gain%");
+    for s in &r.stages {
+        println!(
+            "{:<10} {:>8.3} {:>8.3} {:>6.1}%",
+            s.name,
+            s.planar_ps / r.planar_crit_ps,
+            s.m3d_ps / r.planar_crit_ps,
+            100.0 * s.improvement
+        );
+    }
+    println!(
+        "frequencies: planar {:.2} GHz -> m3d {:.2} GHz (+{:.1}%; paper: 0.70 -> 0.77, +10%)",
+        r.planar_freq_ghz,
+        r.m3d_freq_ghz,
+        100.0 * (r.m3d_freq_ghz / r.planar_freq_ghz - 1.0)
+    );
+    println!(
+        "energy: m3d/planar {:.3} ({:.1}% saving; paper: 21%)",
+        r.energy_ratio,
+        100.0 * (1.0 - r.energy_ratio)
+    );
+    println!("m3d critical stage: {} (paper: SIMD)", r.m3d_critical_stage);
+    println!();
+
+    bench("synthesis+projection (9 stages)", 1, 5, || {
+        let _ = analyze_gpu_pipeline(42);
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench F7 — regenerates Fig 7: MOO-STAGE vs AMOSA convergence-time
+//! speed-up for TSV and HeM3D design, PT objective.
+//!
+//! Effort scales with HEM3D_EFFORT=quick|full (default quick so
+//! `cargo bench` stays minutes, not hours).
+
+use hem3d::coordinator::campaign::Effort;
+use hem3d::coordinator::figures;
+
+fn main() {
+    let effort = match std::env::var("HEM3D_EFFORT").as_deref() {
+        Ok("full") => Effort::full(),
+        _ => Effort::quick(),
+    };
+    let benches = ["bp", "nw", "lv", "lud", "knn", "pf"];
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig7(&benches, &effort, 42);
+    println!("Fig 7 — MOO-STAGE convergence speed-up over AMOSA");
+    println!("{:<6} {:>8} {:>8}", "bench", "tsv", "m3d");
+    for r in &rows {
+        println!("{:<6} {:>7.2}x {:>7.2}x", r.bench, r.speedup_tsv, r.speedup_m3d);
+    }
+    let avg_tsv = rows.iter().map(|r| r.speedup_tsv).sum::<f64>() / rows.len() as f64;
+    let avg_m3d = rows.iter().map(|r| r.speedup_m3d).sum::<f64>() / rows.len() as f64;
+    println!("average: tsv {avg_tsv:.2}x (paper 5.48x), m3d {avg_m3d:.2}x (paper 7.38x)");
+    println!(
+        "m3d speedup exceeds tsv: {} (paper: yes — larger design space favours the learner)",
+        avg_m3d > avg_tsv
+    );
+    println!("total bench time: {:.1} s", t0.elapsed().as_secs_f64());
+}

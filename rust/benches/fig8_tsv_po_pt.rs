@@ -1,0 +1,35 @@
+//! Bench F8 — regenerates Fig 8: TSV performance-only vs
+//! performance-thermal optimization (max temperature + normalised ET).
+
+use hem3d::coordinator::campaign::Effort;
+use hem3d::coordinator::figures;
+
+fn main() {
+    let effort = match std::env::var("HEM3D_EFFORT").as_deref() {
+        Ok("full") => Effort::full(),
+        _ => Effort::quick(),
+    };
+    let benches = ["bp", "nw", "lv", "lud", "knn", "pf"];
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig8(&benches, &effort, 42);
+    println!("Fig 8 — TSV: PO vs PT");
+    println!("{:<6} {:>9} {:>9} {:>7} {:>9}", "bench", "T(PO) C", "T(PT) C", "dT", "ET ratio");
+    for r in &rows {
+        println!(
+            "{:<6} {:>9.1} {:>9.1} {:>7.1} {:>9.3}",
+            r.bench,
+            r.temp_po_c,
+            r.temp_pt_c,
+            r.temp_po_c - r.temp_pt_c,
+            r.et_pt_over_po
+        );
+    }
+    let max_dt = rows.iter().map(|r| r.temp_po_c - r.temp_pt_c).fold(f64::MIN, f64::max);
+    let avg_dt = rows.iter().map(|r| r.temp_po_c - r.temp_pt_c).sum::<f64>() / rows.len() as f64;
+    let max_po = rows.iter().map(|r| r.temp_po_c).fold(f64::MIN, f64::max);
+    println!("PO peak: {max_po:.1}C (paper: up to ~105C)");
+    println!("PT cooling: avg {avg_dt:.1}C, max {max_dt:.1}C (paper: 17.6C avg, up to 24C)");
+    println!("ET penalty band (paper 2-3.5%): {:?}",
+        rows.iter().map(|r| format!("{:.1}%", 100.0 * (r.et_pt_over_po - 1.0))).collect::<Vec<_>>());
+    println!("total bench time: {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,42 @@
+//! Bench F9 — regenerates Fig 9, the headline: TSV-BL vs HeM3D-PO vs
+//! HeM3D-PT (max temperature + execution time normalised to TSV-BL).
+
+use hem3d::coordinator::campaign::Effort;
+use hem3d::coordinator::figures;
+
+fn main() {
+    let effort = match std::env::var("HEM3D_EFFORT").as_deref() {
+        Ok("full") => Effort::full(),
+        _ => Effort::quick(),
+    };
+    let benches = ["bp", "nw", "lv", "lud", "knn", "pf"];
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig9(&benches, &effort, 42);
+    println!("Fig 9 — TSV-BL vs HeM3D-PO vs HeM3D-PT");
+    println!(
+        "{:<6} {:>8} {:>8} {:>8} {:>10} {:>10}",
+        "bench", "T(BL)", "T(PO)", "T(PT)", "ET(PO)/BL", "ET(PT)/BL"
+    );
+    for r in &rows {
+        println!(
+            "{:<6} {:>8.1} {:>8.1} {:>8.1} {:>10.3} {:>10.3}",
+            r.bench, r.temp_tsv_bl_c, r.temp_hem3d_po_c, r.temp_hem3d_pt_c, r.et_hem3d_po, r.et_hem3d_pt
+        );
+    }
+    let avg_gain =
+        rows.iter().map(|r| 1.0 - r.et_hem3d_po).sum::<f64>() / rows.len() as f64;
+    let max_gain = rows.iter().map(|r| 1.0 - r.et_hem3d_po).fold(f64::MIN, f64::max);
+    let avg_dt = rows.iter().map(|r| r.temp_tsv_bl_c - r.temp_hem3d_po_c).sum::<f64>()
+        / rows.len() as f64;
+    let max_dt = rows
+        .iter()
+        .map(|r| r.temp_tsv_bl_c - r.temp_hem3d_po_c)
+        .fold(f64::MIN, f64::max);
+    let in_band = rows
+        .iter()
+        .all(|r| (45.0..70.0).contains(&r.temp_hem3d_po_c));
+    println!("ET gain: avg {:.1}% (paper 14.2%), max {:.1}% (paper 18.3%)", 100.0 * avg_gain, 100.0 * max_gain);
+    println!("dT: avg {avg_dt:.1}C (paper ~18C), max {max_dt:.1}C (paper ~19C)");
+    println!("HeM3D temps in the paper's 55-65C band (+-10): {in_band}");
+    println!("total bench time: {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,100 @@
+//! Bench µ1 — evaluator throughput: sparse native scoring vs the dense
+//! batched PJRT artifact, plus the encode cost that feeds the artifact.
+//!
+//! This is the honest crossover measurement behind DESIGN.md's decision to
+//! run the DSE inner loop on the sparse native evaluator and reserve the
+//! artifact for batched Pareto validation/cross-checking at N=64; the
+//! artifact's dense matmul formulation is the scaling path for larger
+//! configs.
+
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::eval::objectives::{evaluate_sparse, SparseTraffic};
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::runtime::evaluator::{dims, Evaluator, MooBatch};
+use hem3d::traffic::{benchmark, generate};
+use hem3d::util::bench::{bench, report_rate};
+use hem3d::util::Rng;
+
+fn main() {
+    let cfg = ArchConfig::paper();
+    let tech = TechParams::m3d();
+    let geo = Geometry::new(&cfg, &tech);
+    let tiles = TileSet::from_arch(&cfg);
+    let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 42);
+    let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+    let sparse = SparseTraffic::from_trace_tiles(&trace, dims::N_WINDOWS, Some(&tiles));
+
+    // A pool of candidate designs.
+    let mut rng = Rng::seed_from_u64(7);
+    let designs: Vec<Design> = (0..dims::MOO_BATCH)
+        .map(|_| {
+            let links = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng);
+            Design::random_placement(&cfg, links, &mut rng)
+        })
+        .collect();
+    let routings: Vec<Routing> = designs.iter().map(Routing::build).collect();
+
+    // --- L3 components -------------------------------------------------------
+    bench("routing build (all-pairs BFS, 64 nodes)", 2, 20, || {
+        let _ = Routing::build(&designs[0]);
+    });
+
+    let t_native = bench("native sparse eval (1 design)", 2, 50, || {
+        let _ = evaluate_sparse(&ctx, &designs[0], &routings[0], &sparse);
+    });
+    report_rate("native eval", 1.0, t_native);
+
+    let t_full = bench("routing + native eval (DSE inner step)", 2, 20, || {
+        let r = Routing::build(&designs[0]);
+        let _ = evaluate_sparse(&ctx, &designs[0], &r, &sparse);
+    });
+    report_rate("DSE candidate scoring", 1.0, t_full);
+
+    // --- Encode + artifact path ----------------------------------------------
+    let mut batch = MooBatch::zeroed();
+    ctx.fill_shared(&mut batch);
+    let t_encode = bench("encode 16-design batch (Q/LATW/PACT)", 1, 5, || {
+        for (i, d) in designs.iter().enumerate() {
+            ctx.encode_design(d, &routings[i], &mut batch, i);
+        }
+    });
+    report_rate("encode", dims::MOO_BATCH as f64, t_encode);
+
+    match Evaluator::load("artifacts") {
+        Err(e) => println!("(artifacts unavailable: {e:#} — run `make artifacts`)"),
+        Ok(ev) => {
+            let t_art = bench("PJRT moo_eval dispatch (16 designs)", 1, 10, || {
+                let _ = ev.moo_eval(&batch).unwrap();
+            });
+            report_rate("artifact eval", dims::MOO_BATCH as f64, t_art);
+            println!(
+                "per-design: native {:.1} us vs artifact {:.1} us (+{:.1} us encode)",
+                t_native * 1e6,
+                t_art * 1e6 / dims::MOO_BATCH as f64,
+                t_encode * 1e6 / dims::MOO_BATCH as f64
+            );
+
+            // Thermal artifact: the batched detailed solve.
+            let gp = hem3d::thermal::GridParams::from_stack(&tech.layer_stack());
+            let cells = dims::TH_Z * dims::TH_Y * dims::TH_X;
+            let pow_ = vec![0.05f32; dims::TH_BATCH * cells];
+            let t_th = bench("PJRT thermal_solve (8 grids, two-grid schedule)", 1, 5, || {
+                let _ = ev
+                    .thermal_solve(&pow_, &gp.gdn_f32(), &gp.gup_f32(), &gp.glat_f32(), &gp.gamb_f32())
+                    .unwrap();
+            });
+            // Native comparison.
+            let grid = hem3d::thermal::ThermalGrid::new(dims::TH_Z, dims::TH_Y, dims::TH_X, gp);
+            let p64: Vec<f64> = pow_[..cells].iter().map(|&x| x as f64).collect();
+            let t_native_th = bench("native thermal solve (1 grid, two-grid schedule)", 1, 5, || {
+                let _ = grid.solve(&p64, 600);
+            });
+            println!(
+                "thermal per-grid: native {:.2} ms vs artifact {:.2} ms",
+                t_native_th * 1e3,
+                t_th * 1e3 / dims::TH_BATCH as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench µ2 — NoC substrate throughput: topology generation, routing, the
+//! cycle-level simulator, and mesh-vs-SWNoC quality under the paper's
+//! many-to-few-to-many traffic.
+
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::coordinator::noc_validate;
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::traffic::{benchmark, generate};
+use hem3d::util::bench::{bench, fmt_time};
+use hem3d::util::Rng;
+
+fn main() {
+    let cfg = ArchConfig::paper();
+    let tech = TechParams::m3d();
+    let geo = Geometry::new(&cfg, &tech);
+    let tiles = TileSet::from_arch(&cfg);
+    let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 42);
+    let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+    let mut rng = Rng::seed_from_u64(3);
+    bench("swnoc generation (144 links)", 2, 20, || {
+        let _ = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng);
+    });
+
+    let mesh = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+    bench("mesh routing build", 2, 20, || {
+        let _ = Routing::build(&mesh);
+    });
+
+    let routing = Routing::build(&mesh);
+    for cycles in [5_000u64, 20_000] {
+        let t = bench(&format!("cycle sim ({cycles} cycles, bp worst window)"), 1, 5, || {
+            let _ = noc_validate(&ctx, &mesh, &routing, cycles, 1);
+        });
+        println!("  -> {} per simulated cycle", fmt_time(t / cycles as f64));
+    }
+
+    // Quality: mesh vs best-of-8 SWNoC on mean latency (cycle-accurate).
+    let stats_mesh = noc_validate(&ctx, &mesh, &routing, 20_000, 1);
+    let mut best_lat = f64::INFINITY;
+    let mut rng2 = Rng::seed_from_u64(9);
+    for _ in 0..8 {
+        let links = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng2);
+        let d = Design::random_placement(&cfg, links, &mut rng2);
+        let r = Routing::build(&d);
+        let s = noc_validate(&ctx, &d, &r, 20_000, 1);
+        best_lat = best_lat.min(s.mean_latency);
+    }
+    println!(
+        "mesh mean latency {:.1} cyc vs best-of-8 swnoc {:.1} cyc (paper [18]: SWNoC wins)",
+        stats_mesh.mean_latency, best_lat
+    );
+}

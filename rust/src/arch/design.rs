@@ -1,0 +1,211 @@
+//! Candidate design: a tile placement plus an NoC link set — the unit the
+//! MOO search perturbs, scores and Pareto-ranks.
+
+use crate::config::ArchConfig;
+use crate::util::Rng;
+
+/// An undirected NoC link between two router positions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Link {
+    pub a: u16,
+    pub b: u16,
+}
+
+impl Link {
+    /// Normalised (a < b) link.
+    pub fn new(a: usize, b: usize) -> Self {
+        assert_ne!(a, b, "self-link");
+        let (a, b) = if a < b { (a, b) } else { (b, a) };
+        Link { a: a as u16, b: b as u16 }
+    }
+
+    pub fn ends(&self) -> (usize, usize) {
+        (self.a as usize, self.b as usize)
+    }
+}
+
+/// A candidate HeM3D/TSV design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Design {
+    /// `tile_at[pos]` = tile id occupying grid position `pos`.
+    pub tile_at: Vec<usize>,
+    /// `pos_of[tile]` = inverse permutation.
+    pub pos_of: Vec<usize>,
+    /// The NoC link set (undirected, normalised, sorted, deduplicated).
+    pub links: Vec<Link>,
+}
+
+impl Design {
+    /// Build from a placement permutation and a link list.
+    pub fn new(tile_at: Vec<usize>, mut links: Vec<Link>) -> Self {
+        let n = tile_at.len();
+        let mut pos_of = vec![usize::MAX; n];
+        for (pos, &t) in tile_at.iter().enumerate() {
+            debug_assert!(pos_of[t] == usize::MAX, "tile {t} placed twice");
+            pos_of[t] = pos;
+        }
+        links.sort_unstable();
+        links.dedup();
+        Design { tile_at, pos_of, links }
+    }
+
+    /// Identity placement with the given links.
+    pub fn with_identity_placement(n_tiles: usize, links: Vec<Link>) -> Self {
+        Design::new((0..n_tiles).collect(), links)
+    }
+
+    /// Random valid placement (uniform permutation) with the given links.
+    pub fn random_placement(cfg: &ArchConfig, links: Vec<Link>, rng: &mut Rng) -> Self {
+        let mut tile_at: Vec<usize> = (0..cfg.n_tiles()).collect();
+        rng.shuffle(&mut tile_at);
+        Design::new(tile_at, links)
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tile_at.len()
+    }
+
+    /// Swap the tiles at two positions (a MOO perturbation op).
+    pub fn swap_positions(&mut self, p1: usize, p2: usize) {
+        let (t1, t2) = (self.tile_at[p1], self.tile_at[p2]);
+        self.tile_at.swap(p1, p2);
+        self.pos_of[t1] = p2;
+        self.pos_of[t2] = p1;
+    }
+
+    /// Replace link `idx` with a new link (the other MOO perturbation op).
+    /// Returns false (and leaves the design unchanged) if the new link
+    /// already exists or is degenerate.
+    pub fn replace_link(&mut self, idx: usize, new: Link) -> bool {
+        if new.a == new.b || self.links.contains(&new) {
+            return false;
+        }
+        self.links[idx] = new;
+        self.links.sort_unstable();
+        true
+    }
+
+    /// Adjacency lists over positions.
+    pub fn adjacency(&self) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); self.n_tiles()];
+        for l in &self.links {
+            let (a, b) = l.ends();
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        // Deterministic neighbour order for reproducible routing.
+        for v in adj.iter_mut() {
+            v.sort_unstable();
+        }
+        adj
+    }
+
+    /// Whether every position can reach every other over the link set.
+    pub fn is_connected(&self) -> bool {
+        let n = self.n_tiles();
+        if n == 0 {
+            return true;
+        }
+        let adj = self.adjacency();
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == n
+    }
+
+    /// Structural sanity: permutation valid, link endpoints in range.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_tiles();
+        let mut seen = vec![false; n];
+        for &t in &self.tile_at {
+            if t >= n {
+                return Err(format!("tile id {t} out of range"));
+            }
+            if seen[t] {
+                return Err(format!("tile id {t} duplicated"));
+            }
+            seen[t] = true;
+        }
+        for (pos, &t) in self.tile_at.iter().enumerate() {
+            if self.pos_of[t] != pos {
+                return Err("pos_of inconsistent with tile_at".into());
+            }
+        }
+        for l in &self.links {
+            if l.b as usize >= n {
+                return Err(format!("link endpoint {} out of range", l.b));
+            }
+            if l.a == l.b {
+                return Err("self-link".into());
+            }
+        }
+        if !self.is_connected() {
+            return Err("link set is disconnected".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::noc::topology;
+
+    #[test]
+    fn identity_mesh_design_is_valid() {
+        let cfg = ArchConfig::paper();
+        let links = topology::mesh_links(&cfg);
+        let d = Design::with_identity_placement(cfg.n_tiles(), links);
+        d.validate().unwrap();
+        assert!(d.is_connected());
+    }
+
+    #[test]
+    fn swap_keeps_permutation_consistent() {
+        let cfg = ArchConfig::tiny();
+        let links = topology::mesh_links(&cfg);
+        let mut d = Design::with_identity_placement(cfg.n_tiles(), links);
+        d.swap_positions(0, 5);
+        d.validate().unwrap();
+        assert_eq!(d.tile_at[0], 5);
+        assert_eq!(d.pos_of[5], 0);
+    }
+
+    #[test]
+    fn replace_link_rejects_duplicates() {
+        let cfg = ArchConfig::tiny();
+        let links = topology::mesh_links(&cfg);
+        let existing = links[0];
+        let mut d = Design::with_identity_placement(cfg.n_tiles(), links);
+        assert!(!d.replace_link(1, existing));
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn disconnection_is_detected() {
+        // Two links over 4 tiles: 0-1, 2-3 — disconnected.
+        let d = Design::with_identity_placement(4, vec![Link::new(0, 1), Link::new(2, 3)]);
+        assert!(!d.is_connected());
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn random_placement_is_a_permutation() {
+        let cfg = ArchConfig::paper();
+        let links = topology::mesh_links(&cfg);
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let d = Design::random_placement(&cfg, links, &mut rng);
+        d.validate().unwrap();
+    }
+}

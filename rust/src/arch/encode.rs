@@ -1,0 +1,188 @@
+//! Tensor encoder: candidate designs + traces -> the `moo_eval` artifact's
+//! input contract (DESIGN.md §1 table).
+//!
+//! Pair indexing is by *tile id* (placement independent), so the traffic
+//! tensor `F` is shared across the whole batch while `Q`/`LATW` fold each
+//! design's placement and routing.
+
+use crate::arch::design::Design;
+use crate::arch::geometry::Geometry;
+use crate::arch::tile::{TileKind, TileSet};
+use crate::config::TechParams;
+use crate::noc::routing::Routing;
+use crate::power::PowerModel;
+use crate::runtime::evaluator::{dims, MooBatch};
+use crate::thermal::StackModel;
+use crate::traffic::Trace;
+
+/// Precomputed per-(tech, trace) context shared by every encoded design.
+pub struct EncodeCtx<'a> {
+    pub geo: &'a Geometry,
+    pub tech: &'a TechParams,
+    pub tiles: &'a TileSet,
+    pub trace: &'a Trace,
+    pub power: PowerModel,
+    pub stack: StackModel,
+}
+
+impl<'a> EncodeCtx<'a> {
+    pub fn new(
+        geo: &'a Geometry,
+        tech: &'a TechParams,
+        tiles: &'a TileSet,
+        trace: &'a Trace,
+    ) -> Self {
+        let power = PowerModel::new(tech);
+        let stack = StackModel::from_stack(&tech.layer_stack(), tech.t_h);
+        EncodeCtx { geo, tech, tiles, trace, power, stack }
+    }
+
+    /// Fill the batch-shared tensors: F (W,P), CTH (N), SSEL (N,S).
+    pub fn fill_shared(&self, batch: &mut MooBatch) {
+        use dims::*;
+        let n = self.tiles.n_tiles();
+        assert_eq!(n, N_TILES, "encoder requires the canonical 64-tile config");
+        assert!(self.trace.windows.len() >= N_WINDOWS, "trace too short");
+        for w in 0..N_WINDOWS {
+            let win = &self.trace.windows[w];
+            for p in 0..N_PAIRS {
+                batch.f[w * N_PAIRS + p] = win.f[p] as f32;
+            }
+        }
+        // CTH: Eq.(7) coefficient by *position* tier (design independent).
+        let tier_of: Vec<usize> = (0..n).map(|pos| self.geo.tier_of(pos)).collect();
+        batch.cth.copy_from_slice(&self.stack.cth(&tier_of));
+        // SSEL: position -> stack one-hot.
+        batch.ssel.iter_mut().for_each(|v| *v = 0.0);
+        for pos in 0..n {
+            batch.ssel[pos * N_STACKS + self.geo.stack_of(pos)] = 1.0;
+        }
+    }
+
+    /// Encode one design into batch slot `slot` (Q, LATW, PACT).
+    pub fn encode_design(&self, design: &Design, routing: &Routing, batch: &mut MooBatch, slot: usize) {
+        use dims::*;
+        let n = self.tiles.n_tiles();
+        debug_assert!(slot < MOO_BATCH);
+
+        // --- Q: link-pair incidence in tile-id pair space ------------------
+        let q = &mut batch.q[slot * N_LINKS * N_PAIRS..(slot + 1) * N_LINKS * N_PAIRS];
+        q.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            let pi = design.pos_of[i];
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                // Only pairs that ever carry traffic matter for Eq. (2);
+                // encode all pairs with any window traffic.
+                let carries: bool = self
+                    .trace
+                    .windows
+                    .iter()
+                    .take(N_WINDOWS)
+                    .any(|w| w.f[i * n + j] > 0.0);
+                if !carries {
+                    continue;
+                }
+                let pj = design.pos_of[j];
+                for l in routing.path_links(pi, pj) {
+                    q[l * N_PAIRS + i * n + j] = 1.0;
+                }
+            }
+        }
+
+        // --- LATW: Eq.(1) weights over CPU<->LLC pairs ----------------------
+        let latw = &mut batch.latw[slot * N_PAIRS..(slot + 1) * N_PAIRS];
+        latw.iter_mut().for_each(|v| *v = 0.0);
+        let c = self.tiles.n_cpu as f64;
+        let m = self.tiles.n_llc as f64;
+        let r = self.tech.router_stages;
+        for i in self.tiles.ids_of(TileKind::Cpu) {
+            for j in self.tiles.ids_of(TileKind::Llc) {
+                let (pi, pj) = (design.pos_of[i], design.pos_of[j]);
+                let h = routing.hop_count(pi, pj) as f64;
+                let d = self.geo.dist_mm(pi, pj) * self.tech.link_delay_cyc_per_mm;
+                let wgt = ((r * h + d) / (c * m)) as f32;
+                latw[i * n + j] = wgt;
+                latw[j * n + i] = wgt; // LLC -> CPU replies count equally
+            }
+        }
+
+        // --- PACT: per-position power per window ----------------------------
+        let pact = &mut batch.pact[slot * N_WINDOWS * N_TILES..(slot + 1) * N_WINDOWS * N_TILES];
+        for w in 0..N_WINDOWS {
+            let win = &self.trace.windows[w];
+            for pos in 0..n {
+                let tile = design.tile_at[pos];
+                let p = self.power.tile_power(self.tiles.kind(tile), win.activity[tile]);
+                pact[w * N_TILES + pos] = p as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::{routing::Routing, topology};
+    use crate::traffic::{benchmark, generate};
+
+    #[test]
+    fn encoded_batch_matches_native_objectives() {
+        // The encoder's output, scored by the native evaluator, must equal
+        // the direct sparse objective evaluation (eval::objectives).
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 3);
+        let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+        let design = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let routing = Routing::build(&design);
+
+        let mut batch = MooBatch::zeroed();
+        ctx.fill_shared(&mut batch);
+        ctx.encode_design(&design, &routing, &mut batch, 0);
+
+        let dense = crate::eval::native::moo_eval_one(&batch, 0);
+        let sparse = crate::eval::objectives::evaluate(&ctx, &design, &routing);
+        assert!((dense.lat as f64 - sparse.lat).abs() / sparse.lat < 1e-4,
+            "lat {} vs {}", dense.lat, sparse.lat);
+        assert!((dense.umean as f64 - sparse.umean).abs() / sparse.umean < 1e-4);
+        assert!((dense.usigma as f64 - sparse.usigma).abs() / sparse.usigma < 1e-4);
+        assert!((dense.tmax as f64 - sparse.tmax).abs() / sparse.tmax < 1e-4);
+    }
+
+    #[test]
+    fn latw_only_covers_cpu_llc_pairs() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::tsv();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("nw").unwrap(), &tiles, cfg.windows, 1);
+        let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let design = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let routing = Routing::build(&design);
+        let mut batch = MooBatch::zeroed();
+        ctx.fill_shared(&mut batch);
+        ctx.encode_design(&design, &routing, &mut batch, 0);
+        let n = 64;
+        for i in 0..n {
+            for j in 0..n {
+                let v = batch.latw[i * n + j];
+                let is_cl = matches!(
+                    (tiles.kind(i), tiles.kind(j)),
+                    (TileKind::Cpu, TileKind::Llc) | (TileKind::Llc, TileKind::Cpu)
+                );
+                if is_cl {
+                    assert!(v > 0.0, "({i},{j}) missing weight");
+                } else {
+                    assert_eq!(v, 0.0, "({i},{j}) spurious weight");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Physical grid geometry: position <-> (tier, row, col) mapping and the
+//! technology-scaled cartesian coordinates used for link delays d_ij.
+
+use crate::config::{ArchConfig, TechParams};
+
+/// The static placement grid: `tiers` tiers of `rows x cols` positions.
+///
+/// Position index layout: `pos = tier * rows * cols + row * cols + col`.
+/// A "stack" is a (row, col) column through all tiers — the unit of the
+/// Eq. (7) thermal model.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub tiers: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Tile pitch [mm] (technology dependent; M3D tiles are smaller).
+    pub pitch_mm: f64,
+    /// Tier-to-tier height [mm].
+    pub tier_height_mm: f64,
+}
+
+impl Geometry {
+    pub fn new(cfg: &ArchConfig, tech: &TechParams) -> Self {
+        Geometry {
+            tiers: cfg.tiers,
+            rows: cfg.rows,
+            cols: cfg.cols,
+            pitch_mm: tech.tile_pitch_mm,
+            tier_height_mm: tech.tier_height_mm,
+        }
+    }
+
+    pub fn n_pos(&self) -> usize {
+        self.tiers * self.rows * self.cols
+    }
+
+    #[inline]
+    pub fn tier_of(&self, pos: usize) -> usize {
+        pos / (self.rows * self.cols)
+    }
+
+    #[inline]
+    pub fn row_of(&self, pos: usize) -> usize {
+        (pos % (self.rows * self.cols)) / self.cols
+    }
+
+    #[inline]
+    pub fn col_of(&self, pos: usize) -> usize {
+        pos % self.cols
+    }
+
+    /// Vertical stack id of a position (shared by all tiers).
+    #[inline]
+    pub fn stack_of(&self, pos: usize) -> usize {
+        pos % (self.rows * self.cols)
+    }
+
+    #[inline]
+    pub fn pos_of(&self, tier: usize, row: usize, col: usize) -> usize {
+        tier * self.rows * self.cols + row * self.cols + col
+    }
+
+    /// Cartesian center of a position [mm].
+    pub fn coords_mm(&self, pos: usize) -> (f64, f64, f64) {
+        (
+            self.col_of(pos) as f64 * self.pitch_mm,
+            self.row_of(pos) as f64 * self.pitch_mm,
+            self.tier_of(pos) as f64 * self.tier_height_mm,
+        )
+    }
+
+    /// Euclidean distance between two positions [mm] — the paper's d_ij
+    /// basis (Eq. 1).
+    pub fn dist_mm(&self, a: usize, b: usize) -> f64 {
+        let (ax, ay, az) = self.coords_mm(a);
+        let (bx, by, bz) = self.coords_mm(b);
+        ((ax - bx).powi(2) + (ay - by).powi(2) + (az - bz).powi(2)).sqrt()
+    }
+
+    /// Whether two positions are mesh neighbours (same tier, adjacent in
+    /// row or col) or vertical neighbours (same stack, adjacent tiers).
+    pub fn are_mesh_neighbors(&self, a: usize, b: usize) -> bool {
+        let (ta, ra, ca) = (self.tier_of(a), self.row_of(a), self.col_of(a));
+        let (tb, rb, cb) = (self.tier_of(b), self.row_of(b), self.col_of(b));
+        let dt = ta.abs_diff(tb);
+        let dr = ra.abs_diff(rb);
+        let dc = ca.abs_diff(cb);
+        (dt == 0 && dr + dc == 1) || (dt == 1 && dr == 0 && dc == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, TechParams};
+
+    fn geo() -> Geometry {
+        Geometry::new(&ArchConfig::paper(), &TechParams::tsv())
+    }
+
+    #[test]
+    fn position_mapping_roundtrips() {
+        let g = geo();
+        for pos in 0..g.n_pos() {
+            let p2 = g.pos_of(g.tier_of(pos), g.row_of(pos), g.col_of(pos));
+            assert_eq!(p2, pos);
+        }
+    }
+
+    #[test]
+    fn stacks_group_positions_vertically() {
+        let g = geo();
+        for s in 0..16 {
+            let members: Vec<usize> = (0..g.n_pos()).filter(|&p| g.stack_of(p) == s).collect();
+            assert_eq!(members.len(), 4);
+            for w in members.windows(2) {
+                assert_eq!(g.row_of(w[0]), g.row_of(w[1]));
+                assert_eq!(g.col_of(w[0]), g.col_of(w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn m3d_distances_shrink() {
+        let cfg = ArchConfig::paper();
+        let gt = Geometry::new(&cfg, &TechParams::tsv());
+        let gm = Geometry::new(&cfg, &TechParams::m3d());
+        // Same-tier corner-to-corner distance shrinks with the pitch.
+        let a = gt.pos_of(0, 0, 0);
+        let b = gt.pos_of(0, 3, 3);
+        assert!(gm.dist_mm(a, b) < gt.dist_mm(a, b));
+        // Vertical distance shrinks dramatically (thin tiers).
+        let c = gt.pos_of(3, 0, 0);
+        assert!(gm.dist_mm(a, c) < 0.1 * gt.dist_mm(a, c));
+    }
+
+    #[test]
+    fn mesh_neighborhood() {
+        let g = geo();
+        let p = g.pos_of(1, 1, 1);
+        assert!(g.are_mesh_neighbors(p, g.pos_of(1, 1, 2)));
+        assert!(g.are_mesh_neighbors(p, g.pos_of(1, 0, 1)));
+        assert!(g.are_mesh_neighbors(p, g.pos_of(0, 1, 1)));
+        assert!(g.are_mesh_neighbors(p, g.pos_of(2, 1, 1)));
+        assert!(!g.are_mesh_neighbors(p, g.pos_of(1, 2, 2)));
+        assert!(!g.are_mesh_neighbors(p, g.pos_of(2, 1, 2)));
+        assert!(!g.are_mesh_neighbors(p, p));
+    }
+}

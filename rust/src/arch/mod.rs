@@ -1,0 +1,12 @@
+//! Architecture model: tile taxonomy, physical grid geometry, candidate
+//! designs (placement + links), and the tensor encoder that turns designs
+//! into artifact inputs.
+
+pub mod design;
+pub mod encode;
+pub mod geometry;
+pub mod tile;
+
+pub use design::{Design, Link};
+pub use geometry::Geometry;
+pub use tile::{TileKind, TileSet};

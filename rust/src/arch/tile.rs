@@ -1,0 +1,85 @@
+//! Tile taxonomy: the heterogeneous compute/cache elements of HeM3D.
+
+/// Kind of logic tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TileKind {
+    /// Latency-sensitive x86-like core.
+    Cpu,
+    /// Throughput-oriented SM-like core.
+    Gpu,
+    /// Last-level-cache slice + memory controller.
+    Llc,
+}
+
+impl TileKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TileKind::Cpu => "cpu",
+            TileKind::Gpu => "gpu",
+            TileKind::Llc => "llc",
+        }
+    }
+}
+
+/// Canonical tile-id layout: ids [0, n_cpu) are CPUs, [n_cpu, n_cpu+n_gpu)
+/// GPUs, and the rest LLCs.  Everything downstream (traffic, power, perf)
+/// relies on this ordering.
+#[derive(Debug, Clone)]
+pub struct TileSet {
+    pub n_cpu: usize,
+    pub n_gpu: usize,
+    pub n_llc: usize,
+}
+
+impl TileSet {
+    pub fn new(n_cpu: usize, n_gpu: usize, n_llc: usize) -> Self {
+        TileSet { n_cpu, n_gpu, n_llc }
+    }
+
+    pub fn from_arch(cfg: &crate::config::ArchConfig) -> Self {
+        TileSet::new(cfg.n_cpu, cfg.n_gpu, cfg.n_llc)
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.n_cpu + self.n_gpu + self.n_llc
+    }
+
+    /// Kind of tile id `t`.
+    pub fn kind(&self, t: usize) -> TileKind {
+        if t < self.n_cpu {
+            TileKind::Cpu
+        } else if t < self.n_cpu + self.n_gpu {
+            TileKind::Gpu
+        } else {
+            debug_assert!(t < self.n_tiles());
+            TileKind::Llc
+        }
+    }
+
+    /// Iterator over tile ids of a kind.
+    pub fn ids_of(&self, kind: TileKind) -> std::ops::Range<usize> {
+        match kind {
+            TileKind::Cpu => 0..self.n_cpu,
+            TileKind::Gpu => self.n_cpu..self.n_cpu + self.n_gpu,
+            TileKind::Llc => self.n_cpu + self.n_gpu..self.n_tiles(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tile_layout() {
+        let ts = TileSet::new(8, 40, 16);
+        assert_eq!(ts.n_tiles(), 64);
+        assert_eq!(ts.kind(0), TileKind::Cpu);
+        assert_eq!(ts.kind(7), TileKind::Cpu);
+        assert_eq!(ts.kind(8), TileKind::Gpu);
+        assert_eq!(ts.kind(47), TileKind::Gpu);
+        assert_eq!(ts.kind(48), TileKind::Llc);
+        assert_eq!(ts.kind(63), TileKind::Llc);
+        assert_eq!(ts.ids_of(TileKind::Llc).len(), 16);
+    }
+}

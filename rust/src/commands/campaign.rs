@@ -1,0 +1,142 @@
+//! `hem3d campaign` — regenerate the paper's figure data (Figs 7-10) into
+//! console tables + JSON files under a report directory.
+
+use anyhow::Result;
+use hem3d::coordinator::campaign::Effort;
+use hem3d::coordinator::figures::{self, BENCHES};
+use hem3d::coordinator::report::{self, f, table};
+use hem3d::util::cli::Args;
+use hem3d::log_info;
+
+pub fn run(args: &Args) -> Result<()> {
+    let figs: Vec<u32> = args
+        .opt_or("figs", "7,8,9,10")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let out = args.opt_or("out", "reports");
+    let seed = args.u64_or("seed", 42);
+    let benches_opt = args.opt_or("benches", &BENCHES.join(","));
+    let benches: Vec<&str> = benches_opt.split(',').collect();
+    let effort = match args.opt_or("effort", "quick").as_str() {
+        "full" => Effort::full(),
+        _ => Effort::quick(),
+    };
+
+    for fig in figs {
+        match fig {
+            7 => {
+                log_info!("running Fig 7 (MOO-STAGE vs AMOSA convergence)...");
+                let rows = figures::fig7(&benches, &effort, seed);
+                let avg_tsv: f64 =
+                    rows.iter().map(|r| r.speedup_tsv).sum::<f64>() / rows.len() as f64;
+                let avg_m3d: f64 =
+                    rows.iter().map(|r| r.speedup_m3d).sum::<f64>() / rows.len() as f64;
+                println!("\nFig 7 — MOO-STAGE speed-up over AMOSA (convergence time)");
+                println!(
+                    "{}",
+                    table(
+                        &["bench", "tsv", "m3d"],
+                        &rows
+                            .iter()
+                            .map(|r| vec![
+                                r.bench.clone(),
+                                format!("{}x", f(r.speedup_tsv, 2)),
+                                format!("{}x", f(r.speedup_m3d, 2)),
+                            ])
+                            .collect::<Vec<_>>()
+                    )
+                );
+                println!("average: tsv {avg_tsv:.2}x, m3d {avg_m3d:.2}x (paper: 5.48x / 7.38x)");
+                report::write_json(&format!("{out}/fig7.json"), &figures::fig7_json(&rows))?;
+            }
+            8 => {
+                log_info!("running Fig 8 (TSV PO vs PT)...");
+                let rows = figures::fig8(&benches, &effort, seed);
+                println!("\nFig 8 — TSV: performance-only vs performance-thermal");
+                println!(
+                    "{}",
+                    table(
+                        &["bench", "T(PO) C", "T(PT) C", "dT", "ET(PT)/ET(PO)"],
+                        &rows
+                            .iter()
+                            .map(|r| vec![
+                                r.bench.clone(),
+                                f(r.temp_po_c, 1),
+                                f(r.temp_pt_c, 1),
+                                f(r.temp_po_c - r.temp_pt_c, 1),
+                                f(r.et_pt_over_po, 3),
+                            ])
+                            .collect::<Vec<_>>()
+                    )
+                );
+                report::write_json(&format!("{out}/fig8.json"), &figures::fig8_json(&rows))?;
+            }
+            9 => {
+                log_info!("running Fig 9 (TSV-BL vs HeM3D)...");
+                let rows = figures::fig9(&benches, &effort, seed);
+                println!("\nFig 9 — TSV-BL vs HeM3D-PO vs HeM3D-PT");
+                println!(
+                    "{}",
+                    table(
+                        &["bench", "T(BL) C", "T(PO) C", "T(PT) C", "ET(PO)/BL", "ET(PT)/BL"],
+                        &rows
+                            .iter()
+                            .map(|r| vec![
+                                r.bench.clone(),
+                                f(r.temp_tsv_bl_c, 1),
+                                f(r.temp_hem3d_po_c, 1),
+                                f(r.temp_hem3d_pt_c, 1),
+                                f(r.et_hem3d_po, 3),
+                                f(r.et_hem3d_pt, 3),
+                            ])
+                            .collect::<Vec<_>>()
+                    )
+                );
+                let avg_gain: f64 = rows.iter().map(|r| 1.0 - r.et_hem3d_po).sum::<f64>()
+                    / rows.len() as f64;
+                let max_gain = rows
+                    .iter()
+                    .map(|r| 1.0 - r.et_hem3d_po)
+                    .fold(f64::MIN, f64::max);
+                let avg_dt: f64 = rows
+                    .iter()
+                    .map(|r| r.temp_tsv_bl_c - r.temp_hem3d_po_c)
+                    .sum::<f64>()
+                    / rows.len() as f64;
+                println!(
+                    "HeM3D-PO vs TSV-BL: avg ET gain {:.1}% (paper 14.2%), max {:.1}% (paper 18.3%), avg dT {:.1}C (paper ~18C)",
+                    100.0 * avg_gain,
+                    100.0 * max_gain,
+                    avg_dt
+                );
+                report::write_json(&format!("{out}/fig9.json"), &figures::fig9_json(&rows))?;
+            }
+            10 => {
+                log_info!("running Fig 10 (HeM3D PO vs PT, ET*T selection)...");
+                let rows = figures::fig10(&benches, &effort, seed);
+                println!("\nFig 10 — HeM3D: PO vs PT (ET*Temp product, no constraint)");
+                println!(
+                    "{}",
+                    table(
+                        &["bench", "T(PO) C", "T(PT) C", "dT", "ET(PT)/ET(PO)"],
+                        &rows
+                            .iter()
+                            .map(|r| vec![
+                                r.bench.clone(),
+                                f(r.temp_po_c, 1),
+                                f(r.temp_pt_c, 1),
+                                f(r.temp_po_c - r.temp_pt_c, 1),
+                                f(r.et_pt_over_po, 3),
+                            ])
+                            .collect::<Vec<_>>()
+                    )
+                );
+                report::write_json(&format!("{out}/fig10.json"), &figures::fig10_json(&rows))?;
+            }
+            other => anyhow::bail!("unknown figure {other} (supported: 7,8,9,10)"),
+        }
+    }
+    println!("\nreports written to {out}/");
+    Ok(())
+}

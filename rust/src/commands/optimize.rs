@@ -1,0 +1,90 @@
+//! `hem3d optimize` — run one DSE leg (benchmark x technology x mode x
+//! algorithm), validate the Pareto front, and print the Eq.(10) winner.
+//!
+//! With `--artifacts DIR` the Pareto front is additionally cross-scored
+//! through the AOT `moo_eval` kernel and the winners' temperatures through
+//! the batched `thermal_solve` artifact (L1<->L3 agreement is reported).
+
+use anyhow::Result;
+use hem3d::config::Tech;
+use hem3d::coordinator::{batch, campaign};
+use hem3d::coordinator::campaign::{Algo, Effort, LegWorld, Selection};
+use hem3d::noc::routing::Routing;
+use hem3d::opt::Mode;
+use hem3d::runtime::Evaluator;
+use hem3d::util::cli::Args;
+use hem3d::{log_info, log_warn};
+
+pub fn run(args: &Args) -> Result<()> {
+    let bench = args.opt_or("bench", "bp");
+    let tech = Tech::parse(&args.opt_or("tech", "m3d"))
+        .ok_or_else(|| anyhow::anyhow!("unknown tech"))?;
+    let mode = Mode::parse(&args.opt_or("mode", "pt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown mode (po|pt)"))?;
+    let algo = Algo::parse(&args.opt_or("algo", "moo-stage"))
+        .ok_or_else(|| anyhow::anyhow!("unknown algo (moo-stage|amosa)"))?;
+    let seed = args.u64_or("seed", 42);
+    let artifacts = args.opt_or("artifacts", "artifacts");
+
+    let mut effort = match args.opt_or("effort", "quick").as_str() {
+        "full" => Effort::full(),
+        _ => Effort::quick(),
+    };
+    if let Some(iters) = args.opt("iters").and_then(|s| s.parse::<usize>().ok()) {
+        effort.stage.max_iters = iters;
+    }
+
+    let selection = match mode {
+        Mode::Po => Selection::MinEt,
+        Mode::Pt => Selection::MinEtUnderTth,
+    };
+
+    log_info!("optimize: bench={bench} tech={} mode={} algo={}", tech.name(), mode.name(), algo.name());
+    let world = LegWorld::new(&bench, tech, seed);
+    let leg = campaign::run_leg(&world, mode, algo, selection, &effort, seed);
+
+    println!("leg: bench={} tech={} mode={} algo={}", leg.bench, leg.tech.name(), leg.mode.name(), leg.algo.name());
+    println!("  evaluations:        {}", leg.evals);
+    println!("  optimizer time:     {:.2} s", leg.opt_seconds);
+    println!("  convergence time:   {:.2} s", leg.convergence_seconds);
+    println!("  pareto candidates validated: {}", leg.candidates.len());
+    for (i, c) in leg.candidates.iter().enumerate() {
+        println!("    #{i}: ET={:.4}  T={:.1}C", c.et, c.temp_c);
+    }
+    println!("  winner: ET={:.4}  T={:.1}C", leg.winner.et, leg.winner.temp_c);
+
+    // Optional L1<->L3 cross-check through the artifacts.
+    if artifacts != "none" {
+        match Evaluator::load(&artifacts) {
+            Err(e) => log_warn!("artifacts unavailable ({e:#}); skipping cross-check"),
+            Ok(ev) => {
+                let ctx = world.encode_ctx();
+                let designs: Vec<&hem3d::arch::Design> =
+                    leg.candidates.iter().take(hem3d::runtime::dims::MOO_BATCH).map(|c| &c.design).collect();
+                let art = batch::artifact_scores(&ev, &ctx, &designs)?;
+                let mut max_rel = 0.0f64;
+                for (d, a) in designs.iter().zip(art.iter()) {
+                    let routing = Routing::build(d);
+                    let n = hem3d::eval::objectives::evaluate(&ctx, d, &routing);
+                    for (x, y) in a.as_vec().iter().zip(n.as_vec().iter()) {
+                        max_rel = max_rel.max((x - y).abs() / y.abs().max(1e-9));
+                    }
+                }
+                println!("  artifact cross-check: {} designs, max rel err {max_rel:.2e}", designs.len());
+                anyhow::ensure!(max_rel < 1e-3, "artifact/native divergence");
+
+                let th_designs: Vec<&hem3d::arch::Design> = designs
+                    .iter()
+                    .take(hem3d::runtime::dims::TH_BATCH)
+                    .copied()
+                    .collect();
+                let temps = batch::artifact_peak_temps(&ev, &ctx, &th_designs)?;
+                println!(
+                    "  artifact thermal batch: {:?}",
+                    temps.iter().map(|t| format!("{t:.1}C")).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! `hem3d params` — print the Table-1 physical parameters (T1) and the
+//! derived thermal-stack constants for one or both technologies.
+
+use anyhow::Result;
+use hem3d::config::{Tech, TechParams};
+use hem3d::thermal::StackModel;
+use hem3d::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let techs: Vec<Tech> = match args.opt("tech") {
+        Some(s) => vec![Tech::parse(s).ok_or_else(|| anyhow::anyhow!("unknown tech '{s}'"))?],
+        None => vec![Tech::Tsv, Tech::M3d],
+    };
+
+    for tech in techs {
+        let p = TechParams::for_tech(tech);
+        println!("=== {} parameters (Table 1 / §5.1) ===", tech.name());
+        for (k, v) in p.table() {
+            println!("  {k:<24} {v}");
+        }
+        let stack = p.layer_stack();
+        println!("  layer stack (z=0 nearest sink):");
+        for (z, l) in stack.layers.iter().enumerate() {
+            println!(
+                "    z={z:<2} {:<10} t={:>8.2} um  k={:>6.1} W/mK{}",
+                l.name,
+                l.thickness * 1e6,
+                l.k,
+                l.tier.map(|t| format!("  [tier {t}]")).unwrap_or_default()
+            );
+        }
+        let sm = StackModel::from_stack(&stack, p.t_h);
+        println!("  Eq.(7) per-tier coefficients (K/W, incl. T_H):");
+        for (t, c) in sm.coeff_per_tier.iter().enumerate() {
+            println!("    tier {t}: {c:.3}");
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! `hem3d pipeline` — Fig 6: planar vs M3D GPU pipeline timing, the derived
+//! clock frequencies, and the projected energy saving.
+
+use anyhow::Result;
+use hem3d::timing::analyze_gpu_pipeline;
+use hem3d::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let r = analyze_gpu_pipeline(seed);
+
+    println!("Fig 6 — GPU pipeline stage latencies (normalised to planar clock)");
+    println!(
+        "{:<10} {:>9} {:>9} {:>8} {:>8} {:>7}",
+        "stage", "planar_ps", "m3d_ps", "norm_pl", "norm_3d", "gain%"
+    );
+    for s in &r.stages {
+        println!(
+            "{:<10} {:>9.1} {:>9.1} {:>8.3} {:>8.3} {:>6.1}%",
+            s.name,
+            s.planar_ps,
+            s.m3d_ps,
+            s.planar_ps / r.planar_crit_ps,
+            s.m3d_ps / r.planar_crit_ps,
+            100.0 * s.improvement
+        );
+    }
+    println!();
+    println!(
+        "planar critical: {:.1} ps  ->  {:.2} GHz",
+        r.planar_crit_ps, r.planar_freq_ghz
+    );
+    println!(
+        "m3d critical:    {:.1} ps ({})  ->  {:.2} GHz (+{:.1}%)",
+        r.m3d_crit_ps,
+        r.m3d_critical_stage,
+        r.m3d_freq_ghz,
+        100.0 * (r.m3d_freq_ghz / r.planar_freq_ghz - 1.0)
+    );
+    println!(
+        "energy ratio m3d/planar: {:.3} ({:.1}% saving)",
+        r.energy_ratio,
+        100.0 * (1.0 - r.energy_ratio)
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! `hem3d selftest` — the L1<->L3 contract check.
+//!
+//! Builds a deterministic random `MooBatch`, scores it through the AOT
+//! `moo_eval` artifact (PJRT) and through the native Rust mirror, and
+//! requires elementwise agreement.  Also round-trips the `thermal_solve`
+//! artifact against the native Jacobi solver.
+
+use anyhow::{Context, Result};
+use hem3d::eval::native::moo_eval_native;
+use hem3d::runtime::evaluator::{dims, Evaluator, MooBatch};
+use hem3d::thermal::grid::{GridParams, ThermalGrid};
+use hem3d::util::cli::Args;
+use hem3d::util::Rng;
+use hem3d::log_info;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let seed = args.u64_or("seed", 7);
+
+    let ev = Evaluator::load(&dir)
+        .with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`)"))?;
+    log_info!("PJRT platform: {}", ev.platform);
+
+    // ---- moo_eval: artifact vs native ------------------------------------
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut batch = MooBatch::zeroed();
+    for v in batch.q.iter_mut() {
+        *v = if rng.chance(0.05) { 1.0 } else { 0.0 };
+    }
+    for v in batch.f.iter_mut() {
+        *v = rng.f32() * 0.2;
+    }
+    for v in batch.latw.iter_mut() {
+        *v = rng.f32();
+    }
+    for v in batch.pact.iter_mut() {
+        *v = rng.f32() * 3.0;
+    }
+    for v in batch.cth.iter_mut() {
+        *v = 0.5 + rng.f32();
+    }
+    // Valid one-hot stack selector.
+    for n in 0..dims::N_TILES {
+        let s = n % dims::N_STACKS;
+        batch.ssel[n * dims::N_STACKS + s] = 1.0;
+    }
+
+    let got = ev.moo_eval(&batch)?;
+    let want = moo_eval_native(&batch);
+    let mut max_rel = 0f64;
+    for (g, w) in got.iter().zip(want.iter()) {
+        for (a, b) in [
+            (g.lat, w.lat),
+            (g.umean, w.umean),
+            (g.usigma, w.usigma),
+            (g.tmax, w.tmax),
+        ] {
+            let rel = ((a - b).abs() / b.abs().max(1e-6)) as f64;
+            max_rel = max_rel.max(rel);
+        }
+    }
+    anyhow::ensure!(max_rel < 1e-3, "moo_eval mismatch: max rel err {max_rel:.3e}");
+    log_info!("moo_eval artifact vs native: max rel err {max_rel:.3e} OK");
+
+    // ---- thermal_solve: artifact vs native Jacobi -------------------------
+    let (b, z, y, x) = (dims::TH_BATCH, dims::TH_Z, dims::TH_Y, dims::TH_X);
+    let mut pow_ = vec![0f32; b * z * y * x];
+    for v in pow_.iter_mut() {
+        *v = rng.f32() * 0.5;
+    }
+    let gp = GridParams::uniform_demo(z);
+    let (_, tpeak) =
+        ev.thermal_solve(&pow_, &gp.gdn_f32(), &gp.gup_f32(), &gp.glat_f32(), &gp.gamb_f32())?;
+
+    let mut max_rel = 0f64;
+    for i in 0..b {
+        let grid = ThermalGrid::new(z, y, x, gp.clone());
+        let slice = &pow_[i * z * y * x..(i + 1) * z * y * x];
+        let native_peak = grid.solve_peak_f32(slice, 600);
+        let rel = ((tpeak[i] - native_peak).abs() / native_peak.max(1e-6)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    anyhow::ensure!(max_rel < 1e-3, "thermal mismatch: max rel err {max_rel:.3e}");
+    log_info!("thermal_solve artifact vs native: max rel err {max_rel:.3e} OK");
+
+    println!("selftest OK (platform={}, seed={seed})", ev.platform);
+    Ok(())
+}

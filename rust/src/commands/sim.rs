@@ -1,0 +1,61 @@
+//! `hem3d sim` — run the cycle-level NoC simulator (Garnet substitute) on a
+//! mesh or seeded SWNoC design under a benchmark's worst traffic window,
+//! reporting latency / throughput / backpressure and the per-channel load
+//! distribution.
+
+use anyhow::Result;
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, Tech, TechParams};
+use hem3d::coordinator::noc_validate;
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::util::cli::Args;
+use hem3d::util::{stats, Rng};
+
+pub fn run(args: &Args) -> Result<()> {
+    let bench = args.opt_or("bench", "bp");
+    let tech = Tech::parse(&args.opt_or("tech", "m3d"))
+        .ok_or_else(|| anyhow::anyhow!("unknown tech"))?;
+    let topo = args.opt_or("topology", "mesh");
+    let cycles = args.u64_or("cycles", 20_000);
+    let seed = args.u64_or("seed", 42);
+
+    let cfg = ArchConfig::paper();
+    let tech = TechParams::for_tech(tech);
+    let geo = Geometry::new(&cfg, &tech);
+    let tiles = TileSet::from_arch(&cfg);
+    let profile = hem3d::traffic::benchmark(&bench)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench}'"))?;
+    let trace = hem3d::traffic::generate(&profile, &tiles, cfg.windows, seed);
+    let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+    let mut rng = Rng::seed_from_u64(seed);
+    let design = match topo.as_str() {
+        "mesh" => Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg)),
+        "swnoc" => {
+            let links = topology::swnoc_links(&cfg, &geo, args.f64_or("alpha", 1.8), &mut rng);
+            Design::random_placement(&cfg, links, &mut rng)
+        }
+        other => anyhow::bail!("unknown topology '{other}' (mesh|swnoc)"),
+    };
+    let routing = Routing::build(&design);
+
+    let st = noc_validate(&ctx, &design, &routing, cycles, seed);
+    println!(
+        "sim: bench={bench} tech={} topology={topo} cycles={cycles} seed={seed}",
+        tech.tech.name()
+    );
+    println!("  delivered packets:   {}", st.delivered);
+    println!("  throughput:          {:.4} flits/cycle", st.throughput());
+    println!("  mean packet latency: {:.1} cycles", st.mean_latency);
+    println!("  p95 packet latency:  {:.1} cycles", st.p95_latency);
+    println!("  mean hops:           {:.2}", st.mean_hops);
+    println!("  dropped at inject:   {}", st.dropped_at_inject);
+    let util = &st.channel_utilization;
+    println!(
+        "  channel utilization: mean {:.3}, max {:.3}, sigma {:.3}",
+        stats::mean(util),
+        stats::max(util),
+        stats::std_pop(util)
+    );
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! `hem3d trace` — generate a benchmark traffic trace (the f_ij(t) input
+//! of the optimization) and write it to JSON.
+
+use anyhow::Result;
+use hem3d::arch::tile::TileSet;
+use hem3d::config::ArchConfig;
+use hem3d::traffic::{self, trace as trace_io};
+use hem3d::util::cli::Args;
+use hem3d::log_info;
+
+pub fn run(args: &Args) -> Result<()> {
+    let bench = args.opt_or("bench", "bp");
+    let seed = args.u64_or("seed", 42);
+    let out = args.opt_or("out", &format!("trace_{bench}.json"));
+
+    let cfg = ArchConfig::paper();
+    let tiles = TileSet::from_arch(&cfg);
+    let profile = traffic::benchmark(&bench)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench}' (bp|nw|lv|lud|knn|pf)"))?;
+    let trace = traffic::generate(&profile, &tiles, cfg.windows, seed);
+
+    for (w, win) in trace.windows.iter().enumerate() {
+        let total: f64 = win.f.iter().sum();
+        let act: f64 =
+            win.activity.iter().sum::<f64>() / win.activity.len() as f64;
+        log_info!("window {w}: total rate {total:.4} pkts/cycle, mean activity {act:.3}");
+    }
+
+    trace_io::save(&trace, &out).map_err(|e| anyhow::anyhow!(e))?;
+    println!("wrote {out} ({} windows, {} tiles, bench={bench}, seed={seed})",
+        trace.windows.len(), trace.n_tiles);
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Architecture-level configuration (paper §5.1): tile counts, grid
+//! geometry, NoC sizing, optimization constants.
+
+/// The 64-tile, 4-tier HeM3D configuration (the paper's running example).
+///
+/// The design/optimization methodology is generic; this struct carries every
+/// size so tests exercise smaller instances too.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    /// Latency-sensitive x86-like cores.
+    pub n_cpu: usize,
+    /// Throughput-oriented SM-like cores.
+    pub n_gpu: usize,
+    /// Last-level-cache slices (each with a memory controller).
+    pub n_llc: usize,
+    /// Physical logic tiers.
+    pub tiers: usize,
+    /// Tile-grid rows per tier.
+    pub rows: usize,
+    /// Tile-grid columns per tier.
+    pub cols: usize,
+    /// NoC link budget (paper: same count as the equivalent 3D mesh).
+    pub n_links: usize,
+    /// Traffic windows per application trace.
+    pub windows: usize,
+    /// PT-mode temperature threshold T_th [°C] (paper: 85).
+    pub t_threshold_c: f64,
+}
+
+impl ArchConfig {
+    /// The paper's 64-tile configuration: 8 CPU + 40 GPU + 16 LLC over
+    /// 4 tiers of 4x4 tiles; 144 links (96 intra-tier mesh + 48 vertical).
+    pub fn paper() -> Self {
+        ArchConfig {
+            n_cpu: 8,
+            n_gpu: 40,
+            n_llc: 16,
+            tiers: 4,
+            rows: 4,
+            cols: 4,
+            n_links: 144,
+            windows: 8,
+            t_threshold_c: 85.0,
+        }
+    }
+
+    /// A small instance for fast unit tests: 16 tiles over 2 tiers.
+    pub fn tiny() -> Self {
+        ArchConfig {
+            n_cpu: 2,
+            n_gpu: 10,
+            n_llc: 4,
+            tiers: 2,
+            rows: 2,
+            cols: 4,
+            n_links: ArchConfig::mesh_link_count(2, 2, 4),
+            windows: 3,
+            t_threshold_c: 85.0,
+        }
+    }
+
+    /// Total tile count.
+    pub fn n_tiles(&self) -> usize {
+        self.n_cpu + self.n_gpu + self.n_llc
+    }
+
+    /// Tiles per tier.
+    pub fn tiles_per_tier(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Vertical stacks (tile columns across tiers).
+    pub fn n_stacks(&self) -> usize {
+        self.tiles_per_tier()
+    }
+
+    /// Link count of the (tiers x rows x cols) 3D mesh.
+    pub fn mesh_link_count(tiers: usize, rows: usize, cols: usize) -> usize {
+        let intra = tiers * (rows * (cols - 1) + cols * (rows - 1));
+        let vertical = rows * cols * (tiers - 1);
+        intra + vertical
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_tiles() != self.tiers * self.tiles_per_tier() {
+            return Err(format!(
+                "{} tiles do not fill {} tiers of {}x{}",
+                self.n_tiles(),
+                self.tiers,
+                self.rows,
+                self.cols
+            ));
+        }
+        if self.n_links < self.n_tiles() - 1 {
+            return Err("link budget below spanning-tree minimum".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_consistent() {
+        let c = ArchConfig::paper();
+        c.validate().unwrap();
+        assert_eq!(c.n_tiles(), 64);
+        assert_eq!(c.n_stacks(), 16);
+        // 96 intra-tier + 48 vertical = 144 — matches the artifact N_LINKS.
+        assert_eq!(ArchConfig::mesh_link_count(4, 4, 4), 144);
+        assert_eq!(c.n_links, 144);
+    }
+
+    #[test]
+    fn tiny_config_is_consistent() {
+        let c = ArchConfig::tiny();
+        c.validate().unwrap();
+        assert_eq!(c.n_tiles(), 16);
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let mut c = ArchConfig::paper();
+        c.n_gpu = 41;
+        assert!(c.validate().is_err());
+        let mut c2 = ArchConfig::paper();
+        c2.n_links = 10;
+        assert!(c2.validate().is_err());
+    }
+}

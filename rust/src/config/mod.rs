@@ -1,0 +1,8 @@
+//! System configuration: the paper's §5.1 architecture constants and the
+//! Table-1 physical parameters for both integration technologies.
+
+pub mod arch;
+pub mod tech;
+
+pub use arch::ArchConfig;
+pub use tech::{Tech, TechParams};

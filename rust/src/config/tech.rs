@@ -1,0 +1,167 @@
+//! Integration-technology parameters (paper Table 1 + §5.1).
+//!
+//! The M3D deltas are *outputs of the cited component studies* applied as
+//! constants, exactly as the paper does: CPU frequency from Gopireddy &
+//! Torrellas [9], LLC latency from Gong et al. [10], router depth from Das
+//! et al. [7].  The GPU frequency is NOT a constant — it is produced by our
+//! `timing::` M3D projection of the synthesized GPU pipeline (Fig 6) and
+//! validated in `tests/perf_pipeline.rs`; the value here is the projection's
+//! result, used directly by the perf model.
+
+use crate::thermal::LayerStack;
+
+/// Which 3D integration technology a design uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tech {
+    Tsv,
+    M3d,
+}
+
+impl Tech {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tech::Tsv => "tsv",
+            Tech::M3d => "m3d",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Tech> {
+        match s {
+            "tsv" => Some(Tech::Tsv),
+            "m3d" => Some(Tech::M3d),
+            _ => None,
+        }
+    }
+}
+
+/// All technology-dependent constants.
+#[derive(Debug, Clone)]
+pub struct TechParams {
+    pub tech: Tech,
+    /// CPU clock [GHz] (planar 2.0; M3D +14% [9]).
+    pub cpu_freq_ghz: f64,
+    /// GPU clock [GHz] (planar 0.70; M3D +10% from our Fig-6 projection).
+    pub gpu_freq_ghz: f64,
+    /// LLC access latency [cycles @ 2 GHz] (M3D -23.3% [10]).
+    pub llc_latency_cycles: f64,
+    /// Router pipeline depth `r` of Eq. (1) (multi-tier M3D router: 2 [7]).
+    pub router_stages: f64,
+    /// Tile pitch [mm] — M3D gate-level partitioning shrinks the footprint
+    /// by ~1/sqrt(2) per side (2 tiers per tile).
+    pub tile_pitch_mm: f64,
+    /// Link delay [cycles/mm] at the network clock (wire RC dominated).
+    pub link_delay_cyc_per_mm: f64,
+    /// Vertical hop physical height [mm] (TSV die stack vs M3D thin tiers).
+    pub tier_height_mm: f64,
+    /// GPU core energy scale vs planar (M3D: 0.79 = 21% saving, Fig 6 + §5.2).
+    pub gpu_energy_scale: f64,
+    /// Whether inter-tier microfluidic cooling is active (paper: TSV only).
+    pub cooled: bool,
+    /// Lateral heat-flow calibration factor T_H of Eq. (7).
+    pub t_h: f64,
+}
+
+impl TechParams {
+    /// TSV baseline: planar cores/caches on 4 stacked dies.
+    pub fn tsv() -> Self {
+        TechParams {
+            tech: Tech::Tsv,
+            cpu_freq_ghz: 2.00,
+            gpu_freq_ghz: 0.70,
+            llc_latency_cycles: 30.0,
+            router_stages: 3.0,
+            tile_pitch_mm: 2.0,
+            link_delay_cyc_per_mm: 0.50,
+            tier_height_mm: 0.110, // 100 um die + 10 um bond
+            gpu_energy_scale: 1.0,
+            cooled: true,
+            // Lateral-flow factor: TSV heat stays columnar (poor bond
+            // conduction), so the 1D ladder under-counts — calibrated vs
+            // the grid solver (tests/thermal_xval.rs).
+            t_h: 1.10,
+        }
+    }
+
+    /// M3D: every core/uncore gate-level partitioned over two tiers.
+    pub fn m3d() -> Self {
+        TechParams {
+            tech: Tech::M3d,
+            cpu_freq_ghz: 2.28,                 // +14% [9]
+            gpu_freq_ghz: 0.77,                 // +10%, our Fig-6 projection
+            llc_latency_cycles: 30.0 * (1.0 - 0.233), // -23.3% [10]
+            router_stages: 2.0,                 // multi-tier router [7]
+            tile_pitch_mm: 2.0 / std::f64::consts::SQRT_2,
+            link_delay_cyc_per_mm: 0.50,
+            tier_height_mm: 0.0033, // ~3 um tier + 0.3 um ILD
+            gpu_energy_scale: 0.79, // 21% energy saving (§5.2)
+            cooled: false,
+            // M3D columns spread heat laterally through the thick base, so
+            // the per-column ladder over-counts — calibrated vs the grid
+            // solver (tests/thermal_xval.rs).
+            t_h: 1.03,
+        }
+    }
+
+    pub fn for_tech(tech: Tech) -> Self {
+        match tech {
+            Tech::Tsv => Self::tsv(),
+            Tech::M3d => Self::m3d(),
+        }
+    }
+
+    /// The physical layer stack for thermal modeling.
+    pub fn layer_stack(&self) -> LayerStack {
+        match self.tech {
+            Tech::Tsv => LayerStack::tsv(self.cooled),
+            Tech::M3d => LayerStack::m3d(),
+        }
+    }
+
+    /// Human-readable parameter table (the `hem3d params` command / T1).
+    pub fn table(&self) -> Vec<(String, String)> {
+        vec![
+            ("technology".into(), self.tech.name().into()),
+            ("cpu_freq_ghz".into(), format!("{:.2}", self.cpu_freq_ghz)),
+            ("gpu_freq_ghz".into(), format!("{:.2}", self.gpu_freq_ghz)),
+            ("llc_latency_cycles".into(), format!("{:.1}", self.llc_latency_cycles)),
+            ("router_stages".into(), format!("{:.0}", self.router_stages)),
+            ("tile_pitch_mm".into(), format!("{:.3}", self.tile_pitch_mm)),
+            ("tier_height_mm".into(), format!("{:.4}", self.tier_height_mm)),
+            ("link_delay_cyc_per_mm".into(), format!("{:.2}", self.link_delay_cyc_per_mm)),
+            ("gpu_energy_scale".into(), format!("{:.2}", self.gpu_energy_scale)),
+            ("microfluidic_cooling".into(), format!("{}", self.cooled)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m3d_deltas_match_cited_studies() {
+        let t = TechParams::tsv();
+        let m = TechParams::m3d();
+        assert!((m.cpu_freq_ghz / t.cpu_freq_ghz - 1.14).abs() < 1e-9);
+        assert!((m.gpu_freq_ghz / t.gpu_freq_ghz - 1.10).abs() < 1e-9);
+        assert!((1.0 - m.llc_latency_cycles / t.llc_latency_cycles - 0.233).abs() < 1e-9);
+        assert!(m.router_stages < t.router_stages);
+        assert!(m.tile_pitch_mm < t.tile_pitch_mm);
+    }
+
+    #[test]
+    fn only_tsv_is_liquid_cooled() {
+        assert!(TechParams::tsv().cooled);
+        assert!(!TechParams::m3d().cooled);
+        assert!(TechParams::tsv().layer_stack().gamb().iter().any(|&g| g > 0.0));
+        assert!(TechParams::m3d().layer_stack().gamb().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn tech_roundtrip() {
+        assert_eq!(Tech::parse("tsv"), Some(Tech::Tsv));
+        assert_eq!(Tech::parse("m3d"), Some(Tech::M3d));
+        assert_eq!(Tech::parse("x"), None);
+        assert_eq!(TechParams::for_tech(Tech::M3d).tech, Tech::M3d);
+    }
+}

@@ -1,0 +1,101 @@
+//! Batched PJRT scoring: push Pareto fronts through the AOT artifacts.
+//!
+//! Two roles: (a) cross-validate the sparse native evaluator against the
+//! L1/L2 kernels on real candidate designs (not synthetic tensors), and
+//! (b) run the detailed batched thermal solve for Pareto winners — the
+//! genuinely heavy numeric path (600 Jacobi sweeps x batch).
+
+use anyhow::Result;
+
+use crate::arch::design::Design;
+use crate::arch::encode::EncodeCtx;
+use crate::eval::objectives::Scores;
+use crate::noc::routing::Routing;
+use crate::runtime::evaluator::{dims, Evaluator, MooBatch};
+use crate::thermal::{GridParams, T_AMBIENT_C};
+
+use super::validate::power_grid;
+
+/// Score up to MOO_BATCH designs through the `moo_eval` artifact.
+/// Returns per-design Scores (f32 precision, cast up).
+pub fn artifact_scores(
+    ev: &Evaluator,
+    ctx: &EncodeCtx<'_>,
+    designs: &[&Design],
+) -> Result<Vec<Scores>> {
+    anyhow::ensure!(
+        designs.len() <= dims::MOO_BATCH,
+        "batch of {} exceeds MOO_BATCH {}",
+        designs.len(),
+        dims::MOO_BATCH
+    );
+    let mut batch = MooBatch::zeroed();
+    ctx.fill_shared(&mut batch);
+    for (slot, d) in designs.iter().enumerate() {
+        let routing = Routing::build(d);
+        ctx.encode_design(d, &routing, &mut batch, slot);
+    }
+    let raw = ev.moo_eval(&batch)?;
+    Ok(raw
+        .into_iter()
+        .take(designs.len())
+        .map(|s| Scores {
+            lat: s.lat as f64,
+            umean: s.umean as f64,
+            usigma: s.usigma as f64,
+            tmax: s.tmax as f64,
+        })
+        .collect())
+}
+
+/// Batched detailed thermal solve for up to TH_BATCH designs: returns the
+/// peak temperature [°C] per design (single leakage linearization at the
+/// ambient point; the fixed-point refinement stays in `validate.rs`).
+pub fn artifact_peak_temps(
+    ev: &Evaluator,
+    ctx: &EncodeCtx<'_>,
+    designs: &[&Design],
+) -> Result<Vec<f64>> {
+    anyhow::ensure!(
+        designs.len() <= dims::TH_BATCH,
+        "batch of {} exceeds TH_BATCH {}",
+        designs.len(),
+        dims::TH_BATCH
+    );
+    let stack = ctx.tech.layer_stack();
+    anyhow::ensure!(stack.z() == dims::TH_Z, "stack depth != artifact Z");
+    let gp = GridParams::from_stack(&stack);
+
+    // Worst window by chip power (same choice as validate::detailed_peak_temp).
+    let worst = ctx
+        .trace
+        .windows
+        .iter()
+        .max_by(|a, b| {
+            let pa: f64 = ctx.power.window_power(ctx.tiles, a).iter().sum();
+            let pb: f64 = ctx.power.window_power(ctx.tiles, b).iter().sum();
+            pa.partial_cmp(&pb).unwrap()
+        })
+        .expect("empty trace");
+
+    let cells = dims::TH_Z * dims::TH_Y * dims::TH_X;
+    let mut pow_ = vec![0f32; dims::TH_BATCH * cells];
+    for (i, d) in designs.iter().enumerate() {
+        let grid = power_grid(ctx, d, worst, T_AMBIENT_C + 25.0);
+        for (j, &p) in grid.iter().enumerate() {
+            pow_[i * cells + j] = p as f32;
+        }
+    }
+    let (_, tpeak) = ev.thermal_solve(
+        &pow_,
+        &gp.gdn_f32(),
+        &gp.gup_f32(),
+        &gp.glat_f32(),
+        &gp.gamb_f32(),
+    )?;
+    Ok(tpeak
+        .into_iter()
+        .take(designs.len())
+        .map(|t| T_AMBIENT_C + t as f64)
+        .collect())
+}

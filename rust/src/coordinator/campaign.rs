@@ -1,0 +1,357 @@
+//! Campaign runner: one "leg" = (benchmark x technology x mode x algorithm)
+//! DSE run, validated per Eq. (10); figures 7-10 are assemblies of legs.
+
+use crate::arch::design::Design;
+use crate::arch::encode::EncodeCtx;
+use crate::arch::geometry::Geometry;
+use crate::arch::tile::TileSet;
+use crate::config::{ArchConfig, Tech, TechParams};
+use crate::noc::routing::Routing;
+use crate::noc::topology;
+use crate::opt::{amosa, moo_stage, AmosaConfig, Mode, Problem, StageConfig};
+use crate::perf::{exec_time, PerfCoeffs};
+use crate::traffic::{benchmark, generate, BenchProfile, Trace};
+use crate::util::Rng;
+
+use super::validate::detailed_peak_temp;
+
+/// Which optimizer drives a leg.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    MooStage,
+    Amosa,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::MooStage => "moo-stage",
+            Algo::Amosa => "amosa",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "moo-stage" => Some(Algo::MooStage),
+            "amosa" => Some(Algo::Amosa),
+            _ => None,
+        }
+    }
+}
+
+/// Winner-selection rule (Eq. 10 and the Fig 10 variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// argmin ET (PO).
+    MinEt,
+    /// argmin ET subject to Temp < T_th (PT).
+    MinEtUnderTth,
+    /// argmin ET * Temp (the Fig 10 "without constraint" PT variant).
+    MinEtTempProduct,
+}
+
+/// One validated Pareto candidate.
+#[derive(Debug, Clone)]
+pub struct Validated {
+    pub design: Design,
+    pub et: f64,
+    pub temp_c: f64,
+}
+
+/// Result of one DSE leg.
+pub struct LegResult {
+    pub bench: String,
+    pub tech: Tech,
+    pub mode: Mode,
+    pub algo: Algo,
+    /// Wall-clock seconds spent inside the optimizer.
+    pub opt_seconds: f64,
+    /// Seconds until the optimizer's convergence point (self-plateau).
+    pub convergence_seconds: f64,
+    /// (best_phv, evals, elapsed_s) trajectory — drives the Fig 7
+    /// time-to-quality comparison.
+    pub history: Vec<(f64, u64, f64)>,
+    pub evals: u64,
+    /// All validated Pareto members.
+    pub candidates: Vec<Validated>,
+    /// The Eq. (10) winner under the requested selection.
+    pub winner: Validated,
+}
+
+impl LegResult {
+    /// Final PHV reached by the optimizer.
+    pub fn final_phv(&self) -> f64 {
+        self.history.last().map(|h| h.0).unwrap_or(0.0)
+    }
+
+    /// Evaluation count at which the trajectory first reaches `phv`.
+    pub fn evals_to_phv(&self, phv: f64) -> Option<u64> {
+        self.history.iter().find(|h| h.0 >= phv).map(|h| h.1)
+    }
+}
+
+/// Effort preset for DSE legs (campaigns scale this).
+#[derive(Debug, Clone)]
+pub struct Effort {
+    pub stage: StageConfig,
+    pub amosa: AmosaConfig,
+    /// Cap on Pareto members that get detailed validation.
+    pub validate_cap: usize,
+}
+
+impl Effort {
+    /// Fast preset for tests/examples.
+    pub fn quick() -> Self {
+        Effort {
+            stage: StageConfig {
+                local: crate::opt::LocalConfig {
+                    neighbors_per_step: 8,
+                    patience: 2,
+                    max_steps: 12,
+                },
+                meta_candidates: 24,
+                max_iters: 5,
+                convergence_eps: 0.02,
+                convergence_window: 2,
+            },
+            amosa: AmosaConfig {
+                t_initial: 1.0,
+                t_final: 0.12,
+                alpha: 0.75,
+                iters_per_temp: 30,
+                archive_cap: 32,
+            },
+            validate_cap: 6,
+        }
+    }
+
+    /// Full preset for figure regeneration.
+    pub fn full() -> Self {
+        Effort {
+            stage: StageConfig::default(),
+            amosa: AmosaConfig::default(),
+            validate_cap: 12,
+        }
+    }
+}
+
+/// Everything a leg needs, bundled (borrows the trace/context).
+pub struct LegInput<'a> {
+    pub cfg: &'a ArchConfig,
+    pub ctx: &'a EncodeCtx<'a>,
+    pub profile: &'a BenchProfile,
+}
+
+/// Build the shared context pieces for a (bench, tech) pair.
+pub struct LegWorld {
+    pub cfg: ArchConfig,
+    pub tech: TechParams,
+    pub geo: Geometry,
+    pub tiles: TileSet,
+    pub profile: BenchProfile,
+    pub trace: Trace,
+}
+
+impl LegWorld {
+    pub fn new(bench: &str, tech: Tech, seed: u64) -> Self {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::for_tech(tech);
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let profile = benchmark(bench).expect("unknown benchmark");
+        let trace = generate(&profile, &tiles, cfg.windows, seed);
+        LegWorld { cfg, tech, geo, tiles, profile, trace }
+    }
+
+    pub fn encode_ctx(&self) -> EncodeCtx<'_> {
+        EncodeCtx::new(&self.geo, &self.tech, &self.tiles, &self.trace)
+    }
+}
+
+/// Run one DSE leg and validate its Pareto front.
+pub fn run_leg(
+    world: &LegWorld,
+    mode: Mode,
+    algo: Algo,
+    selection: Selection,
+    effort: &Effort,
+    seed: u64,
+) -> LegResult {
+    let ctx = world.encode_ctx();
+    let problem = Problem::new(&ctx, mode);
+    let start = Design::with_identity_placement(
+        world.cfg.n_tiles(),
+        topology::mesh_links(&world.cfg),
+    );
+    let mut rng = Rng::seed_from_u64(seed);
+
+    let t0 = std::time::Instant::now();
+    let (pareto, history) = match algo {
+        Algo::MooStage => {
+            let res = moo_stage(&problem, start, &effort.stage, &mut rng);
+            let hist: Vec<(f64, u64, f64)> = res
+                .history
+                .iter()
+                .map(|h| (h.best_phv, h.evals, h.elapsed_s))
+                .collect();
+            (res.pareto, hist)
+        }
+        Algo::Amosa => {
+            let res = amosa(&problem, start, &effort.amosa, &mut rng);
+            let hist: Vec<(f64, u64, f64)> = res
+                .history
+                .iter()
+                .map(|h| (h.best_phv, h.evals, h.elapsed_s))
+                .collect();
+            (res.pareto, hist)
+        }
+    };
+    let convergence_seconds =
+        convergence_time(&history.iter().map(|h| (h.0, h.2)).collect::<Vec<_>>());
+    let opt_seconds = t0.elapsed().as_secs_f64();
+    let evals = problem.eval_count();
+
+    // --- Eq. (10): detailed validation of the front -------------------------
+    let mut members: Vec<&crate::opt::Solution> = pareto.members.iter().collect();
+    // Validate an evenly-spread subset across the lat-sorted front so the
+    // ET winner can come from anywhere on it (not just the low-lat corner).
+    members.sort_by(|a, b| a.obj[0].partial_cmp(&b.obj[0]).unwrap());
+    if members.len() > effort.validate_cap {
+        let step = (members.len() - 1) as f64 / (effort.validate_cap - 1) as f64;
+        members = (0..effort.validate_cap)
+            .map(|k| members[(k as f64 * step).round() as usize])
+            .collect();
+    }
+
+    let coeffs = PerfCoeffs::default();
+    let mut candidates: Vec<Validated> = members
+        .iter()
+        .map(|m| {
+            let routing = Routing::build(&m.design);
+            let scores = crate::eval::objectives::evaluate(&ctx, &m.design, &routing);
+            let et = exec_time(&ctx, &world.profile, &m.design, &routing, &scores, &coeffs);
+            let temp = detailed_peak_temp(&ctx, &m.design);
+            Validated { design: m.design.clone(), et: et.total, temp_c: temp }
+        })
+        .collect();
+
+    // Winner per the selection rule.
+    let winner = select(&mut candidates, selection, world.cfg.t_threshold_c);
+
+    LegResult {
+        bench: world.profile.name.to_string(),
+        tech: world.tech.tech,
+        mode,
+        algo,
+        opt_seconds,
+        convergence_seconds,
+        history,
+        evals,
+        winner,
+        candidates,
+    }
+}
+
+/// Fig 7 metric: the paper compares the time each solver needs to reach a
+/// solution of *comparable* trade-off quality.  In the paper's setup the
+/// candidate evaluation dominates wall-clock (full profiling stack), so the
+/// scale-free measure is the *evaluation count* to reach the reference
+/// quality: 98% of the weaker solver's final PHV.  A solver that never
+/// reaches the target is charged its full budget (a lower bound).
+pub fn speedup_time_to_quality(stage: &LegResult, amosa: &LegResult) -> f64 {
+    let target = 0.98 * stage.final_phv().min(amosa.final_phv());
+    let e_stage = stage.evals_to_phv(target).unwrap_or(stage.evals);
+    let e_amosa = amosa.evals_to_phv(target).unwrap_or(amosa.evals);
+    e_amosa.max(1) as f64 / e_stage.max(1) as f64
+}
+
+/// Paper's convergence definition: the earliest time after which the
+/// best-PHV trajectory never again improves by more than 2%.
+pub fn convergence_time(history: &[(f64, f64)]) -> f64 {
+    if history.is_empty() {
+        return 0.0;
+    }
+    let final_phv = history.last().unwrap().0;
+    for &(phv, t) in history {
+        if phv >= final_phv * 0.98 {
+            return t;
+        }
+    }
+    history.last().unwrap().1
+}
+
+fn select(candidates: &mut [Validated], selection: Selection, t_th: f64) -> Validated {
+    assert!(!candidates.is_empty(), "empty Pareto front");
+    let pick = |xs: &mut dyn Iterator<Item = &Validated>| -> Option<Validated> {
+        xs.min_by(|a, b| a.et.partial_cmp(&b.et).unwrap()).cloned()
+    };
+    match selection {
+        Selection::MinEt => pick(&mut candidates.iter()).unwrap(),
+        Selection::MinEtUnderTth => {
+            // Under the threshold if possible; otherwise coolest design.
+            pick(&mut candidates.iter().filter(|c| c.temp_c < t_th)).unwrap_or_else(|| {
+                candidates
+                    .iter()
+                    .min_by(|a, b| a.temp_c.partial_cmp(&b.temp_c).unwrap())
+                    .cloned()
+                    .unwrap()
+            })
+        }
+        Selection::MinEtTempProduct => candidates
+            .iter()
+            .min_by(|a, b| {
+                (a.et * a.temp_c).partial_cmp(&(b.et * b.temp_c)).unwrap()
+            })
+            .cloned()
+            .unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_leg_produces_a_winner() {
+        let world = LegWorld::new("knn", Tech::M3d, 3);
+        let leg = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEt, &Effort::quick(), 1);
+        assert!(!leg.candidates.is_empty());
+        assert!(leg.winner.et > 0.0);
+        assert!(leg.winner.temp_c > crate::thermal::T_AMBIENT_C);
+        assert!(leg.evals > 50);
+        assert!(leg.convergence_seconds <= leg.opt_seconds + 1e-9);
+        // Winner has the minimum ET among candidates.
+        for c in &leg.candidates {
+            assert!(leg.winner.et <= c.et + 1e-12);
+        }
+    }
+
+    #[test]
+    fn pt_selection_respects_threshold_when_feasible() {
+        let mut cands = vec![
+            Validated {
+                design: Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]),
+                et: 1.0,
+                temp_c: 95.0,
+            },
+            Validated {
+                design: Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]),
+                et: 1.1,
+                temp_c: 70.0,
+            },
+        ];
+        let w = select(&mut cands, Selection::MinEtUnderTth, 85.0);
+        assert_eq!(w.temp_c, 70.0);
+        let w2 = select(&mut cands, Selection::MinEt, 85.0);
+        assert_eq!(w2.temp_c, 95.0);
+        let w3 = select(&mut cands, Selection::MinEtTempProduct, 85.0);
+        assert!((w3.et * w3.temp_c) <= 1.0 * 95.0 + 1e-12);
+    }
+
+    #[test]
+    fn convergence_time_finds_plateau_start() {
+        let hist = vec![(0.1, 1.0), (0.5, 2.0), (0.79, 3.0), (0.80, 4.0)];
+        let t = convergence_time(&hist);
+        assert_eq!(t, 3.0); // 0.79 >= 0.98 * 0.80
+    }
+}

@@ -1,0 +1,173 @@
+//! Figure assemblies: each function regenerates one paper artifact from
+//! DSE legs (the `hem3d campaign` command and `rust/benches/fig*.rs` call
+//! these).
+
+use crate::config::Tech;
+use crate::opt::Mode;
+use crate::util::json::Json;
+
+use super::campaign::{run_leg, Algo, Effort, LegWorld, Selection};
+
+pub const BENCHES: [&str; 6] = ["bp", "nw", "lv", "lud", "knn", "pf"];
+
+/// Fig 7 row: MOO-STAGE vs AMOSA convergence speed-up for one benchmark.
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub bench: String,
+    pub speedup_tsv: f64,
+    pub speedup_m3d: f64,
+}
+
+/// Fig 7: convergence-time speed-up of MOO-STAGE over AMOSA, PT objective.
+pub fn fig7(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig7Row> {
+    benches
+        .iter()
+        .map(|b| {
+            let mut speedups = [0.0f64; 2];
+            for (i, tech) in [Tech::Tsv, Tech::M3d].into_iter().enumerate() {
+                let world = LegWorld::new(b, tech, seed);
+                let stage = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
+                let amosa = run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, effort, seed);
+                speedups[i] = super::campaign::speedup_time_to_quality(&stage, &amosa);
+            }
+            Fig7Row { bench: b.to_string(), speedup_tsv: speedups[0], speedup_m3d: speedups[1] }
+        })
+        .collect()
+}
+
+/// Fig 8 row: TSV PO-vs-PT temperatures and normalized execution times.
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub bench: String,
+    pub temp_po_c: f64,
+    pub temp_pt_c: f64,
+    /// ET normalized to PO (PT >= 1).
+    pub et_pt_over_po: f64,
+}
+
+/// Fig 8: the TSV performance-thermal trade-off.
+pub fn fig8(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig8Row> {
+    benches
+        .iter()
+        .map(|b| {
+            let world = LegWorld::new(b, Tech::Tsv, seed);
+            let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+            let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
+            Fig8Row {
+                bench: b.to_string(),
+                temp_po_c: po.winner.temp_c,
+                temp_pt_c: pt.winner.temp_c.min(po.winner.temp_c),
+                et_pt_over_po: (pt.winner.et / po.winner.et).max(1.0),
+            }
+        })
+        .collect()
+}
+
+/// Fig 9 row: the headline comparison.
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub bench: String,
+    pub temp_tsv_bl_c: f64,
+    pub temp_hem3d_po_c: f64,
+    pub temp_hem3d_pt_c: f64,
+    /// ET normalized to TSV-BL.
+    pub et_hem3d_po: f64,
+    pub et_hem3d_pt: f64,
+}
+
+/// Fig 9: TSV-BL (= TSV-PT) vs HeM3D-PO vs HeM3D-PT.
+pub fn fig9(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig9Row> {
+    benches
+        .iter()
+        .map(|b| {
+            let tsv_world = LegWorld::new(b, Tech::Tsv, seed);
+            let bl = run_leg(&tsv_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
+            let m3d_world = LegWorld::new(b, Tech::M3d, seed);
+            let po = run_leg(&m3d_world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+            let pt = run_leg(&m3d_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
+            Fig9Row {
+                bench: b.to_string(),
+                temp_tsv_bl_c: bl.winner.temp_c,
+                temp_hem3d_po_c: po.winner.temp_c,
+                temp_hem3d_pt_c: pt.winner.temp_c,
+                et_hem3d_po: po.winner.et / bl.winner.et,
+                et_hem3d_pt: pt.winner.et / bl.winner.et,
+            }
+        })
+        .collect()
+}
+
+/// Fig 10 row: HeM3D PO vs PT selected by ET*T product (no constraint).
+#[derive(Debug, Clone)]
+pub struct Fig10Row {
+    pub bench: String,
+    pub temp_po_c: f64,
+    pub temp_pt_c: f64,
+    /// ET normalized to PO.
+    pub et_pt_over_po: f64,
+}
+
+/// Fig 10: what PT buys on M3D when selected by the ET*Temp product.
+pub fn fig10(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig10Row> {
+    benches
+        .iter()
+        .map(|b| {
+            let world = LegWorld::new(b, Tech::M3d, seed);
+            let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+            let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtTempProduct, effort, seed ^ 0x5a5a);
+            Fig10Row {
+                bench: b.to_string(),
+                temp_po_c: po.winner.temp_c,
+                temp_pt_c: pt.winner.temp_c.min(po.winner.temp_c),
+                et_pt_over_po: (pt.winner.et / po.winner.et).max(1.0),
+            }
+        })
+        .collect()
+}
+
+// --- JSON report helpers -----------------------------------------------------
+
+pub fn fig7_json(rows: &[Fig7Row]) -> Json {
+    Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("bench", Json::str(&r.bench)),
+            ("speedup_tsv", Json::num(r.speedup_tsv)),
+            ("speedup_m3d", Json::num(r.speedup_m3d)),
+        ])
+    }))
+}
+
+pub fn fig8_json(rows: &[Fig8Row]) -> Json {
+    Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("bench", Json::str(&r.bench)),
+            ("temp_po_c", Json::num(r.temp_po_c)),
+            ("temp_pt_c", Json::num(r.temp_pt_c)),
+            ("et_pt_over_po", Json::num(r.et_pt_over_po)),
+        ])
+    }))
+}
+
+pub fn fig9_json(rows: &[Fig9Row]) -> Json {
+    Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("bench", Json::str(&r.bench)),
+            ("temp_tsv_bl_c", Json::num(r.temp_tsv_bl_c)),
+            ("temp_hem3d_po_c", Json::num(r.temp_hem3d_po_c)),
+            ("temp_hem3d_pt_c", Json::num(r.temp_hem3d_pt_c)),
+            ("et_hem3d_po", Json::num(r.et_hem3d_po)),
+            ("et_hem3d_pt", Json::num(r.et_hem3d_pt)),
+        ])
+    }))
+}
+
+pub fn fig10_json(rows: &[Fig10Row]) -> Json {
+    Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("bench", Json::str(&r.bench)),
+            ("temp_po_c", Json::num(r.temp_po_c)),
+            ("temp_pt_c", Json::num(r.temp_pt_c)),
+            ("et_pt_over_po", Json::num(r.et_pt_over_po)),
+        ])
+    }))
+}

@@ -1,0 +1,12 @@
+//! DSE coordinator: campaign legs (bench x tech x mode x algo), figure
+//! assemblies (Figs 7-10), detailed validation (thermal grid + cycle-level
+//! NoC), batched PJRT scoring, and report rendering.
+
+pub mod batch;
+pub mod campaign;
+pub mod figures;
+pub mod report;
+pub mod validate;
+
+pub use campaign::{run_leg, Algo, Effort, LegResult, LegWorld, Selection, Validated};
+pub use validate::{detailed_peak_temp, noc_validate, power_grid};

@@ -1,0 +1,76 @@
+//! Console-table and JSON report rendering for campaign outputs.
+
+use std::fmt::Write as _;
+
+/// Render an aligned console table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "{:<w$}  ", h, w = widths[i]);
+    }
+    out.push('\n');
+    for (i, _) in headers.iter().enumerate() {
+        let _ = write!(out, "{}  ", "-".repeat(widths[i]));
+    }
+    out.push('\n');
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            let _ = write!(out, "{:<w$}  ", cell, w = widths[i]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a float with fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Write a JSON report file, creating parent directories.
+pub fn write_json(path: &str, json: &crate::util::json::Json) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, json.to_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["bench", "value"],
+            &[
+                vec!["bp".into(), "1.00".into()],
+                vec!["pathfinder".into(), "0.85".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // Header and rows share column offsets.
+        let col = lines[0].find("value").unwrap();
+        assert_eq!(lines[2].len().min(col), col.min(lines[2].len()));
+        assert!(lines[3].starts_with("pathfinder"));
+    }
+
+    #[test]
+    fn write_json_creates_dirs() {
+        let dir = std::env::temp_dir().join("hem3d_report_test");
+        let path = dir.join("x/y.json");
+        let j = crate::util::json::Json::obj(vec![("a", crate::util::json::Json::num(1.0))]);
+        write_json(path.to_str().unwrap(), &j).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

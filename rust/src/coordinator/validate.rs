@@ -1,0 +1,220 @@
+//! Detailed validation of Pareto candidates (Eq. 10's Temp(d) and the
+//! final execution time): maps a design's worst-window power onto the
+//! finite-volume thermal grid (3D-ICE substitute), runs the
+//! leakage-temperature fixed point, and optionally cross-checks the NoC
+//! with the cycle-level simulator.
+
+use crate::arch::design::Design;
+use crate::arch::encode::EncodeCtx;
+use crate::noc::routing::Routing;
+use crate::noc::sim::{NocSim, SimConfig};
+use crate::power::leakage;
+use crate::runtime::evaluator::dims;
+use crate::thermal::{GridParams, ThermalGrid, T_AMBIENT_C};
+use crate::traffic::Window;
+use crate::util::Rng;
+
+/// Cells per tile edge in the thermal grid (TH_Y x TH_X = 8x8 over the
+/// 4x4 tile grid).
+const CELLS_PER_TILE_EDGE: usize = 2;
+
+/// Build the (Z, Y, X) power grid for one design and one traffic window,
+/// at the given peak temperature (for leakage scaling).
+pub fn power_grid(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    win: &Window,
+    t_peak_c: f64,
+) -> Vec<f64> {
+    let stack = ctx.tech.layer_stack();
+    let (z, y, x) = (stack.z(), dims::TH_Y, dims::TH_X);
+    let mut grid = vec![0.0f64; z * y * x];
+    let geo = ctx.geo;
+    let leak_scale = leakage::leakage_scale(t_peak_c);
+
+    for pos in 0..design.n_tiles() {
+        let tile = design.tile_at[pos];
+        let kind = ctx.tiles.kind(tile);
+        // Split modeled power into dynamic + leakage, re-scale leakage.
+        let p40 = ctx.power.tile_power(kind, win.activity[tile]);
+        let leak40 = match kind {
+            crate::arch::tile::TileKind::Gpu => ctx.power.budget.gpu_leak,
+            crate::arch::tile::TileKind::Cpu => ctx.power.budget.cpu_leak,
+            crate::arch::tile::TileKind::Llc => ctx.power.budget.llc_leak,
+        };
+        let p = (p40 - leak40) + leak40 * leak_scale;
+
+        let zl = stack.tier_layer(geo.tier_of(pos));
+        let row0 = geo.row_of(pos) * CELLS_PER_TILE_EDGE;
+        let col0 = geo.col_of(pos) * CELLS_PER_TILE_EDGE;
+        let per_cell = p / (CELLS_PER_TILE_EDGE * CELLS_PER_TILE_EDGE) as f64;
+        for dr in 0..CELLS_PER_TILE_EDGE {
+            for dc in 0..CELLS_PER_TILE_EDGE {
+                let idx = (zl * y + row0 + dr) * x + col0 + dc;
+                grid[idx] += per_cell;
+            }
+        }
+    }
+    grid
+}
+
+/// Detailed peak temperature [°C] for one design: worst window, grid
+/// solve, leakage fixed point.
+pub fn detailed_peak_temp(ctx: &EncodeCtx<'_>, design: &Design) -> f64 {
+    let stack = ctx.tech.layer_stack();
+    let grid = ThermalGrid::new(
+        stack.z(),
+        dims::TH_Y,
+        dims::TH_X,
+        GridParams::from_stack(&stack),
+    );
+
+    // Worst window by chip power.
+    let worst = ctx
+        .trace
+        .windows
+        .iter()
+        .max_by(|a, b| {
+            let pa: f64 = ctx.power.window_power(ctx.tiles, a).iter().sum();
+            let pb: f64 = ctx.power.window_power(ctx.tiles, b).iter().sum();
+            pa.partial_cmp(&pb).unwrap()
+        })
+        .expect("empty trace");
+
+    let (t_final, _iters) = leakage::fixed_point(
+        T_AMBIENT_C + 20.0,
+        12,
+        |t_peak| power_grid(ctx, design, worst, t_peak),
+        |p| T_AMBIENT_C + grid.solve_peak(p, 600),
+    );
+    t_final
+}
+
+/// Cycle-level NoC validation: mean packet latency [cycles] and delivered
+/// throughput [flits/cycle] for the worst-traffic window.
+pub fn noc_validate(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    routing: &Routing,
+    cycles: u64,
+    seed: u64,
+) -> crate::noc::sim::SimStats {
+    let n = ctx.tiles.n_tiles();
+    let worst = ctx
+        .trace
+        .windows
+        .iter()
+        .max_by(|a, b| {
+            let sa: f64 = a.f.iter().sum();
+            let sb: f64 = b.f.iter().sum();
+            sa.partial_cmp(&sb).unwrap()
+        })
+        .expect("empty trace");
+
+    // Position-space rates (the simulator works over router positions).
+    let mut rate = vec![0.0f64; n * n];
+    let mut flits = vec![1u16; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let f = worst.f[i * n + j];
+            if f <= 0.0 {
+                continue;
+            }
+            let (pi, pj) = (design.pos_of[i], design.pos_of[j]);
+            rate[pi * n + pj] += f;
+            // LLC->core replies carry data (5 flits), requests 1 flit.
+            flits[pi * n + pj] =
+                if ctx.tiles.kind(i) == crate::arch::tile::TileKind::Llc { 5 } else { 1 };
+        }
+    }
+
+    let sim_cfg = SimConfig {
+        router_stages: ctx.tech.router_stages as u32,
+        link_delay: 1,
+        inject_cap: 64,
+    };
+    let sim = NocSim::new(design, routing, sim_cfg);
+    let mut rng = Rng::seed_from_u64(seed);
+    sim.run(&rate, &flits, cycles, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{design::Design, geometry::Geometry, tile::TileSet};
+    use crate::config::{ArchConfig, Tech, TechParams};
+    use crate::noc::topology;
+    use crate::traffic::{benchmark, generate};
+
+    fn ctx_for(tech: TechParams) -> (ArchConfig, TechParams) {
+        (ArchConfig::paper(), tech)
+    }
+
+    #[test]
+    fn power_grid_conserves_chip_power() {
+        let (cfg, tech) = ctx_for(TechParams::tsv());
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 1);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let win = &trace.windows[0];
+        let grid = power_grid(&ctx, &d, win, crate::thermal::T_AMBIENT_C);
+        let total: f64 = grid.iter().sum();
+        let chip: f64 = ctx.power.window_power(&tiles, win).iter().sum();
+        assert!((total - chip).abs() / chip < 1e-9, "grid {total} vs chip {chip}");
+    }
+
+    #[test]
+    fn m3d_runs_cooler_than_dry_tsv_on_hot_benchmark() {
+        let cfg = ArchConfig::paper();
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("lv").unwrap(), &tiles, cfg.windows, 1);
+        let links = topology::mesh_links(&cfg);
+        let d = Design::with_identity_placement(cfg.n_tiles(), links);
+
+        let mut tsv = TechParams::tsv();
+        tsv.cooled = false; // dry TSV: the paper calls this unmanageable
+        let m3d = TechParams::m3d();
+        let geo_t = Geometry::new(&cfg, &tsv);
+        let geo_m = Geometry::new(&cfg, &m3d);
+        let ctx_t = crate::arch::encode::EncodeCtx::new(&geo_t, &tsv, &tiles, &trace);
+        let ctx_m = crate::arch::encode::EncodeCtx::new(&geo_m, &m3d, &tiles, &trace);
+        let t_tsv = detailed_peak_temp(&ctx_t, &d);
+        let t_m3d = detailed_peak_temp(&ctx_m, &d);
+        assert!(t_m3d + 10.0 < t_tsv, "m3d {t_m3d:.1}C vs dry tsv {t_tsv:.1}C");
+        assert!(t_m3d > crate::thermal::T_AMBIENT_C);
+    }
+
+    #[test]
+    fn cooling_tames_tsv() {
+        let cfg = ArchConfig::paper();
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("lv").unwrap(), &tiles, cfg.windows, 1);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let wet = TechParams::tsv();
+        let mut dry = TechParams::tsv();
+        dry.cooled = false;
+        assert_eq!(wet.tech, Tech::Tsv);
+        let geo = Geometry::new(&cfg, &wet);
+        let ctx_wet = crate::arch::encode::EncodeCtx::new(&geo, &wet, &tiles, &trace);
+        let ctx_dry = crate::arch::encode::EncodeCtx::new(&geo, &dry, &tiles, &trace);
+        let t_wet = detailed_peak_temp(&ctx_wet, &d);
+        let t_dry = detailed_peak_temp(&ctx_dry, &d);
+        assert!(t_wet < t_dry, "cooling did nothing: {t_wet} vs {t_dry}");
+    }
+
+    #[test]
+    fn noc_validation_delivers_traffic() {
+        let (cfg, tech) = ctx_for(TechParams::m3d());
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("knn").unwrap(), &tiles, cfg.windows, 3);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let r = crate::noc::routing::Routing::build(&d);
+        let stats = noc_validate(&ctx, &d, &r, 3000, 7);
+        assert!(stats.delivered > 100, "only {} packets", stats.delivered);
+        assert!(stats.mean_latency > 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Design feature extraction for the MOO-STAGE meta learner.
+//!
+//! The regression tree predicts the outcome of a local search *from a
+//! starting design*, so features must be cheap (no routing build) yet
+//! correlate with the objectives: geometric CPU/GPU-to-LLC proximity,
+//! link-length statistics, vertical-link counts, and thermal placement
+//! pressure (hot tiles far from the sink).
+
+use crate::arch::design::Design;
+use crate::arch::geometry::Geometry;
+use crate::arch::tile::{TileKind, TileSet};
+use crate::thermal::StackModel;
+
+/// Number of features produced.
+pub const N_FEATURES: usize = 10;
+
+/// Extract the feature vector for one design.
+pub fn features(
+    design: &Design,
+    geo: &Geometry,
+    tiles: &TileSet,
+    stack: &StackModel,
+) -> Vec<f64> {
+    let n = design.n_tiles();
+
+    // 1-2: mean Euclidean CPU->LLC and GPU->LLC distances (latency proxy).
+    let mut cpu_llc = 0.0;
+    let mut cnt_c = 0.0;
+    for c in tiles.ids_of(TileKind::Cpu) {
+        for l in tiles.ids_of(TileKind::Llc) {
+            cpu_llc += geo.dist_mm(design.pos_of[c], design.pos_of[l]);
+            cnt_c += 1.0;
+        }
+    }
+    let mut gpu_llc = 0.0;
+    let mut cnt_g = 0.0;
+    for g in tiles.ids_of(TileKind::Gpu) {
+        for l in tiles.ids_of(TileKind::Llc) {
+            gpu_llc += geo.dist_mm(design.pos_of[g], design.pos_of[l]);
+            cnt_g += 1.0;
+        }
+    }
+
+    // 3-5: link length statistics (short links = low latency; spread =
+    // path diversity).
+    let lens: Vec<f64> = design
+        .links
+        .iter()
+        .map(|l| geo.dist_mm(l.a as usize, l.b as usize))
+        .collect();
+    let len_mean = crate::util::stats::mean(&lens);
+    let len_std = crate::util::stats::std_pop(&lens);
+    let len_max = crate::util::stats::max(&lens);
+
+    // 6: vertical links fraction (inter-tier connectivity).
+    let vertical = design
+        .links
+        .iter()
+        .filter(|l| geo.tier_of(l.a as usize) != geo.tier_of(l.b as usize))
+        .count() as f64
+        / design.links.len() as f64;
+
+    // 7: mean LLC degree-proximity: links incident to LLC positions
+    // (hotspot relief for many-to-few traffic).
+    let mut llc_incident = 0.0;
+    for l in &design.links {
+        for &e in &[l.a as usize, l.b as usize] {
+            if tiles.kind(design.tile_at[e]) == TileKind::Llc {
+                llc_incident += 1.0;
+            }
+        }
+    }
+    llc_incident /= design.links.len() as f64;
+
+    // 8: thermal pressure: sum over GPUs of the Eq.(7) tier coefficient
+    // (hot cores on high tiers => high value).
+    let mut thermal_pressure = 0.0;
+    for g in tiles.ids_of(TileKind::Gpu) {
+        thermal_pressure += stack.coeff_per_tier[geo.tier_of(design.pos_of[g])];
+    }
+
+    // 9: GPU clustering: mean pairwise distance among GPUs (spread GPUs
+    // reduce stack hotspots).
+    let gpus: Vec<usize> = tiles.ids_of(TileKind::Gpu).collect();
+    let mut gpu_spread = 0.0;
+    let mut cnt_s = 0.0f64;
+    for (i, &a) in gpus.iter().enumerate() {
+        for &b in gpus[i + 1..].iter().step_by(3) {
+            gpu_spread += geo.dist_mm(design.pos_of[a], design.pos_of[b]);
+            cnt_s += 1.0;
+        }
+    }
+
+    // 10: LLC centrality: mean distance of LLCs to grid center.
+    let center = (
+        (geo.cols - 1) as f64 * geo.pitch_mm / 2.0,
+        (geo.rows - 1) as f64 * geo.pitch_mm / 2.0,
+    );
+    let mut llc_central = 0.0;
+    for l in tiles.ids_of(TileKind::Llc) {
+        let (x, y, _) = geo.coords_mm(design.pos_of[l]);
+        llc_central += ((x - center.0).powi(2) + (y - center.1).powi(2)).sqrt();
+    }
+    llc_central /= tiles.n_llc as f64;
+
+    let _ = n;
+    vec![
+        cpu_llc / cnt_c,
+        gpu_llc / cnt_g,
+        len_mean,
+        len_std,
+        len_max,
+        vertical,
+        llc_incident,
+        thermal_pressure,
+        gpu_spread / cnt_s.max(1.0),
+        llc_central,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::design::Design;
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::topology;
+    use crate::util::Rng;
+
+    fn setup() -> (ArchConfig, Geometry, TileSet, StackModel) {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::tsv();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let stack = StackModel::from_stack(&tech.layer_stack(), tech.t_h);
+        (cfg, geo, tiles, stack)
+    }
+
+    #[test]
+    fn feature_vector_has_fixed_length_and_is_finite() {
+        let (cfg, geo, tiles, stack) = setup();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let f = features(&d, &geo, &tiles, &stack);
+        assert_eq!(f.len(), N_FEATURES);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn features_distinguish_placements() {
+        let (cfg, geo, tiles, stack) = setup();
+        let links = topology::mesh_links(&cfg);
+        let a = Design::with_identity_placement(cfg.n_tiles(), links.clone());
+        let mut rng = Rng::seed_from_u64(3);
+        let b = Design::random_placement(&cfg, links, &mut rng);
+        assert_ne!(features(&a, &geo, &tiles, &stack), features(&b, &geo, &tiles, &stack));
+    }
+
+    #[test]
+    fn thermal_pressure_tracks_gpu_tier() {
+        let (cfg, geo, tiles, stack) = setup();
+        let links = topology::mesh_links(&cfg);
+        // GPUs low (positions 0..40) vs GPUs high (positions 24..64).
+        let mut low: Vec<usize> = Vec::new();
+        low.extend(8..48);
+        low.extend(0..8);
+        low.extend(48..64);
+        let mut high: Vec<usize> = Vec::new();
+        high.extend(48..64);
+        high.extend(0..8);
+        high.extend(8..48);
+        let d_low = Design::new(low, links.clone());
+        let d_high = Design::new(high, links);
+        let f_low = features(&d_low, &geo, &tiles, &stack);
+        let f_high = features(&d_high, &geo, &tiles, &stack);
+        assert!(f_high[7] > f_low[7], "thermal pressure should rise with GPU tier");
+    }
+}

@@ -1,0 +1,10 @@
+//! Design scoring: objective definitions, the native (pure-Rust) evaluator
+//! mirror of the AOT artifact, and design feature extraction for the
+//! MOO-STAGE regression-tree learner.
+
+pub mod features;
+pub mod native;
+pub mod objectives;
+
+pub use native::{moo_eval_native, moo_eval_one};
+pub use objectives::{evaluate, evaluate_sparse, Scores, SparseTraffic};

@@ -1,0 +1,151 @@
+//! Pure-Rust mirror of the `moo_eval` artifact (and of `kernels/ref.py`).
+//!
+//! Serves three purposes: (a) cross-validates the AOT kernels from `cargo
+//! test` without any Python, (b) is the fallback evaluator when `artifacts/`
+//! has not been built, and (c) is the baseline for the µ1 bench (PJRT batch
+//! dispatch vs native loop).
+
+use crate::runtime::evaluator::{dims, MooBatch, MooScores};
+
+/// Score every design in a batch exactly as the artifact does.
+///
+/// Follows the same reduction order as `kernels/noc_moo.py`: per-window link
+/// utilisation (Eq. 2), time-averaged mean/σ (Eqs. 3-6), window-averaged
+/// CPU-LLC latency (Eq. 1), and the max-over-stacks Eq.(7) thermal rise.
+pub fn moo_eval_native(batch: &MooBatch) -> Vec<MooScores> {
+    use dims::*;
+    let mut out = Vec::with_capacity(MOO_BATCH);
+    for b in 0..MOO_BATCH {
+        out.push(moo_eval_one(batch, b));
+    }
+    out
+}
+
+/// Score a single design `b` of the batch.
+pub fn moo_eval_one(batch: &MooBatch, b: usize) -> MooScores {
+    use dims::*;
+    let q = &batch.q[b * N_LINKS * N_PAIRS..(b + 1) * N_LINKS * N_PAIRS];
+    let latw = &batch.latw[b * N_PAIRS..(b + 1) * N_PAIRS];
+    let pact = &batch.pact[b * N_WINDOWS * N_TILES..(b + 1) * N_WINDOWS * N_TILES];
+
+    // Eq. (2): u[w][l] = sum_p q[l][p] * f[w][p]
+    let mut u = vec![0.0f64; N_WINDOWS * N_LINKS];
+    for l in 0..N_LINKS {
+        let ql = &q[l * N_PAIRS..(l + 1) * N_PAIRS];
+        for w in 0..N_WINDOWS {
+            let fw = &batch.f[w * N_PAIRS..(w + 1) * N_PAIRS];
+            let mut acc = 0.0f64;
+            for p in 0..N_PAIRS {
+                acc += ql[p] as f64 * fw[p] as f64;
+            }
+            u[w * N_LINKS + l] = acc;
+        }
+    }
+
+    // Eqs. (3)+(5): grand mean over windows and links.
+    let umean = u.iter().sum::<f64>() / (N_WINDOWS * N_LINKS) as f64;
+
+    // Eqs. (4)+(6): per-window population stddev over links, window-averaged.
+    let mut usigma = 0.0f64;
+    for w in 0..N_WINDOWS {
+        let uw = &u[w * N_LINKS..(w + 1) * N_LINKS];
+        let mu = uw.iter().sum::<f64>() / N_LINKS as f64;
+        let var = uw.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / N_LINKS as f64;
+        usigma += var.sqrt();
+    }
+    usigma /= N_WINDOWS as f64;
+
+    // Eq. (1): mean over windows of sum_p latw[p] * f[w][p].
+    let mut lat = 0.0f64;
+    for w in 0..N_WINDOWS {
+        let fw = &batch.f[w * N_PAIRS..(w + 1) * N_PAIRS];
+        let mut acc = 0.0f64;
+        for p in 0..N_PAIRS {
+            acc += latw[p] as f64 * fw[p] as f64;
+        }
+        lat += acc;
+    }
+    lat /= N_WINDOWS as f64;
+
+    // Eqs. (7)+(8): stack heating, max over windows and stacks.
+    let mut tmax = f64::MIN;
+    for w in 0..N_WINDOWS {
+        let pw = &pact[w * N_TILES..(w + 1) * N_TILES];
+        for s in 0..N_STACKS {
+            let mut acc = 0.0f64;
+            for n in 0..N_TILES {
+                acc += pw[n] as f64 * batch.cth[n] as f64 * batch.ssel[n * N_STACKS + s] as f64;
+            }
+            tmax = tmax.max(acc);
+        }
+    }
+
+    MooScores {
+        lat: lat as f32,
+        umean: umean as f32,
+        usigma: usigma as f32,
+        tmax: tmax as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::evaluator::dims::*;
+
+    fn filled_batch() -> MooBatch {
+        let mut b = MooBatch::zeroed();
+        // Deterministic but non-trivial pattern.
+        let fill = |v: &mut [f32], k: u64| {
+            let mut s = 0x9e3779b97f4a7c15u64 ^ k;
+            for x in v.iter_mut() {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *x = ((s >> 33) % 1000) as f32 / 997.0;
+            }
+        };
+        fill(&mut b.q, 1);
+        fill(&mut b.f, 2);
+        fill(&mut b.latw, 3);
+        fill(&mut b.pact, 4);
+        fill(&mut b.cth, 5);
+        fill(&mut b.ssel, 6);
+        b
+    }
+
+    #[test]
+    fn native_scores_are_finite_and_positive() {
+        let batch = filled_batch();
+        let scores = moo_eval_native(&batch);
+        assert_eq!(scores.len(), MOO_BATCH);
+        for s in &scores {
+            assert!(s.lat.is_finite() && s.lat > 0.0);
+            assert!(s.umean.is_finite() && s.umean > 0.0);
+            assert!(s.usigma.is_finite() && s.usigma >= 0.0);
+            assert!(s.tmax.is_finite() && s.tmax > 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_traffic_gives_zero_objectives() {
+        let mut batch = filled_batch();
+        batch.f.iter_mut().for_each(|v| *v = 0.0);
+        for s in moo_eval_native(&batch) {
+            assert_eq!(s.lat, 0.0);
+            assert_eq!(s.umean, 0.0);
+            assert_eq!(s.usigma, 0.0);
+        }
+    }
+
+    #[test]
+    fn sigma_is_zero_for_uniform_links() {
+        let mut batch = MooBatch::zeroed();
+        // All links carry identical load: q all ones, f constant.
+        batch.q.iter_mut().for_each(|v| *v = 1.0);
+        batch.f.iter_mut().for_each(|v| *v = 0.5);
+        let scores = moo_eval_native(&batch);
+        for s in scores {
+            assert!(s.usigma.abs() < 1e-6, "usigma={}", s.usigma);
+            assert!((s.umean - 0.5 * N_PAIRS as f32).abs() / s.umean < 1e-6);
+        }
+    }
+}

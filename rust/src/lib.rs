@@ -1,0 +1,28 @@
+//! # hem3d — reproduction of *HeM3D* (TODAES 2020, DOI 10.1145/3424239)
+//!
+//! A three-layer Rust + JAX + Pallas system reproducing the paper's
+//! M3D-vs-TSV heterogeneous manycore design-space exploration:
+//!
+//! * **L3 (this crate)** — the DSE coordinator: architecture model, NoC
+//!   topology/routing/cycle simulation, traffic generation, STA + M3D
+//!   timing projection, power/thermal models, MOO-STAGE and AMOSA
+//!   optimizers, and the campaign runner that regenerates every figure.
+//! * **L2/L1 (python/compile, build-time only)** — the batched objective
+//!   evaluator (Eqs. (1)-(8)) and the 3D-ICE-substitute thermal solver,
+//!   AOT-lowered to `artifacts/*.hlo.txt` and executed here via PJRT.
+//!
+//! See DESIGN.md for the full inventory and the per-experiment index.
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod noc;
+pub mod opt;
+pub mod perf;
+pub mod power;
+pub mod runtime;
+pub mod thermal;
+pub mod timing;
+pub mod traffic;
+pub mod util;

@@ -1,0 +1,73 @@
+//! `hem3d` — leader entrypoint + CLI for the HeM3D reproduction.
+//!
+//! Subcommands (see `hem3d help`):
+//!   selftest   — load the AOT artifacts and cross-check them against the
+//!                native Rust evaluator (the L1<->L3 contract check).
+//!   params     — print the Table-1 physical parameters for both
+//!                technologies.
+//!   trace      — generate a benchmark traffic trace (f_ij(t)) to JSON.
+//!   pipeline   — Fig 6: planar vs M3D GPU pipeline timing.
+//!   optimize   — run one DSE (MOO-STAGE or AMOSA) for a benchmark/tech.
+//!   campaign   — full figure campaign (Figs 7-10) into a report directory.
+
+use anyhow::Result;
+use hem3d::util::cli::Args;
+use hem3d::util::logger;
+
+mod commands {
+    pub mod campaign;
+    pub mod optimize;
+    pub mod params;
+    pub mod pipeline;
+    pub mod selftest;
+    pub mod sim;
+    pub mod trace;
+}
+
+const USAGE: &str = "\
+hem3d — HeM3D reproduction (TODAES 2020)
+
+USAGE: hem3d <command> [options]
+
+COMMANDS:
+  selftest   Cross-check AOT artifacts vs the native evaluator
+             [--artifacts DIR] [--seed N]
+  params     Print Table-1 physical parameters [--tech tsv|m3d]
+  trace      Generate a traffic trace [--bench bp|nw|lv|lud|knn|pf]
+             [--tech tsv|m3d] [--seed N] [--out FILE]
+  pipeline   Fig 6: planar vs M3D GPU pipeline timing [--seed N]
+  sim        Cycle-level NoC simulation [--bench NAME] [--tech tsv|m3d]
+             [--topology mesh|swnoc] [--cycles N] [--seed N]
+  optimize   Run one DSE leg [--bench NAME] [--tech tsv|m3d]
+             [--algo moo-stage|amosa] [--mode po|pt] [--iters N] [--seed N]
+             [--artifacts DIR|none]
+  campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
+             [--iters N] [--seed N] [--artifacts DIR|none]
+  help       Show this message
+
+Global: [--log error|warn|info|debug]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    logger::set_level(logger::level_from_str(&args.opt_or("log", "info")));
+
+    match args.command.as_deref() {
+        Some("selftest") => commands::selftest::run(&args),
+        Some("params") => commands::params::run(&args),
+        Some("trace") => commands::trace::run(&args),
+        Some("pipeline") => commands::pipeline::run(&args),
+        Some("sim") => commands::sim::run(&args),
+        Some("optimize") => commands::optimize::run(&args),
+        Some("campaign") => commands::campaign::run(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Network-on-chip: topology generation (mesh + SWNoC), deterministic
+//! shortest-path routing, and the cycle-level simulator used to validate
+//! Pareto winners (the Garnet substitute).
+
+pub mod packet;
+pub mod routing;
+pub mod sim;
+pub mod topology;
+
+pub use routing::Routing;
+pub use sim::{NocSim, SimConfig, SimStats};

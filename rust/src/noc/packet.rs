@@ -1,0 +1,47 @@
+//! Packet and message types shared by the cycle-level NoC simulator.
+
+/// A network packet (one message; flit count = serialization length).
+#[derive(Debug, Clone, Copy)]
+pub struct Packet {
+    pub id: u64,
+    pub src: u32,
+    pub dst: u32,
+    /// Payload length in flits (data packets are long, requests short).
+    pub flits: u16,
+    /// Cycle the packet entered the source injection queue.
+    pub injected_at: u64,
+}
+
+/// Delivery record produced by the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct Delivery {
+    pub packet: Packet,
+    pub delivered_at: u64,
+    pub hops: u16,
+}
+
+impl Delivery {
+    /// End-to-end latency in cycles.
+    pub fn latency(&self) -> u64 {
+        self.delivered_at - self.packet.injected_at
+    }
+}
+
+/// Packet classes of the many-to-few-to-many pattern [11]: short control
+/// requests toward the LLCs, long data replies back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketClass {
+    /// Read request / coherence control: 1 flit.
+    Request,
+    /// Cache-line data: 5 flits (64B line over 16B flits + head).
+    Data,
+}
+
+impl PacketClass {
+    pub fn flits(&self) -> u16 {
+        match self {
+            PacketClass::Request => 1,
+            PacketClass::Data => 5,
+        }
+    }
+}

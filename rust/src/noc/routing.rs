@@ -1,0 +1,221 @@
+//! Deterministic shortest-path routing over arbitrary link sets.
+//!
+//! All-pairs BFS with a fixed tie-break (parent with the smallest index),
+//! so that a given design always routes identically — a requirement both
+//! for reproducible figures and for the MOO-STAGE evaluation function to be
+//! well-defined.  Produces per-pair paths, hop counts, and the `q_ijk`
+//! link-pair incidence the Eq. (2) utilisation model consumes.
+
+use crate::arch::design::{Design, Link};
+
+/// Routing tables for one design.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub n: usize,
+    /// hop[s*n + d] = shortest hop count (0 on the diagonal).
+    pub hops: Vec<u16>,
+    /// next[s*n + d] = first hop position on the s->d path (s on diagonal).
+    pub next_hop: Vec<u16>,
+    /// Dense directed-edge -> link index (u16::MAX where no link).
+    link_of: Vec<u16>,
+    pub links: Vec<Link>,
+}
+
+impl Routing {
+    /// Build all-pairs routes for a connected design.
+    pub fn build(design: &Design) -> Routing {
+        let n = design.n_tiles();
+        let adj = design.adjacency();
+        let mut hops = vec![u16::MAX; n * n];
+        let mut next_hop = vec![u16::MAX; n * n];
+
+        // BFS from every source; neighbour lists are sorted, so the first
+        // parent found is the smallest-index parent (deterministic).  The
+        // first hop propagates along the BFS tree, so next_hop needs no
+        // separate parent-chain pass (§Perf).
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..n {
+            let base = s * n;
+            hops[base + s] = 0;
+            next_hop[base + s] = s as u16;
+            queue.clear();
+            queue.push_back(s);
+            while let Some(u) = queue.pop_front() {
+                for &v in &adj[u] {
+                    if hops[base + v] == u16::MAX {
+                        hops[base + v] = hops[base + u] + 1;
+                        next_hop[base + v] =
+                            if u == s { v as u16 } else { next_hop[base + u] };
+                        queue.push_back(v);
+                    }
+                }
+            }
+            debug_assert!(
+                hops[base..base + n].iter().all(|&h| h != u16::MAX),
+                "disconnected design"
+            );
+        }
+
+        // Dense directed-edge -> link-index table: the hot path walks routes
+        // without hashing (§Perf).
+        let mut link_of = vec![u16::MAX; n * n];
+        for (i, l) in design.links.iter().enumerate() {
+            let (a, b) = l.ends();
+            link_of[a * n + b] = i as u16;
+            link_of[b * n + a] = i as u16;
+        }
+        Routing { n, hops, next_hop, link_of, links: design.links.clone() }
+    }
+
+    #[inline]
+    pub fn hop_count(&self, s: usize, d: usize) -> usize {
+        self.hops[s * self.n + d] as usize
+    }
+
+    /// Full path s -> d as a position sequence (inclusive).
+    pub fn path(&self, s: usize, d: usize) -> Vec<usize> {
+        let mut path = vec![s];
+        let mut cur = s;
+        while cur != d {
+            cur = self.next_hop[cur * self.n + d] as usize;
+            path.push(cur);
+        }
+        path
+    }
+
+    /// Link indices used by the s -> d path.
+    pub fn path_links(&self, s: usize, d: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.hop_count(s, d));
+        self.for_each_path_link(s, d, |l| out.push(l));
+        out
+    }
+
+    /// Allocation-free path walk: calls `f(link_idx)` for every link on the
+    /// deterministic s -> d route (the DSE hot path).
+    #[inline]
+    pub fn for_each_path_link(&self, s: usize, d: usize, mut f: impl FnMut(usize)) {
+        let n = self.n;
+        let mut cur = s;
+        while cur != d {
+            let nxt = self.next_hop[cur * n + d] as usize;
+            let l = self.link_of[cur * n + nxt];
+            debug_assert!(l != u16::MAX, "path uses unknown link");
+            f(l as usize);
+            cur = nxt;
+        }
+    }
+
+    /// Dense q_ijk incidence: out[l * n*n + (s*n + d)] = 1.0 if the s->d
+    /// route crosses link l.  This is the artifact's Q row for one design.
+    pub fn incidence_f32(&self) -> Vec<f32> {
+        let n = self.n;
+        let n_links = self.links.len();
+        let mut q = vec![0.0f32; n_links * n * n];
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    continue;
+                }
+                for l in self.path_links(s, d) {
+                    q[l * n * n + s * n + d] = 1.0;
+                }
+            }
+        }
+        q
+    }
+
+    /// Mean hop count over all ordered pairs (diagnostic).
+    pub fn mean_hops(&self) -> f64 {
+        let n = self.n;
+        let total: u64 = self.hops.iter().map(|&h| h as u64).sum();
+        total as f64 / (n * n - n) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::design::Design;
+    use crate::config::ArchConfig;
+    use crate::noc::topology;
+
+    fn mesh_routing() -> (Design, Routing) {
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let r = Routing::build(&d);
+        (d, r)
+    }
+
+    #[test]
+    fn hops_are_symmetric_on_undirected_links() {
+        let (_, r) = mesh_routing();
+        for s in 0..r.n {
+            for d in 0..r.n {
+                assert_eq!(r.hop_count(s, d), r.hop_count(d, s));
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_hops_equal_manhattan_distance() {
+        let cfg = ArchConfig::paper();
+        let geo = crate::arch::geometry::Geometry::new(&cfg, &crate::config::TechParams::tsv());
+        let (_, r) = mesh_routing();
+        for s in 0..r.n {
+            for d in 0..r.n {
+                let manhattan = geo.tier_of(s).abs_diff(geo.tier_of(d))
+                    + geo.row_of(s).abs_diff(geo.row_of(d))
+                    + geo.col_of(s).abs_diff(geo.col_of(d));
+                assert_eq!(r.hop_count(s, d), manhattan, "pair {s}->{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn paths_are_valid_and_shortest() {
+        let (design, r) = mesh_routing();
+        let adj = design.adjacency();
+        for s in (0..r.n).step_by(7) {
+            for d in (0..r.n).step_by(5) {
+                let p = r.path(s, d);
+                assert_eq!(p[0], s);
+                assert_eq!(*p.last().unwrap(), d);
+                assert_eq!(p.len(), r.hop_count(s, d) + 1);
+                for w in p.windows(2) {
+                    assert!(adj[w[0]].contains(&w[1]), "non-edge in path");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incidence_matches_paths() {
+        let cfg = ArchConfig::tiny();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let r = Routing::build(&d);
+        let q = r.incidence_f32();
+        let n = r.n;
+        for s in 0..n {
+            for dd in 0..n {
+                let links = if s == dd { vec![] } else { r.path_links(s, dd) };
+                for l in 0..d.links.len() {
+                    let want = links.contains(&l) as u8 as f32;
+                    assert_eq!(q[l * n * n + s * n + dd], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let cfg = ArchConfig::paper();
+        let geo = crate::arch::geometry::Geometry::new(&cfg, &crate::config::TechParams::m3d());
+        let mut rng = crate::util::Rng::seed_from_u64(9);
+        let links = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng);
+        let d = Design::with_identity_placement(cfg.n_tiles(), links);
+        let r1 = Routing::build(&d);
+        let r2 = Routing::build(&d);
+        assert_eq!(r1.hops, r2.hops);
+        assert_eq!(r1.next_hop, r2.next_hop);
+    }
+}

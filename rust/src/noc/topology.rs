@@ -1,0 +1,140 @@
+//! NoC topology generation: the 3D-mesh baseline and the power-law
+//! small-world NoC (SWNoC) the paper builds HeM3D on.
+
+use crate::arch::design::Link;
+use crate::arch::geometry::Geometry;
+use crate::config::{ArchConfig, TechParams};
+use crate::util::Rng;
+
+/// All links of the (tiers x rows x cols) 3D mesh.
+pub fn mesh_links(cfg: &ArchConfig) -> Vec<Link> {
+    // Geometry only needs grid shape here; tech pitch is irrelevant.
+    let geo = Geometry::new(cfg, &TechParams::tsv());
+    let mut links = Vec::new();
+    for a in 0..geo.n_pos() {
+        for b in (a + 1)..geo.n_pos() {
+            if geo.are_mesh_neighbors(a, b) {
+                links.push(Link::new(a, b));
+            }
+        }
+    }
+    links
+}
+
+/// Generate a connected small-world link set with the mesh-equivalent link
+/// budget: a random spanning tree for connectivity, then extra links sampled
+/// with a power-law length bias P(a->b) ∝ dist(a,b)^(-alpha) (short links
+/// common, a few long-range shortcuts) [18].
+pub fn swnoc_links(cfg: &ArchConfig, geo: &Geometry, alpha: f64, rng: &mut Rng) -> Vec<Link> {
+    let n = geo.n_pos();
+    let budget = cfg.n_links;
+    assert!(budget >= n - 1, "link budget below spanning tree");
+
+    let mut links: Vec<Link> = Vec::with_capacity(budget);
+    let mut have = std::collections::HashSet::new();
+
+    // Random spanning tree (random permutation + attach to random earlier
+    // node, biased to short edges for realism).
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for i in 1..n {
+        let u = order[i];
+        // Candidate earlier nodes weighted by dist^-alpha.
+        let weights: Vec<f64> = order[..i]
+            .iter()
+            .map(|&v| geo.dist_mm(u, v).max(geo.pitch_mm * 0.5).powf(-alpha))
+            .collect();
+        let v = order[rng.weighted(&weights)];
+        let l = Link::new(u, v);
+        if have.insert(l) {
+            links.push(l);
+        }
+    }
+
+    // Fill the remaining budget with power-law-biased extra links.
+    let mut guard = 0;
+    while links.len() < budget {
+        guard += 1;
+        assert!(guard < 100_000, "swnoc generation stuck");
+        let a = rng.below(n);
+        let weights: Vec<f64> = (0..n)
+            .map(|b| {
+                if b == a {
+                    0.0
+                } else {
+                    geo.dist_mm(a, b).max(geo.pitch_mm * 0.5).powf(-alpha)
+                }
+            })
+            .collect();
+        let b = rng.weighted(&weights);
+        let l = Link::new(a, b);
+        if have.insert(l) {
+            links.push(l);
+        }
+    }
+    links.sort_unstable();
+    links
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::design::Design;
+
+    #[test]
+    fn mesh_link_count_matches_formula() {
+        let cfg = ArchConfig::paper();
+        assert_eq!(mesh_links(&cfg).len(), 144);
+        let tiny = ArchConfig::tiny();
+        assert_eq!(
+            mesh_links(&tiny).len(),
+            ArchConfig::mesh_link_count(tiny.tiers, tiny.rows, tiny.cols)
+        );
+    }
+
+    #[test]
+    fn mesh_is_connected() {
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), mesh_links(&cfg));
+        assert!(d.is_connected());
+    }
+
+    #[test]
+    fn swnoc_respects_budget_and_connectivity() {
+        let cfg = ArchConfig::paper();
+        let geo = Geometry::new(&cfg, &TechParams::m3d());
+        for seed in 0..5 {
+            let mut rng = Rng::seed_from_u64(seed);
+            let links = swnoc_links(&cfg, &geo, 1.8, &mut rng);
+            assert_eq!(links.len(), cfg.n_links);
+            let d = Design::with_identity_placement(cfg.n_tiles(), links);
+            assert!(d.is_connected(), "seed {seed} disconnected");
+            d.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn swnoc_has_no_duplicate_links() {
+        let cfg = ArchConfig::paper();
+        let geo = Geometry::new(&cfg, &TechParams::tsv());
+        let mut rng = Rng::seed_from_u64(11);
+        let links = swnoc_links(&cfg, &geo, 1.8, &mut rng);
+        let mut dedup = links.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), links.len());
+    }
+
+    #[test]
+    fn swnoc_prefers_short_links() {
+        // With strong power-law bias, mean link length should be well below
+        // a uniformly random link set's mean length.
+        let cfg = ArchConfig::paper();
+        let geo = Geometry::new(&cfg, &TechParams::tsv());
+        let mut rng = Rng::seed_from_u64(5);
+        let links = swnoc_links(&cfg, &geo, 2.5, &mut rng);
+        let mean_len: f64 = links.iter().map(|l| geo.dist_mm(l.a as usize, l.b as usize)).sum::<f64>()
+            / links.len() as f64;
+        // Uniform random pair mean length on this grid is > 3.4 mm.
+        assert!(mean_len < 3.0, "mean link length {mean_len}");
+    }
+}

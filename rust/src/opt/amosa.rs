@@ -1,0 +1,196 @@
+//! AMOSA — Archived Multi-Objective Simulated Annealing (Bandyopadhyay et
+//! al. [29]) — the baseline MOO solver of Fig 7.
+//!
+//! Classic structure: a non-dominated archive, a geometric cooling
+//! schedule, and acceptance by "amount of domination" — the normalized
+//! objective-space volume between the candidate and the solutions it is
+//! dominated by.  Same perturbation operators and evaluation budget
+//! accounting as MOO-STAGE, so convergence-time comparisons are fair.
+
+use super::pareto::{dominates, ParetoSet};
+use super::perturb;
+use super::phv::phv_cost;
+use super::problem::Problem;
+use crate::arch::design::Design;
+use crate::util::Rng;
+
+/// AMOSA configuration.
+#[derive(Debug, Clone)]
+pub struct AmosaConfig {
+    pub t_initial: f64,
+    pub t_final: f64,
+    /// Geometric cooling factor per temperature step.
+    pub alpha: f64,
+    /// Perturbations evaluated per temperature.
+    pub iters_per_temp: usize,
+    /// Archive capacity (soft limit, crowding-pruned).
+    pub archive_cap: usize,
+}
+
+impl Default for AmosaConfig {
+    fn default() -> Self {
+        AmosaConfig {
+            t_initial: 1.0,
+            t_final: 0.01,
+            alpha: 0.92,
+            iters_per_temp: 40,
+            archive_cap: 64,
+        }
+    }
+}
+
+/// Convergence history entry (same shape as MOO-STAGE's for Fig 7).
+#[derive(Debug, Clone)]
+pub struct AmosaIter {
+    pub temp: f64,
+    pub best_phv: f64,
+    pub evals: u64,
+    pub elapsed_s: f64,
+}
+
+pub struct AmosaResult {
+    pub pareto: ParetoSet,
+    pub history: Vec<AmosaIter>,
+}
+
+/// Amount of domination between two objective vectors, normalized by the
+/// per-objective ranges `range` (non-zero).
+fn dom_amount(a: &[f64], b: &[f64], range: &[f64]) -> f64 {
+    let mut prod = 1.0;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]).abs() / range[i].max(1e-12);
+        if d > 0.0 {
+            prod *= d;
+        }
+    }
+    prod
+}
+
+/// Run AMOSA on `problem` from `start`.
+pub fn amosa(
+    problem: &Problem<'_>,
+    start: Design,
+    cfg: &AmosaConfig,
+    rng: &mut Rng,
+) -> AmosaResult {
+    let t0 = std::time::Instant::now();
+    let reference = problem.reference(&start);
+    let range: Vec<f64> = reference.clone();
+
+    let mut archive = ParetoSet::new(cfg.archive_cap);
+    let mut current = start.clone();
+    let mut current_obj = problem.objectives(&current);
+    archive.insert(current_obj.clone(), &current);
+
+    let mut history = Vec::new();
+    let mut temp = cfg.t_initial;
+
+    while temp > cfg.t_final {
+        for _ in 0..cfg.iters_per_temp {
+            let (cand, _) = perturb::neighbor(&current, rng);
+            let cand_obj = problem.objectives(&cand);
+
+            // Classify candidate vs current and archive.
+            let accepted = if dominates(&cand_obj, &current_obj) {
+                true
+            } else if dominates(&current_obj, &cand_obj) {
+                // Dominated by current: accept with probability from the
+                // average amount of domination (candidate vs archive+current).
+                let mut dom_sum = dom_amount(&current_obj, &cand_obj, &range);
+                let mut k = 1.0;
+                for m in &archive.members {
+                    if dominates(&m.obj, &cand_obj) {
+                        dom_sum += dom_amount(&m.obj, &cand_obj, &range);
+                        k += 1.0;
+                    }
+                }
+                let avg = dom_sum / k;
+                rng.chance(1.0 / (1.0 + (avg / temp).exp()))
+            } else {
+                // Mutually non-dominating vs current: decide against the
+                // archive — accept unless heavily dominated.
+                let dominated_by: Vec<f64> = archive
+                    .members
+                    .iter()
+                    .filter(|m| dominates(&m.obj, &cand_obj))
+                    .map(|m| dom_amount(&m.obj, &cand_obj, &range))
+                    .collect();
+                if dominated_by.is_empty() {
+                    true
+                } else {
+                    let avg = dominated_by.iter().sum::<f64>() / dominated_by.len() as f64;
+                    rng.chance(1.0 / (1.0 + (avg / temp).exp()))
+                }
+            };
+
+            if accepted {
+                archive.insert(cand_obj.clone(), &cand);
+                current = cand;
+                current_obj = cand_obj;
+            }
+        }
+
+        let objs: Vec<Vec<f64>> = archive.members.iter().map(|m| m.obj.clone()).collect();
+        history.push(AmosaIter {
+            temp,
+            best_phv: phv_cost(&objs, &reference),
+            evals: problem.eval_count(),
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        });
+        temp *= cfg.alpha;
+    }
+
+    AmosaResult { pareto: archive, history }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{design::Design, geometry::Geometry, tile::TileSet};
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::topology;
+    use crate::opt::problem::Mode;
+    use crate::traffic::{benchmark, generate};
+
+    fn quick() -> AmosaConfig {
+        AmosaConfig {
+            t_initial: 1.0,
+            t_final: 0.3,
+            alpha: 0.7,
+            iters_per_temp: 12,
+            archive_cap: 24,
+        }
+    }
+
+    #[test]
+    fn amosa_builds_a_front_and_improves() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::tsv();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("lud").unwrap(), &tiles, cfg.windows, 4);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let problem = Problem::new(&ctx, Mode::Pt);
+        let start = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let mut rng = Rng::seed_from_u64(6);
+        let res = amosa(&problem, start, &quick(), &mut rng);
+        assert!(res.pareto.len() >= 1);
+        assert!(res.history.len() >= 2);
+        let first = res.history.first().unwrap().best_phv;
+        let last = res.history.last().unwrap().best_phv;
+        assert!(last >= first * 0.999, "PHV regressed hard: {first} -> {last}");
+        // Temperature strictly cools.
+        for w in res.history.windows(2) {
+            assert!(w[1].temp < w[0].temp);
+        }
+    }
+
+    #[test]
+    fn dom_amount_is_positive_and_scales() {
+        let r = vec![2.0, 2.0];
+        let a = vec![0.5, 0.5];
+        let b = vec![1.0, 1.0];
+        let c = vec![1.5, 1.5];
+        assert!(dom_amount(&a, &c, &r) > dom_amount(&a, &b, &r));
+    }
+}

@@ -1,0 +1,163 @@
+//! Greedy local search (Algorithm 1, lines 4-7): hill-climb on the PHV
+//! cost from a starting design, recording the trajectory for the meta
+//! learner.
+
+use super::pareto::ParetoSet;
+use super::perturb;
+use super::phv::phv_cost;
+use super::problem::Problem;
+use crate::arch::design::Design;
+use crate::util::Rng;
+
+/// Configuration of one local-search run.
+#[derive(Debug, Clone)]
+pub struct LocalConfig {
+    /// Neighbours sampled per greedy step.
+    pub neighbors_per_step: usize,
+    /// Stop after this many consecutive non-improving steps.
+    pub patience: usize,
+    /// Hard step cap.
+    pub max_steps: usize,
+}
+
+impl Default for LocalConfig {
+    fn default() -> Self {
+        LocalConfig { neighbors_per_step: 16, patience: 3, max_steps: 60 }
+    }
+}
+
+/// Result of one local search.
+pub struct LocalResult {
+    /// Non-dominated set discovered along the trajectory.
+    pub pareto: ParetoSet,
+    /// Final (best) PHV cost reached.
+    pub final_cost: f64,
+    /// Designs visited (including the start), with their PHV-at-visit.
+    pub trajectory: Vec<(Design, f64)>,
+    /// (problem eval count, PHV) after every greedy step — fine-grained
+    /// progress for time-to-quality comparisons (Fig 7).
+    pub progress: Vec<(u64, f64)>,
+    /// The design the search ended on.
+    pub last: Design,
+}
+
+/// Greedy hill-climbing guided by the PHV of the accumulated local front.
+///
+/// Each step samples `neighbors_per_step` valid perturbations, scores them,
+/// and moves to the neighbour that maximises the front's PHV after
+/// insertion; deterministic given the rng seed.
+pub fn local_search(
+    problem: &Problem<'_>,
+    start: Design,
+    reference: &[f64],
+    cfg: &LocalConfig,
+    rng: &mut Rng,
+) -> LocalResult {
+    let mut front = ParetoSet::new(32);
+    let start_obj = problem.objectives(&start);
+    front.insert(start_obj, &start);
+
+    let objs = |f: &ParetoSet| -> Vec<Vec<f64>> {
+        f.members.iter().map(|m| m.obj.clone()).collect()
+    };
+    let mut cost = phv_cost(&objs(&front), reference);
+    let mut trajectory = vec![(start.clone(), cost)];
+    let mut progress = vec![(problem.eval_count(), cost)];
+    let mut current = start;
+    let mut stall = 0usize;
+
+    for _ in 0..cfg.max_steps {
+        if stall >= cfg.patience {
+            break;
+        }
+        let candidates = perturb::neighbors(&current, cfg.neighbors_per_step, rng);
+        // Score each candidate by the PHV of front + candidate.
+        let mut best: Option<(f64, Design, Vec<f64>)> = None;
+        for (cand, _) in candidates {
+            let obj = problem.objectives(&cand);
+            let mut pts = objs(&front);
+            pts.push(obj.clone());
+            let c = phv_cost(&pts, reference);
+            if best.as_ref().map(|b| c > b.0).unwrap_or(true) {
+                best = Some((c, cand, obj));
+            }
+        }
+        let (best_cost, best_design, best_obj) = best.unwrap();
+        if best_cost > cost + 1e-12 {
+            cost = best_cost;
+            front.insert(best_obj, &best_design);
+            current = best_design;
+            stall = 0;
+        } else {
+            // Plateau: still move (random non-improving walk would break
+            // greedy determinism — instead we count patience and stop).
+            stall += 1;
+            current = best_design;
+        }
+        trajectory.push((current.clone(), cost));
+        progress.push((problem.eval_count(), cost));
+    }
+
+    LocalResult { pareto: front, final_cost: cost, last: current, trajectory, progress }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{design::Design, geometry::Geometry, tile::TileSet};
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::topology;
+    use crate::opt::problem::Mode;
+    use crate::traffic::{benchmark, generate};
+
+    fn run_once(seed: u64, steps: usize) -> (f64, f64) {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 7);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let problem = Problem::new(&ctx, Mode::Pt);
+        let start = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let reference = problem.reference(&start);
+        let mut rng = Rng::seed_from_u64(seed);
+        let lc = LocalConfig { neighbors_per_step: 8, patience: 2, max_steps: steps };
+        let res = local_search(&problem, start, &reference, &lc, &mut rng);
+        (res.trajectory[0].1, res.final_cost)
+    }
+
+    #[test]
+    fn local_search_improves_phv() {
+        let (start_cost, final_cost) = run_once(1, 10);
+        assert!(
+            final_cost > start_cost,
+            "no improvement: {start_cost} -> {final_cost}"
+        );
+    }
+
+    #[test]
+    fn local_search_is_deterministic() {
+        let a = run_once(5, 6);
+        let b = run_once(5, 6);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cost_is_monotone_along_trajectory() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::tsv();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("nw").unwrap(), &tiles, cfg.windows, 3);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let problem = Problem::new(&ctx, Mode::Po);
+        let start = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let reference = problem.reference(&start);
+        let mut rng = Rng::seed_from_u64(9);
+        let lc = LocalConfig { neighbors_per_step: 6, patience: 2, max_steps: 8 };
+        let res = local_search(&problem, start, &reference, &lc, &mut rng);
+        for w in res.trajectory.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12, "cost decreased");
+        }
+    }
+}

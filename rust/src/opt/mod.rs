@@ -1,0 +1,20 @@
+//! Multi-objective optimization: Pareto machinery, PHV, perturbations, the
+//! MOO-STAGE learner-guided search (the paper's solver) and the AMOSA
+//! simulated-annealing baseline.
+
+pub mod amosa;
+pub mod local;
+pub mod moo_stage;
+pub mod pareto;
+pub mod perturb;
+pub mod phv;
+pub mod problem;
+pub mod regtree;
+
+pub use amosa::{amosa, AmosaConfig, AmosaResult};
+pub use local::{local_search, LocalConfig, LocalResult};
+pub use moo_stage::{moo_stage, StageConfig, StageResult};
+pub use pareto::{dominates, ParetoSet, Solution};
+pub use phv::{hypervolume, phv_cost};
+pub use problem::{Mode, Problem};
+pub use regtree::{RegTree, TreeConfig};

@@ -1,0 +1,212 @@
+//! MOO-STAGE (Joardar et al. [18], Algorithm 1): iterated local search
+//! whose restart states are chosen by a learned evaluation function.
+//!
+//! Each iteration: (a) LOCAL SEARCH — greedy PHV hill-climb recording the
+//! trajectory; (b) META SEARCH — fit a regression tree mapping start-design
+//! features to the achieved local PHV, sample N random valid designs,
+//! restart from the one the tree scores highest.  The global Pareto set
+//! accumulates across iterations.
+
+use super::local::{local_search, LocalConfig, LocalResult};
+use super::pareto::ParetoSet;
+use super::perturb::random_design;
+use super::phv::phv_cost;
+use super::problem::Problem;
+use super::regtree::{RegTree, TreeConfig};
+use crate::arch::design::Design;
+use crate::eval::features::features;
+use crate::util::Rng;
+
+/// MOO-STAGE configuration.
+#[derive(Debug, Clone)]
+pub struct StageConfig {
+    pub local: LocalConfig,
+    /// Random candidate starting designs scored by the tree per iteration.
+    pub meta_candidates: usize,
+    /// Maximum outer iterations.
+    pub max_iters: usize,
+    /// Convergence: stop when the best PHV improves by < this fraction
+    /// over `convergence_window` consecutive iterations (paper: 2%).
+    pub convergence_eps: f64,
+    pub convergence_window: usize,
+}
+
+impl Default for StageConfig {
+    fn default() -> Self {
+        StageConfig {
+            local: LocalConfig::default(),
+            meta_candidates: 64,
+            max_iters: 20,
+            convergence_eps: 0.02,
+            convergence_window: 3,
+        }
+    }
+}
+
+/// Progress record (one per local-search step; drives Fig 7's
+/// convergence curves at evaluation granularity).
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    pub iter: usize,
+    pub best_phv: f64,
+    pub evals: u64,
+    pub elapsed_s: f64,
+}
+
+/// Full optimizer output.
+pub struct StageResult {
+    pub pareto: ParetoSet,
+    pub history: Vec<IterRecord>,
+    pub converged_at: Option<usize>,
+}
+
+/// Run MOO-STAGE on `problem` from `start`.
+pub fn moo_stage(
+    problem: &Problem<'_>,
+    start: Design,
+    cfg: &StageConfig,
+    rng: &mut Rng,
+) -> StageResult {
+    let t0 = std::time::Instant::now();
+    let reference = problem.reference(&start);
+    let mut global = ParetoSet::new(64);
+    let mut history: Vec<IterRecord> = Vec::new();
+
+    // Meta-learner training set: start features -> achieved local PHV.
+    let mut train_x: Vec<Vec<f64>> = Vec::new();
+    let mut train_y: Vec<f64> = Vec::new();
+
+    let geo = problem.ctx.geo;
+    let tiles = problem.ctx.tiles;
+    let stack = &problem.ctx.stack;
+
+    let mut current = start;
+    let mut best_phv = 0.0f64;
+    let mut converged_at = None;
+
+    for iter in 0..cfg.max_iters {
+        // ---- LOCAL SEARCH -------------------------------------------------
+        let start_feat = features(&current, geo, tiles, stack);
+        let res: LocalResult =
+            local_search(problem, current.clone(), &reference, &cfg.local, rng);
+        // Fine-grained progress: the best quality known at each eval count
+        // is the max of the global front's PHV and the local cost so far.
+        let global_before = best_phv;
+        for &(e, c) in &res.progress {
+            history.push(IterRecord {
+                iter,
+                best_phv: c.max(global_before),
+                evals: e,
+                elapsed_s: t0.elapsed().as_secs_f64(),
+            });
+        }
+        global.merge(&res.pareto);
+        // Trajectory designs also inform the learner (paper: sequences of
+        // designs from past local searches are the training data).
+        for (d, phv_at) in res.trajectory.iter().step_by(4) {
+            train_x.push(features(d, geo, tiles, stack));
+            train_y.push(res.final_cost.max(*phv_at));
+        }
+        train_x.push(start_feat);
+        train_y.push(res.final_cost);
+
+        let global_objs: Vec<Vec<f64>> =
+            global.members.iter().map(|m| m.obj.clone()).collect();
+        best_phv = phv_cost(&global_objs, &reference);
+        history.push(IterRecord {
+            iter,
+            best_phv,
+            evals: problem.eval_count(),
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        });
+
+        // Convergence check over the trailing window.
+        if history.len() > cfg.convergence_window {
+            let prev = history[history.len() - 1 - cfg.convergence_window].best_phv;
+            if prev > 0.0 && (best_phv - prev) / prev < cfg.convergence_eps {
+                converged_at = Some(iter);
+                break;
+            }
+        }
+
+        // ---- META SEARCH ---------------------------------------------------
+        let tree = RegTree::fit(&train_x, &train_y, &TreeConfig::default());
+        let arch_cfg = crate::config::ArchConfig::paper();
+        let mut best_cand: Option<(f64, Design)> = None;
+        for _ in 0..cfg.meta_candidates {
+            let cand = random_design(&arch_cfg, geo, rng);
+            let pred = tree.predict(&features(&cand, geo, tiles, stack));
+            if best_cand.as_ref().map(|b| pred > b.0).unwrap_or(true) {
+                best_cand = Some((pred, cand));
+            }
+        }
+        current = best_cand.unwrap().1;
+    }
+
+    let _ = best_phv;
+    StageResult { pareto: global, history, converged_at }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{design::Design, geometry::Geometry, tile::TileSet};
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::topology;
+    use crate::opt::problem::Mode;
+    use crate::traffic::{benchmark, generate};
+
+    fn quick_cfg() -> StageConfig {
+        StageConfig {
+            local: LocalConfig { neighbors_per_step: 6, patience: 2, max_steps: 8 },
+            meta_candidates: 16,
+            max_iters: 4,
+            convergence_eps: 0.0,
+            convergence_window: 100,
+        }
+    }
+
+    #[test]
+    fn moo_stage_grows_the_front_and_improves_phv() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 1);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let problem = Problem::new(&ctx, Mode::Pt);
+        let start = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let mut rng = Rng::seed_from_u64(2);
+        let res = moo_stage(&problem, start, &quick_cfg(), &mut rng);
+        assert!(!res.pareto.is_empty());
+        assert!(res.history.len() >= 2);
+        let first = res.history.first().unwrap().best_phv;
+        let last = res.history.last().unwrap().best_phv;
+        assert!(last >= first, "PHV regressed: {first} -> {last}");
+        assert!(last > 0.0);
+        // History evals must be non-decreasing.
+        for w in res.history.windows(2) {
+            assert!(w[1].evals >= w[0].evals);
+        }
+    }
+
+    #[test]
+    fn convergence_stops_early() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::tsv();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("knn").unwrap(), &tiles, cfg.windows, 1);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let problem = Problem::new(&ctx, Mode::Po);
+        let start = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let mut rng = Rng::seed_from_u64(3);
+        let mut scfg = quick_cfg();
+        scfg.max_iters = 12;
+        scfg.convergence_eps = 0.5; // aggressive: converge fast
+        scfg.convergence_window = 2;
+        let res = moo_stage(&problem, start, &scfg, &mut rng);
+        assert!(res.converged_at.is_some());
+        assert!(res.history.len() < 12);
+    }
+}

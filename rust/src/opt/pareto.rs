@@ -1,0 +1,191 @@
+//! Pareto dominance and non-dominated archives (all objectives minimized).
+
+use crate::arch::design::Design;
+
+/// One archived solution: objective vector + the design that produced it.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub obj: Vec<f64>,
+    pub design: Design,
+}
+
+/// True if `a` Pareto-dominates `b` (<= everywhere, < somewhere).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// A non-dominated archive with optional capacity pruning.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoSet {
+    pub members: Vec<Solution>,
+    /// Maximum archive size (0 = unbounded); pruned by crowding.
+    pub capacity: usize,
+}
+
+impl ParetoSet {
+    pub fn new(capacity: usize) -> Self {
+        ParetoSet { members: Vec::new(), capacity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Whether `obj` would be dominated by the current front.
+    pub fn is_dominated(&self, obj: &[f64]) -> bool {
+        self.members.iter().any(|m| dominates(&m.obj, obj))
+    }
+
+    /// Insert if non-dominated; evict members it dominates.
+    /// Returns true if inserted.
+    pub fn insert(&mut self, obj: Vec<f64>, design: &Design) -> bool {
+        if self.is_dominated(&obj) {
+            return false;
+        }
+        // Identical objective vectors are treated as duplicates.
+        if self.members.iter().any(|m| m.obj == obj) {
+            return false;
+        }
+        self.members.retain(|m| !dominates(&obj, &m.obj));
+        self.members.push(Solution { obj, design: design.clone() });
+        if self.capacity > 0 && self.members.len() > self.capacity {
+            self.prune_most_crowded();
+        }
+        true
+    }
+
+    /// Merge another front into this one.
+    pub fn merge(&mut self, other: &ParetoSet) {
+        for m in &other.members {
+            self.insert(m.obj.clone(), &m.design);
+        }
+    }
+
+    /// Remove the member in the densest objective-space neighbourhood
+    /// (keeps the front spread when capacity-bounded).
+    fn prune_most_crowded(&mut self) {
+        let n = self.members.len();
+        if n <= 2 {
+            return;
+        }
+        let mut min_d = vec![f64::INFINITY; n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let d: f64 = self.members[i]
+                    .obj
+                    .iter()
+                    .zip(self.members[j].obj.iter())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                min_d[i] = min_d[i].min(d);
+            }
+        }
+        let (victim, _) = min_d
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        self.members.swap_remove(victim);
+    }
+
+    /// The member minimizing objective `k`.
+    pub fn best_by(&self, k: usize) -> Option<&Solution> {
+        self.members
+            .iter()
+            .min_by(|a, b| a.obj[k].partial_cmp(&b.obj[k]).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::design::{Design, Link};
+
+    fn d() -> Design {
+        Design::with_identity_placement(3, vec![Link::new(0, 1), Link::new(1, 2)])
+    }
+
+    #[test]
+    fn dominance_rules() {
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0])); // equal: no strict part
+    }
+
+    #[test]
+    fn archive_keeps_only_nondominated() {
+        let design = d();
+        let mut p = ParetoSet::new(0);
+        assert!(p.insert(vec![2.0, 2.0], &design));
+        assert!(p.insert(vec![1.0, 3.0], &design));
+        assert!(!p.insert(vec![3.0, 3.0], &design)); // dominated
+        assert!(p.insert(vec![1.5, 1.5], &design)); // dominates (2,2)
+        assert_eq!(p.len(), 2);
+        assert!(!p.members.iter().any(|m| m.obj == vec![2.0, 2.0]));
+    }
+
+    #[test]
+    fn duplicates_are_rejected() {
+        let design = d();
+        let mut p = ParetoSet::new(0);
+        assert!(p.insert(vec![1.0, 2.0], &design));
+        assert!(!p.insert(vec![1.0, 2.0], &design));
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn capacity_pruning_keeps_extremes() {
+        let design = d();
+        let mut p = ParetoSet::new(3);
+        // A dense cluster + extremes on a 1/x front.
+        for &(a, b) in
+            &[(1.0, 10.0), (10.0, 1.0), (5.0, 5.0), (5.1, 4.95), (4.9, 5.05)]
+        {
+            p.insert(vec![a, b], &design);
+        }
+        assert_eq!(p.len(), 3);
+        let objs: Vec<&Vec<f64>> = p.members.iter().map(|m| &m.obj).collect();
+        assert!(objs.contains(&&vec![1.0, 10.0]));
+        assert!(objs.contains(&&vec![10.0, 1.0]));
+    }
+
+    #[test]
+    fn merge_unions_fronts() {
+        let design = d();
+        let mut a = ParetoSet::new(0);
+        a.insert(vec![1.0, 4.0], &design);
+        let mut b = ParetoSet::new(0);
+        b.insert(vec![4.0, 1.0], &design);
+        b.insert(vec![0.5, 5.0], &design);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn best_by_selects_minimum() {
+        let design = d();
+        let mut p = ParetoSet::new(0);
+        p.insert(vec![1.0, 9.0], &design);
+        p.insert(vec![9.0, 1.0], &design);
+        assert_eq!(p.best_by(0).unwrap().obj, vec![1.0, 9.0]);
+        assert_eq!(p.best_by(1).unwrap().obj, vec![9.0, 1.0]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Valid design perturbations (Algorithm 1's `Perturb`): tile-position
+//! swaps and link moves, with the physical-design validity checks the paper
+//! requires (every perturbed design must stay fully connected).
+
+use crate::arch::design::{Design, Link};
+use crate::util::Rng;
+
+/// Kind of move applied (diagnostics / ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Move {
+    SwapTiles(usize, usize),
+    MoveLink { idx: usize, new: Link },
+}
+
+/// Generate one *valid* neighbour of `design` (never returns an invalid or
+/// disconnected design).  Swap and link moves are tried with equal
+/// probability; link moves that disconnect the NoC are rolled back.
+pub fn neighbor(design: &Design, rng: &mut Rng) -> (Design, Move) {
+    let n = design.n_tiles();
+    loop {
+        if rng.chance(0.5) {
+            // Tile swap: positions of two distinct tiles.
+            let p1 = rng.below(n);
+            let mut p2 = rng.below(n);
+            while p2 == p1 {
+                p2 = rng.below(n);
+            }
+            let mut next = design.clone();
+            next.swap_positions(p1, p2);
+            return (next, Move::SwapTiles(p1, p2));
+        } else {
+            // Link move: rewire one link to a new endpoint pair.
+            let idx = rng.below(design.links.len());
+            let a = rng.below(n);
+            let mut b = rng.below(n);
+            while b == a {
+                b = rng.below(n);
+            }
+            let new = Link::new(a, b);
+            let mut next = design.clone();
+            if !next.replace_link(idx, new) {
+                continue; // duplicate link; try another move
+            }
+            if !next.is_connected() {
+                continue; // would partition the NoC; try another move
+            }
+            return (next, Move::MoveLink { idx, new });
+        }
+    }
+}
+
+/// Generate `k` distinct-ish neighbours (no dedup guarantee, but each valid).
+pub fn neighbors(design: &Design, k: usize, rng: &mut Rng) -> Vec<(Design, Move)> {
+    (0..k).map(|_| neighbor(design, rng)).collect()
+}
+
+/// A uniformly random *valid* design with the same link budget: random
+/// placement + regenerated small-world links (used for AMOSA restarts and
+/// MOO-STAGE meta-search candidates).
+pub fn random_design(
+    cfg: &crate::config::ArchConfig,
+    geo: &crate::arch::geometry::Geometry,
+    rng: &mut Rng,
+) -> Design {
+    let links = crate::noc::topology::swnoc_links(cfg, geo, 1.8, rng);
+    Design::random_placement(cfg, links, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::geometry::Geometry;
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::topology;
+
+    fn base() -> Design {
+        let cfg = ArchConfig::paper();
+        Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg))
+    }
+
+    #[test]
+    fn neighbors_are_always_valid() {
+        let d = base();
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..200 {
+            let (n, _) = neighbor(&d, &mut rng);
+            n.validate().unwrap();
+            assert_eq!(n.links.len(), d.links.len(), "link budget changed");
+        }
+    }
+
+    #[test]
+    fn neighbor_differs_from_parent() {
+        let d = base();
+        let mut rng = Rng::seed_from_u64(2);
+        let mut changed = 0;
+        for _ in 0..50 {
+            let (n, _) = neighbor(&d, &mut rng);
+            if n != d {
+                changed += 1;
+            }
+        }
+        assert_eq!(changed, 50);
+    }
+
+    #[test]
+    fn both_move_kinds_occur() {
+        let d = base();
+        let mut rng = Rng::seed_from_u64(3);
+        let moves = neighbors(&d, 100, &mut rng);
+        let swaps = moves.iter().filter(|(_, m)| matches!(m, Move::SwapTiles(..))).count();
+        let links = moves.len() - swaps;
+        assert!(swaps > 20 && links > 20, "swaps={swaps} links={links}");
+    }
+
+    #[test]
+    fn random_designs_are_valid() {
+        let cfg = ArchConfig::paper();
+        let geo = Geometry::new(&cfg, &TechParams::m3d());
+        let mut rng = Rng::seed_from_u64(4);
+        for _ in 0..10 {
+            random_design(&cfg, &geo, &mut rng).validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Pareto hypervolume (PHV) — the cost metric MOO-STAGE trains against.
+//!
+//! Exact computation by the "hypervolume by slicing objectives" recursion
+//! (minimization, fixed reference point).  Front sizes here are small
+//! (tens of points, 3-4 objectives), where HSO is plenty fast.
+
+/// Hypervolume dominated by `points` relative to `reference`
+/// (all objectives minimized; points beyond the reference are clipped out).
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let d = reference.len();
+    let mut pts: Vec<Vec<f64>> = points
+        .iter()
+        .filter(|p| p.iter().zip(reference).all(|(x, r)| x < r))
+        .cloned()
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    // Reduce to the non-dominated subset (HSO assumes a front).
+    pts = non_dominated(pts);
+    hso(&mut pts, reference, d)
+}
+
+fn non_dominated(pts: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+    let mut keep = Vec::new();
+    'outer: for (i, p) in pts.iter().enumerate() {
+        for (j, q) in pts.iter().enumerate() {
+            if i != j && super::pareto::dominates(q, p) {
+                continue 'outer;
+            }
+        }
+        if !keep.contains(p) {
+            keep.push(p.clone());
+        }
+    }
+    keep
+}
+
+/// Recursive slicing on the last axis.
+fn hso(pts: &mut Vec<Vec<f64>>, reference: &[f64], d: usize) -> f64 {
+    if pts.is_empty() {
+        return 0.0;
+    }
+    if d == 1 {
+        let best = pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+        return (reference[0] - best).max(0.0);
+    }
+    // Sort by the d-th objective ascending and sweep slices.
+    pts.sort_by(|a, b| a[d - 1].partial_cmp(&b[d - 1]).unwrap());
+    let mut volume = 0.0;
+    for i in 0..pts.len() {
+        let depth = if i + 1 < pts.len() {
+            pts[i + 1][d - 1] - pts[i][d - 1]
+        } else {
+            reference[d - 1] - pts[i][d - 1]
+        };
+        if depth <= 0.0 {
+            continue;
+        }
+        // Slice contains the first i+1 points projected to d-1 dims.
+        let mut slice: Vec<Vec<f64>> =
+            pts[..=i].iter().map(|p| p[..d - 1].to_vec()).collect();
+        slice = non_dominated(slice);
+        volume += depth * hso(&mut slice, reference, d - 1);
+    }
+    volume
+}
+
+/// Normalised PHV cost used by the search: higher is better.  `scale`
+/// normalises each objective so the reference box has unit volume.
+pub fn phv_cost(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let box_vol: f64 = reference.iter().product();
+    if box_vol <= 0.0 {
+        return 0.0;
+    }
+    hypervolume(points, reference) / box_vol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_box() {
+        let hv = hypervolume(&[vec![1.0, 1.0]], &[3.0, 4.0]);
+        assert!((hv - 6.0).abs() < 1e-12); // (3-1)*(4-1)
+    }
+
+    #[test]
+    fn dominated_points_add_nothing() {
+        let base = hypervolume(&[vec![1.0, 1.0]], &[3.0, 3.0]);
+        let with_dom = hypervolume(&[vec![1.0, 1.0], vec![2.0, 2.0]], &[3.0, 3.0]);
+        assert!((base - with_dom).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_point_staircase() {
+        // Points (1,2) and (2,1), ref (3,3): union area = 3.
+        let hv = hypervolume(&[vec![1.0, 2.0], vec![2.0, 1.0]], &[3.0, 3.0]);
+        assert!((hv - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn three_dims_unit_cubes() {
+        // (0,0,1),(0,1,0),(1,0,0) with ref (2,2,2):
+        // each box is 2x2x1=4; pairwise overlaps 2x1x1=2 (x3);
+        // triple overlap 1x1x1=1  ->  12 - 6 + 1 = 7.
+        let pts = vec![vec![0.0, 0.0, 1.0], vec![0.0, 1.0, 0.0], vec![1.0, 0.0, 0.0]];
+        let hv = hypervolume(&pts, &[2.0, 2.0, 2.0]);
+        assert!((hv - 7.0).abs() < 1e-9, "hv={hv}");
+    }
+
+    #[test]
+    fn points_outside_reference_are_clipped() {
+        let hv = hypervolume(&[vec![5.0, 5.0]], &[3.0, 3.0]);
+        assert_eq!(hv, 0.0);
+    }
+
+    #[test]
+    fn adding_a_nondominated_point_grows_hv() {
+        let r = [10.0, 10.0, 10.0, 10.0];
+        let a = vec![vec![3.0, 3.0, 3.0, 3.0]];
+        let mut b = a.clone();
+        b.push(vec![1.0, 5.0, 5.0, 5.0]);
+        assert!(hypervolume(&b, &r) > hypervolume(&a, &r));
+    }
+
+    #[test]
+    fn phv_cost_is_normalised() {
+        let c = phv_cost(&[vec![0.0, 0.0]], &[2.0, 2.0]);
+        assert!((c - 1.0).abs() < 1e-12);
+        let half = phv_cost(&[vec![1.0, 0.0]], &[2.0, 2.0]);
+        assert!((half - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! MOO problem definition (Eq. 9): objective extraction for the PO and PT
+//! flavours, shared evaluation plumbing, and evaluation counting.
+
+use crate::arch::design::Design;
+use crate::arch::encode::EncodeCtx;
+use crate::eval::objectives::{evaluate_sparse, Scores, SparseTraffic};
+use crate::noc::routing::Routing;
+use std::cell::RefCell;
+
+/// Optimization flavour (Eq. 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Performance-only: {umean, usigma, lat}.
+    Po,
+    /// Joint performance-thermal: {umean, usigma, lat, tmax}.
+    Pt,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Po => "po",
+            Mode::Pt => "pt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "po" => Some(Mode::Po),
+            "pt" => Some(Mode::Pt),
+            _ => None,
+        }
+    }
+
+    pub fn n_obj(&self) -> usize {
+        match self {
+            Mode::Po => 3,
+            Mode::Pt => 4,
+        }
+    }
+
+    /// Project full scores onto this mode's objective vector.
+    pub fn objectives(&self, s: &Scores) -> Vec<f64> {
+        match self {
+            Mode::Po => vec![s.lat, s.umean, s.usigma],
+            Mode::Pt => vec![s.lat, s.umean, s.usigma, s.tmax],
+        }
+    }
+}
+
+/// The DSE problem: evaluation context + mode + bookkeeping.
+pub struct Problem<'a> {
+    pub ctx: &'a EncodeCtx<'a>,
+    pub mode: Mode,
+    pub traffic: SparseTraffic,
+    evals: RefCell<u64>,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(ctx: &'a EncodeCtx<'a>, mode: Mode) -> Self {
+        let traffic = SparseTraffic::from_trace_tiles(
+            ctx.trace,
+            crate::runtime::dims::N_WINDOWS,
+            Some(ctx.tiles),
+        );
+        Problem { ctx, mode, traffic, evals: RefCell::new(0) }
+    }
+
+    /// Full-score evaluation (builds routing; counts toward the budget).
+    pub fn score(&self, design: &Design) -> Scores {
+        *self.evals.borrow_mut() += 1;
+        let routing = Routing::build(design);
+        evaluate_sparse(self.ctx, design, &routing, &self.traffic)
+    }
+
+    /// Objective vector under the current mode.
+    pub fn objectives(&self, design: &Design) -> Vec<f64> {
+        self.mode.objectives(&self.score(design))
+    }
+
+    /// Number of design evaluations performed so far.
+    pub fn eval_count(&self) -> u64 {
+        *self.evals.borrow()
+    }
+
+    /// Reference point for PHV: component-wise multiple of a baseline
+    /// design's objectives (everything better than 1.25x baseline counts).
+    pub fn reference(&self, baseline: &Design) -> Vec<f64> {
+        self.objectives(baseline).iter().map(|o| o * 1.25).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{design::Design, geometry::Geometry, tile::TileSet};
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::topology;
+    use crate::traffic::{benchmark, generate};
+
+    #[test]
+    fn modes_project_scores() {
+        let s = Scores { lat: 1.0, umean: 2.0, usigma: 3.0, tmax: 4.0 };
+        assert_eq!(Mode::Po.objectives(&s), vec![1.0, 2.0, 3.0]);
+        assert_eq!(Mode::Pt.objectives(&s), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(Mode::parse("pt"), Some(Mode::Pt));
+    }
+
+    #[test]
+    fn problem_counts_evaluations() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("knn").unwrap(), &tiles, cfg.windows, 1);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let problem = Problem::new(&ctx, Mode::Pt);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let o = problem.objectives(&d);
+        assert_eq!(o.len(), 4);
+        assert!(o.iter().all(|&x| x > 0.0));
+        assert_eq!(problem.eval_count(), 1);
+        let r = problem.reference(&d);
+        assert!(r.iter().zip(o.iter()).all(|(a, b)| a > b));
+    }
+}

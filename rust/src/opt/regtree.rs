@@ -1,0 +1,175 @@
+//! CART regression tree — the MOO-STAGE meta-search learner (Algorithm 1,
+//! line 10).  Predicts the local-search outcome (final PHV) from a starting
+//! design's feature vector.
+
+/// A trained regression tree.
+#[derive(Debug, Clone)]
+pub struct RegTree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { value: f64 },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_leaf: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig { max_depth: 6, min_leaf: 4 }
+    }
+}
+
+impl RegTree {
+    /// Fit on rows `x[i]` with targets `y[i]` (variance-reduction splits).
+    pub fn fit(x: &[Vec<f64>], y: &[f64], cfg: &TreeConfig) -> RegTree {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "empty training set");
+        let mut tree = RegTree { nodes: Vec::new() };
+        let idx: Vec<usize> = (0..x.len()).collect();
+        tree.build(x, y, &idx, 0, cfg);
+        tree
+    }
+
+    fn build(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &[usize],
+        depth: usize,
+        cfg: &TreeConfig,
+    ) -> usize {
+        let mean: f64 = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+        if depth >= cfg.max_depth || idx.len() < 2 * cfg.min_leaf {
+            self.nodes.push(Node::Leaf { value: mean });
+            return self.nodes.len() - 1;
+        }
+
+        // Best variance-reducing split across all features.
+        let sse = |ids: &[usize]| -> f64 {
+            if ids.is_empty() {
+                return 0.0;
+            }
+            let m: f64 = ids.iter().map(|&i| y[i]).sum::<f64>() / ids.len() as f64;
+            ids.iter().map(|&i| (y[i] - m) * (y[i] - m)).sum()
+        };
+        let total_sse = sse(idx);
+        let n_features = x[0].len();
+        let mut best: Option<(f64, usize, f64)> = None; // (gain, feat, thr)
+        for f in 0..n_features {
+            let mut vals: Vec<f64> = idx.iter().map(|&i| x[i][f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            if vals.len() < 2 {
+                continue;
+            }
+            // Candidate thresholds: midpoints of up to 16 quantile cuts.
+            let step = (vals.len() / 16).max(1);
+            for w in vals.windows(2).step_by(step) {
+                let thr = (w[0] + w[1]) / 2.0;
+                let (l, r): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| x[i][f] <= thr);
+                if l.len() < cfg.min_leaf || r.len() < cfg.min_leaf {
+                    continue;
+                }
+                let gain = total_sse - sse(&l) - sse(&r);
+                if best.map(|b| gain > b.0).unwrap_or(gain > 1e-12) {
+                    best = Some((gain, f, thr));
+                }
+            }
+        }
+
+        match best {
+            None => {
+                self.nodes.push(Node::Leaf { value: mean });
+                self.nodes.len() - 1
+            }
+            Some((_, feature, threshold)) => {
+                let (l, r): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| x[i][feature] <= threshold);
+                let me = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: mean }); // placeholder
+                let left = self.build(x, y, &l, depth + 1, cfg);
+                let right = self.build(x, y, &r, depth + 1, cfg);
+                self.nodes[me] = Node::Split { feature, threshold, left, right };
+                me
+            }
+        }
+    }
+
+    /// Predict the target for one feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut node = 0usize;
+        loop {
+            match &self.nodes[node] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fits_a_step_function_exactly() {
+        // y = 1 if x0 > 0.5 else 0 — one split suffices.
+        let mut rng = Rng::seed_from_u64(1);
+        let x: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|v| if v[0] > 0.5 { 1.0 } else { 0.0 }).collect();
+        let tree = RegTree::fit(&x, &y, &TreeConfig::default());
+        // Quantile-midpoint thresholds may leave a mixed leaf hugging the
+        // 0.5 boundary — require exactness only away from it.
+        for (v, t) in x.iter().zip(y.iter()) {
+            if (v[0] - 0.5).abs() > 0.05 {
+                assert!((tree.predict(v) - t).abs() < 0.2, "x={v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduces_error_vs_mean_on_smooth_target() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x: Vec<Vec<f64>> = (0..400).map(|_| vec![rng.f64() * 4.0, rng.f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|v| (v[0]).sin() + 0.3 * v[1]).collect();
+        let tree = RegTree::fit(&x, &y, &TreeConfig { max_depth: 8, min_leaf: 5 });
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        let sse_tree: f64 = x.iter().zip(&y).map(|(v, t)| (tree.predict(v) - t).powi(2)).sum();
+        let sse_mean: f64 = y.iter().map(|t| (t - mean).powi(2)).sum();
+        assert!(sse_tree < 0.25 * sse_mean, "tree {sse_tree} vs mean {sse_mean}");
+    }
+
+    #[test]
+    fn constant_target_gives_single_leaf() {
+        let x = vec![vec![1.0], vec![2.0], vec![3.0], vec![4.0]];
+        let y = vec![7.0; 4];
+        let tree = RegTree::fit(&x, &y, &TreeConfig::default());
+        assert_eq!(tree.n_nodes(), 1);
+        assert_eq!(tree.predict(&[2.5]), 7.0);
+    }
+
+    #[test]
+    fn respects_min_leaf() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let tree = RegTree::fit(&x, &y, &TreeConfig { max_depth: 10, min_leaf: 5 });
+        // With min_leaf 5 over 10 samples, only one split is possible.
+        assert!(tree.n_nodes() <= 3);
+    }
+}

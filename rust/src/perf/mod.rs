@@ -1,0 +1,6 @@
+//! Full-system performance: the execution-time model composing core
+//! frequencies, LLC latency and NoC behaviour (the Gem5-GPU substitute).
+
+pub mod model;
+
+pub use model::{exec_time, ExecTime, PerfCoeffs};

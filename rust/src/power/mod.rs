@@ -1,0 +1,7 @@
+//! Power modeling: activity-proportional per-tile dynamic power (the
+//! GPUWattch/McPAT substitute) and temperature-dependent leakage feedback.
+
+pub mod leakage;
+pub mod model;
+
+pub use model::{PowerBudget, PowerModel};

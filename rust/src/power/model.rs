@@ -1,0 +1,136 @@
+//! Per-tile power model — the GPUWattch [34] / McPAT [35] substitute.
+//!
+//! Dynamic power scales with the activity factor from the traffic trace and
+//! with clock frequency (alpha * C * V^2 * f with fixed V across the small
+//! frequency deltas involved); M3D cores additionally carry the 21% GPU /
+//! comparable CPU energy saving from shorter wires and fewer repeaters
+//! (Fig 6 + [9]).  Leakage is temperature-dependent (see `leakage.rs`) and
+//! is folded in by the thermal pipeline's fixed-point loop.
+
+use crate::arch::tile::{TileKind, TileSet};
+use crate::config::TechParams;
+use crate::traffic::Window;
+
+/// Peak dynamic + base leakage budgets per tile kind [W] (planar @ nominal
+/// clock).  Calibrated so the 64-tile chip lands at the paper's whole-chip
+/// magnitudes (DESIGN.md §7): hot benchmarks ~95-115 W.
+#[derive(Debug, Clone)]
+pub struct PowerBudget {
+    pub gpu_dyn_peak: f64,
+    pub gpu_leak: f64,
+    pub cpu_dyn_peak: f64,
+    pub cpu_leak: f64,
+    pub llc_dyn_peak: f64,
+    pub llc_leak: f64,
+    /// Router + link power per unit link utilisation [W].
+    pub noc_per_util: f64,
+}
+
+impl Default for PowerBudget {
+    fn default() -> Self {
+        PowerBudget {
+            gpu_dyn_peak: 3.9,
+            gpu_leak: 0.35,
+            cpu_dyn_peak: 5.0,
+            cpu_leak: 0.50,
+            llc_dyn_peak: 1.3,
+            llc_leak: 0.20,
+            noc_per_util: 0.4,
+        }
+    }
+}
+
+/// Power model for one technology.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub budget: PowerBudget,
+    /// Frequency scale vs planar nominal (dynamic power ∝ f).
+    gpu_fscale: f64,
+    cpu_fscale: f64,
+    /// Energy-per-op scale (M3D: fewer repeaters, shorter wires).
+    gpu_escale: f64,
+    cpu_escale: f64,
+    uncore_escale: f64,
+}
+
+impl PowerModel {
+    pub fn new(tech: &TechParams) -> Self {
+        let planar_gpu = 0.70;
+        let planar_cpu = 2.00;
+        let m3d = tech.tech == crate::config::Tech::M3d;
+        PowerModel {
+            budget: PowerBudget::default(),
+            gpu_fscale: tech.gpu_freq_ghz / planar_gpu,
+            cpu_fscale: tech.cpu_freq_ghz / planar_cpu,
+            gpu_escale: tech.gpu_energy_scale,
+            // M3D CPU energy saving from [9] (logic+memory split): ~12%.
+            cpu_escale: if m3d { 0.88 } else { 1.0 },
+            // Uncore (cache + multi-tier routers) saving from [7][10]: ~15%.
+            uncore_escale: if m3d { 0.85 } else { 1.0 },
+        }
+    }
+
+    /// Power of one tile [W] given its activity in a window.
+    pub fn tile_power(&self, kind: TileKind, activity: f64) -> f64 {
+        let b = &self.budget;
+        match kind {
+            TileKind::Gpu => {
+                b.gpu_leak + b.gpu_dyn_peak * activity * self.gpu_fscale * self.gpu_escale
+            }
+            TileKind::Cpu => {
+                b.cpu_leak + b.cpu_dyn_peak * activity * self.cpu_fscale * self.cpu_escale
+            }
+            TileKind::Llc => b.llc_leak + b.llc_dyn_peak * activity * self.uncore_escale,
+        }
+    }
+
+    /// Per-tile power vector for one traffic window (tile-id indexed).
+    pub fn window_power(&self, tiles: &TileSet, w: &Window) -> Vec<f64> {
+        (0..tiles.n_tiles())
+            .map(|i| self.tile_power(tiles.kind(i), w.activity[i]))
+            .collect()
+    }
+
+    /// Whole-chip power for one window [W].
+    pub fn chip_power(&self, tiles: &TileSet, w: &Window) -> f64 {
+        self.window_power(tiles, w).iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TechParams;
+    use crate::traffic::{benchmark, generate};
+
+    fn tiles() -> TileSet {
+        TileSet::new(8, 40, 16)
+    }
+
+    #[test]
+    fn m3d_cores_draw_less_power_at_equal_activity() {
+        let tsv = PowerModel::new(&TechParams::tsv());
+        let m3d = PowerModel::new(&TechParams::m3d());
+        // Energy scale (0.79) outweighs the +10% frequency: net lower power.
+        assert!(m3d.tile_power(TileKind::Gpu, 0.8) < tsv.tile_power(TileKind::Gpu, 0.8));
+        assert!(m3d.tile_power(TileKind::Llc, 0.5) < tsv.tile_power(TileKind::Llc, 0.5));
+    }
+
+    #[test]
+    fn chip_power_lands_in_calibrated_band() {
+        let ts = tiles();
+        let pm = PowerModel::new(&TechParams::tsv());
+        let hot = generate(&benchmark("lv").unwrap(), &ts, 8, 1);
+        let cool = generate(&benchmark("nw").unwrap(), &ts, 8, 1);
+        let p_hot: f64 = hot.windows.iter().map(|w| pm.chip_power(&ts, w)).sum::<f64>() / 8.0;
+        let p_cool: f64 = cool.windows.iter().map(|w| pm.chip_power(&ts, w)).sum::<f64>() / 8.0;
+        assert!(p_hot > 115.0 && p_hot < 200.0, "hot chip power {p_hot}");
+        assert!(p_cool < 0.75 * p_hot, "cool {p_cool} vs hot {p_hot}");
+    }
+
+    #[test]
+    fn activity_zero_leaves_leakage_only() {
+        let pm = PowerModel::new(&TechParams::tsv());
+        assert!((pm.tile_power(TileKind::Gpu, 0.0) - pm.budget.gpu_leak).abs() < 1e-12);
+    }
+}

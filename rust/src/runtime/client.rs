@@ -1,0 +1,78 @@
+//! PJRT client wrapper: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py`): the
+//! text parser inside xla_extension reassigns instruction ids, sidestepping
+//! the 64-bit-id protos emitted by jax >= 0.5 that `HloModuleProto` decoding
+//! rejects.  One [`LoadedComputation`] per artifact, compiled once and reused
+//! for the whole DSE campaign — Python never runs on this path.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus the executables compiled on it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO artifact, ready to execute.
+pub struct LoadedComputation {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path, for error reporting.
+    pub path: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name, e.g. "Host".
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it for this client.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedComputation> {
+        let path_str = path.as_ref().display().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path_str}"))?;
+        Ok(LoadedComputation { exe, path: path_str })
+    }
+}
+
+impl LoadedComputation {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single device
+    /// output is always a tuple — even for one result.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.path))?;
+        literal
+            .to_tuple()
+            .with_context(|| format!("decomposing output tuple of {}", self.path))
+    }
+}
+
+/// Build an f32 literal of the given logical dims from a flat row-major slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expected as usize == data.len(),
+        "literal_f32: {} elements for dims {dims:?}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}

@@ -1,0 +1,158 @@
+//! Typed interface over the two AOT artifacts (`moo_eval`, `thermal_solve`).
+//!
+//! Shapes follow the canonical contract in `python/compile/model.py` /
+//! `artifacts/meta.json` (checked at load).  The evaluator owns flat f32
+//! buffers; callers fill them via the encoders in `arch::encode` and the
+//! traffic/power models.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use super::client::{literal_f32, LoadedComputation, Runtime};
+
+/// Canonical artifact dimensions (paper §5.1) — must match model.py.
+pub mod dims {
+    /// Tiles: 8 CPU + 40 GPU + 16 LLC.
+    pub const N_TILES: usize = 64;
+    /// SWNoC links (mesh-equivalent count on the 4x4x4 grid).
+    pub const N_LINKS: usize = 144;
+    /// Ordered tile pairs.
+    pub const N_PAIRS: usize = N_TILES * N_TILES;
+    /// Traffic windows per application (f_ij(t) samples).
+    pub const N_WINDOWS: usize = 8;
+    /// Vertical stacks (4x4 tile columns).
+    pub const N_STACKS: usize = 16;
+    /// Designs scored per PJRT dispatch.
+    pub const MOO_BATCH: usize = 16;
+    /// Thermal grid cells.
+    pub const TH_Z: usize = 10;
+    pub const TH_Y: usize = 8;
+    pub const TH_X: usize = 8;
+    /// Thermal designs solved per dispatch.
+    pub const TH_BATCH: usize = 8;
+}
+
+/// Input batch for the `moo_eval` artifact (flat row-major f32).
+pub struct MooBatch {
+    /// (B, L, P) routing incidence q_ijk.
+    pub q: Vec<f32>,
+    /// (W, P) windowed traffic frequencies (shared across the batch).
+    pub f: Vec<f32>,
+    /// (B, P) latency weights (r*h+d)*mask/(C*M).
+    pub latw: Vec<f32>,
+    /// (B, W, N) per-position power per window.
+    pub pact: Vec<f32>,
+    /// (N,) Eq.(7) cumulative stack-resistance coefficient (incl. T_H).
+    pub cth: Vec<f32>,
+    /// (N, S) position -> stack one-hot.
+    pub ssel: Vec<f32>,
+}
+
+impl MooBatch {
+    /// Zero-filled batch with the canonical shapes.
+    pub fn zeroed() -> Self {
+        use dims::*;
+        MooBatch {
+            q: vec![0.0; MOO_BATCH * N_LINKS * N_PAIRS],
+            f: vec![0.0; N_WINDOWS * N_PAIRS],
+            latw: vec![0.0; MOO_BATCH * N_PAIRS],
+            pact: vec![0.0; MOO_BATCH * N_WINDOWS * N_TILES],
+            cth: vec![0.0; N_TILES],
+            ssel: vec![0.0; N_TILES * N_STACKS],
+        }
+    }
+}
+
+/// Objective scores for one design (paper Eqs. (1)-(8); tmax excludes T_amb).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MooScores {
+    pub lat: f32,
+    pub umean: f32,
+    pub usigma: f32,
+    pub tmax: f32,
+}
+
+/// The DSE-time evaluator: both compiled artifacts on one PJRT CPU client.
+pub struct Evaluator {
+    moo: LoadedComputation,
+    thermal: LoadedComputation,
+    pub platform: String,
+}
+
+impl Evaluator {
+    /// Load and compile both artifacts from an `artifacts/` directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref();
+        let rt = Runtime::cpu()?;
+        let platform = rt.platform();
+        let moo = rt
+            .load_hlo_text(dir.join("moo_eval.hlo.txt"))
+            .context("loading moo_eval artifact")?;
+        let thermal = rt
+            .load_hlo_text(dir.join("thermal_solve.hlo.txt"))
+            .context("loading thermal_solve artifact")?;
+        Ok(Self { moo, thermal, platform })
+    }
+
+    /// Score a batch of MOO_BATCH designs; returns per-design objectives.
+    pub fn moo_eval(&self, batch: &MooBatch) -> Result<Vec<MooScores>> {
+        use dims::*;
+        let (b, l, p, w, n, s) = (
+            MOO_BATCH as i64,
+            N_LINKS as i64,
+            N_PAIRS as i64,
+            N_WINDOWS as i64,
+            N_TILES as i64,
+            N_STACKS as i64,
+        );
+        let inputs = [
+            literal_f32(&batch.q, &[b, l, p])?,
+            literal_f32(&batch.f, &[w, p])?,
+            literal_f32(&batch.latw, &[b, p])?,
+            literal_f32(&batch.pact, &[b, w, n])?,
+            literal_f32(&batch.cth, &[n])?,
+            literal_f32(&batch.ssel, &[n, s])?,
+        ];
+        let outs = self.moo.execute(&inputs)?;
+        anyhow::ensure!(outs.len() == 4, "moo_eval returned {} outputs", outs.len());
+        let lat = outs[0].to_vec::<f32>()?;
+        let umean = outs[1].to_vec::<f32>()?;
+        let usigma = outs[2].to_vec::<f32>()?;
+        let tmax = outs[3].to_vec::<f32>()?;
+        Ok((0..MOO_BATCH)
+            .map(|i| MooScores {
+                lat: lat[i],
+                umean: umean[i],
+                usigma: usigma[i],
+                tmax: tmax[i],
+            })
+            .collect())
+    }
+
+    /// Detailed thermal solve for TH_BATCH power grids.
+    ///
+    /// `pow_` is (B, Z, Y, X) heat per cell [W]; `gdn`/`gup`/`glat` are the
+    /// (Z,) layer conductances.  Returns the full temperature-rise field and
+    /// per-design peak rise (add T_amb for absolute temperature).
+    pub fn thermal_solve(
+        &self,
+        pow_: &[f32],
+        gdn: &[f32],
+        gup: &[f32],
+        glat: &[f32],
+        gamb: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        use dims::*;
+        let (b, z, y, x) = (TH_BATCH as i64, TH_Z as i64, TH_Y as i64, TH_X as i64);
+        let inputs = [
+            literal_f32(pow_, &[b, z, y, x])?,
+            literal_f32(gdn, &[z])?,
+            literal_f32(gup, &[z])?,
+            literal_f32(glat, &[z])?,
+            literal_f32(gamb, &[z])?,
+        ];
+        let outs = self.thermal.execute(&inputs)?;
+        anyhow::ensure!(outs.len() == 2, "thermal_solve returned {} outputs", outs.len());
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 runtime: PJRT client + typed evaluators over the AOT artifacts.
+//!
+//! `client` wraps the `xla` crate (PjRtClient::cpu -> HloModuleProto ->
+//! compile -> execute); `evaluator` exposes the two HeM3D artifacts with
+//! the canonical tensor contract from `python/compile/model.py`.
+
+pub mod client;
+pub mod evaluator;
+
+pub use client::{literal_f32, LoadedComputation, Runtime};
+pub use evaluator::{dims, Evaluator, MooBatch, MooScores};

@@ -1,0 +1,202 @@
+//! Physical layer stacks for TSV- and M3D-based 4-tier chips (paper Table 1,
+//! magnitudes from Samal et al. [5]) and their reduction to the thermal-grid
+//! conductance vectors used by both the L1 kernel and the native solver.
+//!
+//! Layer order is z = 0 nearest the heat sink (the paper places the sink
+//! below the base layer; "tiles near the sink" = low tier index).
+
+/// One material layer of the vertical stack.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: &'static str,
+    /// Thickness [m].
+    pub thickness: f64,
+    /// Thermal conductivity [W/(m K)].
+    pub k: f64,
+    /// If this is an active silicon layer: which logic tier (0..4) it hosts.
+    pub tier: Option<usize>,
+}
+
+/// A full vertical stack plus lateral cell geometry.
+#[derive(Debug, Clone)]
+pub struct LayerStack {
+    pub layers: Vec<Layer>,
+    /// Lateral cell pitch [m] (square cells).
+    pub cell_pitch: f64,
+    /// Heat-sink thermal resistance seen by ONE grid cell [K/W].
+    pub r_sink_cell: f64,
+    /// Convective shunt to ambient per inter-tier layer cell [W/K]
+    /// (microfluidic cooling [20]); 0.0 for a dry stack.
+    pub g_cool_cell: f64,
+}
+
+fn si(name: &'static str, thickness: f64, tier: usize) -> Layer {
+    // Bulk silicon conductivity; thinned dies keep ~130 W/mK at die scale.
+    Layer { name, thickness, k: 130.0, tier: Some(tier) }
+}
+
+impl LayerStack {
+    /// TSV stack: 4 thinned planar dies (~100 um Si) glued with a
+    /// low-conductivity bonding polymer (BCB-like, k ~ 0.3 W/mK) [5].
+    /// `cooled` enables the microfluidic inter-tier channels the paper uses
+    /// for both TSV-PO and TSV-PT.
+    pub fn tsv(cooled: bool) -> Self {
+        let bond = |name| Layer { name, thickness: 12e-6, k: 0.42, tier: None };
+        LayerStack {
+            layers: vec![
+                Layer { name: "base", thickness: 200e-6, k: 130.0, tier: None },
+                si("si_t0", 100e-6, 0),
+                bond("bond_01"),
+                si("si_t1", 100e-6, 1),
+                bond("bond_12"),
+                si("si_t2", 100e-6, 2),
+                bond("bond_23"),
+                si("si_t3", 100e-6, 3),
+                Layer { name: "beol", thickness: 12e-6, k: 2.25, tier: None },
+                Layer { name: "passiv", thickness: 20e-6, k: 1.4, tier: None },
+            ],
+            cell_pitch: 1.0e-3,
+            r_sink_cell: 16.0, // TSV: thick die stack + TIM to the sink
+            g_cool_cell: if cooled { 0.027 } else { 0.0 },
+        }
+    }
+
+    /// M3D stack: sequentially fabricated thin tiers (~ 1 um of device
+    /// silicon) separated by a sub-micron ILD with good thermal contact [5].
+    /// No bonding adhesive anywhere; no liquid cooling needed.
+    pub fn m3d() -> Self {
+        let ild = |name| Layer { name, thickness: 0.30e-6, k: 1.4, tier: None };
+        LayerStack {
+            layers: vec![
+                Layer { name: "base", thickness: 200e-6, k: 130.0, tier: None },
+                si("si_t0", 3e-6, 0),
+                ild("ild_01"),
+                si("si_t1", 3e-6, 1),
+                ild("ild_12"),
+                si("si_t2", 3e-6, 2),
+                ild("ild_23"),
+                si("si_t3", 3e-6, 3),
+                Layer { name: "beol", thickness: 6e-6, k: 2.25, tier: None },
+                Layer { name: "passiv", thickness: 20e-6, k: 1.4, tier: None },
+            ],
+            cell_pitch: 1.0e-3,
+            r_sink_cell: 5.0, // M3D: thin stack, low-resistance sink path
+            g_cool_cell: 0.0,
+        }
+    }
+
+    /// Number of layers (the grid Z dimension).
+    pub fn z(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Grid-cell z index hosting logic tier `t`.
+    pub fn tier_layer(&self, t: usize) -> usize {
+        self.layers
+            .iter()
+            .position(|l| l.tier == Some(t))
+            .expect("tier not in stack")
+    }
+
+    /// Vertical conductance between layer z and z-1 per cell [W/K]
+    /// (series half-thickness model); z = 0 couples to the heat sink.
+    pub fn gdn(&self) -> Vec<f64> {
+        let a = self.cell_pitch * self.cell_pitch;
+        (0..self.z())
+            .map(|z| {
+                let half = |l: &Layer| l.thickness / (2.0 * l.k * a);
+                if z == 0 {
+                    1.0 / (half(&self.layers[0]) + self.r_sink_cell)
+                } else {
+                    1.0 / (half(&self.layers[z]) + half(&self.layers[z - 1]))
+                }
+            })
+            .collect()
+    }
+
+    /// Vertical conductance between layer z and z+1 (symmetric with gdn).
+    pub fn gup(&self) -> Vec<f64> {
+        let gdn = self.gdn();
+        (0..self.z())
+            .map(|z| if z + 1 < self.z() { gdn[z + 1] } else { 0.0 })
+            .collect()
+    }
+
+    /// Lateral conductance between adjacent cells of each layer [W/K]:
+    /// k * t * w / w = k * t for square cells.
+    pub fn glat(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.k * l.thickness).collect()
+    }
+
+    /// Convective ambient shunt per layer [W/K]: non-zero only at the
+    /// inter-tier layers when liquid cooling is active.
+    pub fn gamb(&self) -> Vec<f64> {
+        self.layers
+            .iter()
+            .map(|l| {
+                if l.tier.is_none() && l.name.starts_with("bond") {
+                    self.g_cool_cell
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_stacks_have_ten_layers_and_four_tiers() {
+        for s in [LayerStack::tsv(true), LayerStack::m3d()] {
+            assert_eq!(s.z(), 10);
+            for t in 0..4 {
+                let z = s.tier_layer(t);
+                assert_eq!(s.layers[z].tier, Some(t));
+            }
+        }
+    }
+
+    #[test]
+    fn m3d_intertier_conductance_dominates_tsv() {
+        // The bonding layer is the TSV bottleneck (paper Fig 4): the
+        // conductance between tier silicon layers must be orders of
+        // magnitude higher in M3D.
+        let tsv = LayerStack::tsv(true);
+        let m3d = LayerStack::m3d();
+        let g_tsv = tsv.gdn()[tsv.tier_layer(1)]; // si_t1 -> bond_01 side
+        let g_m3d = m3d.gdn()[m3d.tier_layer(1)];
+        assert!(
+            g_m3d > 20.0 * g_tsv,
+            "expected M3D >> TSV inter-tier conductance: {g_m3d} vs {g_tsv}"
+        );
+    }
+
+    #[test]
+    fn cooling_only_touches_bond_layers() {
+        let tsv = LayerStack::tsv(true);
+        let gamb = tsv.gamb();
+        for (z, l) in tsv.layers.iter().enumerate() {
+            if l.name.starts_with("bond") {
+                assert!(gamb[z] > 0.0);
+            } else {
+                assert_eq!(gamb[z], 0.0);
+            }
+        }
+        assert!(LayerStack::tsv(false).gamb().iter().all(|&g| g == 0.0));
+        assert!(LayerStack::m3d().gamb().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn gup_is_shifted_gdn() {
+        let s = LayerStack::m3d();
+        let gdn = s.gdn();
+        let gup = s.gup();
+        for z in 0..s.z() - 1 {
+            assert_eq!(gup[z], gdn[z + 1]);
+        }
+        assert_eq!(gup[s.z() - 1], 0.0);
+    }
+}

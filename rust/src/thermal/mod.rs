@@ -1,0 +1,14 @@
+//! Thermal modeling: physical layer stacks (Table 1), the Eq.(7) fast stack
+//! model used as the MOO objective, and the finite-volume grid solver that
+//! substitutes for 3D-ICE when validating Pareto winners.
+
+pub mod grid;
+pub mod materials;
+pub mod stack;
+
+pub use grid::{GridParams, ThermalGrid};
+pub use materials::LayerStack;
+pub use stack::StackModel;
+
+/// Ambient temperature assumed by all absolute-temperature reports [°C].
+pub const T_AMBIENT_C: f64 = 40.0;

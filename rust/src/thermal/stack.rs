@@ -1,0 +1,220 @@
+//! Eq. (7)/(8) fast thermal model: per-vertical-stack cumulative resistive
+//! heating, used as the MOO temperature objective (the detailed grid solver
+//! validates Pareto winners per Eq. (10)).
+//!
+//! For a tile at tier k of stack n:
+//!     T(d,t) = max_{n,k} { sum_{i<=k} P_{n,i}(t) * sum_{j<=i} R_j
+//!                          + R_b * sum_{i<=k} P_{n,i}(t) } * T_H
+//! Because every term is non-negative, the max over k is attained at the top
+//! tier, so the per-stack score reduces to
+//!     T_n = sum_i P_{n,i} * (Rcum(i) + R_b),
+//! which is what the `cth` coefficient vector encodes per tile position:
+//! cth[pos] = (Rcum(tier(pos)) + R_b) * T_H.  The kernel (and the native
+//! mirror) then compute max_n sum over the stack.
+
+use super::materials::LayerStack;
+
+/// Eq.(7) coefficients for one technology.
+#[derive(Debug, Clone)]
+pub struct StackModel {
+    /// Per-tier cumulative vertical resistance Rcum(tier) + R_b [K/W],
+    /// already scaled by the lateral-heat-flow factor T_H.
+    pub coeff_per_tier: Vec<f64>,
+    /// Lateral heat-flow factor (dimensionless, calibrated vs grid solver).
+    pub t_h: f64,
+}
+
+impl StackModel {
+    /// Derive per-tier coefficients from the physical stack by solving the
+    /// 1D ladder network of one stack column exactly (a 2x2-cell footprint
+    /// at the thermal-grid resolution): vertical conductances between
+    /// layers, the sink at the bottom, and — crucially for cooled TSV —
+    /// the microfluidic ambient shunts at the bonding layers.
+    ///
+    /// `coeff_per_tier[i]` is the temperature rise of the TOP tier per watt
+    /// injected at tier `i` (the Eq. (7) "max over k" is attained at the
+    /// top for a dry stack; with shunts the top-row transfer coefficients
+    /// remain the consistent additive surrogate).  `t_h` folds the lateral
+    /// spreading that only the grid solver resolves (calibrated in
+    /// `tests/thermal_xval.rs`).
+    pub fn from_stack(stack: &LayerStack, t_h: f64) -> Self {
+        let cells_per_tile_col = 4.0;
+        let z = stack.z();
+        let gdn: Vec<f64> = stack.gdn().iter().map(|g| g * cells_per_tile_col).collect();
+        let gup: Vec<f64> = stack.gup().iter().map(|g| g * cells_per_tile_col).collect();
+        let gamb: Vec<f64> = stack.gamb().iter().map(|g| g * cells_per_tile_col).collect();
+
+        // Conductance matrix of the ladder: G[i][i] = sum of couplings,
+        // G[i][j] = -g between neighbours; ambient is ground.
+        let mut g = vec![vec![0.0f64; z]; z];
+        for i in 0..z {
+            let up = if i + 1 < z { gup[i] } else { 0.0 };
+            g[i][i] = gdn[i] + up + gamb[i];
+            if i + 1 < z {
+                g[i][i + 1] = -gup[i];
+                g[i + 1][i] = -gup[i];
+            }
+        }
+
+        // Solve G * t = e_src for each tier source; read the top tier row.
+        let top = stack.tier_layer(3.min(3));
+        let mut coeff = Vec::with_capacity(4);
+        for tier in 0..4 {
+            let src = stack.tier_layer(tier);
+            let mut rhs = vec![0.0f64; z];
+            rhs[src] = 1.0;
+            let t = solve_dense(&g, &rhs);
+            coeff.push(t[top] * t_h);
+        }
+        StackModel { coeff_per_tier: coeff, t_h }
+    }
+
+    /// The `cth` artifact input: coefficient per tile *position*.
+    ///
+    /// `tier_of_pos[p]` maps each of the N positions to its logic tier.
+    pub fn cth(&self, tier_of_pos: &[usize]) -> Vec<f32> {
+        tier_of_pos
+            .iter()
+            .map(|&t| self.coeff_per_tier[t] as f32)
+            .collect()
+    }
+
+    /// Fast Eq.(7)+(8) evaluation in pure Rust: peak rise over ambient.
+    ///
+    /// `power[w][pos]` per window; `stack_of_pos` / `tier_of_pos` give the
+    /// static geometry.
+    pub fn peak_rise(
+        &self,
+        power: &[Vec<f64>],
+        stack_of_pos: &[usize],
+        tier_of_pos: &[usize],
+        n_stacks: usize,
+    ) -> f64 {
+        let mut tmax = 0.0f64;
+        for pw in power {
+            let mut per_stack = vec![0.0f64; n_stacks];
+            for (pos, &p) in pw.iter().enumerate() {
+                per_stack[stack_of_pos[pos]] += p * self.coeff_per_tier[tier_of_pos[pos]];
+            }
+            for &t in &per_stack {
+                tmax = tmax.max(t);
+            }
+        }
+        tmax
+    }
+}
+
+/// Gaussian elimination with partial pivoting (small dense systems; the
+/// ladder is Z=10).
+fn solve_dense(a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let mut m: Vec<Vec<f64>> = a.iter().cloned().collect();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // Pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
+            .unwrap();
+        m.swap(col, piv);
+        x.swap(col, piv);
+        let d = m[col][col];
+        debug_assert!(d.abs() > 1e-15, "singular ladder matrix");
+        for row in (col + 1)..n {
+            let f = m[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row][k] -= f * m[col][k];
+            }
+            x[row] -= f * x[col];
+        }
+    }
+    for col in (0..n).rev() {
+        x[col] /= m[col][col];
+        for row in 0..col {
+            x[row] -= m[row][col] * x[col];
+            m[row][col] = 0.0;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::materials::LayerStack;
+
+    fn geo() -> (Vec<usize>, Vec<usize>) {
+        // 16 positions: 4 stacks x 4 tiers (toy version of the 64-tile chip).
+        let mut stack_of = Vec::new();
+        let mut tier_of = Vec::new();
+        for tier in 0..4 {
+            for s in 0..4 {
+                stack_of.push(s);
+                tier_of.push(tier);
+            }
+        }
+        (stack_of, tier_of)
+    }
+
+    #[test]
+    fn coefficients_increase_with_tier() {
+        for s in [LayerStack::tsv(false), LayerStack::m3d()] {
+            let m = StackModel::from_stack(&s, 1.0);
+            for t in 1..4 {
+                assert!(m.coeff_per_tier[t] > m.coeff_per_tier[t - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn tsv_coefficients_dominate_m3d() {
+        let tsv = StackModel::from_stack(&LayerStack::tsv(false), 1.0);
+        let m3d = StackModel::from_stack(&LayerStack::m3d(), 1.0);
+        // Above the base, the TSV bonding resistance accumulates; tier 3 of
+        // TSV must be far worse than tier 3 of M3D relative to tier 0.
+        let tsv_span = tsv.coeff_per_tier[3] - tsv.coeff_per_tier[0];
+        let m3d_span = m3d.coeff_per_tier[3] - m3d.coeff_per_tier[0];
+        assert!(
+            tsv_span > 20.0 * m3d_span,
+            "tsv span {tsv_span} vs m3d span {m3d_span}"
+        );
+    }
+
+    #[test]
+    fn hot_tile_on_top_tier_is_worse() {
+        let m = StackModel::from_stack(&LayerStack::tsv(false), 1.0);
+        let (stack_of, tier_of) = geo();
+        // 1 W on a tier-0 position vs the same watt on tier 3.
+        let mut p_low = vec![vec![0.0; 16]];
+        p_low[0][0] = 1.0; // tier 0, stack 0
+        let mut p_high = vec![vec![0.0; 16]];
+        p_high[0][12] = 1.0; // tier 3, stack 0
+        let low = m.peak_rise(&p_low, &stack_of, &tier_of, 4);
+        let high = m.peak_rise(&p_high, &stack_of, &tier_of, 4);
+        assert!(high > low);
+    }
+
+    #[test]
+    fn peak_takes_worst_window_and_stack() {
+        let m = StackModel::from_stack(&LayerStack::m3d(), 1.0);
+        let (stack_of, tier_of) = geo();
+        let mut w0 = vec![0.0; 16];
+        w0[1] = 1.0; // mild
+        let mut w1 = vec![0.0; 16];
+        w1[13] = 5.0; // hot window, top tier
+        let peak = m.peak_rise(&[w0.clone(), w1.clone()], &stack_of, &tier_of, 4);
+        let only_mild = m.peak_rise(&[w0], &stack_of, &tier_of, 4);
+        assert!(peak > only_mild);
+    }
+
+    #[test]
+    fn cth_maps_positions_through_tiers() {
+        let m = StackModel::from_stack(&LayerStack::m3d(), 2.0);
+        let cth = m.cth(&[0, 3, 1]);
+        assert_eq!(cth.len(), 3);
+        assert!((cth[0] - m.coeff_per_tier[0] as f32).abs() < 1e-9);
+        assert!((cth[1] - m.coeff_per_tier[3] as f32).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,216 @@
+//! The M3D performance-prediction model of Hong & Kim [14], plus the
+//! paper's two netlist modifications (§3.1.2).
+//!
+//! Given a planar layout's timing paths, the model:
+//!  1. uniformly scales every net length by 1/sqrt(N_T) (ideal gate-level
+//!     folding into N_T tiers);
+//!  2. re-solves the ideal repeater insertion per net (shorter nets need
+//!     fewer or no repeaters), so the path delay drops from
+//!     d_g + d_r + d_w to d_g + d_r' + d_w' with d_g unchanged;
+//!  3. modification (a): back-to-back inverter pairs left by the planar
+//!     flow are removed where that improves timing;
+//!  4. modification (b): a non-timing-critical branch with large load can
+//!     be off-loaded from a critical path by inserting a small shielding
+//!     buffer, trading one buffer input cap for the branch cap.
+
+use super::netlist::{Net, Netlist, Process, TimingPath};
+use super::sta::{wire_delay_opt, BlockTiming, PathTiming};
+
+/// Projection configuration.
+#[derive(Debug, Clone)]
+pub struct M3dConfig {
+    /// Number of tiers the block folds into (the paper uses 2).
+    pub n_tiers: usize,
+    /// Apply modification (a): redundant inverter-pair collapse.
+    pub collapse_pairs: bool,
+    /// Apply modification (b): branch off-loading via shield buffers.
+    pub offload_branches: bool,
+}
+
+impl Default for M3dConfig {
+    fn default() -> Self {
+        M3dConfig { n_tiers: 2, collapse_pairs: true, offload_branches: true }
+    }
+}
+
+/// Time one net in the M3D design under the projection rules.
+/// Returns (delay_ps, repeaters_used).
+fn net_delay_m3d(proc_: &Process, net: &Net, cfg: &M3dConfig) -> (f64, usize) {
+    let len = net.length_um / (cfg.n_tiers as f64).sqrt();
+
+    // Branch handling: either the branch keeps loading the net, or a small
+    // shield buffer isolates it (costing the buffer's input cap instead).
+    let loaded = net.c_load + net.c_branch;
+    let (d_loaded, k_loaded) = wire_delay_opt(proc_, proc_.r_gate, len, loaded);
+    let (mut d, mut k) = (d_loaded, k_loaded);
+    if cfg.offload_branches && net.c_branch > 0.0 {
+        let shielded = net.c_load + proc_.c_buf;
+        let (d_sh, k_sh) = wire_delay_opt(proc_, proc_.r_gate, len, shielded);
+        // The shield buffer itself sits on the branch, off the critical
+        // path, so it costs no critical-path delay — keep if better.
+        if d_sh < d {
+            d = d_sh;
+            k = k_sh + 1; // the shield buffer still burns area/energy
+        }
+    }
+
+    // Redundant pair handling: after 3D shrink the pair is usually
+    // unnecessary — remove when that is no slower.
+    if net.has_redundant_pair && !cfg.collapse_pairs {
+        d += 2.0 * proc_.d_buf;
+        k += 2;
+    }
+    (d, k)
+}
+
+/// Time one path in the M3D design.
+pub fn time_path_m3d(proc_: &Process, path: &TimingPath, cfg: &M3dConfig) -> PathTiming {
+    let gate_ps: f64 = path.gate_delays.iter().sum(); // unchanged by M3D
+    let mut wire_ps = 0.0;
+    let mut repeaters = 0;
+    for net in &path.nets {
+        let (d, k) = net_delay_m3d(proc_, net, cfg);
+        wire_ps += d;
+        repeaters += k;
+    }
+    PathTiming { delay_ps: gate_ps + wire_ps, gate_ps, wire_ps, repeaters }
+}
+
+/// Block-level M3D timing.
+pub fn time_block_m3d(proc_: &Process, nl: &Netlist, cfg: &M3dConfig) -> BlockTiming {
+    let mut crit = PathTiming { delay_ps: 0.0, gate_ps: 0.0, wire_ps: 0.0, repeaters: 0 };
+    let mut total_rep = 0;
+    for p in &nl.paths {
+        let t = time_path_m3d(proc_, p, cfg);
+        total_rep += t.repeaters;
+        if t.delay_ps > crit.delay_ps {
+            crit = t;
+        }
+    }
+    BlockTiming {
+        critical_ps: crit.delay_ps,
+        total_repeaters: total_rep,
+        wire_frac: crit.wire_ps / crit.delay_ps.max(1e-9),
+    }
+}
+
+/// Switched-capacitance energy comparison planar vs M3D for a block:
+/// wires shrink by 1/sqrt(N_T); the block's repeater population shrinks by
+/// the ratio measured on the sampled paths (the re-solved insertion uses
+/// fewer, often zero, repeaters on the shortened nets).
+/// Returns (planar_cap_fF, m3d_cap_fF).
+pub fn block_energy_caps(proc_: &Process, nl: &Netlist, cfg: &M3dConfig) -> (f64, f64) {
+    let planar = super::sta::time_block_planar(proc_, nl);
+    let m3d = time_block_m3d(proc_, nl, cfg);
+    let rep_ratio = if planar.total_repeaters > 0 {
+        m3d.total_repeaters as f64 / planar.total_repeaters as f64
+    } else {
+        1.0
+    };
+    let planar_cap = nl.gate_cap_total + nl.wire_cap_total + nl.rep_cap_total;
+    let m3d_cap = nl.gate_cap_total
+        + nl.wire_cap_total / (cfg.n_tiers as f64).sqrt()
+        + nl.rep_cap_total * rep_ratio.min(1.0);
+    (planar_cap, m3d_cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::netlist::gpu_stage_specs;
+    use crate::timing::sta::{time_block_planar, time_path_planar};
+
+    fn proc_() -> Process {
+        Process::default()
+    }
+
+    #[test]
+    fn m3d_never_slower_than_planar() {
+        let p = proc_();
+        let cfg = M3dConfig::default();
+        for spec in gpu_stage_specs() {
+            let nl = spec.generate(3);
+            let planar = time_block_planar(&p, &nl);
+            let m3d = time_block_m3d(&p, &nl, &cfg);
+            assert!(
+                m3d.critical_ps <= planar.critical_ps,
+                "{}: m3d {} > planar {}",
+                spec.name,
+                m3d.critical_ps,
+                planar.critical_ps
+            );
+        }
+    }
+
+    #[test]
+    fn gate_delay_component_is_preserved() {
+        // Gate-level partitioning leaves individual gate delays untouched.
+        let p = proc_();
+        let spec = &gpu_stage_specs()[0];
+        let nl = spec.generate(5);
+        let cfg = M3dConfig::default();
+        for path in &nl.paths {
+            let a = time_path_planar(&p, path);
+            let b = time_path_m3d(&p, path, &cfg);
+            assert!((a.gate_ps - b.gate_ps).abs() < 1e-9);
+            assert!(b.wire_ps <= a.wire_ps);
+        }
+    }
+
+    #[test]
+    fn m3d_uses_fewer_repeaters_on_repeated_wires() {
+        // On a wire-heavy block the shrunk nets need strictly fewer
+        // repeaters (disable branch shielding, which *adds* buffers).
+        use crate::timing::netlist::StageSpec;
+        let p = proc_();
+        let cfg =
+            M3dConfig { offload_branches: false, ..Default::default() };
+        let spec = StageSpec {
+            name: "busnet",
+            depth: 12,
+            mean_net_um: 900.0,
+            n_paths: 20,
+            branch_frac: 0.0,
+            redundant_frac: 0.0,
+            block_cap_pf: 10.0,
+        };
+        let nl = spec.generate(9);
+        let planar = time_block_planar(&p, &nl);
+        let m3d = time_block_m3d(&p, &nl, &cfg);
+        assert!(planar.total_repeaters > 0);
+        assert!(m3d.total_repeaters < planar.total_repeaters);
+    }
+
+    #[test]
+    fn modifications_improve_or_match_plain_scaling() {
+        let p = proc_();
+        let spec = gpu_stage_specs().into_iter().find(|s| s.name == "simd").unwrap();
+        let nl = spec.generate(13);
+        let plain = M3dConfig { collapse_pairs: false, offload_branches: false, ..Default::default() };
+        let full = M3dConfig::default();
+        let d_plain = time_block_m3d(&p, &nl, &plain).critical_ps;
+        let d_full = time_block_m3d(&p, &nl, &full).critical_ps;
+        assert!(d_full <= d_plain, "modifications regressed: {d_full} > {d_plain}");
+    }
+
+    #[test]
+    fn m3d_saves_energy() {
+        let p = proc_();
+        let cfg = M3dConfig::default();
+        for spec in gpu_stage_specs() {
+            let nl = spec.generate(17);
+            let (planar, m3d) = block_energy_caps(&p, &nl, &cfg);
+            assert!(m3d < planar, "{}: {m3d} !< {planar}", spec.name);
+        }
+    }
+
+    #[test]
+    fn more_tiers_shrink_wires_further() {
+        let p = proc_();
+        let spec = gpu_stage_specs().into_iter().find(|s| s.name == "lsu").unwrap();
+        let nl = spec.generate(21);
+        let two = time_block_m3d(&p, &nl, &M3dConfig { n_tiers: 2, ..Default::default() });
+        let four = time_block_m3d(&p, &nl, &M3dConfig { n_tiers: 4, ..Default::default() });
+        assert!(four.critical_ps < two.critical_ps);
+    }
+}

@@ -1,0 +1,14 @@
+//! Timing stack: synthetic netlists (MIAOW/Cadence substitute), static
+//! timing analysis with repeater insertion, the Hong-Kim M3D projection
+//! model with the paper's two modifications, and the GPU pipeline assembly
+//! that produces Fig 6.
+
+pub mod m3d;
+pub mod netlist;
+pub mod pipeline;
+pub mod sta;
+
+pub use m3d::{time_block_m3d, M3dConfig};
+pub use netlist::{gpu_stage_specs, Netlist, Process, StageSpec};
+pub use pipeline::{analyze_gpu_pipeline, PipelineResult, StageTiming};
+pub use sta::{time_block_planar, BlockTiming};

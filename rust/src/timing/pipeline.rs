@@ -1,0 +1,166 @@
+//! GPU pipeline assembly: Fig 6 (per-stage planar vs M3D timing), the
+//! resulting clock frequencies, and the M3D energy saving.
+
+use super::m3d::{block_energy_caps, time_block_m3d, M3dConfig};
+use super::netlist::{gpu_stage_specs, Process};
+use super::sta::time_block_planar;
+
+/// Per-stage timing result.
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    pub name: &'static str,
+    pub planar_ps: f64,
+    pub m3d_ps: f64,
+    /// M3D improvement (0.10 = 10% lower delay).
+    pub improvement: f64,
+}
+
+/// The Fig 6 dataset plus derived frequencies/energy.
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    pub stages: Vec<StageTiming>,
+    /// Slowest-stage delays (the clock period bound) [ps].
+    pub planar_crit_ps: f64,
+    pub m3d_crit_ps: f64,
+    /// Clock frequencies assuming the planar design is signed off at
+    /// 0.70 GHz (the paper's baseline) and M3D scales with the critical
+    /// stage improvement.
+    pub planar_freq_ghz: f64,
+    pub m3d_freq_ghz: f64,
+    /// Switched-capacitance-based energy ratio m3d/planar (< 1).
+    pub energy_ratio: f64,
+    /// Name of the slowest M3D stage (paper: SIMD).
+    pub m3d_critical_stage: &'static str,
+}
+
+/// Run the full planar-synthesis + M3D-projection flow (Fig 6).
+pub fn analyze_gpu_pipeline(seed: u64) -> PipelineResult {
+    let proc_ = Process::default();
+    let cfg = M3dConfig::default();
+
+    let mut stages = Vec::new();
+    let mut planar_caps = 0.0;
+    let mut m3d_caps = 0.0;
+    for spec in gpu_stage_specs() {
+        let nl = spec.generate(seed);
+        let planar = time_block_planar(&proc_, &nl);
+        let m3d = time_block_m3d(&proc_, &nl, &cfg);
+        let (pc, mc) = block_energy_caps(&proc_, &nl, &cfg);
+        planar_caps += pc;
+        m3d_caps += mc;
+        stages.push(StageTiming {
+            name: spec.name,
+            planar_ps: planar.critical_ps,
+            m3d_ps: m3d.critical_ps,
+            improvement: 1.0 - m3d.critical_ps / planar.critical_ps,
+        });
+    }
+
+    let planar_crit = stages.iter().map(|s| s.planar_ps).fold(0.0, f64::max);
+    let (m3d_crit, m3d_stage) = stages
+        .iter()
+        .map(|s| (s.m3d_ps, s.name))
+        .fold((0.0, ""), |acc, x| if x.0 > acc.0 { x } else { acc });
+
+    // Calibration anchor: planar GPU signs off at 0.70 GHz (§5.1); the M3D
+    // frequency follows the projected critical-stage speedup.
+    let planar_freq = 0.70;
+    let m3d_freq = planar_freq * planar_crit / m3d_crit;
+
+    PipelineResult {
+        stages,
+        planar_crit_ps: planar_crit,
+        m3d_crit_ps: m3d_crit,
+        planar_freq_ghz: planar_freq,
+        m3d_freq_ghz: m3d_freq,
+        energy_ratio: m3d_caps / planar_caps,
+        m3d_critical_stage: match m3d_stage {
+            "" => "none",
+            s => {
+                // Map back to a 'static str from the spec list.
+                gpu_stage_specs()
+                    .iter()
+                    .map(|x| x.name)
+                    .find(|&n| n == s)
+                    .unwrap_or("none")
+            }
+        },
+    }
+}
+
+impl PipelineResult {
+    /// Fig 6 rows: (stage, planar delay normalised to the planar clock,
+    /// M3D delay normalised likewise).
+    pub fn fig6_rows(&self) -> Vec<(&'static str, f64, f64)> {
+        self.stages
+            .iter()
+            .map(|s| (s.name, s.planar_ps / self.planar_crit_ps, s.m3d_ps / self.planar_crit_ps))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd_and_lsu_bound_the_planar_clock() {
+        let r = analyze_gpu_pipeline(42);
+        let by_name = |n: &str| r.stages.iter().find(|s| s.name == n).unwrap();
+        let simd = by_name("simd");
+        let lsu = by_name("lsu");
+        // The two slowest planar stages are SIMD and LSU (Fig 6).
+        let mut sorted: Vec<&StageTiming> = r.stages.iter().collect();
+        sorted.sort_by(|a, b| b.planar_ps.partial_cmp(&a.planar_ps).unwrap());
+        let top2: Vec<&str> = sorted[..2].iter().map(|s| s.name).collect();
+        assert!(top2.contains(&"simd") && top2.contains(&"lsu"), "top2 = {top2:?}");
+        assert!(simd.planar_ps > 0.0 && lsu.planar_ps > 0.0);
+    }
+
+    #[test]
+    fn improvements_are_in_the_paper_band() {
+        // Paper: M3D improves every stage by 8-14%.
+        let r = analyze_gpu_pipeline(42);
+        for s in &r.stages {
+            assert!(
+                (0.06..=0.17).contains(&s.improvement),
+                "{}: improvement {:.3} outside band",
+                s.name,
+                s.improvement
+            );
+        }
+    }
+
+    #[test]
+    fn m3d_critical_stage_is_simd_with_about_ten_percent_gain() {
+        let r = analyze_gpu_pipeline(42);
+        assert_eq!(r.m3d_critical_stage, "simd");
+        let gain = r.m3d_freq_ghz / r.planar_freq_ghz - 1.0;
+        assert!(
+            (0.07..=0.13).contains(&gain),
+            "frequency gain {gain:.3} not ~10%"
+        );
+    }
+
+    #[test]
+    fn energy_saving_near_21_percent() {
+        let r = analyze_gpu_pipeline(42);
+        let saving = 1.0 - r.energy_ratio;
+        assert!(
+            (0.15..=0.27).contains(&saving),
+            "energy saving {saving:.3} not ~21%"
+        );
+    }
+
+    #[test]
+    fn fig6_rows_are_normalised() {
+        let r = analyze_gpu_pipeline(42);
+        let rows = r.fig6_rows();
+        assert_eq!(rows.len(), 9);
+        let max_planar = rows.iter().map(|r| r.1).fold(0.0, f64::max);
+        assert!((max_planar - 1.0).abs() < 1e-12);
+        for (name, p, m) in rows {
+            assert!(m < p, "{name}: m3d {m} !< planar {p}");
+        }
+    }
+}

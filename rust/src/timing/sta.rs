@@ -1,0 +1,151 @@
+//! Static timing analysis over the synthetic netlists: Elmore wire delay
+//! with optimal repeater insertion (the "ideal repeater insertion solution"
+//! of the Hong-Kim model [14]).
+
+use super::netlist::{Net, Netlist, Process, TimingPath};
+
+/// Delay of a wire of `len` um driven by `r_drv`, loaded by `c_load`,
+/// with `k` equally spaced repeaters [ps].
+///
+/// k+1 segments: the first is driven by the upstream gate, the rest by
+/// repeaters; intermediate loads are repeater inputs, the last the gate.
+pub fn wire_delay_k(proc_: &Process, r_drv: f64, len: f64, c_load: f64, k: usize) -> f64 {
+    let seg = len / (k + 1) as f64;
+    let (rw, cw) = (proc_.r_wire, proc_.c_wire);
+    let mut d = 0.0;
+    for i in 0..=k {
+        let drive = if i == 0 { r_drv } else { proc_.r_buf };
+        let load = if i == k { c_load } else { proc_.c_buf };
+        // Elmore: R_drv*(C_wire + C_load) + R_wire*(C_wire/2 + C_load).
+        d += drive * (cw * seg + load) * 1e-3 // ohm*fF -> ps
+            + (rw * seg) * (cw * seg / 2.0 + load) * 1e-3;
+        if i < k {
+            d += proc_.d_buf;
+        }
+    }
+    d
+}
+
+/// Optimal repeater solution for one net: (delay_ps, k).
+pub fn wire_delay_opt(proc_: &Process, r_drv: f64, len: f64, c_load: f64) -> (f64, usize) {
+    let mut best = (wire_delay_k(proc_, r_drv, len, c_load, 0), 0usize);
+    // Delay in k is convex; scan until it stops improving.
+    for k in 1..=40 {
+        let d = wire_delay_k(proc_, r_drv, len, c_load, k);
+        if d < best.0 {
+            best = (d, k);
+        } else if k > best.1 + 2 {
+            break;
+        }
+    }
+    best
+}
+
+/// Per-net timing with the planar (unscaled) layout.
+pub fn net_delay_planar(proc_: &Process, net: &Net) -> (f64, usize) {
+    // Side branches load the net in the planar design.
+    wire_delay_opt(proc_, proc_.r_gate, net.length_um, net.c_load + net.c_branch)
+}
+
+/// Result of timing one path.
+#[derive(Debug, Clone, Copy)]
+pub struct PathTiming {
+    pub delay_ps: f64,
+    pub gate_ps: f64,
+    pub wire_ps: f64,
+    pub repeaters: usize,
+}
+
+/// Time one path in the planar layout.
+pub fn time_path_planar(proc_: &Process, path: &TimingPath) -> PathTiming {
+    let gate_ps: f64 = path.gate_delays.iter().sum();
+    let mut wire_ps = 0.0;
+    let mut repeaters = 0;
+    for net in &path.nets {
+        let (d, k) = net_delay_planar(proc_, net);
+        // Redundant inverter pairs inserted by the planar flow cost their
+        // intrinsic delay (they exist to meet slew/DRV in the long layout).
+        let pair_cost = if net.has_redundant_pair { 2.0 * proc_.d_buf } else { 0.0 };
+        wire_ps += d + pair_cost;
+        repeaters += k + if net.has_redundant_pair { 2 } else { 0 };
+    }
+    PathTiming { delay_ps: gate_ps + wire_ps, gate_ps, wire_ps, repeaters }
+}
+
+/// Block-level timing: the critical (max) path.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockTiming {
+    pub critical_ps: f64,
+    pub total_repeaters: usize,
+    /// Wire share of the critical path (diagnostic for M3D headroom).
+    pub wire_frac: f64,
+}
+
+pub fn time_block_planar(proc_: &Process, nl: &Netlist) -> BlockTiming {
+    let mut crit = PathTiming { delay_ps: 0.0, gate_ps: 0.0, wire_ps: 0.0, repeaters: 0 };
+    let mut total_rep = 0;
+    for p in &nl.paths {
+        let t = time_path_planar(proc_, p);
+        total_rep += t.repeaters;
+        if t.delay_ps > crit.delay_ps {
+            crit = t;
+        }
+    }
+    BlockTiming {
+        critical_ps: crit.delay_ps,
+        total_repeaters: total_rep,
+        wire_frac: crit.wire_ps / crit.delay_ps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::netlist::gpu_stage_specs;
+
+    fn proc_() -> Process {
+        Process::default()
+    }
+
+    #[test]
+    fn repeaters_help_long_wires_only() {
+        let p = proc_();
+        let (d_short, k_short) = wire_delay_opt(&p, p.r_gate, 20.0, 1.2);
+        assert_eq!(k_short, 0, "short wires need no repeaters");
+        assert!(d_short > 0.0);
+        let (d_long_rep, k_long) = wire_delay_opt(&p, p.r_gate, 800.0, 1.2);
+        let d_long_unrep = wire_delay_k(&p, p.r_gate, 800.0, 1.2, 0);
+        assert!(k_long >= 1);
+        assert!(d_long_rep < d_long_unrep);
+    }
+
+    #[test]
+    fn wire_delay_is_monotone_in_length() {
+        let p = proc_();
+        let mut prev = 0.0;
+        for len in [10.0, 50.0, 200.0, 600.0, 1200.0] {
+            let (d, _) = wire_delay_opt(&p, p.r_gate, len, 1.0);
+            assert!(d > prev, "delay not monotone at {len}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn optimal_k_grows_with_length() {
+        let p = proc_();
+        let (_, k1) = wire_delay_opt(&p, p.r_gate, 300.0, 1.0);
+        let (_, k2) = wire_delay_opt(&p, p.r_gate, 1500.0, 1.0);
+        assert!(k2 > k1);
+    }
+
+    #[test]
+    fn block_timing_is_positive_and_wire_frac_sane() {
+        let p = proc_();
+        for spec in gpu_stage_specs() {
+            let nl = spec.generate(11);
+            let bt = time_block_planar(&p, &nl);
+            assert!(bt.critical_ps > 300.0, "{}: {}", spec.name, bt.critical_ps);
+            assert!((0.05..0.75).contains(&bt.wire_frac), "{}: wire_frac {}", spec.name, bt.wire_frac);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Windowed traffic-trace generation: the Gem5-GPU-checkpoint substitute.
+//!
+//! Produces `f_ij(t)` — tile-id-indexed communication frequencies per
+//! window — with the many-to-few-to-many structure of CPU/GPU manycores
+//! [11]: all cores funnel requests into the few LLCs, which reply with
+//! data.  Placement-independent by construction (tile ids, not positions);
+//! the encoder maps ids to positions per candidate design.
+
+use super::profile::BenchProfile;
+use crate::arch::tile::{TileKind, TileSet};
+use crate::util::Rng;
+
+/// One time window of application behaviour.
+#[derive(Debug, Clone)]
+pub struct Window {
+    /// f[i * n + j]: messages/cycle from tile i to tile j (ordered).
+    pub f: Vec<f64>,
+    /// Per-tile activity factor in [0,1] (drives the power model).
+    pub activity: Vec<f64>,
+}
+
+/// A complete application trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub bench: String,
+    pub n_tiles: usize,
+    pub windows: Vec<Window>,
+}
+
+impl Trace {
+    /// Aggregate traffic per window (diagnostic).
+    pub fn total_rate(&self, w: usize) -> f64 {
+        self.windows[w].f.iter().sum()
+    }
+}
+
+/// Generate a seeded trace for `profile` over `n_windows` windows.
+pub fn generate(
+    profile: &BenchProfile,
+    tiles: &TileSet,
+    n_windows: usize,
+    seed: u64,
+) -> Trace {
+    let n = tiles.n_tiles();
+    let mut rng = Rng::seed_from_u64(seed ^ hash_name(profile.name));
+
+    // Static affinity: every core has a "home" preference over LLCs; the
+    // hot quarter of LLCs receives `llc_hot_fraction` of all accesses.
+    let llcs: Vec<usize> = tiles.ids_of(TileKind::Llc).collect();
+    let n_hot = (llcs.len() / 4).max(1);
+    let mut llc_order = llcs.clone();
+    rng.shuffle(&mut llc_order);
+    let hot: Vec<usize> = llc_order[..n_hot].to_vec();
+    let cold: Vec<usize> = llc_order[n_hot..].to_vec();
+
+    // Per-core jitter so cores are not identical.
+    let core_scale: Vec<f64> = (0..n).map(|_| 0.7 + 0.6 * rng.f64()).collect();
+
+    let mut windows = Vec::with_capacity(n_windows);
+    for w in 0..n_windows {
+        // Smooth phase modulation: each window scales the benchmark's mean
+        // rate by 1 ± phase_amp following a per-benchmark phase curve.
+        let phase = (w as f64 / n_windows.max(1) as f64) * std::f64::consts::TAU;
+        let mod_gpu = 1.0 + profile.phase_amp * (phase + 0.3).sin();
+        let mod_cpu = 1.0 + 0.5 * profile.phase_amp * (phase * 2.0).cos();
+
+        let mut f = vec![0.0f64; n * n];
+        let mut activity = vec![0.0f64; n];
+
+        let mut wrng = rng.fork(w as u64 + 1);
+        for i in 0..n {
+            let kind = tiles.kind(i);
+            let (rate, modw, intensity) = match kind {
+                TileKind::Gpu => (profile.gpu_traffic, mod_gpu, profile.gpu_intensity),
+                TileKind::Cpu => (profile.cpu_traffic, mod_cpu, profile.cpu_intensity),
+                TileKind::Llc => (0.0, 1.0, 0.0), // LLC traffic is reply-driven
+            };
+            activity[i] = (intensity * modw * core_scale[i]).clamp(0.02, 1.0);
+            if rate <= 0.0 {
+                continue;
+            }
+            let total = rate * modw * core_scale[i];
+            // Split requests across hot/cold LLCs.
+            let hot_share = profile.llc_hot_fraction;
+            for &l in &hot {
+                let share = hot_share / hot.len() as f64 * (0.8 + 0.4 * wrng.f64());
+                let req = total * share;
+                f[i * n + l] += req; // request i -> LLC
+                f[l * n + i] += req * data_reply_ratio(kind); // data reply
+            }
+            for &l in &cold {
+                let share = (1.0 - hot_share) / cold.len().max(1) as f64
+                    * (0.8 + 0.4 * wrng.f64());
+                let req = total * share;
+                f[i * n + l] += req;
+                f[l * n + i] += req * data_reply_ratio(kind);
+            }
+        }
+
+        // LLC activity follows the traffic it serves.
+        let peak_llc_rate: f64 = llcs
+            .iter()
+            .map(|&l| (0..n).map(|i| f[i * n + l]).sum::<f64>())
+            .fold(0.0, f64::max);
+        for &l in &llcs {
+            let served: f64 = (0..n).map(|i| f[i * n + l]).sum();
+            activity[l] = if peak_llc_rate > 0.0 {
+                (0.15 + 0.85 * served / peak_llc_rate).clamp(0.0, 1.0)
+            } else {
+                0.15
+            };
+        }
+
+        // Light CPU<->CPU coherence chatter (MESI directory traffic).
+        let cpus: Vec<usize> = tiles.ids_of(TileKind::Cpu).collect();
+        for &a in &cpus {
+            for &b in &cpus {
+                if a != b {
+                    f[a * n + b] += profile.cpu_traffic * 0.05;
+                }
+            }
+        }
+
+        windows.push(Window { f, activity });
+    }
+
+    Trace { bench: profile.name.to_string(), n_tiles: n, windows }
+}
+
+/// Data replies per request: GPUs stream cache lines (reply-heavy), CPUs
+/// fetch lines with some write traffic.
+fn data_reply_ratio(kind: TileKind) -> f64 {
+    match kind {
+        TileKind::Gpu => 1.6,
+        TileKind::Cpu => 1.2,
+        TileKind::Llc => 0.0,
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x1000_0000_01b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::profile::{all_benchmarks, benchmark};
+
+    fn tiles() -> TileSet {
+        TileSet::new(8, 40, 16)
+    }
+
+    #[test]
+    fn trace_shapes_are_right() {
+        let p = benchmark("bp").unwrap();
+        let t = generate(&p, &tiles(), 8, 42);
+        assert_eq!(t.windows.len(), 8);
+        for w in &t.windows {
+            assert_eq!(w.f.len(), 64 * 64);
+            assert_eq!(w.activity.len(), 64);
+            assert!(w.f.iter().all(|&x| x >= 0.0));
+            assert!(w.activity.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let p = benchmark("lud").unwrap();
+        let a = generate(&p, &tiles(), 4, 7);
+        let b = generate(&p, &tiles(), 4, 7);
+        assert_eq!(a.windows[2].f, b.windows[2].f);
+        let c = generate(&p, &tiles(), 4, 8);
+        assert_ne!(a.windows[2].f, c.windows[2].f);
+    }
+
+    #[test]
+    fn traffic_is_many_to_few_to_many() {
+        let ts = tiles();
+        let p = benchmark("lv").unwrap();
+        let t = generate(&p, &ts, 4, 3);
+        let n = ts.n_tiles();
+        let w = &t.windows[0];
+        // All GPU traffic must terminate at (or originate from) LLCs.
+        for g in ts.ids_of(TileKind::Gpu) {
+            for j in 0..n {
+                if w.f[g * n + j] > 0.0 {
+                    assert_eq!(ts.kind(j), TileKind::Llc, "gpu {g} sends to non-LLC {j}");
+                }
+            }
+        }
+        // LLC->core data volume exceeds core->LLC request volume (replies
+        // are data-heavy).
+        let to_llc: f64 = ts
+            .ids_of(TileKind::Gpu)
+            .map(|g| ts.ids_of(TileKind::Llc).map(|l| w.f[g * n + l]).sum::<f64>())
+            .sum();
+        let from_llc: f64 = ts
+            .ids_of(TileKind::Llc)
+            .map(|l| ts.ids_of(TileKind::Gpu).map(|g| w.f[l * n + g]).sum::<f64>())
+            .sum();
+        assert!(from_llc > to_llc);
+    }
+
+    #[test]
+    fn hot_llcs_carry_disproportionate_load() {
+        let ts = tiles();
+        let p = benchmark("bp").unwrap(); // hot fraction 0.55
+        let t = generate(&p, &ts, 1, 9);
+        let n = ts.n_tiles();
+        let w = &t.windows[0];
+        let mut served: Vec<f64> = ts
+            .ids_of(TileKind::Llc)
+            .map(|l| (0..n).map(|i| w.f[i * n + l]).sum::<f64>())
+            .collect();
+        served.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top_quarter: f64 = served[..4].iter().sum();
+        let total: f64 = served.iter().sum();
+        assert!(
+            top_quarter / total > 0.45,
+            "hot quarter carries {:.2} of load",
+            top_quarter / total
+        );
+    }
+
+    #[test]
+    fn compute_intensive_benchmarks_have_higher_activity() {
+        let ts = tiles();
+        let hot = generate(&benchmark("lv").unwrap(), &ts, 4, 5);
+        let cool = generate(&benchmark("nw").unwrap(), &ts, 4, 5);
+        let mean_act = |t: &Trace| -> f64 {
+            let g: Vec<f64> = ts
+                .ids_of(TileKind::Gpu)
+                .map(|i| t.windows.iter().map(|w| w.activity[i]).sum::<f64>() / 4.0)
+                .collect();
+            crate::util::stats::mean(&g)
+        };
+        assert!(mean_act(&hot) > 1.5 * mean_act(&cool));
+    }
+
+    #[test]
+    fn all_benchmarks_generate() {
+        let ts = tiles();
+        for p in all_benchmarks() {
+            let t = generate(&p, &ts, 8, 1);
+            assert!(t.total_rate(0) > 0.0, "{} generated empty traffic", p.name);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload traffic: per-benchmark profiles, the windowed f_ij(t) trace
+//! generator (Gem5-GPU substitute), and trace file I/O.
+
+pub mod generator;
+pub mod profile;
+pub mod trace;
+
+pub use generator::{generate, Trace, Window};
+pub use profile::{all_benchmarks, benchmark, is_compute_intensive, BenchProfile};

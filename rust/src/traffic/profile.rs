@@ -1,0 +1,137 @@
+//! Per-benchmark workload profiles — the Rodinia [12] substitute.
+//!
+//! The paper profiles six Rodinia applications on Gem5-GPU and extracts
+//! windowed communication frequencies f_ij(t).  We have no Gem5, so each
+//! benchmark is characterised by the published *shape* parameters that the
+//! DSE actually exploits: compute intensity (drives power and IPC),
+//! aggregate traffic volume, LLC locality (how concentrated the
+//! many-to-few hotspot is), and phase variability across windows.
+//! Magnitudes are calibrated so the TSV baselines land at the paper's
+//! absolute numbers (DESIGN.md §7).
+
+/// Shape parameters of one application.
+#[derive(Debug, Clone)]
+pub struct BenchProfile {
+    pub name: &'static str,
+    /// GPU activity factor in [0,1] (fraction of peak dynamic power / IPC).
+    pub gpu_intensity: f64,
+    /// CPU activity factor in [0,1].
+    pub cpu_intensity: f64,
+    /// Mean GPU->LLC request rate [packets/cycle per GPU core].
+    pub gpu_traffic: f64,
+    /// Mean CPU->LLC request rate [packets/cycle per CPU core].
+    pub cpu_traffic: f64,
+    /// Concentration of LLC accesses: fraction of traffic hitting the
+    /// "hot" quarter of LLCs (0.25 = uniform, ~0.7 = strong hotspot).
+    pub llc_hot_fraction: f64,
+    /// Relative amplitude of window-to-window phase modulation in [0,1].
+    pub phase_amp: f64,
+}
+
+/// The six Rodinia benchmarks of §5.1.
+pub fn all_benchmarks() -> Vec<BenchProfile> {
+    vec![
+        // Backprop: compute-heavy training kernel, strong GPU traffic.
+        BenchProfile {
+            name: "bp",
+            gpu_intensity: 0.85,
+            cpu_intensity: 0.45,
+            gpu_traffic: 0.011,
+            cpu_traffic: 0.004,
+            llc_hot_fraction: 0.55,
+            phase_amp: 0.35,
+        },
+        // Needleman-Wunsch: low-IPC, memory-latency-bound, cool.
+        BenchProfile {
+            name: "nw",
+            gpu_intensity: 0.35,
+            cpu_intensity: 0.30,
+            gpu_traffic: 0.014,
+            cpu_traffic: 0.003,
+            llc_hot_fraction: 0.45,
+            phase_amp: 0.20,
+        },
+        // LavaMD: most compute-intensive, hottest benchmark.
+        BenchProfile {
+            name: "lv",
+            gpu_intensity: 0.95,
+            cpu_intensity: 0.50,
+            gpu_traffic: 0.010,
+            cpu_traffic: 0.004,
+            llc_hot_fraction: 0.60,
+            phase_amp: 0.30,
+        },
+        // LU decomposition: compute-intensive with shrinking working set
+        // (pronounced phase behaviour).
+        BenchProfile {
+            name: "lud",
+            gpu_intensity: 0.80,
+            cpu_intensity: 0.45,
+            gpu_traffic: 0.012,
+            cpu_traffic: 0.004,
+            llc_hot_fraction: 0.55,
+            phase_amp: 0.55,
+        },
+        // k-nearest-neighbours: streaming, low compute intensity, cool.
+        BenchProfile {
+            name: "knn",
+            gpu_intensity: 0.40,
+            cpu_intensity: 0.35,
+            gpu_traffic: 0.013,
+            cpu_traffic: 0.003,
+            llc_hot_fraction: 0.40,
+            phase_amp: 0.15,
+        },
+        // Pathfinder: compute-intensive dynamic programming sweep.
+        BenchProfile {
+            name: "pf",
+            gpu_intensity: 0.82,
+            cpu_intensity: 0.42,
+            gpu_traffic: 0.011,
+            cpu_traffic: 0.004,
+            llc_hot_fraction: 0.50,
+            phase_amp: 0.40,
+        },
+    ]
+}
+
+/// Look up a profile by name.
+pub fn benchmark(name: &str) -> Option<BenchProfile> {
+    all_benchmarks().into_iter().find(|b| b.name == name)
+}
+
+/// The paper's "compute-intensive" subset (BP, LV, LUD, PF) runs hot; NW
+/// and KNN stay cool (Fig 8 discussion).
+pub fn is_compute_intensive(name: &str) -> bool {
+    matches!(name, "bp" | "lv" | "lud" | "pf")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_benchmarks_exist() {
+        let b = all_benchmarks();
+        assert_eq!(b.len(), 6);
+        let names: Vec<_> = b.iter().map(|p| p.name).collect();
+        assert_eq!(names, vec!["bp", "nw", "lv", "lud", "knn", "pf"]);
+    }
+
+    #[test]
+    fn intensity_split_matches_paper() {
+        for b in all_benchmarks() {
+            if is_compute_intensive(b.name) {
+                assert!(b.gpu_intensity >= 0.8, "{} should be hot", b.name);
+            } else {
+                assert!(b.gpu_intensity <= 0.5, "{} should be cool", b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_works() {
+        assert!(benchmark("lud").is_some());
+        assert!(benchmark("doom").is_none());
+    }
+}

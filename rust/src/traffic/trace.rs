@@ -1,0 +1,131 @@
+//! Trace file I/O (JSON) — lets `hem3d trace` export traces for inspection
+//! and lets examples/benches reload identical workloads.
+
+use super::generator::{Trace, Window};
+use crate::util::json::{self, Json};
+
+/// Serialize a trace (sparse representation: only non-zero f entries).
+pub fn to_json(trace: &Trace) -> Json {
+    let n = trace.n_tiles;
+    let windows: Vec<Json> = trace
+        .windows
+        .iter()
+        .map(|w| {
+            let mut entries = Vec::new();
+            for i in 0..n {
+                for j in 0..n {
+                    let v = w.f[i * n + j];
+                    if v > 0.0 {
+                        entries.push(Json::arr([
+                            Json::num(i as f64),
+                            Json::num(j as f64),
+                            Json::num(v),
+                        ]));
+                    }
+                }
+            }
+            Json::obj(vec![
+                ("f", Json::Arr(entries)),
+                ("activity", Json::arr(w.activity.iter().map(|&a| Json::num(a)))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str(&trace.bench)),
+        ("n_tiles", Json::num(n as f64)),
+        ("windows", Json::Arr(windows)),
+    ])
+}
+
+/// Parse a trace back from JSON.
+pub fn from_json(doc: &Json) -> Result<Trace, String> {
+    let bench = doc
+        .get("bench")
+        .and_then(|j| j.as_str())
+        .ok_or("missing bench")?
+        .to_string();
+    let n = doc.get("n_tiles").and_then(|j| j.as_usize()).ok_or("missing n_tiles")?;
+    let windows_json = doc.get("windows").and_then(|j| j.as_arr()).ok_or("missing windows")?;
+    let mut windows = Vec::with_capacity(windows_json.len());
+    for wj in windows_json {
+        let mut f = vec![0.0; n * n];
+        for e in wj.get("f").and_then(|j| j.as_arr()).ok_or("missing f")? {
+            let i = e.at(0).and_then(|j| j.as_usize()).ok_or("bad entry")?;
+            let j_ = e.at(1).and_then(|j| j.as_usize()).ok_or("bad entry")?;
+            let v = e.at(2).and_then(|j| j.as_f64()).ok_or("bad entry")?;
+            if i >= n || j_ >= n {
+                return Err(format!("entry ({i},{j_}) out of range"));
+            }
+            f[i * n + j_] = v;
+        }
+        let activity: Vec<f64> = wj
+            .get("activity")
+            .and_then(|j| j.as_arr())
+            .ok_or("missing activity")?
+            .iter()
+            .map(|a| a.as_f64().unwrap_or(0.0))
+            .collect();
+        if activity.len() != n {
+            return Err("activity length mismatch".into());
+        }
+        windows.push(Window { f, activity });
+    }
+    Ok(Trace { bench, n_tiles: n, windows })
+}
+
+/// Write a trace to a file.
+pub fn save(trace: &Trace, path: &str) -> Result<(), String> {
+    std::fs::write(path, to_json(trace).to_string()).map_err(|e| e.to_string())
+}
+
+/// Load a trace from a file.
+pub fn load(path: &str) -> Result<Trace, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    from_json(&json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::tile::TileSet;
+    use crate::traffic::generator::generate;
+    use crate::traffic::profile::benchmark;
+
+    #[test]
+    fn json_roundtrip_preserves_trace() {
+        let p = benchmark("pf").unwrap();
+        let t = generate(&p, &TileSet::new(2, 10, 4), 3, 11);
+        let j = to_json(&t);
+        let t2 = from_json(&j).unwrap();
+        assert_eq!(t2.bench, t.bench);
+        assert_eq!(t2.n_tiles, t.n_tiles);
+        assert_eq!(t2.windows.len(), t.windows.len());
+        for (a, b) in t.windows.iter().zip(t2.windows.iter()) {
+            for (x, y) in a.f.iter().zip(b.f.iter()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+            for (x, y) in a.activity.iter().zip(b.activity.iter()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = benchmark("nw").unwrap();
+        let t = generate(&p, &TileSet::new(2, 10, 4), 2, 5);
+        let path = std::env::temp_dir().join("hem3d_trace_test.json");
+        let path = path.to_str().unwrap();
+        save(&t, path).unwrap();
+        let t2 = load(path).unwrap();
+        assert_eq!(t2.bench, "nw");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_trace_is_rejected() {
+        assert!(from_json(&crate::util::json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"bench":"x","n_tiles":2,"windows":[{"f":[[9,0,1.0]],"activity":[0.1,0.2]}]}"#;
+        assert!(from_json(&crate::util::json::parse(bad).unwrap()).is_err());
+    }
+}

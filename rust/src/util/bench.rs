@@ -1,0 +1,73 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `rust/benches/*.rs` as a `harness = false`
+//! binary; they use this module for warmup + repeated timing with
+//! mean/min/max reporting.
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` runs; prints a line and
+/// returns the mean seconds per iteration.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "bench {name:<40} {:>12}  (min {}, max {}, n={})",
+        fmt_time(mean),
+        fmt_time(min),
+        fmt_time(max),
+        samples.len()
+    );
+    mean
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Throughput line helper.
+pub fn report_rate(name: &str, items: f64, seconds: f64) {
+    println!("rate  {name:<40} {:>12.1} items/s", items / seconds.max(1e-12));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_mean() {
+        let mut x = 0u64;
+        let mean = bench("noop-ish", 1, 3, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(mean >= 0.0);
+        assert_eq!(x, 4);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

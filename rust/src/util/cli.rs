@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `hem3d <command> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments after the command.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--key` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        // Note: a bare `--flag` must come last or use `--flag=true`, since
+        // `--flag value` binds the value (documented quirk below).
+        let a = parse("optimize trace.json --tech m3d --iters=50 --verbose");
+        assert_eq!(a.command.as_deref(), Some("optimize"));
+        assert_eq!(a.opt("tech"), Some("m3d"));
+        assert_eq!(a.usize_or("iters", 0), 50);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["trace.json"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("sim");
+        assert_eq!(a.usize_or("iters", 7), 7);
+        assert_eq!(a.f64_or("alpha", 0.5), 0.5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bare_flag_before_positional_consumes_next_token() {
+        // Documented quirk: `--flag value` binds value to flag.
+        let a = parse("run --check out.json");
+        assert_eq!(a.opt("check"), Some("out.json"));
+    }
+}

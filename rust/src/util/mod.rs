@@ -1,0 +1,17 @@
+//! Infrastructure substrates.
+//!
+//! The build image is offline and only caches the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, serde, clap, rayon,
+//! criterion, proptest) are unavailable; this module provides the minimal
+//! replacements the rest of the system needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use rng::Rng;

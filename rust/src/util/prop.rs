@@ -1,0 +1,156 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! `check` runs a predicate over `n` seeded random cases; on failure it
+//! retries the failing seed with progressively "smaller" generator budgets
+//! (a crude shrink) and reports the smallest failing seed/budget pair so the
+//! failure is reproducible with `case()`.
+
+use super::rng::Rng;
+
+/// Generation budget handed to each case: use `size` to bound collection
+/// lengths / value magnitudes so shrinking produces simpler cases.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Random usize in [lo, hi] inclusive, additionally capped by budget.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        self.rng.range(lo, hi)
+    }
+
+    /// Random f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    /// Random vec of given length via element generator.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut xs: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut xs);
+        xs
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` over `cases` random cases.  Panics (with the reproducing seed)
+/// on the first failure after shrinking the budget.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    if let Some(f) = check_quiet(cases, &prop) {
+        panic!(
+            "property '{name}' failed: {} \n  reproduce: seed={} size={}",
+            f.message, f.seed, f.size
+        );
+    }
+}
+
+/// Like `check` but returns the failure instead of panicking (for testing
+/// the framework itself).
+pub fn check_quiet(
+    cases: u64,
+    prop: &impl Fn(&mut Gen) -> Result<(), String>,
+) -> Option<Failure> {
+    for case_idx in 0..cases {
+        let seed = 0x5eed_0000u64.wrapping_add(case_idx.wrapping_mul(0x9e37_79b9));
+        let size = 4 + (case_idx as usize * 7) % 60;
+        if let Err(msg) = run_case(seed, size, prop) {
+            // Shrink: re-run the same seed with smaller budgets.
+            let mut best = Failure { seed, size, message: msg };
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                match run_case(seed, s, prop) {
+                    Err(msg) => best = Failure { seed, size: s, message: msg },
+                    Ok(()) => break,
+                }
+            }
+            return Some(best);
+        }
+    }
+    None
+}
+
+/// Run a single reproducible case.
+pub fn run_case(
+    seed: u64,
+    size: usize,
+    prop: &impl Fn(&mut Gen) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut gen = Gen { rng: Rng::seed_from_u64(seed), size };
+    prop(&mut gen)
+}
+
+/// Assert helper producing property-friendly errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |g| {
+            let a = g.f64(-10.0, 10.0);
+            let b = g.f64(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_shrunk() {
+        let f = check_quiet(100, &|g: &mut Gen| {
+            let n = g.int(0, 100);
+            if n < 10 {
+                Ok(())
+            } else {
+                Err(format!("n={n} too big"))
+            }
+        });
+        let f = f.expect("property should fail");
+        // Shrinking should have reduced the budget.
+        assert!(f.size <= 16, "expected shrunk size, got {}", f.size);
+    }
+
+    #[test]
+    fn cases_are_reproducible() {
+        let run = |seed| {
+            let mut g = Gen { rng: Rng::seed_from_u64(seed), size: 10 };
+            (g.int(0, 100), g.f64(0.0, 1.0))
+        };
+        assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let mut g = Gen { rng: Rng::seed_from_u64(3), size: 8 };
+        let p = g.permutation(20);
+        let mut q = p.clone();
+        q.sort_unstable();
+        assert_eq!(q, (0..20).collect::<Vec<_>>());
+    }
+}

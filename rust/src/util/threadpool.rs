@@ -1,0 +1,96 @@
+//! Fixed-size scoped work pool (rayon/tokio are unavailable offline).
+//!
+//! The coordinator uses this to fan candidate evaluation and per-benchmark
+//! campaign legs across cores.  Work items are boxed closures pushed to a
+//! shared queue; `scope_map` provides the common "parallel map" shape with
+//! ordered results.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Parallel map: applies `f` to each item on up to `workers` OS threads,
+/// returning results in input order.  Falls back to a serial loop for
+/// `workers <= 1` or tiny inputs (avoids spawn overhead on 1-core hosts).
+pub fn scope_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue: Arc<Mutex<Vec<(usize, T)>>> =
+        Arc::new(Mutex::new(items.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let nw = workers.min(n);
+    thread::scope(|s| {
+        for _ in 0..nw {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let f = &f;
+            s.spawn(move || loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, x)) => {
+                        if tx.send((i, f(x))).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("worker dropped result")).collect()
+    })
+}
+
+/// Suggested worker count: respects HEM3D_WORKERS, defaults to available
+/// parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(s) = std::env::var("HEM3D_WORKERS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = scope_map(items, 4, |x| x * 3);
+        assert_eq!(out, (0..100).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_fallback_matches() {
+        let items: Vec<usize> = (0..10).collect();
+        let a = scope_map(items.clone(), 1, |x| x + 1);
+        let b = scope_map(items, 8, |x| x + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn handles_empty_input() {
+        let out: Vec<usize> = scope_map(Vec::<usize>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let out = scope_map(vec![1, 2], 16, |x| x * x);
+        assert_eq!(out, vec![1, 4]);
+    }
+}

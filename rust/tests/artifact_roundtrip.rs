@@ -1,0 +1,98 @@
+//! Integration: the L1<->L3 contract — AOT artifacts vs native Rust, on
+//! both synthetic tensors and real optimized designs.  Skips (with a loud
+//! marker) when `artifacts/` has not been built.
+
+use hem3d::config::Tech;
+use hem3d::coordinator::batch;
+use hem3d::coordinator::campaign::{run_leg, Algo, Effort, LegWorld, Selection};
+use hem3d::eval::native::moo_eval_native;
+use hem3d::opt::Mode;
+use hem3d::runtime::evaluator::{dims, Evaluator, MooBatch};
+use hem3d::util::Rng;
+
+fn evaluator() -> Option<Evaluator> {
+    match Evaluator::load("artifacts") {
+        Ok(ev) => Some(ev),
+        Err(e) => {
+            eprintln!("SKIP: artifacts/ not built ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn moo_eval_artifact_matches_native_on_random_tensors() {
+    let Some(ev) = evaluator() else { return };
+    let mut rng = Rng::seed_from_u64(1234);
+    let mut batch = MooBatch::zeroed();
+    for v in batch.q.iter_mut() {
+        *v = if rng.chance(0.04) { 1.0 } else { 0.0 };
+    }
+    for v in batch.f.iter_mut() {
+        *v = rng.f32() * 0.1;
+    }
+    for v in batch.latw.iter_mut() {
+        *v = rng.f32();
+    }
+    for v in batch.pact.iter_mut() {
+        *v = rng.f32() * 4.0;
+    }
+    for v in batch.cth.iter_mut() {
+        *v = 0.2 + rng.f32();
+    }
+    for n in 0..dims::N_TILES {
+        batch.ssel[n * dims::N_STACKS + (n * 7) % dims::N_STACKS] = 1.0;
+    }
+
+    let art = ev.moo_eval(&batch).expect("artifact execution");
+    let nat = moo_eval_native(&batch);
+    for (a, b) in art.iter().zip(nat.iter()) {
+        for (x, y) in [(a.lat, b.lat), (a.umean, b.umean), (a.usigma, b.usigma), (a.tmax, b.tmax)]
+        {
+            let rel = (x - y).abs() / y.abs().max(1e-6);
+            assert!(rel < 1e-3, "artifact {x} vs native {y} (rel {rel})");
+        }
+    }
+}
+
+#[test]
+fn artifact_scores_agree_on_optimized_pareto_front() {
+    let Some(ev) = evaluator() else { return };
+    let mut effort = Effort::quick();
+    effort.stage.max_iters = 3;
+    let world = LegWorld::new("pf", Tech::M3d, 21);
+    let leg = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 21);
+    let ctx = world.encode_ctx();
+    let designs: Vec<&hem3d::arch::Design> =
+        leg.candidates.iter().map(|c| &c.design).take(dims::MOO_BATCH).collect();
+    let art = batch::artifact_scores(&ev, &ctx, &designs).expect("batched scoring");
+    for (d, a) in designs.iter().zip(art.iter()) {
+        let routing = hem3d::noc::routing::Routing::build(d);
+        let n = hem3d::eval::objectives::evaluate(&ctx, d, &routing);
+        for (x, y) in a.as_vec().iter().zip(n.as_vec().iter()) {
+            assert!((x - y).abs() / y.abs().max(1e-9) < 1e-3, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn thermal_artifact_tracks_native_grid_solver() {
+    let Some(ev) = evaluator() else { return };
+    let world = LegWorld::new("lv", Tech::M3d, 2);
+    let ctx = world.encode_ctx();
+    let design = hem3d::arch::Design::with_identity_placement(
+        64,
+        hem3d::noc::topology::mesh_links(&world.cfg),
+    );
+    let designs = vec![&design];
+    let temps = batch::artifact_peak_temps(&ev, &ctx, &designs).expect("thermal batch");
+    // Native full fixed-point result; the batched path linearizes leakage,
+    // so allow a few degrees.
+    let native = hem3d::coordinator::detailed_peak_temp(&ctx, &design);
+    assert!(
+        (temps[0] - native).abs() < 5.0,
+        "artifact {}C vs native {}C",
+        temps[0],
+        native
+    );
+}

@@ -1,0 +1,112 @@
+//! Integration: full DSE legs (MOO-STAGE and AMOSA) at reduced effort,
+//! checking the end-to-end invariants the figures rely on.
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{run_leg, Algo, Effort, LegWorld, Selection};
+use hem3d::opt::Mode;
+
+fn tiny_effort() -> Effort {
+    let mut e = Effort::quick();
+    e.stage.max_iters = 3;
+    e.stage.local.max_steps = 8;
+    e.stage.local.neighbors_per_step = 6;
+    e.amosa.t_final = 0.3;
+    e.amosa.iters_per_temp = 15;
+    e.validate_cap = 4;
+    e
+}
+
+#[test]
+fn moo_stage_leg_beats_or_matches_its_start_design() {
+    let world = LegWorld::new("bp", Tech::M3d, 7);
+    let leg = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &tiny_effort(), 7);
+    // The mesh start design's ET:
+    let ctx = world.encode_ctx();
+    let start = hem3d::arch::Design::with_identity_placement(
+        64,
+        hem3d::noc::topology::mesh_links(&world.cfg),
+    );
+    let routing = hem3d::noc::routing::Routing::build(&start);
+    let scores = hem3d::eval::objectives::evaluate(&ctx, &start, &routing);
+    let start_et = hem3d::perf::exec_time(
+        &ctx,
+        &world.profile,
+        &start,
+        &routing,
+        &scores,
+        &hem3d::perf::PerfCoeffs::default(),
+    )
+    .total;
+    assert!(
+        leg.winner.et <= start_et * 1.01,
+        "DSE winner ET {} worse than start {}",
+        leg.winner.et,
+        start_et
+    );
+}
+
+#[test]
+fn amosa_leg_completes_and_validates() {
+    let world = LegWorld::new("nw", Tech::Tsv, 3);
+    let leg = run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, &tiny_effort(), 3);
+    assert!(!leg.candidates.is_empty());
+    assert!(leg.winner.temp_c.is_finite() && leg.winner.temp_c > 40.0);
+    assert!(leg.evals > 30);
+}
+
+#[test]
+fn m3d_winner_cooler_and_faster_than_tsv_winner() {
+    // The headline direction must hold even at tiny effort.
+    let e = tiny_effort();
+    let tsv_world = LegWorld::new("lv", Tech::Tsv, 42);
+    let tsv = run_leg(&tsv_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &e, 42);
+    let m3d_world = LegWorld::new("lv", Tech::M3d, 42);
+    let m3d = run_leg(&m3d_world, Mode::Po, Algo::MooStage, Selection::MinEt, &e, 42);
+    assert!(
+        m3d.winner.et < tsv.winner.et,
+        "M3D ET {} !< TSV ET {}",
+        m3d.winner.et,
+        tsv.winner.et
+    );
+    assert!(
+        m3d.winner.temp_c + 5.0 < tsv.winner.temp_c,
+        "M3D temp {} not clearly below TSV {}",
+        m3d.winner.temp_c,
+        tsv.winner.temp_c
+    );
+}
+
+#[test]
+fn pt_mode_keeps_tsv_under_threshold_or_coolest() {
+    let world = LegWorld::new("lv", Tech::Tsv, 11);
+    let leg = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny_effort(), 11);
+    let coolest = leg
+        .candidates
+        .iter()
+        .map(|c| c.temp_c)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        leg.winner.temp_c < world.cfg.t_threshold_c || (leg.winner.temp_c - coolest).abs() < 1e-9,
+        "PT winner {}C violates threshold and is not the coolest ({coolest}C)",
+        leg.winner.temp_c
+    );
+}
+
+#[test]
+fn sparse_and_dense_objective_paths_agree_on_optimized_designs() {
+    // After optimization (not just random designs), the sparse evaluator
+    // and the dense MooBatch encoding must still agree.
+    let world = LegWorld::new("lud", Tech::M3d, 5);
+    let leg = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny_effort(), 5);
+    let ctx = world.encode_ctx();
+    let mut batch = hem3d::runtime::MooBatch::zeroed();
+    ctx.fill_shared(&mut batch);
+    for (slot, c) in leg.candidates.iter().take(4).enumerate() {
+        let routing = hem3d::noc::routing::Routing::build(&c.design);
+        ctx.encode_design(&c.design, &routing, &mut batch, slot);
+        let dense = hem3d::eval::native::moo_eval_one(&batch, slot);
+        let sparse = hem3d::eval::objectives::evaluate(&ctx, &c.design, &routing);
+        assert!((dense.lat as f64 - sparse.lat).abs() / sparse.lat.max(1e-9) < 1e-4);
+        assert!((dense.tmax as f64 - sparse.tmax).abs() / sparse.tmax.max(1e-9) < 1e-4);
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration: the calibrated headline chain — Fig 6 frequencies feed the
+//! TechParams, which feed the ET model, which must land in the paper's
+//! bands on the un-optimized reference design (the DSE widens the gap).
+
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, Tech, TechParams};
+use hem3d::eval::objectives::evaluate;
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::perf::{exec_time, PerfCoeffs};
+use hem3d::timing::analyze_gpu_pipeline;
+use hem3d::traffic::{all_benchmarks, generate};
+
+#[test]
+fn fig6_projection_supports_the_techparams_constants() {
+    // The 0.77 GHz constant in TechParams::m3d() must be justified by the
+    // actual projection at the calibration seed.
+    let r = analyze_gpu_pipeline(42);
+    let projected = r.m3d_freq_ghz;
+    let configured = TechParams::m3d().gpu_freq_ghz;
+    assert!(
+        (projected - configured).abs() / configured < 0.03,
+        "projection {projected:.3} GHz vs configured {configured:.3} GHz"
+    );
+    // And the energy scale.
+    let saving = 1.0 - r.energy_ratio;
+    let configured_scale = TechParams::m3d().gpu_energy_scale;
+    assert!(
+        ((1.0 - saving) - configured_scale).abs() < 0.04,
+        "energy ratio {:.3} vs configured {configured_scale:.3}",
+        1.0 - saving
+    );
+}
+
+#[test]
+fn same_design_m3d_gain_sits_below_the_optimized_paper_gain() {
+    // On the identical (mesh, identity) design, M3D's component gains give
+    // 8-20% ET improvement; the paper's 14.2% average additionally includes
+    // DSE placement gains, so same-design must not exceed the optimized
+    // numbers wildly.
+    let cfg = ArchConfig::paper();
+    let tiles = TileSet::from_arch(&cfg);
+    let mut gains = Vec::new();
+    for profile in all_benchmarks() {
+        let trace = generate(&profile, &tiles, cfg.windows, 42);
+        let mut ets = Vec::new();
+        for tech in [TechParams::tsv(), TechParams::m3d()] {
+            let geo = Geometry::new(&cfg, &tech);
+            let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+            let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+            let r = Routing::build(&d);
+            let s = evaluate(&ctx, &d, &r);
+            ets.push(exec_time(&ctx, &profile, &d, &r, &s, &PerfCoeffs::default()).total);
+        }
+        let gain = 1.0 - ets[1] / ets[0];
+        assert!(
+            (0.05..0.25).contains(&gain),
+            "{}: same-design gain {gain:.3} out of band",
+            profile.name
+        );
+        gains.push(gain);
+    }
+    let avg = gains.iter().sum::<f64>() / gains.len() as f64;
+    assert!((0.08..0.20).contains(&avg), "avg same-design gain {avg:.3}");
+}
+
+#[test]
+fn memory_bound_benchmarks_gain_more_from_m3d() {
+    // nw (memory-bound) must gain more than lv (compute-bound): the NoC +
+    // LLC improvements only matter when memory time matters.
+    let cfg = ArchConfig::paper();
+    let tiles = TileSet::from_arch(&cfg);
+    let gain_of = |bench: &str| {
+        let profile = hem3d::traffic::benchmark(bench).unwrap();
+        let trace = generate(&profile, &tiles, cfg.windows, 42);
+        let mut ets = Vec::new();
+        for tech in [TechParams::tsv(), TechParams::m3d()] {
+            let geo = Geometry::new(&cfg, &tech);
+            let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+            let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+            let r = Routing::build(&d);
+            let s = evaluate(&ctx, &d, &r);
+            ets.push(exec_time(&ctx, &profile, &d, &r, &s, &PerfCoeffs::default()).total);
+        }
+        1.0 - ets[1] / ets[0]
+    };
+    let g_nw = gain_of("nw");
+    let g_lv = gain_of("lv");
+    assert!(g_nw > g_lv, "nw gain {g_nw:.3} should exceed lv gain {g_lv:.3}");
+}
+
+#[test]
+fn tech_tags_are_consistent() {
+    assert_eq!(TechParams::for_tech(Tech::Tsv).tech, Tech::Tsv);
+    assert_eq!(TechParams::for_tech(Tech::M3d).tech, Tech::M3d);
+}

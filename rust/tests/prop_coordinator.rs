@@ -1,0 +1,138 @@
+//! Property tests (util::prop mini-framework) on coordinator invariants:
+//! routing validity, batching state, Pareto bookkeeping, trace IO.
+
+use hem3d::arch::design::{Design, Link};
+use hem3d::arch::geometry::Geometry;
+use hem3d::arch::tile::TileSet;
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::opt::pareto::{dominates, ParetoSet};
+use hem3d::util::prop::{check, Gen};
+use hem3d::util::Rng;
+
+#[test]
+fn prop_routing_paths_always_use_design_links() {
+    let cfg = ArchConfig::paper();
+    let geo = Geometry::new(&cfg, &TechParams::m3d());
+    check("paths-use-links", 25, |g: &mut Gen| {
+        let mut rng = g.rng.fork(1);
+        let links = topology::swnoc_links(&cfg, &geo, 1.0 + g.f64(0.0, 2.0), &mut rng);
+        let design = Design::random_placement(&cfg, links, &mut rng);
+        let routing = Routing::build(&design);
+        let linkset: std::collections::HashSet<Link> = design.links.iter().copied().collect();
+        let s = g.int(0, 63);
+        let d = g.int(0, 63);
+        let path = routing.path(s, d);
+        for w in path.windows(2) {
+            if !linkset.contains(&Link::new(w[0], w[1])) {
+                return Err(format!("edge {}-{} not in design", w[0], w[1]));
+            }
+        }
+        if path.len() != routing.hop_count(s, d) + 1 {
+            return Err("path length != hops+1".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_set_never_contains_dominated_pairs() {
+    check("pareto-nondominated", 40, |g: &mut Gen| {
+        let design = Design::with_identity_placement(2, vec![Link::new(0, 1)]);
+        let mut set = ParetoSet::new(g.int(0, 12));
+        let n = g.int(3, 40);
+        for _ in 0..n {
+            let obj: Vec<f64> = (0..3).map(|_| g.f64(0.0, 10.0)).collect();
+            set.insert(obj, &design);
+        }
+        for (i, a) in set.members.iter().enumerate() {
+            for (j, b) in set.members.iter().enumerate() {
+                if i != j && dominates(&a.obj, &b.obj) {
+                    return Err(format!("{:?} dominates {:?}", a.obj, b.obj));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_encode_slots_are_independent() {
+    // Encoding design B into slot 1 must not disturb slot 0's scores.
+    let cfg = ArchConfig::paper();
+    let tech = TechParams::tsv();
+    let geo = Geometry::new(&cfg, &tech);
+    let tiles = TileSet::from_arch(&cfg);
+    let trace =
+        hem3d::traffic::generate(&hem3d::traffic::benchmark("bp").unwrap(), &tiles, cfg.windows, 1);
+    let ctx = hem3d::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+    check("batch-slot-independence", 8, |g: &mut Gen| {
+        let mut rng = g.rng.fork(2);
+        let links = topology::mesh_links(&cfg);
+        let d0 = Design::random_placement(&cfg, links.clone(), &mut rng);
+        let d1 = Design::random_placement(&cfg, links, &mut rng);
+        let r0 = Routing::build(&d0);
+        let r1 = Routing::build(&d1);
+
+        let mut batch = hem3d::runtime::MooBatch::zeroed();
+        ctx.fill_shared(&mut batch);
+        ctx.encode_design(&d0, &r0, &mut batch, 0);
+        let before = hem3d::eval::native::moo_eval_one(&batch, 0);
+        ctx.encode_design(&d1, &r1, &mut batch, 1);
+        let after = hem3d::eval::native::moo_eval_one(&batch, 0);
+        if before != after {
+            return Err("slot 0 changed after encoding slot 1".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_roundtrip_any_shape() {
+    check("trace-roundtrip", 15, |g: &mut Gen| {
+        let n_cpu = g.int(1, 4);
+        let n_gpu = g.int(2, 12);
+        let n_llc = g.int(1, 4);
+        let tiles = TileSet::new(n_cpu, n_gpu, n_llc);
+        let profile = hem3d::traffic::benchmark("lud").unwrap();
+        let windows = g.int(1, 6);
+        let seed = g.rng.next_u64();
+        let t = hem3d::traffic::generate(&profile, &tiles, windows, seed);
+        let j = hem3d::traffic::trace::to_json(&t);
+        let t2 = hem3d::traffic::trace::from_json(&j).map_err(|e| e.to_string())?;
+        if t2.windows.len() != t.windows.len() || t2.n_tiles != t.n_tiles {
+            return Err("shape changed in roundtrip".into());
+        }
+        for (a, b) in t.windows.iter().zip(t2.windows.iter()) {
+            for (x, y) in a.f.iter().zip(b.f.iter()) {
+                if (x - y).abs() > 1e-9 {
+                    return Err(format!("f mismatch {x} vs {y}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_swap_is_involutive() {
+    let cfg = ArchConfig::paper();
+    check("swap-involution", 30, |g: &mut Gen| {
+        let mut rng = Rng::seed_from_u64(g.rng.next_u64());
+        let links = topology::mesh_links(&cfg);
+        let mut d = Design::random_placement(&cfg, links, &mut rng);
+        let orig = d.clone();
+        let p1 = g.int(0, 63);
+        let p2 = g.int(0, 63);
+        if p1 == p2 {
+            return Ok(());
+        }
+        d.swap_positions(p1, p2);
+        d.swap_positions(p1, p2);
+        if d != orig {
+            return Err("double swap did not restore design".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,139 @@
+//! Integration: thermal model cross-validation — the Eq.(7) fast stack
+//! model (MOO objective) against the finite-volume grid solver (3D-ICE
+//! substitute), and the paper's qualitative thermal claims.
+
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::coordinator::validate::detailed_peak_temp;
+use hem3d::eval::objectives::evaluate;
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::thermal::T_AMBIENT_C;
+use hem3d::traffic::{benchmark, generate};
+use hem3d::util::Rng;
+
+/// The fast Eq.(7) objective must *rank* designs like the detailed grid
+/// solver on the structured differences the optimizer actually explores
+/// (how high the hot GPU tiles sit in the stack).  Random-permutation
+/// noise differs only in lateral clustering, which the per-stack Eq.(7)
+/// model — like the paper's — intentionally folds into the constant T_H.
+#[test]
+fn stack_model_ranks_like_grid_solver_tsv() {
+    let cfg = ArchConfig::paper();
+    let tech = TechParams::tsv();
+    let geo = Geometry::new(&cfg, &tech);
+    let tiles = TileSet::from_arch(&cfg);
+    let trace = generate(&benchmark("lv").unwrap(), &tiles, cfg.windows, 3);
+    let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+    let links = topology::mesh_links(&cfg);
+
+    // Family of placements: rotate the GPU block upward through the
+    // position space in steps — progressively hotter designs.
+    let mut rng = Rng::seed_from_u64(17);
+    let designs: Vec<Design> = (0..5)
+        .map(|k| {
+            // GPUs occupy positions [8*k, 8*k+40): k=0 bottom-heavy,
+            // k=3 top-heavy.
+            let gpu_lo = 6 * k;
+            let mut tile_at = vec![usize::MAX; 64];
+            let mut others: Vec<usize> = (0..8).chain(48..64).collect();
+            rng.shuffle(&mut others);
+            let mut oi = 0;
+            let mut gi = 8; // gpu ids 8..48
+            for pos in 0..64 {
+                if pos >= gpu_lo && pos < gpu_lo + 40 {
+                    tile_at[pos] = gi;
+                    gi += 1;
+                } else {
+                    tile_at[pos] = others[oi];
+                    oi += 1;
+                }
+            }
+            Design::new(tile_at, links.clone())
+        })
+        .collect();
+
+    let mut fast: Vec<f64> = Vec::new();
+    let mut detailed: Vec<f64> = Vec::new();
+    for d in &designs {
+        let r = Routing::build(d);
+        fast.push(evaluate(&ctx, d, &r).tmax);
+        detailed.push(detailed_peak_temp(&ctx, d));
+    }
+    // Pairwise order agreement on all pairs with a >0.5C detailed gap.
+    let mut agree = 0;
+    let mut total = 0;
+    for i in 0..designs.len() {
+        for j in (i + 1)..designs.len() {
+            if (detailed[i] - detailed[j]).abs() < 0.5 {
+                continue;
+            }
+            total += 1;
+            if (fast[i] < fast[j]) == (detailed[i] < detailed[j]) {
+                agree += 1;
+            }
+        }
+    }
+    assert!(total >= 4, "structured family too flat ({total} informative pairs)");
+    assert!(
+        agree * 10 >= total * 8,
+        "rank agreement {agree}/{total} below 80% (fast={fast:?} detailed={detailed:?})"
+    );
+}
+
+#[test]
+fn paper_fig4_qualitative_claims() {
+    // (a) M3D placement-insensitive, TSV strongly placement-sensitive;
+    // (b) M3D peak far below cooled TSV for hot workloads;
+    // (c) dry TSV unmanageable.
+    let cfg = ArchConfig::paper();
+    let tiles = TileSet::from_arch(&cfg);
+    let trace = generate(&benchmark("lv").unwrap(), &tiles, cfg.windows, 5);
+    let links = topology::mesh_links(&cfg);
+
+    let mut near: Vec<usize> = Vec::new();
+    near.extend(8..48);
+    near.extend(0..8);
+    near.extend(48..64);
+    let mut far: Vec<usize> = Vec::new();
+    far.extend(48..64);
+    far.extend(0..8);
+    far.extend(8..48);
+    let d_near = Design::new(near, links.clone());
+    let d_far = Design::new(far, links);
+
+    let tsv = TechParams::tsv();
+    let m3d = TechParams::m3d();
+    let mut dry = TechParams::tsv();
+    dry.cooled = false;
+
+    let temp = |tech: &TechParams, d: &Design| {
+        let geo = Geometry::new(&cfg, tech);
+        let ctx = EncodeCtx::new(&geo, tech, &tiles, &trace);
+        detailed_peak_temp(&ctx, d)
+    };
+
+    let tsv_spread = temp(&tsv, &d_far) - temp(&tsv, &d_near);
+    let m3d_spread = temp(&m3d, &d_far) - temp(&m3d, &d_near);
+    assert!(tsv_spread > 10.0, "TSV placement spread only {tsv_spread}C");
+    assert!(m3d_spread < 2.0, "M3D placement spread {m3d_spread}C too large");
+
+    assert!(temp(&m3d, &d_far) + 15.0 < temp(&tsv, &d_far));
+    assert!(temp(&dry, &d_near) > 150.0, "dry TSV should be unmanageable");
+}
+
+#[test]
+fn temperatures_scale_linearly_without_leakage() {
+    // The grid solver is linear; doubling every source doubles the rise.
+    use hem3d::thermal::{GridParams, LayerStack, ThermalGrid};
+    let stack = LayerStack::m3d();
+    let grid = ThermalGrid::new(stack.z(), 8, 8, GridParams::from_stack(&stack));
+    let mut p = vec![0.0; stack.z() * 64];
+    let zl = stack.tier_layer(3);
+    p[zl * 64 + 27] = 1.3;
+    p[zl * 64 + 36] = 0.7;
+    let r1 = grid.solve_peak(&p, 800);
+    let p2: Vec<f64> = p.iter().map(|x| x * 2.0).collect();
+    let r2 = grid.solve_peak(&p2, 800);
+    assert!((r2 / r1 - 2.0).abs() < 1e-9);
+    assert!(r1 > 0.0 && T_AMBIENT_C + r1 < 200.0);
+}

@@ -1,0 +1,95 @@
+//! Integration: topology generation x routing x design invariants at the
+//! paper's full 64-tile scale, across many seeds.
+
+use hem3d::arch::design::Design;
+use hem3d::arch::geometry::Geometry;
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::noc::{routing::Routing, topology};
+use hem3d::util::Rng;
+
+#[test]
+fn swnoc_routing_invariants_over_many_seeds() {
+    let cfg = ArchConfig::paper();
+    let geo = Geometry::new(&cfg, &TechParams::m3d());
+    for seed in 0..20 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let links = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng);
+        let design = Design::with_identity_placement(cfg.n_tiles(), links);
+        design.validate().expect("valid design");
+        let routing = Routing::build(&design);
+        let n = design.n_tiles();
+        for s in 0..n {
+            for d in 0..n {
+                let h = routing.hop_count(s, d);
+                if s == d {
+                    assert_eq!(h, 0);
+                    continue;
+                }
+                assert!(h > 0 && h < n, "hop count {h} out of range");
+                // Path validity: correct endpoints, length, existing links.
+                let path = routing.path(s, d);
+                assert_eq!(path.len(), h + 1);
+                assert_eq!(path[0], s);
+                assert_eq!(*path.last().unwrap(), d);
+                // Triangle inequality via any intermediate node (BFS
+                // optimality spot check on a few nodes).
+                if s % 13 == 0 && d % 11 == 0 {
+                    for k in (0..n).step_by(17) {
+                        assert!(
+                            h <= routing.hop_count(s, k) + routing.hop_count(k, d),
+                            "triangle violation {s}->{k}->{d}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mesh_diameter_matches_theory() {
+    // 4 tiers of 4x4: diameter = 3 + 3 + 3 = 9.
+    let cfg = ArchConfig::paper();
+    let design = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+    let routing = Routing::build(&design);
+    let max_h = (0..64)
+        .flat_map(|s| (0..64).map(move |d| (s, d)))
+        .map(|(s, d)| routing.hop_count(s, d))
+        .max()
+        .unwrap();
+    assert_eq!(max_h, 9);
+}
+
+#[test]
+fn swnoc_shrinks_diameter_vs_mesh() {
+    let cfg = ArchConfig::paper();
+    let geo = Geometry::new(&cfg, &TechParams::m3d());
+    let mesh = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+    let mesh_mean = Routing::build(&mesh).mean_hops();
+    let mut wins = 0;
+    for seed in 0..10 {
+        let mut rng = Rng::seed_from_u64(100 + seed);
+        let links = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng);
+        let d = Design::with_identity_placement(cfg.n_tiles(), links);
+        if Routing::build(&d).mean_hops() < mesh_mean {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 8, "SWNoC beat mesh mean hops only {wins}/10 times");
+}
+
+#[test]
+fn perturbation_chain_preserves_invariants() {
+    // 200-step random perturbation walk: every intermediate design valid.
+    let cfg = ArchConfig::paper();
+    let geo = Geometry::new(&cfg, &TechParams::tsv());
+    let mut rng = Rng::seed_from_u64(9);
+    let links = topology::swnoc_links(&cfg, &geo, 1.8, &mut rng);
+    let mut design = Design::random_placement(&cfg, links, &mut rng);
+    for step in 0..200 {
+        let (next, _) = hem3d::opt::perturb::neighbor(&design, &mut rng);
+        next.validate().unwrap_or_else(|e| panic!("step {step}: {e}"));
+        assert_eq!(next.links.len(), design.links.len());
+        design = next;
+    }
+}
