@@ -1,0 +1,17 @@
+# Convenience targets.  `artifacts` needs the L2 Python toolchain (JAX);
+# everything else is offline-capable.
+
+.PHONY: build test doc artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+doc:
+	cargo doc --no-deps
+
+# AOT-lower the L2 models to artifacts/*.hlo.txt (see python/compile/aot.py).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts

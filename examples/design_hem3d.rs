@@ -21,7 +21,8 @@ fn main() -> anyhow::Result<()> {
     let effort = match std::env::var("HEM3D_EFFORT").as_deref() {
         Ok("full") => Effort::full(),
         _ => Effort::quick(),
-    };
+    }
+    .with_workers(0); // 0 = all cores (HEM3D_WORKERS overrides)
     let seed = 42u64;
     let evaluator = Evaluator::load("artifacts").ok();
     if evaluator.is_none() {
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                 .take(hem3d::runtime::dims::MOO_BATCH)
                 .map(|c| &c.design)
                 .collect();
-            let art = batch::artifact_scores(ev, &ctx_po, &designs)?;
+            let art = batch::artifact_scores(ev, &ctx_po, &designs, effort.workers)?;
             let mut max_rel = 0.0f64;
             for (d, a) in designs.iter().zip(art.iter()) {
                 let routing = Routing::build(d);

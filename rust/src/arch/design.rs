@@ -7,7 +7,9 @@ use crate::util::Rng;
 /// An undirected NoC link between two router positions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Link {
+    /// Smaller endpoint position.
     pub a: u16,
+    /// Larger endpoint position.
     pub b: u16,
 }
 
@@ -19,6 +21,7 @@ impl Link {
         Link { a: a as u16, b: b as u16 }
     }
 
+    /// Endpoints as `(a, b)` usizes.
     pub fn ends(&self) -> (usize, usize) {
         (self.a as usize, self.b as usize)
     }
@@ -61,6 +64,7 @@ impl Design {
         Design::new(tile_at, links)
     }
 
+    /// Number of tiles (= grid positions).
     pub fn n_tiles(&self) -> usize {
         self.tile_at.len()
     }

@@ -5,7 +5,7 @@
 //! tensor `F` is shared across the whole batch while `Q`/`LATW` fold each
 //! design's placement and routing.
 
-use crate::arch::design::Design;
+use crate::arch::design::{Design, Link};
 use crate::arch::geometry::Geometry;
 use crate::arch::tile::{TileKind, TileSet};
 use crate::config::TechParams;
@@ -15,17 +15,45 @@ use crate::runtime::evaluator::{dims, MooBatch};
 use crate::thermal::StackModel;
 use crate::traffic::Trace;
 
+/// The canonical design encoding used as the evaluation-memoization key:
+/// the placement permutation plus the normalised link set.  Two designs
+/// with equal keys are scored identically by every evaluator (sparse,
+/// dense, artifact), so `runtime::evaluator::EvalCache` may replay cached
+/// objectives for them.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DesignKey {
+    /// `tile_at` compacted to u16 (tile ids are < 2^16 by construction).
+    tiles: Vec<u16>,
+    /// The sorted, deduplicated link set.
+    links: Vec<Link>,
+}
+
+/// Encode a design into its memoization key (DESIGN.md §1.3).
+pub fn design_key(design: &Design) -> DesignKey {
+    DesignKey {
+        tiles: design.tile_at.iter().map(|&t| t as u16).collect(),
+        links: design.links.clone(),
+    }
+}
+
 /// Precomputed per-(tech, trace) context shared by every encoded design.
 pub struct EncodeCtx<'a> {
+    /// Physical grid geometry.
     pub geo: &'a Geometry,
+    /// Technology constants.
     pub tech: &'a TechParams,
+    /// Tile taxonomy / id layout.
     pub tiles: &'a TileSet,
+    /// The application traffic trace.
     pub trace: &'a Trace,
+    /// Per-tile power model (derived from `tech`).
     pub power: PowerModel,
+    /// Eq. (7) stack-thermal coefficients (derived from `tech`).
     pub stack: StackModel,
 }
 
 impl<'a> EncodeCtx<'a> {
+    /// Build the context, deriving the power and stack models.
     pub fn new(
         geo: &'a Geometry,
         tech: &'a TechParams,
@@ -62,11 +90,31 @@ impl<'a> EncodeCtx<'a> {
     /// Encode one design into batch slot `slot` (Q, LATW, PACT).
     pub fn encode_design(&self, design: &Design, routing: &Routing, batch: &mut MooBatch, slot: usize) {
         use dims::*;
-        let n = self.tiles.n_tiles();
         debug_assert!(slot < MOO_BATCH);
+        let q = &mut batch.q[slot * N_LINKS * N_PAIRS..(slot + 1) * N_LINKS * N_PAIRS];
+        let latw = &mut batch.latw[slot * N_PAIRS..(slot + 1) * N_PAIRS];
+        let pact = &mut batch.pact[slot * N_WINDOWS * N_TILES..(slot + 1) * N_WINDOWS * N_TILES];
+        self.encode_design_into(design, routing, q, latw, pact);
+    }
+
+    /// Encode one design into caller-provided per-slot slices (Q, LATW,
+    /// PACT).  Slot slices are disjoint, so `coordinator::batch` encodes a
+    /// whole batch in parallel with `util::threadpool::scope_map`.
+    pub fn encode_design_into(
+        &self,
+        design: &Design,
+        routing: &Routing,
+        q: &mut [f32],
+        latw: &mut [f32],
+        pact: &mut [f32],
+    ) {
+        use dims::*;
+        let n = self.tiles.n_tiles();
+        debug_assert_eq!(q.len(), N_LINKS * N_PAIRS);
+        debug_assert_eq!(latw.len(), N_PAIRS);
+        debug_assert_eq!(pact.len(), N_WINDOWS * N_TILES);
 
         // --- Q: link-pair incidence in tile-id pair space ------------------
-        let q = &mut batch.q[slot * N_LINKS * N_PAIRS..(slot + 1) * N_LINKS * N_PAIRS];
         q.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
             let pi = design.pos_of[i];
@@ -93,7 +141,6 @@ impl<'a> EncodeCtx<'a> {
         }
 
         // --- LATW: Eq.(1) weights over CPU<->LLC pairs ----------------------
-        let latw = &mut batch.latw[slot * N_PAIRS..(slot + 1) * N_PAIRS];
         latw.iter_mut().for_each(|v| *v = 0.0);
         let c = self.tiles.n_cpu as f64;
         let m = self.tiles.n_llc as f64;
@@ -110,7 +157,6 @@ impl<'a> EncodeCtx<'a> {
         }
 
         // --- PACT: per-position power per window ----------------------------
-        let pact = &mut batch.pact[slot * N_WINDOWS * N_TILES..(slot + 1) * N_WINDOWS * N_TILES];
         for w in 0..N_WINDOWS {
             let win = &self.trace.windows[w];
             for pos in 0..n {
@@ -154,6 +200,24 @@ mod tests {
         assert!((dense.umean as f64 - sparse.umean).abs() / sparse.umean < 1e-4);
         assert!((dense.usigma as f64 - sparse.usigma).abs() / sparse.usigma < 1e-4);
         assert!((dense.tmax as f64 - sparse.tmax).abs() / sparse.tmax < 1e-4);
+    }
+
+    #[test]
+    fn design_key_tracks_placement_and_links() {
+        let cfg = ArchConfig::paper();
+        let links = topology::mesh_links(&cfg);
+        let a = Design::with_identity_placement(cfg.n_tiles(), links.clone());
+        let b = Design::with_identity_placement(cfg.n_tiles(), links.clone());
+        assert_eq!(design_key(&a), design_key(&b));
+
+        let mut swapped = a.clone();
+        swapped.swap_positions(0, 1);
+        assert_ne!(design_key(&a), design_key(&swapped));
+
+        let mut rewired = Design::with_identity_placement(cfg.n_tiles(), links);
+        let new = Link::new(0, 63);
+        assert!(rewired.replace_link(0, new));
+        assert_ne!(design_key(&a), design_key(&rewired));
     }
 
     #[test]

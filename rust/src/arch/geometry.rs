@@ -10,8 +10,11 @@ use crate::config::{ArchConfig, TechParams};
 /// Eq. (7) thermal model.
 #[derive(Debug, Clone)]
 pub struct Geometry {
+    /// Logic tiers.
     pub tiers: usize,
+    /// Tile rows per tier.
     pub rows: usize,
+    /// Tile columns per tier.
     pub cols: usize,
     /// Tile pitch [mm] (technology dependent; M3D tiles are smaller).
     pub pitch_mm: f64,
@@ -20,6 +23,7 @@ pub struct Geometry {
 }
 
 impl Geometry {
+    /// Geometry of a configuration in a given technology.
     pub fn new(cfg: &ArchConfig, tech: &TechParams) -> Self {
         Geometry {
             tiers: cfg.tiers,
@@ -30,21 +34,25 @@ impl Geometry {
         }
     }
 
+    /// Total grid positions.
     pub fn n_pos(&self) -> usize {
         self.tiers * self.rows * self.cols
     }
 
     #[inline]
+    /// Tier of a position.
     pub fn tier_of(&self, pos: usize) -> usize {
         pos / (self.rows * self.cols)
     }
 
     #[inline]
+    /// Row of a position within its tier.
     pub fn row_of(&self, pos: usize) -> usize {
         (pos % (self.rows * self.cols)) / self.cols
     }
 
     #[inline]
+    /// Column of a position within its tier.
     pub fn col_of(&self, pos: usize) -> usize {
         pos % self.cols
     }
@@ -56,6 +64,7 @@ impl Geometry {
     }
 
     #[inline]
+    /// Position index of (tier, row, col).
     pub fn pos_of(&self, tier: usize, row: usize, col: usize) -> usize {
         tier * self.rows * self.cols + row * self.cols + col
     }

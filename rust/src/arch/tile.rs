@@ -12,6 +12,7 @@ pub enum TileKind {
 }
 
 impl TileKind {
+    /// Short lowercase name (`"cpu"`/`"gpu"`/`"llc"`).
     pub fn name(&self) -> &'static str {
         match self {
             TileKind::Cpu => "cpu",
@@ -26,20 +27,26 @@ impl TileKind {
 /// relies on this ordering.
 #[derive(Debug, Clone)]
 pub struct TileSet {
+    /// CPU tile count.
     pub n_cpu: usize,
+    /// GPU tile count.
     pub n_gpu: usize,
+    /// LLC tile count.
     pub n_llc: usize,
 }
 
 impl TileSet {
+    /// Build a tile set with the canonical id layout.
     pub fn new(n_cpu: usize, n_gpu: usize, n_llc: usize) -> Self {
         TileSet { n_cpu, n_gpu, n_llc }
     }
 
+    /// Tile set of an architecture configuration.
     pub fn from_arch(cfg: &crate::config::ArchConfig) -> Self {
         TileSet::new(cfg.n_cpu, cfg.n_gpu, cfg.n_llc)
     }
 
+    /// Total tile count.
     pub fn n_tiles(&self) -> usize {
         self.n_cpu + self.n_gpu + self.n_llc
     }

@@ -8,6 +8,7 @@ use hem3d::coordinator::report::{self, f, table};
 use hem3d::util::cli::Args;
 use hem3d::log_info;
 
+/// Regenerate the requested figures into `--out`.
 pub fn run(args: &Args) -> Result<()> {
     let figs: Vec<u32> = args
         .opt_or("figs", "7,8,9,10")
@@ -21,7 +22,9 @@ pub fn run(args: &Args) -> Result<()> {
     let effort = match args.opt_or("effort", "quick").as_str() {
         "full" => Effort::full(),
         _ => Effort::quick(),
-    };
+    }
+    .with_workers(args.usize_or("workers", 1));
+    log_info!("campaign workers: {}", effort.workers);
 
     for fig in figs {
         match fig {

@@ -15,6 +15,7 @@ use hem3d::runtime::Evaluator;
 use hem3d::util::cli::Args;
 use hem3d::{log_info, log_warn};
 
+/// Run one DSE leg and report the validated winner.
 pub fn run(args: &Args) -> Result<()> {
     let bench = args.opt_or("bench", "bp");
     let tech = Tech::parse(&args.opt_or("tech", "m3d"))
@@ -25,11 +26,13 @@ pub fn run(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown algo (moo-stage|amosa)"))?;
     let seed = args.u64_or("seed", 42);
     let artifacts = args.opt_or("artifacts", "artifacts");
+    let workers = args.usize_or("workers", 1);
 
     let mut effort = match args.opt_or("effort", "quick").as_str() {
         "full" => Effort::full(),
         _ => Effort::quick(),
-    };
+    }
+    .with_workers(workers);
     if let Some(iters) = args.opt("iters").and_then(|s| s.parse::<usize>().ok()) {
         effort.stage.max_iters = iters;
     }
@@ -39,12 +42,18 @@ pub fn run(args: &Args) -> Result<()> {
         Mode::Pt => Selection::MinEtUnderTth,
     };
 
-    log_info!("optimize: bench={bench} tech={} mode={} algo={}", tech.name(), mode.name(), algo.name());
+    log_info!(
+        "optimize: bench={bench} tech={} mode={} algo={} workers={}",
+        tech.name(),
+        mode.name(),
+        algo.name(),
+        effort.workers
+    );
     let world = LegWorld::new(&bench, tech, seed);
     let leg = campaign::run_leg(&world, mode, algo, selection, &effort, seed);
 
     println!("leg: bench={} tech={} mode={} algo={}", leg.bench, leg.tech.name(), leg.mode.name(), leg.algo.name());
-    println!("  evaluations:        {}", leg.evals);
+    println!("  evaluations:        {} (distinct; cache replays excluded)", leg.evals);
     println!("  optimizer time:     {:.2} s", leg.opt_seconds);
     println!("  convergence time:   {:.2} s", leg.convergence_seconds);
     println!("  pareto candidates validated: {}", leg.candidates.len());
@@ -61,7 +70,7 @@ pub fn run(args: &Args) -> Result<()> {
                 let ctx = world.encode_ctx();
                 let designs: Vec<&hem3d::arch::Design> =
                     leg.candidates.iter().take(hem3d::runtime::dims::MOO_BATCH).map(|c| &c.design).collect();
-                let art = batch::artifact_scores(&ev, &ctx, &designs)?;
+                let art = batch::artifact_scores(&ev, &ctx, &designs, effort.workers)?;
                 let mut max_rel = 0.0f64;
                 for (d, a) in designs.iter().zip(art.iter()) {
                     let routing = Routing::build(d);

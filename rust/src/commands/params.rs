@@ -6,6 +6,7 @@ use hem3d::config::{Tech, TechParams};
 use hem3d::thermal::StackModel;
 use hem3d::util::cli::Args;
 
+/// Print the Table-1 parameter tables.
 pub fn run(args: &Args) -> Result<()> {
     let techs: Vec<Tech> = match args.opt("tech") {
         Some(s) => vec![Tech::parse(s).ok_or_else(|| anyhow::anyhow!("unknown tech '{s}'"))?],

@@ -5,6 +5,7 @@ use anyhow::Result;
 use hem3d::timing::analyze_gpu_pipeline;
 use hem3d::util::cli::Args;
 
+/// Print the Fig 6 planar-vs-M3D pipeline analysis.
 pub fn run(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 42);
     let r = analyze_gpu_pipeline(seed);

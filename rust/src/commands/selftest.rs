@@ -1,49 +1,47 @@
-//! `hem3d selftest` — the L1<->L3 contract check.
+//! `hem3d selftest` — the system self-check.
 //!
-//! Builds a deterministic random `MooBatch`, scores it through the AOT
-//! `moo_eval` artifact (PJRT) and through the native Rust mirror, and
-//! requires elementwise agreement.  Also round-trips the `thermal_solve`
-//! artifact against the native Jacobi solver.
+//! With AOT artifacts available (and the `xla` feature enabled) this is the
+//! L1<->L3 contract check: a deterministic random `MooBatch` is scored
+//! through the AOT `moo_eval` artifact (PJRT) and through the native Rust
+//! mirror, requiring elementwise agreement; the `thermal_solve` artifact is
+//! round-tripped against the native Jacobi solver likewise.
+//!
+//! Without artifacts (the offline default) the same contracts are checked
+//! natively: the sparse DSE evaluator against the dense `MooBatch` mirror on
+//! real encoded designs, and the two-grid thermal schedule against the exact
+//! dense solve — so `cargo run --release -- selftest` is meaningful from a
+//! clean checkout (DESIGN.md §1.4).
 
-use anyhow::{Context, Result};
-use hem3d::eval::native::moo_eval_native;
+use anyhow::Result;
+use hem3d::eval::native::{moo_eval_native, moo_eval_one};
+use hem3d::log_info;
+use hem3d::log_warn;
 use hem3d::runtime::evaluator::{dims, Evaluator, MooBatch};
 use hem3d::thermal::grid::{GridParams, ThermalGrid};
 use hem3d::util::cli::Args;
 use hem3d::util::Rng;
-use hem3d::log_info;
 
+/// Run the artifact or native-only self-check.
 pub fn run(args: &Args) -> Result<()> {
     let dir = args.opt_or("artifacts", "artifacts");
     let seed = args.u64_or("seed", 7);
 
-    let ev = Evaluator::load(&dir)
-        .with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`)"))?;
+    match Evaluator::load(&dir) {
+        Ok(ev) => artifact_selftest(&ev, seed),
+        Err(e) => {
+            log_warn!("artifacts unavailable ({e:#}); running the native-only selftest");
+            native_selftest(seed)
+        }
+    }
+}
+
+/// Artifact path: AOT kernels vs the native mirrors (requires `xla`).
+fn artifact_selftest(ev: &Evaluator, seed: u64) -> Result<()> {
     log_info!("PJRT platform: {}", ev.platform);
 
     // ---- moo_eval: artifact vs native ------------------------------------
     let mut rng = Rng::seed_from_u64(seed);
-    let mut batch = MooBatch::zeroed();
-    for v in batch.q.iter_mut() {
-        *v = if rng.chance(0.05) { 1.0 } else { 0.0 };
-    }
-    for v in batch.f.iter_mut() {
-        *v = rng.f32() * 0.2;
-    }
-    for v in batch.latw.iter_mut() {
-        *v = rng.f32();
-    }
-    for v in batch.pact.iter_mut() {
-        *v = rng.f32() * 3.0;
-    }
-    for v in batch.cth.iter_mut() {
-        *v = 0.5 + rng.f32();
-    }
-    // Valid one-hot stack selector.
-    for n in 0..dims::N_TILES {
-        let s = n % dims::N_STACKS;
-        batch.ssel[n * dims::N_STACKS + s] = 1.0;
-    }
+    let batch = random_batch(&mut rng);
 
     let got = ev.moo_eval(&batch)?;
     let want = moo_eval_native(&batch);
@@ -85,4 +83,101 @@ pub fn run(args: &Args) -> Result<()> {
 
     println!("selftest OK (platform={}, seed={seed})", ev.platform);
     Ok(())
+}
+
+/// Native path: the same contracts checked without PJRT.
+fn native_selftest(seed: u64) -> Result<()> {
+    use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+    use hem3d::config::{ArchConfig, TechParams};
+    use hem3d::noc::{routing::Routing, topology};
+
+    // ---- sparse DSE evaluator vs the dense MooBatch mirror ----------------
+    let cfg = ArchConfig::paper();
+    let mut max_rel = 0f64;
+    for (t_idx, tech) in [TechParams::tsv(), TechParams::m3d()].into_iter().enumerate() {
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let profile = hem3d::traffic::benchmark("bp").expect("bp profile");
+        let trace = hem3d::traffic::generate(&profile, &tiles, cfg.windows, seed);
+        let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+        let mut rng = Rng::seed_from_u64(seed ^ t_idx as u64);
+        let designs = [
+            Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg)),
+            Design::random_placement(
+                &cfg,
+                topology::swnoc_links(&cfg, &geo, 1.8, &mut rng),
+                &mut rng,
+            ),
+        ];
+        let mut batch = MooBatch::zeroed();
+        ctx.fill_shared(&mut batch);
+        for (slot, d) in designs.iter().enumerate() {
+            let routing = Routing::build(d);
+            ctx.encode_design(d, &routing, &mut batch, slot);
+            let dense = moo_eval_one(&batch, slot);
+            let sparse = hem3d::eval::objectives::evaluate(&ctx, d, &routing);
+            for (a, b) in [
+                (dense.lat as f64, sparse.lat),
+                (dense.umean as f64, sparse.umean),
+                (dense.usigma as f64, sparse.usigma),
+                (dense.tmax as f64, sparse.tmax),
+            ] {
+                max_rel = max_rel.max((a - b).abs() / b.abs().max(1e-9));
+            }
+        }
+    }
+    anyhow::ensure!(max_rel < 1e-4, "sparse/dense evaluator mismatch: {max_rel:.3e}");
+    log_info!("sparse evaluator vs dense mirror: max rel err {max_rel:.3e} OK");
+
+    // ---- two-grid thermal schedule vs the exact dense solve ---------------
+    let mut max_rel = 0f64;
+    for stack in [
+        hem3d::thermal::LayerStack::m3d(),
+        hem3d::thermal::LayerStack::tsv(true),
+        hem3d::thermal::LayerStack::tsv(false),
+    ] {
+        let grid = ThermalGrid::new(stack.z(), 6, 6, GridParams::from_stack(&stack));
+        let mut p = vec![0.0f64; stack.z() * 36];
+        let zl = stack.tier_layer(3);
+        for i in 0..36 {
+            p[zl * 36 + i] = 0.5 + 0.1 * (i % 5) as f64;
+        }
+        let mg = grid.solve_peak(&p, 400);
+        let exact = grid.solve_exact(&p).iter().copied().fold(f64::MIN, f64::max);
+        max_rel = max_rel.max((mg - exact).abs() / exact);
+    }
+    anyhow::ensure!(max_rel < 5e-3, "two-grid/exact thermal mismatch: {max_rel:.3e}");
+    log_info!("two-grid thermal vs exact dense solve: max rel err {max_rel:.3e} OK");
+
+    println!(
+        "selftest OK (native-only; build with --features xla and `make artifacts` \
+for the PJRT cross-check; seed={seed})"
+    );
+    Ok(())
+}
+
+/// Deterministic random batch with a valid one-hot stack selector.
+fn random_batch(rng: &mut Rng) -> MooBatch {
+    let mut batch = MooBatch::zeroed();
+    for v in batch.q.iter_mut() {
+        *v = if rng.chance(0.05) { 1.0 } else { 0.0 };
+    }
+    for v in batch.f.iter_mut() {
+        *v = rng.f32() * 0.2;
+    }
+    for v in batch.latw.iter_mut() {
+        *v = rng.f32();
+    }
+    for v in batch.pact.iter_mut() {
+        *v = rng.f32() * 3.0;
+    }
+    for v in batch.cth.iter_mut() {
+        *v = 0.5 + rng.f32();
+    }
+    for n in 0..dims::N_TILES {
+        let s = n % dims::N_STACKS;
+        batch.ssel[n * dims::N_STACKS + s] = 1.0;
+    }
+    batch
 }

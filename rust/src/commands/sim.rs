@@ -11,6 +11,7 @@ use hem3d::noc::{routing::Routing, topology};
 use hem3d::util::cli::Args;
 use hem3d::util::{stats, Rng};
 
+/// Run the cycle-level NoC simulation and print its stats.
 pub fn run(args: &Args) -> Result<()> {
     let bench = args.opt_or("bench", "bp");
     let tech = Tech::parse(&args.opt_or("tech", "m3d"))

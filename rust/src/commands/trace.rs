@@ -8,6 +8,7 @@ use hem3d::traffic::{self, trace as trace_io};
 use hem3d::util::cli::Args;
 use hem3d::log_info;
 
+/// Generate and save a benchmark traffic trace.
 pub fn run(args: &Args) -> Result<()> {
     let bench = args.opt_or("bench", "bp");
     let seed = args.u64_or("seed", 42);

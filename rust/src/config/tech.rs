@@ -13,11 +13,14 @@ use crate::thermal::LayerStack;
 /// Which 3D integration technology a design uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Tech {
+    /// Through-silicon-via die stacking.
     Tsv,
+    /// Monolithic 3D (sequential) integration.
     M3d,
 }
 
 impl Tech {
+    /// Short lowercase name (`"tsv"` / `"m3d"`).
     pub fn name(&self) -> &'static str {
         match self {
             Tech::Tsv => "tsv",
@@ -25,6 +28,7 @@ impl Tech {
         }
     }
 
+    /// Parse a technology name; `None` for anything else.
     pub fn parse(s: &str) -> Option<Tech> {
         match s {
             "tsv" => Some(Tech::Tsv),
@@ -37,6 +41,7 @@ impl Tech {
 /// All technology-dependent constants.
 #[derive(Debug, Clone)]
 pub struct TechParams {
+    /// Which integration technology these parameters describe.
     pub tech: Tech,
     /// CPU clock [GHz] (planar 2.0; M3D +14% [9]).
     pub cpu_freq_ghz: f64,
@@ -102,6 +107,7 @@ impl TechParams {
         }
     }
 
+    /// Parameters for the given technology.
     pub fn for_tech(tech: Tech) -> Self {
         match tech {
             Tech::Tsv => Self::tsv(),

@@ -16,12 +16,41 @@ use crate::thermal::{GridParams, T_AMBIENT_C};
 
 use super::validate::power_grid;
 
+/// Encode `designs` into the batch's per-slot tensors, fanning the
+/// routing build + tensor fill over `workers` threads.
+///
+/// The three per-design tensors (Q, LATW, PACT) are split into disjoint
+/// slot slices with `chunks_mut`, so the workers never alias; the shared
+/// tensors (F, CTH, SSEL) are filled once, serially, beforehand.
+pub fn encode_batch(
+    ctx: &EncodeCtx<'_>,
+    designs: &[&Design],
+    batch: &mut MooBatch,
+    workers: usize,
+) {
+    use crate::util::threadpool::scope_map;
+    ctx.fill_shared(batch);
+    let slots: Vec<(&Design, &mut [f32], &mut [f32], &mut [f32])> = designs
+        .iter()
+        .copied()
+        .zip(batch.q.chunks_mut(dims::N_LINKS * dims::N_PAIRS))
+        .zip(batch.latw.chunks_mut(dims::N_PAIRS))
+        .zip(batch.pact.chunks_mut(dims::N_WINDOWS * dims::N_TILES))
+        .map(|(((d, q), latw), pact)| (d, q, latw, pact))
+        .collect();
+    scope_map(slots, workers, |(design, q, latw, pact)| {
+        let routing = Routing::build(design);
+        ctx.encode_design_into(design, &routing, q, latw, pact);
+    });
+}
+
 /// Score up to MOO_BATCH designs through the `moo_eval` artifact.
 /// Returns per-design Scores (f32 precision, cast up).
 pub fn artifact_scores(
     ev: &Evaluator,
     ctx: &EncodeCtx<'_>,
     designs: &[&Design],
+    workers: usize,
 ) -> Result<Vec<Scores>> {
     anyhow::ensure!(
         designs.len() <= dims::MOO_BATCH,
@@ -30,11 +59,7 @@ pub fn artifact_scores(
         dims::MOO_BATCH
     );
     let mut batch = MooBatch::zeroed();
-    ctx.fill_shared(&mut batch);
-    for (slot, d) in designs.iter().enumerate() {
-        let routing = Routing::build(d);
-        ctx.encode_design(d, &routing, &mut batch, slot);
-    }
+    encode_batch(ctx, designs, &mut batch, workers);
     let raw = ev.moo_eval(&batch)?;
     Ok(raw
         .into_iter()

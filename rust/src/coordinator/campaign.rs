@@ -18,11 +18,14 @@ use super::validate::detailed_peak_temp;
 /// Which optimizer drives a leg.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algo {
+    /// MOO-STAGE: learner-guided iterated local search (the paper's solver).
     MooStage,
+    /// AMOSA: archived multi-objective simulated annealing (baseline).
     Amosa,
 }
 
 impl Algo {
+    /// Short name (`"moo-stage"` / `"amosa"`).
     pub fn name(&self) -> &'static str {
         match self {
             Algo::MooStage => "moo-stage",
@@ -30,6 +33,7 @@ impl Algo {
         }
     }
 
+    /// Parse an algorithm name; `None` for anything else.
     pub fn parse(s: &str) -> Option<Algo> {
         match s {
             "moo-stage" => Some(Algo::MooStage),
@@ -53,16 +57,23 @@ pub enum Selection {
 /// One validated Pareto candidate.
 #[derive(Debug, Clone)]
 pub struct Validated {
+    /// The validated candidate design.
     pub design: Design,
+    /// Modeled execution time (arbitrary units; compare ratios).
     pub et: f64,
+    /// Detailed-solver peak temperature [degC].
     pub temp_c: f64,
 }
 
 /// Result of one DSE leg.
 pub struct LegResult {
+    /// Benchmark the leg ran on.
     pub bench: String,
+    /// Integration technology.
     pub tech: Tech,
+    /// Objective mode (PO/PT).
     pub mode: Mode,
+    /// Optimizer that drove the leg.
     pub algo: Algo,
     /// Wall-clock seconds spent inside the optimizer.
     pub opt_seconds: f64,
@@ -71,6 +82,7 @@ pub struct LegResult {
     /// (best_phv, evals, elapsed_s) trajectory — drives the Fig 7
     /// time-to-quality comparison.
     pub history: Vec<(f64, u64, f64)>,
+    /// Distinct design evaluations spent.
     pub evals: u64,
     /// All validated Pareto members.
     pub candidates: Vec<Validated>,
@@ -93,10 +105,16 @@ impl LegResult {
 /// Effort preset for DSE legs (campaigns scale this).
 #[derive(Debug, Clone)]
 pub struct Effort {
+    /// MOO-STAGE configuration.
     pub stage: StageConfig,
+    /// AMOSA configuration.
     pub amosa: AmosaConfig,
     /// Cap on Pareto members that get detailed validation.
     pub validate_cap: usize,
+    /// Worker threads for candidate evaluation, Pareto validation, and
+    /// per-benchmark figure legs (`--workers N`; 1 = serial).  Results are
+    /// bit-identical for any value — see `tests/parallel_determinism.rs`.
+    pub workers: usize,
 }
 
 impl Effort {
@@ -122,6 +140,7 @@ impl Effort {
                 archive_cap: 32,
             },
             validate_cap: 6,
+            workers: 1,
         }
     }
 
@@ -131,28 +150,39 @@ impl Effort {
             stage: StageConfig::default(),
             amosa: AmosaConfig::default(),
             validate_cap: 12,
+            workers: 1,
         }
     }
-}
 
-/// Everything a leg needs, bundled (borrows the trace/context).
-pub struct LegInput<'a> {
-    pub cfg: &'a ArchConfig,
-    pub ctx: &'a EncodeCtx<'a>,
-    pub profile: &'a BenchProfile,
+    /// Builder-style worker-count override (`--workers N`; 0 = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = if workers == 0 {
+            crate::util::threadpool::default_workers()
+        } else {
+            workers
+        };
+        self
+    }
 }
 
 /// Build the shared context pieces for a (bench, tech) pair.
 pub struct LegWorld {
+    /// Architecture sizes.
     pub cfg: ArchConfig,
+    /// Technology constants.
     pub tech: TechParams,
+    /// Grid geometry in that technology.
     pub geo: Geometry,
+    /// Tile taxonomy.
     pub tiles: TileSet,
+    /// Workload shape parameters.
     pub profile: BenchProfile,
+    /// The generated traffic trace.
     pub trace: Trace,
 }
 
 impl LegWorld {
+    /// Build the world for one (benchmark, technology, seed).
     pub fn new(bench: &str, tech: Tech, seed: u64) -> Self {
         let cfg = ArchConfig::paper();
         let tech = TechParams::for_tech(tech);
@@ -163,6 +193,7 @@ impl LegWorld {
         LegWorld { cfg, tech, geo, tiles, profile, trace }
     }
 
+    /// Borrow an encoding context over this world.
     pub fn encode_ctx(&self) -> EncodeCtx<'_> {
         EncodeCtx::new(&self.geo, &self.tech, &self.tiles, &self.trace)
     }
@@ -178,7 +209,7 @@ pub fn run_leg(
     seed: u64,
 ) -> LegResult {
     let ctx = world.encode_ctx();
-    let problem = Problem::new(&ctx, mode);
+    let problem = Problem::new(&ctx, mode).with_workers(effort.workers);
     let start = Design::with_identity_placement(
         world.cfg.n_tiles(),
         topology::mesh_links(&world.cfg),
@@ -223,17 +254,21 @@ pub fn run_leg(
             .collect();
     }
 
+    // Each member's validation (routing + ET model + detailed thermal
+    // fixed point) is independent and pure, so fan it out; `scope_map`
+    // preserves order, keeping the winner selection deterministic.
     let coeffs = PerfCoeffs::default();
-    let mut candidates: Vec<Validated> = members
-        .iter()
-        .map(|m| {
+    let mut candidates: Vec<Validated> = crate::util::threadpool::scope_map(
+        members,
+        effort.workers,
+        |m| {
             let routing = Routing::build(&m.design);
             let scores = crate::eval::objectives::evaluate(&ctx, &m.design, &routing);
             let et = exec_time(&ctx, &world.profile, &m.design, &routing, &scores, &coeffs);
             let temp = detailed_peak_temp(&ctx, &m.design);
             Validated { design: m.design.clone(), et: et.total, temp_c: temp }
-        })
-        .collect();
+        },
+    );
 
     // Winner per the selection rule.
     let winner = select(&mut candidates, selection, world.cfg.t_threshold_c);

@@ -5,41 +5,66 @@
 use crate::config::Tech;
 use crate::opt::Mode;
 use crate::util::json::Json;
+use crate::util::threadpool::scope_map;
 
 use super::campaign::{run_leg, Algo, Effort, LegWorld, Selection};
 
+/// The six Rodinia benchmarks of §5.1, in figure order.
 pub const BENCHES: [&str; 6] = ["bp", "nw", "lv", "lud", "knn", "pf"];
+
+/// Fan the per-benchmark legs of one figure over `effort.workers` threads.
+///
+/// Each benchmark's legs are fully independent (own `LegWorld`, own seeds),
+/// and `scope_map` returns results in input order, so the assembled figure
+/// is bit-identical to the serial one.  The worker budget is *split*, not
+/// multiplied, across the nesting: with W workers and B benchmarks the
+/// outer fan-out takes min(W, B) threads and each leg's inner stages get
+/// the remaining W / min(W, B) — total concurrency stays ~W.  (Worker
+/// counts never affect results, so the split is free to vary.)
+fn map_benches<R: Send>(
+    benches: &[&str],
+    effort: &Effort,
+    f: impl Fn(&str, &Effort) -> R + Sync,
+) -> Vec<R> {
+    let outer = effort.workers.min(benches.len()).max(1);
+    let mut inner = effort.clone();
+    inner.workers = (effort.workers / outer).max(1);
+    scope_map(benches.to_vec(), outer, |b| f(b, &inner))
+}
 
 /// Fig 7 row: MOO-STAGE vs AMOSA convergence speed-up for one benchmark.
 #[derive(Debug, Clone)]
 pub struct Fig7Row {
+    /// Benchmark name.
     pub bench: String,
+    /// Evaluations-to-quality speed-up on the TSV design space.
     pub speedup_tsv: f64,
+    /// Evaluations-to-quality speed-up on the M3D design space.
     pub speedup_m3d: f64,
 }
 
 /// Fig 7: convergence-time speed-up of MOO-STAGE over AMOSA, PT objective.
 pub fn fig7(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig7Row> {
-    benches
-        .iter()
-        .map(|b| {
-            let mut speedups = [0.0f64; 2];
-            for (i, tech) in [Tech::Tsv, Tech::M3d].into_iter().enumerate() {
-                let world = LegWorld::new(b, tech, seed);
-                let stage = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
-                let amosa = run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, effort, seed);
-                speedups[i] = super::campaign::speedup_time_to_quality(&stage, &amosa);
-            }
-            Fig7Row { bench: b.to_string(), speedup_tsv: speedups[0], speedup_m3d: speedups[1] }
-        })
-        .collect()
+    map_benches(benches, effort, |b, effort| {
+        let mut speedups = [0.0f64; 2];
+        for (i, tech) in [Tech::Tsv, Tech::M3d].into_iter().enumerate() {
+            let world = LegWorld::new(b, tech, seed);
+            let stage = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
+            let amosa = run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, effort, seed);
+            speedups[i] = super::campaign::speedup_time_to_quality(&stage, &amosa);
+        }
+        Fig7Row { bench: b.to_string(), speedup_tsv: speedups[0], speedup_m3d: speedups[1] }
+    })
 }
 
 /// Fig 8 row: TSV PO-vs-PT temperatures and normalized execution times.
 #[derive(Debug, Clone)]
 pub struct Fig8Row {
+    /// Benchmark name.
     pub bench: String,
+    /// Peak temperature of the PO winner [degC].
     pub temp_po_c: f64,
+    /// Peak temperature of the PT winner [degC].
     pub temp_pt_c: f64,
     /// ET normalized to PO (PT >= 1).
     pub et_pt_over_po: f64,
@@ -47,61 +72,63 @@ pub struct Fig8Row {
 
 /// Fig 8: the TSV performance-thermal trade-off.
 pub fn fig8(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig8Row> {
-    benches
-        .iter()
-        .map(|b| {
-            let world = LegWorld::new(b, Tech::Tsv, seed);
-            let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
-            let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
-            Fig8Row {
-                bench: b.to_string(),
-                temp_po_c: po.winner.temp_c,
-                temp_pt_c: pt.winner.temp_c.min(po.winner.temp_c),
-                et_pt_over_po: (pt.winner.et / po.winner.et).max(1.0),
-            }
-        })
-        .collect()
+    map_benches(benches, effort, |b, effort| {
+        let world = LegWorld::new(b, Tech::Tsv, seed);
+        let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+        let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
+        Fig8Row {
+            bench: b.to_string(),
+            temp_po_c: po.winner.temp_c,
+            temp_pt_c: pt.winner.temp_c.min(po.winner.temp_c),
+            et_pt_over_po: (pt.winner.et / po.winner.et).max(1.0),
+        }
+    })
 }
 
 /// Fig 9 row: the headline comparison.
 #[derive(Debug, Clone)]
 pub struct Fig9Row {
+    /// Benchmark name.
     pub bench: String,
+    /// TSV baseline (TSV-PT) peak temperature [degC].
     pub temp_tsv_bl_c: f64,
+    /// HeM3D-PO peak temperature [degC].
     pub temp_hem3d_po_c: f64,
+    /// HeM3D-PT peak temperature [degC].
     pub temp_hem3d_pt_c: f64,
     /// ET normalized to TSV-BL.
     pub et_hem3d_po: f64,
+    /// HeM3D-PT execution time normalized to TSV-BL.
     pub et_hem3d_pt: f64,
 }
 
 /// Fig 9: TSV-BL (= TSV-PT) vs HeM3D-PO vs HeM3D-PT.
 pub fn fig9(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig9Row> {
-    benches
-        .iter()
-        .map(|b| {
-            let tsv_world = LegWorld::new(b, Tech::Tsv, seed);
-            let bl = run_leg(&tsv_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
-            let m3d_world = LegWorld::new(b, Tech::M3d, seed);
-            let po = run_leg(&m3d_world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
-            let pt = run_leg(&m3d_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
-            Fig9Row {
-                bench: b.to_string(),
-                temp_tsv_bl_c: bl.winner.temp_c,
-                temp_hem3d_po_c: po.winner.temp_c,
-                temp_hem3d_pt_c: pt.winner.temp_c,
-                et_hem3d_po: po.winner.et / bl.winner.et,
-                et_hem3d_pt: pt.winner.et / bl.winner.et,
-            }
-        })
-        .collect()
+    map_benches(benches, effort, |b, effort| {
+        let tsv_world = LegWorld::new(b, Tech::Tsv, seed);
+        let bl = run_leg(&tsv_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
+        let m3d_world = LegWorld::new(b, Tech::M3d, seed);
+        let po = run_leg(&m3d_world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+        let pt = run_leg(&m3d_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
+        Fig9Row {
+            bench: b.to_string(),
+            temp_tsv_bl_c: bl.winner.temp_c,
+            temp_hem3d_po_c: po.winner.temp_c,
+            temp_hem3d_pt_c: pt.winner.temp_c,
+            et_hem3d_po: po.winner.et / bl.winner.et,
+            et_hem3d_pt: pt.winner.et / bl.winner.et,
+        }
+    })
 }
 
 /// Fig 10 row: HeM3D PO vs PT selected by ET*T product (no constraint).
 #[derive(Debug, Clone)]
 pub struct Fig10Row {
+    /// Benchmark name.
     pub bench: String,
+    /// Peak temperature of the PO winner [degC].
     pub temp_po_c: f64,
+    /// Peak temperature of the PT winner [degC].
     pub temp_pt_c: f64,
     /// ET normalized to PO.
     pub et_pt_over_po: f64,
@@ -109,24 +136,22 @@ pub struct Fig10Row {
 
 /// Fig 10: what PT buys on M3D when selected by the ET*Temp product.
 pub fn fig10(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig10Row> {
-    benches
-        .iter()
-        .map(|b| {
-            let world = LegWorld::new(b, Tech::M3d, seed);
-            let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
-            let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtTempProduct, effort, seed ^ 0x5a5a);
-            Fig10Row {
-                bench: b.to_string(),
-                temp_po_c: po.winner.temp_c,
-                temp_pt_c: pt.winner.temp_c.min(po.winner.temp_c),
-                et_pt_over_po: (pt.winner.et / po.winner.et).max(1.0),
-            }
-        })
-        .collect()
+    map_benches(benches, effort, |b, effort| {
+        let world = LegWorld::new(b, Tech::M3d, seed);
+        let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+        let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtTempProduct, effort, seed ^ 0x5a5a);
+        Fig10Row {
+            bench: b.to_string(),
+            temp_po_c: po.winner.temp_c,
+            temp_pt_c: pt.winner.temp_c.min(po.winner.temp_c),
+            et_pt_over_po: (pt.winner.et / po.winner.et).max(1.0),
+        }
+    })
 }
 
 // --- JSON report helpers -----------------------------------------------------
 
+/// Fig 7 rows as a JSON array.
 pub fn fig7_json(rows: &[Fig7Row]) -> Json {
     Json::arr(rows.iter().map(|r| {
         Json::obj(vec![
@@ -137,6 +162,7 @@ pub fn fig7_json(rows: &[Fig7Row]) -> Json {
     }))
 }
 
+/// Fig 8 rows as a JSON array.
 pub fn fig8_json(rows: &[Fig8Row]) -> Json {
     Json::arr(rows.iter().map(|r| {
         Json::obj(vec![
@@ -148,6 +174,7 @@ pub fn fig8_json(rows: &[Fig8Row]) -> Json {
     }))
 }
 
+/// Fig 9 rows as a JSON array.
 pub fn fig9_json(rows: &[Fig9Row]) -> Json {
     Json::arr(rows.iter().map(|r| {
         Json::obj(vec![
@@ -161,6 +188,7 @@ pub fn fig9_json(rows: &[Fig9Row]) -> Json {
     }))
 }
 
+/// Fig 10 rows as a JSON array.
 pub fn fig10_json(rows: &[Fig10Row]) -> Json {
     Json::arr(rows.iter().map(|r| {
         Json::obj(vec![

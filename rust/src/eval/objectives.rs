@@ -13,13 +13,18 @@ use crate::noc::routing::Routing;
 /// Objective values for one design (f64 precision; `tmax` excludes T_amb).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Scores {
+    /// Eq. (1) CPU<->LLC latency objective.
     pub lat: f64,
+    /// Eqs. (3)+(5) mean link utilisation.
     pub umean: f64,
+    /// Eqs. (4)+(6) utilisation spread (load balance).
     pub usigma: f64,
+    /// Eqs. (7)+(8) peak stack heating (rise over ambient).
     pub tmax: f64,
 }
 
 impl Scores {
+    /// The four objectives as a fixed array (lat, umean, usigma, tmax).
     pub fn as_vec(&self) -> [f64; 4] {
         [self.lat, self.umean, self.usigma, self.tmax]
     }
@@ -37,11 +42,14 @@ pub struct SparseTraffic {
     pub mean_rate: Vec<f64>,
     /// Whether the pair is a CPU<->LLC pair (Eq. 1 mask), precomputed.
     pub is_cpu_llc: Vec<bool>,
+    /// Tile count.
     pub n: usize,
+    /// Windows folded into `rates`.
     pub n_windows: usize,
 }
 
 impl SparseTraffic {
+    /// Extract without a tile set (the CPU<->LLC mask stays all-false).
     pub fn from_trace(trace: &crate::traffic::Trace, n_windows: usize) -> Self {
         Self::from_trace_tiles(trace, n_windows, None)
     }

@@ -13,6 +13,8 @@
 //!
 //! See DESIGN.md for the full inventory and the per-experiment index.
 
+#![warn(missing_docs)]
+
 pub mod arch;
 pub mod config;
 pub mod coordinator;

@@ -40,12 +40,15 @@ COMMANDS:
              [--topology mesh|swnoc] [--cycles N] [--seed N]
   optimize   Run one DSE leg [--bench NAME] [--tech tsv|m3d]
              [--algo moo-stage|amosa] [--mode po|pt] [--iters N] [--seed N]
-             [--artifacts DIR|none]
+             [--artifacts DIR|none] [--workers N]
   campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
-             [--iters N] [--seed N] [--artifacts DIR|none]
+             [--iters N] [--seed N] [--artifacts DIR|none] [--workers N]
   help       Show this message
 
 Global: [--log error|warn|info|debug]
+        --workers N fans candidate evaluation / figure legs over N threads
+        (default 1; 0 = all cores or HEM3D_WORKERS; results are
+        bit-identical for any worker count)
 ";
 
 fn main() -> Result<()> {

@@ -3,8 +3,11 @@
 /// A network packet (one message; flit count = serialization length).
 #[derive(Debug, Clone, Copy)]
 pub struct Packet {
+    /// Monotonic packet id (injection order).
     pub id: u64,
+    /// Source router position.
     pub src: u32,
+    /// Destination router position.
     pub dst: u32,
     /// Payload length in flits (data packets are long, requests short).
     pub flits: u16,
@@ -15,8 +18,11 @@ pub struct Packet {
 /// Delivery record produced by the simulator.
 #[derive(Debug, Clone, Copy)]
 pub struct Delivery {
+    /// The delivered packet.
     pub packet: Packet,
+    /// Cycle the tail flit arrived at the destination.
     pub delivered_at: u64,
+    /// Links traversed end to end.
     pub hops: u16,
 }
 
@@ -38,6 +44,7 @@ pub enum PacketClass {
 }
 
 impl PacketClass {
+    /// Serialization length of this class [flits].
     pub fn flits(&self) -> u16 {
         match self {
             PacketClass::Request => 1,

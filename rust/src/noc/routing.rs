@@ -11,6 +11,7 @@ use crate::arch::design::{Design, Link};
 /// Routing tables for one design.
 #[derive(Debug, Clone)]
 pub struct Routing {
+    /// Router-position count (one router per tile position).
     pub n: usize,
     /// hop[s*n + d] = shortest hop count (0 on the diagonal).
     pub hops: Vec<u16>,
@@ -18,6 +19,7 @@ pub struct Routing {
     pub next_hop: Vec<u16>,
     /// Dense directed-edge -> link index (u16::MAX where no link).
     link_of: Vec<u16>,
+    /// The design's normalised link set (the `q_ijk` link index space).
     pub links: Vec<Link>,
 }
 
@@ -68,6 +70,7 @@ impl Routing {
     }
 
     #[inline]
+    /// Shortest hop count s -> d (0 on the diagonal).
     pub fn hop_count(&self, s: usize, d: usize) -> usize {
         self.hops[s * self.n + d] as usize
     }

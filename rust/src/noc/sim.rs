@@ -41,11 +41,17 @@ impl Default for SimConfig {
 /// Aggregate results of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimStats {
+    /// Packets delivered within the simulated window.
     pub delivered: u64,
+    /// Flits delivered (payload of `delivered`).
     pub total_flits: u64,
+    /// Simulated cycles.
     pub cycles: u64,
+    /// Mean end-to-end packet latency [cycles].
     pub mean_latency: f64,
+    /// 95th-percentile packet latency [cycles].
     pub p95_latency: f64,
+    /// Mean hops per delivered packet.
     pub mean_hops: f64,
     /// Offered packets that could not be injected (backpressure signal).
     pub dropped_at_inject: u64,
@@ -77,6 +83,7 @@ pub struct NocSim<'a> {
 }
 
 impl<'a> NocSim<'a> {
+    /// Build a simulator over a design's links and routing tables.
     pub fn new(design: &Design, routing: &'a Routing, cfg: SimConfig) -> Self {
         let mut chan_of = std::collections::HashMap::new();
         for (i, l) in design.links.iter().enumerate() {

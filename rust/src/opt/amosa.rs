@@ -6,6 +6,13 @@
 //! objective-space volume between the candidate and the solutions it is
 //! dominated by.  Same perturbation operators and evaluation budget
 //! accounting as MOO-STAGE, so convergence-time comparisons are fair.
+//!
+//! Unlike MOO-STAGE's local search, the annealing chain is inherently
+//! sequential (each candidate perturbs the *accepted* current state), so
+//! `--workers` cannot fan AMOSA's inner loop out without changing the
+//! algorithm.  It still benefits from the shared evaluation cache — chains
+//! that revisit a design replay its scores — and campaign-level parallelism
+//! (per-benchmark legs) applies as usual (DESIGN.md §6).
 
 use super::pareto::{dominates, ParetoSet};
 use super::perturb;
@@ -17,7 +24,9 @@ use crate::util::Rng;
 /// AMOSA configuration.
 #[derive(Debug, Clone)]
 pub struct AmosaConfig {
+    /// Starting temperature.
     pub t_initial: f64,
+    /// Stop once the temperature cools below this.
     pub t_final: f64,
     /// Geometric cooling factor per temperature step.
     pub alpha: f64,
@@ -42,14 +51,21 @@ impl Default for AmosaConfig {
 /// Convergence history entry (same shape as MOO-STAGE's for Fig 7).
 #[derive(Debug, Clone)]
 pub struct AmosaIter {
+    /// Temperature at this step.
     pub temp: f64,
+    /// PHV of the archive after this temperature step.
     pub best_phv: f64,
+    /// Distinct design evaluations so far.
     pub evals: u64,
+    /// Wall-clock seconds since the run started.
     pub elapsed_s: f64,
 }
 
+/// Full AMOSA output.
 pub struct AmosaResult {
+    /// Final non-dominated archive.
     pub pareto: ParetoSet,
+    /// Per-temperature convergence history.
     pub history: Vec<AmosaIter>,
 }
 

@@ -46,6 +46,12 @@ pub struct LocalResult {
 /// Each step samples `neighbors_per_step` valid perturbations, scores them,
 /// and moves to the neighbour that maximises the front's PHV after
 /// insertion; deterministic given the rng seed.
+///
+/// Candidate *generation* stays serial (it owns the rng), but candidate
+/// *scoring* — the expensive routing build + objective evaluation — fans
+/// out over `problem.workers` threads via `scope_map`, which preserves
+/// input order; the greedy selection then runs serially over the ordered
+/// results, so the chosen trajectory is bit-identical for any worker count.
 pub fn local_search(
     problem: &Problem<'_>,
     start: Design,
@@ -71,10 +77,21 @@ pub fn local_search(
             break;
         }
         let candidates = perturb::neighbors(&current, cfg.neighbors_per_step, rng);
-        // Score each candidate by the PHV of front + candidate.
+        // Score candidates (routing + objectives) in parallel, in order.
+        let cand_designs: Vec<Design> =
+            candidates.into_iter().map(|(design, _)| design).collect();
+        let scored: Vec<(Design, Vec<f64>)> = crate::util::threadpool::scope_map(
+            cand_designs,
+            problem.workers,
+            |design| {
+                let obj = problem.objectives(&design);
+                (design, obj)
+            },
+        );
+        // Greedy selection by the PHV of front + candidate (serial: PHV
+        // depends on the shared front, and order breaks ties).
         let mut best: Option<(f64, Design, Vec<f64>)> = None;
-        for (cand, _) in candidates {
-            let obj = problem.objectives(&cand);
+        for (cand, obj) in scored {
             let mut pts = objs(&front);
             pts.push(obj.clone());
             let c = phv_cost(&pts, reference);

@@ -20,6 +20,7 @@ use crate::util::Rng;
 /// MOO-STAGE configuration.
 #[derive(Debug, Clone)]
 pub struct StageConfig {
+    /// Local-search (hill-climb) configuration.
     pub local: LocalConfig,
     /// Random candidate starting designs scored by the tree per iteration.
     pub meta_candidates: usize,
@@ -28,6 +29,7 @@ pub struct StageConfig {
     /// Convergence: stop when the best PHV improves by < this fraction
     /// over `convergence_window` consecutive iterations (paper: 2%).
     pub convergence_eps: f64,
+    /// Trailing iterations the convergence check looks across.
     pub convergence_window: usize,
 }
 
@@ -47,16 +49,23 @@ impl Default for StageConfig {
 /// convergence curves at evaluation granularity).
 #[derive(Debug, Clone)]
 pub struct IterRecord {
+    /// Outer MOO-STAGE iteration this record belongs to.
     pub iter: usize,
+    /// Best PHV known at this point.
     pub best_phv: f64,
+    /// Distinct design evaluations so far.
     pub evals: u64,
+    /// Wall-clock seconds since the run started.
     pub elapsed_s: f64,
 }
 
 /// Full optimizer output.
 pub struct StageResult {
+    /// Global non-dominated set across all iterations.
     pub pareto: ParetoSet,
+    /// Fine-grained convergence history (Fig 7 input).
     pub history: Vec<IterRecord>,
+    /// Iteration the 2%-window convergence rule fired, if it did.
     pub converged_at: Option<usize>,
 }
 

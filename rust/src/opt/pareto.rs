@@ -5,7 +5,9 @@ use crate::arch::design::Design;
 /// One archived solution: objective vector + the design that produced it.
 #[derive(Debug, Clone)]
 pub struct Solution {
+    /// Objective vector (all minimized).
     pub obj: Vec<f64>,
+    /// The design that produced `obj`.
     pub design: Design,
 }
 
@@ -27,20 +29,24 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
 /// A non-dominated archive with optional capacity pruning.
 #[derive(Debug, Clone, Default)]
 pub struct ParetoSet {
+    /// Current non-dominated members (unordered).
     pub members: Vec<Solution>,
     /// Maximum archive size (0 = unbounded); pruned by crowding.
     pub capacity: usize,
 }
 
 impl ParetoSet {
+    /// Empty archive with the given capacity (0 = unbounded).
     pub fn new(capacity: usize) -> Self {
         ParetoSet { members: Vec::new(), capacity }
     }
 
+    /// Number of archived solutions.
     pub fn len(&self) -> usize {
         self.members.len()
     }
 
+    /// Whether the archive holds no solutions.
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
     }

@@ -8,7 +8,9 @@ use crate::util::Rng;
 /// Kind of move applied (diagnostics / ablations).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Move {
+    /// Swapped the tiles at two grid positions.
     SwapTiles(usize, usize),
+    /// Rewired link `idx` to the endpoints of `new`.
     MoveLink { idx: usize, new: Link },
 }
 

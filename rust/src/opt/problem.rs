@@ -2,10 +2,11 @@
 //! flavours, shared evaluation plumbing, and evaluation counting.
 
 use crate::arch::design::Design;
-use crate::arch::encode::EncodeCtx;
+use crate::arch::encode::{design_key, EncodeCtx};
 use crate::eval::objectives::{evaluate_sparse, Scores, SparseTraffic};
 use crate::noc::routing::Routing;
-use std::cell::RefCell;
+use crate::runtime::EvalCache;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Optimization flavour (Eq. 9).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -17,6 +18,7 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Short mode name (`"po"` / `"pt"`).
     pub fn name(&self) -> &'static str {
         match self {
             Mode::Po => "po",
@@ -24,6 +26,7 @@ impl Mode {
         }
     }
 
+    /// Parse a mode name; `None` for anything else.
     pub fn parse(s: &str) -> Option<Mode> {
         match s {
             "po" => Some(Mode::Po),
@@ -32,6 +35,7 @@ impl Mode {
         }
     }
 
+    /// Number of objectives under this mode.
     pub fn n_obj(&self) -> usize {
         match self {
             Mode::Po => 3,
@@ -49,28 +53,73 @@ impl Mode {
 }
 
 /// The DSE problem: evaluation context + mode + bookkeeping.
+///
+/// `Problem` is `Sync`: the optimizers score independent candidates on
+/// worker threads (`util::threadpool::scope_map`) against one shared
+/// instance.  Every evaluation goes through the [`EvalCache`], so re-probing
+/// an already-seen design (Pareto re-insertions, AMOSA revisits) replays the
+/// cached scores instead of re-simulating.
 pub struct Problem<'a> {
+    /// Shared encoding context (trace, tech, geometry, power, stack).
     pub ctx: &'a EncodeCtx<'a>,
+    /// Objective flavour (PO or PT).
     pub mode: Mode,
+    /// Pre-extracted sparse traffic (the hot-loop input).
     pub traffic: SparseTraffic,
-    evals: RefCell<u64>,
+    /// Worker threads candidate evaluation may fan out over (>= 1).
+    pub workers: usize,
+    evals: AtomicU64,
+    cache: EvalCache,
 }
 
 impl<'a> Problem<'a> {
+    /// Build a problem over a context (extracts the sparse traffic once;
+    /// serial evaluation until [`Problem::with_workers`] raises it).
     pub fn new(ctx: &'a EncodeCtx<'a>, mode: Mode) -> Self {
         let traffic = SparseTraffic::from_trace_tiles(
             ctx.trace,
             crate::runtime::dims::N_WINDOWS,
             Some(ctx.tiles),
         );
-        Problem { ctx, mode, traffic, evals: RefCell::new(0) }
+        Problem {
+            ctx,
+            mode,
+            traffic,
+            workers: 1,
+            evals: AtomicU64::new(0),
+            cache: EvalCache::new(),
+        }
     }
 
-    /// Full-score evaluation (builds routing; counts toward the budget).
+    /// Builder-style worker-count override, with the same resolution rule
+    /// as `Effort::with_workers` (`0` = all cores / `HEM3D_WORKERS`).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = if workers == 0 {
+            crate::util::threadpool::default_workers()
+        } else {
+            workers
+        };
+        self
+    }
+
+    /// Full-score evaluation: cached designs replay their scores; fresh
+    /// designs build routing, evaluate, and count toward the budget.
+    ///
+    /// The eval counter increments only for the *first* evaluation of a
+    /// design key, so `eval_count` is identical whatever the worker count
+    /// or scheduling (concurrent duplicate evaluations race benignly: both
+    /// compute the same pure result, one wins the insert and the count).
     pub fn score(&self, design: &Design) -> Scores {
-        *self.evals.borrow_mut() += 1;
+        let key = design_key(design);
+        if let Some(cached) = self.cache.get(&key) {
+            return cached;
+        }
         let routing = Routing::build(design);
-        evaluate_sparse(self.ctx, design, &routing, &self.traffic)
+        let scores = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
+        if self.cache.insert(key, scores) {
+            self.evals.fetch_add(1, Ordering::Relaxed);
+        }
+        scores
     }
 
     /// Objective vector under the current mode.
@@ -78,9 +127,20 @@ impl<'a> Problem<'a> {
         self.mode.objectives(&self.score(design))
     }
 
-    /// Number of design evaluations performed so far.
+    /// Number of *distinct* design evaluations performed so far (cache
+    /// replays do not count).
     pub fn eval_count(&self) -> u64 {
-        *self.evals.borrow()
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    /// Cache lookups that replayed a previous evaluation.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache.hit_count()
+    }
+
+    /// Cache lookups that fell through to a real evaluation.
+    pub fn cache_misses(&self) -> u64 {
+        self.cache.miss_count()
     }
 
     /// Reference point for PHV: component-wise multiple of a baseline
@@ -122,5 +182,57 @@ mod tests {
         assert_eq!(problem.eval_count(), 1);
         let r = problem.reference(&d);
         assert!(r.iter().zip(o.iter()).all(|(a, b)| a > b));
+    }
+
+    #[test]
+    fn identical_designs_hit_the_cache_and_perturbed_ones_miss() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::tsv();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 5);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let problem = Problem::new(&ctx, Mode::Pt);
+
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let first = problem.score(&d);
+        assert_eq!(problem.eval_count(), 1);
+        assert_eq!(problem.cache_hits(), 0);
+
+        // Identical encoding (an independently constructed equal design):
+        // replayed from the cache, same objectives, not re-simulated.
+        let d_same = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let replayed = problem.score(&d_same);
+        assert_eq!(replayed, first);
+        assert_eq!(problem.eval_count(), 1, "cache hit must not re-simulate");
+        assert_eq!(problem.cache_hits(), 1);
+
+        // A perturbed encoding misses and is evaluated fresh.
+        let mut d_swapped = d.clone();
+        d_swapped.swap_positions(0, 63);
+        let other = problem.score(&d_swapped);
+        assert_eq!(problem.eval_count(), 2);
+        assert_ne!(other, first);
+
+        // Undoing the perturbation returns to a cached key.
+        d_swapped.swap_positions(0, 63);
+        assert_eq!(problem.score(&d_swapped), first);
+        assert_eq!(problem.eval_count(), 2);
+        assert_eq!(problem.cache_hits(), 2);
+    }
+
+    #[test]
+    fn with_workers_resolves_zero_and_keeps_explicit_counts() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("nw").unwrap(), &tiles, cfg.windows, 2);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        // 0 = auto: resolves to at least one worker (all cores / env).
+        let problem = Problem::new(&ctx, Mode::Po).with_workers(0);
+        assert!(problem.workers >= 1);
+        let problem = Problem::new(&ctx, Mode::Po).with_workers(8);
+        assert_eq!(problem.workers, 8);
     }
 }

@@ -17,7 +17,9 @@ enum Node {
 /// Training hyper-parameters.
 #[derive(Debug, Clone)]
 pub struct TreeConfig {
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Minimum samples per leaf.
     pub min_leaf: usize,
 }
 
@@ -117,6 +119,7 @@ impl RegTree {
         }
     }
 
+    /// Total node count (diagnostic).
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }

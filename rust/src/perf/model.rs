@@ -58,10 +58,15 @@ impl Default for PerfCoeffs {
 /// ratios).
 #[derive(Debug, Clone)]
 pub struct ExecTime {
+    /// Total execution time (the Eq. 10 ET).
     pub total: f64,
+    /// GPU compute component.
     pub gpu_compute: f64,
+    /// GPU memory (NoC + LLC) component, before kappa.
     pub gpu_mem: f64,
+    /// CPU compute component.
     pub cpu_compute: f64,
+    /// CPU memory component, before mu.
     pub cpu_mem: f64,
 }
 

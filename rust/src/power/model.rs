@@ -16,11 +16,17 @@ use crate::traffic::Window;
 /// magnitudes (DESIGN.md §7): hot benchmarks ~95-115 W.
 #[derive(Debug, Clone)]
 pub struct PowerBudget {
+    /// GPU peak dynamic power at activity 1.0 [W].
     pub gpu_dyn_peak: f64,
+    /// GPU leakage at the 40 degC characterisation point [W].
     pub gpu_leak: f64,
+    /// CPU peak dynamic power [W].
     pub cpu_dyn_peak: f64,
+    /// CPU leakage at 40 degC [W].
     pub cpu_leak: f64,
+    /// LLC slice peak dynamic power [W].
     pub llc_dyn_peak: f64,
+    /// LLC leakage at 40 degC [W].
     pub llc_leak: f64,
     /// Router + link power per unit link utilisation [W].
     pub noc_per_util: f64,
@@ -43,6 +49,7 @@ impl Default for PowerBudget {
 /// Power model for one technology.
 #[derive(Debug, Clone)]
 pub struct PowerModel {
+    /// Per-kind planar power budgets.
     pub budget: PowerBudget,
     /// Frequency scale vs planar nominal (dynamic power ∝ f).
     gpu_fscale: f64,
@@ -54,6 +61,7 @@ pub struct PowerModel {
 }
 
 impl PowerModel {
+    /// Power model for a technology (frequency + energy scaling).
     pub fn new(tech: &TechParams) -> Self {
         let planar_gpu = 0.70;
         let planar_cpu = 2.00;

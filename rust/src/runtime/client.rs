@@ -5,74 +5,202 @@
 //! the 64-bit-id protos emitted by jax >= 0.5 that `HloModuleProto` decoding
 //! rejects.  One [`LoadedComputation`] per artifact, compiled once and reused
 //! for the whole DSE campaign — Python never runs on this path.
+//!
+//! ## Offline builds (the default)
+//!
+//! The `xla` crate that backs this module cannot be fetched in the offline
+//! build image, so the PJRT path is gated behind the `xla` cargo feature
+//! (DESIGN.md §1.4).  Without it, this module compiles an API-compatible
+//! stub whose [`Runtime::cpu`] fails with a descriptive error; every caller
+//! (`hem3d selftest`, `hem3d optimize --artifacts`, the artifact tests)
+//! already degrades gracefully to the native evaluators when that happens.
+//! Enabling the feature requires vendoring the `xla` crate and adding it to
+//! `rust/Cargo.toml`.
 
-use anyhow::{Context, Result};
+#[cfg(not(feature = "xla"))]
+use anyhow::Result;
+#[cfg(not(feature = "xla"))]
 use std::path::Path;
 
-/// A PJRT CPU client plus the executables compiled on it.
-pub struct Runtime {
-    client: xla::PjRtClient,
+#[cfg(feature = "xla")]
+mod pjrt {
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    /// A PJRT CPU client plus the executables compiled on it.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    /// One compiled HLO artifact, ready to execute.
+    pub struct LoadedComputation {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact path, for error reporting.
+        pub path: String,
+    }
+
+    /// A device literal (re-exported from the `xla` crate).
+    pub type Literal = xla::Literal;
+
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        /// Platform name, e.g. "Host".
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO text file and compile it for this client.
+        pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedComputation> {
+            let path_str = path.as_ref().display().to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path_str)
+                .with_context(|| format!("parsing HLO text {path_str}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path_str}"))?;
+            Ok(LoadedComputation { exe, path: path_str })
+        }
+    }
+
+    impl LoadedComputation {
+        /// Execute with literal inputs; returns the decomposed output tuple.
+        ///
+        /// Artifacts are lowered with `return_tuple=True`, so the single
+        /// device output is always a tuple — even for one result.
+        pub fn execute(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+            let result = self
+                .exe
+                .execute::<Literal>(inputs)
+                .with_context(|| format!("executing {}", self.path))?;
+            let literal = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetching result of {}", self.path))?;
+            literal
+                .to_tuple()
+                .with_context(|| format!("decomposing output tuple of {}", self.path))
+        }
+    }
+
+    /// Build an f32 literal of the given logical dims from a flat slice.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        let expected: i64 = dims.iter().product();
+        anyhow::ensure!(
+            expected as usize == data.len(),
+            "literal_f32: {} elements for dims {dims:?}",
+            data.len()
+        );
+        Ok(Literal::vec1(data).reshape(dims)?)
+    }
 }
 
-/// One compiled HLO artifact, ready to execute.
+#[cfg(feature = "xla")]
+pub use pjrt::{literal_f32, Literal, LoadedComputation, Runtime};
+
+// ---------------------------------------------------------------------------
+// Offline stub: same API, every execution path reports the missing backend.
+// ---------------------------------------------------------------------------
+
+/// The error every stub entry point reports.
+#[cfg(not(feature = "xla"))]
+const NO_XLA: &str = "hem3d was built without the `xla` feature: the PJRT \
+runtime is unavailable in the offline image, so AOT artifacts cannot be \
+executed (the native Rust evaluators cover every model; see DESIGN.md §1.4)";
+
+/// Stub PJRT client used in offline builds; [`Runtime::cpu`] always fails.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    _private: (),
+}
+
+/// Stub compiled artifact; cannot be obtained in offline builds.
+#[cfg(not(feature = "xla"))]
 pub struct LoadedComputation {
-    exe: xla::PjRtLoadedExecutable,
     /// Artifact path, for error reporting.
     pub path: String,
 }
 
+/// Stub host literal: carries validated f32 data so [`literal_f32`] keeps
+/// its shape checking even in offline builds.
+#[cfg(not(feature = "xla"))]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+#[cfg(not(feature = "xla"))]
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU PJRT client — always fails without the `xla` feature.
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
+        Err(anyhow::anyhow!(NO_XLA))
     }
 
-    /// Platform name, e.g. "Host".
+    /// Platform name (the stub cannot actually be constructed).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".to_string()
     }
 
-    /// Load an HLO text file and compile it for this client.
+    /// Load an HLO text file — always fails without the `xla` feature.
     pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedComputation> {
-        let path_str = path.as_ref().display().to_string();
-        let proto = xla::HloModuleProto::from_text_file(&path_str)
-            .with_context(|| format!("parsing HLO text {path_str}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path_str}"))?;
-        Ok(LoadedComputation { exe, path: path_str })
+        Err(anyhow::anyhow!("{NO_XLA} (while loading {})", path.as_ref().display()))
     }
 }
 
+#[cfg(not(feature = "xla"))]
 impl LoadedComputation {
-    /// Execute with literal inputs; returns the decomposed output tuple.
-    ///
-    /// Artifacts are lowered with `return_tuple=True`, so the single device
-    /// output is always a tuple — even for one result.
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.path))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.path))?;
-        literal
-            .to_tuple()
-            .with_context(|| format!("decomposing output tuple of {}", self.path))
+    /// Execute with literal inputs — always fails without the `xla` feature.
+    pub fn execute(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(anyhow::anyhow!("{NO_XLA} (while executing {})", self.path))
     }
 }
 
-/// Build an f32 literal of the given logical dims from a flat row-major slice.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+#[cfg(not(feature = "xla"))]
+impl Literal {
+    /// Copy the literal out as a host vector.
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+
+    /// Logical dimensions of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Build an f32 literal of the given logical dims from a flat row-major
+/// slice (shape-checked; the stub keeps the data host-side).
+#[cfg(not(feature = "xla"))]
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let expected: i64 = dims.iter().product();
     anyhow::ensure!(
         expected as usize == data.len(),
         "literal_f32: {} elements for dims {dims:?}",
         data.len()
     );
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+    Ok(Literal { data: data.to_vec(), dims: dims.to_vec() })
+}
+
+#[cfg(all(test, not(feature = "xla")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_missing_backend() {
+        let err = Runtime::cpu().err().expect("stub must fail");
+        assert!(format!("{err}").contains("xla"));
+    }
+
+    #[test]
+    fn literal_shape_checking_still_works() {
+        assert!(literal_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
 }

@@ -6,9 +6,14 @@
 //! traffic/power models.
 
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use super::client::{literal_f32, LoadedComputation, Runtime};
+use crate::arch::encode::DesignKey;
+use crate::eval::objectives::Scores;
 
 /// Canonical artifact dimensions (paper §5.1) — must match model.py.
 pub mod dims {
@@ -26,7 +31,9 @@ pub mod dims {
     pub const MOO_BATCH: usize = 16;
     /// Thermal grid cells.
     pub const TH_Z: usize = 10;
+    /// Thermal grid rows.
     pub const TH_Y: usize = 8;
+    /// Thermal grid columns.
     pub const TH_X: usize = 8;
     /// Thermal designs solved per dispatch.
     pub const TH_BATCH: usize = 8;
@@ -66,9 +73,13 @@ impl MooBatch {
 /// Objective scores for one design (paper Eqs. (1)-(8); tmax excludes T_amb).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MooScores {
+    /// Eq. (1) CPU<->LLC latency objective.
     pub lat: f32,
+    /// Eqs. (3)+(5) mean link utilisation.
     pub umean: f32,
+    /// Eqs. (4)+(6) utilisation spread (load balance).
     pub usigma: f32,
+    /// Eqs. (7)+(8) peak stack heating (rise over ambient).
     pub tmax: f32,
 }
 
@@ -76,6 +87,7 @@ pub struct MooScores {
 pub struct Evaluator {
     moo: LoadedComputation,
     thermal: LoadedComputation,
+    /// PJRT platform name (e.g. `"Host"`).
     pub platform: String,
 }
 
@@ -154,5 +166,126 @@ impl Evaluator {
         let outs = self.thermal.execute(&inputs)?;
         anyhow::ensure!(outs.len() == 2, "thermal_solve returned {} outputs", outs.len());
         Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation memoization
+// ---------------------------------------------------------------------------
+
+/// Thread-safe memoization cache for design evaluations, keyed by the
+/// canonical `arch::encode` design encoding.
+///
+/// The DSE optimizers repeatedly re-probe designs they have already scored
+/// (Pareto re-insertions, plateau walks, AMOSA chains revisiting states);
+/// objective evaluation is a pure function of the design under a fixed
+/// `(trace, tech)` context, so replaying the cached [`Scores`] is exact —
+/// not an approximation.  One cache lives inside each `opt::Problem` (i.e.
+/// per DSE leg), so entries never leak across contexts.
+///
+/// Concurrency: `insert` reports whether the key was newly inserted, and the
+/// first writer wins.  `opt::Problem` counts an evaluation only on a fresh
+/// insert, which makes its `eval_count` independent of worker scheduling —
+/// the property the `--workers` determinism test relies on.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<DesignKey, Scores>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cached scores for `key`, if present (counts a hit or a miss).
+    pub fn get(&self, key: &DesignKey) -> Option<Scores> {
+        let found = self.map.lock().unwrap().get(key).copied();
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert freshly computed scores; returns true if the key was new
+    /// (false when a concurrent evaluation of the same design won the race).
+    pub fn insert(&self, key: DesignKey, scores: Scores) -> bool {
+        self.map.lock().unwrap().insert(key, scores).is_none()
+    }
+
+    /// Number of lookup hits so far.
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of lookup misses so far.
+    pub fn miss_count(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct designs cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod cache_tests {
+    use super::*;
+    use crate::arch::design::Design;
+    use crate::arch::encode::design_key;
+    use crate::config::ArchConfig;
+    use crate::noc::topology;
+
+    fn scores(x: f64) -> Scores {
+        Scores { lat: x, umean: x, usigma: x, tmax: x }
+    }
+
+    #[test]
+    fn hit_and_miss_counters_track_lookups() {
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let cache = EvalCache::new();
+        assert!(cache.get(&design_key(&d)).is_none());
+        assert_eq!((cache.hit_count(), cache.miss_count()), (0, 1));
+
+        assert!(cache.insert(design_key(&d), scores(1.0)));
+        let got = cache.get(&design_key(&d)).expect("cached");
+        assert_eq!(got, scores(1.0));
+        assert_eq!((cache.hit_count(), cache.miss_count()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_insert_reports_false() {
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let cache = EvalCache::new();
+        assert!(cache.insert(design_key(&d), scores(1.0)));
+        assert!(!cache.insert(design_key(&d), scores(1.0)));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn perturbed_designs_are_distinct_entries() {
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let mut d2 = d.clone();
+        d2.swap_positions(3, 9);
+        let cache = EvalCache::new();
+        cache.insert(design_key(&d), scores(1.0));
+        assert!(cache.get(&design_key(&d2)).is_none());
+        cache.insert(design_key(&d2), scores(2.0));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get(&design_key(&d)).unwrap(), scores(1.0));
+        assert_eq!(cache.get(&design_key(&d2)).unwrap(), scores(2.0));
     }
 }

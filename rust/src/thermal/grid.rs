@@ -11,9 +11,13 @@ use super::materials::LayerStack;
 /// Per-layer conductance vectors (see `kernels/thermal.py` for semantics).
 #[derive(Debug, Clone)]
 pub struct GridParams {
+    /// Downward (toward-sink) conductance per layer cell [W/K].
     pub gdn: Vec<f64>,
+    /// Upward conductance per layer cell [W/K] (shifted `gdn`).
     pub gup: Vec<f64>,
+    /// Lateral neighbour conductance per layer [W/K].
     pub glat: Vec<f64>,
+    /// Convective ambient shunt per layer cell [W/K].
     pub gamb: Vec<f64>,
 }
 
@@ -38,15 +42,19 @@ impl GridParams {
         GridParams { gdn, gup, glat: vec![0.25; z], gamb: vec![0.0; z] }
     }
 
+    /// `gdn` as f32 (the artifact input dtype).
     pub fn gdn_f32(&self) -> Vec<f32> {
         self.gdn.iter().map(|&x| x as f32).collect()
     }
+    /// `gup` as f32.
     pub fn gup_f32(&self) -> Vec<f32> {
         self.gup.iter().map(|&x| x as f32).collect()
     }
+    /// `glat` as f32.
     pub fn glat_f32(&self) -> Vec<f32> {
         self.glat.iter().map(|&x| x as f32).collect()
     }
+    /// `gamb` as f32.
     pub fn gamb_f32(&self) -> Vec<f32> {
         self.gamb.iter().map(|&x| x as f32).collect()
     }
@@ -55,13 +63,18 @@ impl GridParams {
 /// A (Z, Y, X) cell grid with per-layer conductances.
 #[derive(Debug, Clone)]
 pub struct ThermalGrid {
+    /// Layer count (vertical cells).
     pub z: usize,
+    /// Rows of lateral cells.
     pub y: usize,
+    /// Columns of lateral cells.
     pub x: usize,
+    /// Per-layer conductances.
     pub params: GridParams,
 }
 
 impl ThermalGrid {
+    /// Build a grid; `params` vectors must have length `z`.
     pub fn new(z: usize, y: usize, x: usize, params: GridParams) -> Self {
         assert_eq!(params.gdn.len(), z);
         ThermalGrid { z, y, x, params }

@@ -8,6 +8,7 @@
 /// One material layer of the vertical stack.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Layer name (e.g. `"si_t0"`, `"bond_01"`).
     pub name: &'static str,
     /// Thickness [m].
     pub thickness: f64,
@@ -20,6 +21,7 @@ pub struct Layer {
 /// A full vertical stack plus lateral cell geometry.
 #[derive(Debug, Clone)]
 pub struct LayerStack {
+    /// Layers ordered bottom (sink side, z = 0) to top.
     pub layers: Vec<Layer>,
     /// Lateral cell pitch [m] (square cells).
     pub cell_pitch: f64,

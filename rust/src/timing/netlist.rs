@@ -71,11 +71,14 @@ pub struct TimingPath {
 /// A synthesized block (one pipeline stage).
 #[derive(Debug, Clone)]
 pub struct Netlist {
+    /// Stage/block name.
     pub name: &'static str,
+    /// Sampled near-critical register-to-register paths.
     pub paths: Vec<TimingPath>,
     /// Total switched capacitance of the block [fF] excluding repeaters
     /// (gates + all wires; drives the energy model).
     pub gate_cap_total: f64,
+    /// Total routed-wire capacitance [fF].
     pub wire_cap_total: f64,
     /// Repeater population capacitance of the planar block [fF].
     pub rep_cap_total: f64,
@@ -84,6 +87,7 @@ pub struct Netlist {
 /// Generator parameters for one stage (the calibration knobs).
 #[derive(Debug, Clone)]
 pub struct StageSpec {
+    /// Stage/block name.
     pub name: &'static str,
     /// Critical-path logic depth [gates].
     pub depth: usize,

@@ -8,8 +8,11 @@ use super::sta::time_block_planar;
 /// Per-stage timing result.
 #[derive(Debug, Clone)]
 pub struct StageTiming {
+    /// Pipeline stage name (Fig 3 order).
     pub name: &'static str,
+    /// Planar critical-path delay [ps].
     pub planar_ps: f64,
+    /// M3D-projected critical-path delay [ps].
     pub m3d_ps: f64,
     /// M3D improvement (0.10 = 10% lower delay).
     pub improvement: f64,
@@ -18,14 +21,17 @@ pub struct StageTiming {
 /// The Fig 6 dataset plus derived frequencies/energy.
 #[derive(Debug, Clone)]
 pub struct PipelineResult {
+    /// Per-stage planar/M3D timing (the Fig 6 bars).
     pub stages: Vec<StageTiming>,
     /// Slowest-stage delays (the clock period bound) [ps].
     pub planar_crit_ps: f64,
+    /// Slowest M3D stage delay [ps].
     pub m3d_crit_ps: f64,
     /// Clock frequencies assuming the planar design is signed off at
     /// 0.70 GHz (the paper's baseline) and M3D scales with the critical
     /// stage improvement.
     pub planar_freq_ghz: f64,
+    /// Projected M3D GPU clock [GHz].
     pub m3d_freq_ghz: f64,
     /// Switched-capacitance-based energy ratio m3d/planar (< 1).
     pub energy_ratio: f64,

@@ -50,9 +50,13 @@ pub fn net_delay_planar(proc_: &Process, net: &Net) -> (f64, usize) {
 /// Result of timing one path.
 #[derive(Debug, Clone, Copy)]
 pub struct PathTiming {
+    /// Total path delay [ps].
     pub delay_ps: f64,
+    /// Gate (logic) component [ps].
     pub gate_ps: f64,
+    /// Interconnect component [ps].
     pub wire_ps: f64,
+    /// Repeaters the optimal insertion used.
     pub repeaters: usize,
 }
 
@@ -75,12 +79,15 @@ pub fn time_path_planar(proc_: &Process, path: &TimingPath) -> PathTiming {
 /// Block-level timing: the critical (max) path.
 #[derive(Debug, Clone, Copy)]
 pub struct BlockTiming {
+    /// Critical (max) path delay [ps].
     pub critical_ps: f64,
+    /// Repeater population over all sampled paths.
     pub total_repeaters: usize,
     /// Wire share of the critical path (diagnostic for M3D headroom).
     pub wire_frac: f64,
 }
 
+/// Time every path of a planar block; returns the critical result.
 pub fn time_block_planar(proc_: &Process, nl: &Netlist) -> BlockTiming {
     let mut crit = PathTiming { delay_ps: 0.0, gate_ps: 0.0, wire_ps: 0.0, repeaters: 0 };
     let mut total_rep = 0;

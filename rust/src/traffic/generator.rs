@@ -22,8 +22,11 @@ pub struct Window {
 /// A complete application trace.
 #[derive(Debug, Clone)]
 pub struct Trace {
+    /// Benchmark the trace was generated for.
     pub bench: String,
+    /// Tile count (f vectors are n_tiles^2).
     pub n_tiles: usize,
+    /// Windowed behaviour samples, in time order.
     pub windows: Vec<Window>,
 }
 

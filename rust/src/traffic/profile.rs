@@ -12,6 +12,7 @@
 /// Shape parameters of one application.
 #[derive(Debug, Clone)]
 pub struct BenchProfile {
+    /// Benchmark short name (the CLI `--bench` key).
     pub name: &'static str,
     /// GPU activity factor in [0,1] (fraction of peak dynamic power / IPC).
     pub gpu_intensity: f64,

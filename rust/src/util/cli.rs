@@ -49,26 +49,32 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Raw option value, if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn opt_or(&self, key: &str, default: &str) -> String {
         self.opt(key).unwrap_or(default).to_string()
     }
 
+    /// Whether a boolean flag is set (`--key`, `--key=true`...).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.opt(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Parsed usize option with a default.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Parsed u64 option with a default.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Parsed f64 option with a default.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }

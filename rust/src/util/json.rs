@@ -9,27 +9,37 @@ use std::fmt::Write as _;
 /// A JSON value.  Numbers are f64 (sufficient for our reports/traces).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array from an iterator.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// String value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
@@ -50,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -57,10 +68,12 @@ impl Json {
         }
     }
 
+    /// Number truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// String slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),

@@ -9,9 +9,13 @@ static LEVEL: AtomicU8 = AtomicU8::new(2); // info
 /// Log verbosity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// Progress reporting (the default).
     Info = 2,
+    /// Verbose diagnostics.
     Debug = 3,
 }
 
@@ -30,6 +34,7 @@ pub fn level_from_str(s: &str) -> Level {
     }
 }
 
+/// Whether a message at `level` would currently be emitted.
 pub fn enabled(level: Level) -> bool {
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
@@ -55,12 +60,16 @@ pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
 }
 
 #[macro_export]
+/// Log at error level (printf-style).
 macro_rules! log_error { ($($arg:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Error, format_args!($($arg)*)) } }
 #[macro_export]
+/// Log at warn level (printf-style).
 macro_rules! log_warn { ($($arg:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Warn, format_args!($($arg)*)) } }
 #[macro_export]
+/// Log at info level (printf-style).
 macro_rules! log_info { ($($arg:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Info, format_args!($($arg)*)) } }
 #[macro_export]
+/// Log at debug level (printf-style).
 macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Debug, format_args!($($arg)*)) } }
 
 #[cfg(test)]

@@ -10,7 +10,9 @@ use super::rng::Rng;
 /// Generation budget handed to each case: use `size` to bound collection
 /// lengths / value magnitudes so shrinking produces simpler cases.
 pub struct Gen {
+    /// Seeded randomness for the case.
     pub rng: Rng,
+    /// Generation budget (bounds collection sizes / magnitudes).
     pub size: usize,
 }
 
@@ -42,8 +44,11 @@ impl Gen {
 /// Outcome of a property check.
 #[derive(Debug)]
 pub struct Failure {
+    /// Seed reproducing the failure.
     pub seed: u64,
+    /// Generation budget (bounds collection sizes / magnitudes).
     pub size: usize,
+    /// The property's failure message.
     pub message: String,
 }
 

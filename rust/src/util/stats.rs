@@ -61,10 +61,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -72,10 +74,12 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Samples folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -89,6 +93,7 @@ impl Welford {
         }
     }
 
+    /// Population standard deviation.
     pub fn std_pop(&self) -> f64 {
         self.var_pop().sqrt()
     }

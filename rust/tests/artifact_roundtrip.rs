@@ -65,7 +65,7 @@ fn artifact_scores_agree_on_optimized_pareto_front() {
     let ctx = world.encode_ctx();
     let designs: Vec<&hem3d::arch::Design> =
         leg.candidates.iter().map(|c| &c.design).take(dims::MOO_BATCH).collect();
-    let art = batch::artifact_scores(&ev, &ctx, &designs).expect("batched scoring");
+    let art = batch::artifact_scores(&ev, &ctx, &designs, 2).expect("batched scoring");
     for (d, a) in designs.iter().zip(art.iter()) {
         let routing = hem3d::noc::routing::Routing::build(d);
         let n = hem3d::eval::objectives::evaluate(&ctx, d, &routing);

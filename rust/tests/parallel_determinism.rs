@@ -1,0 +1,91 @@
+//! Integration: `--workers N` must not change any campaign output, and the
+//! evaluation cache must replay — not re-simulate — repeated design probes.
+//!
+//! The contract (DESIGN.md §6): candidate generation is serial and rng-
+//! driven; only pure evaluations fan out over `scope_map`, which returns
+//! results in input order; eval counting is insert-once on the cache key.
+//! Together these make every leg bit-identical for any worker count.
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{run_leg, Algo, Effort, LegResult, LegWorld, Selection};
+use hem3d::coordinator::figures;
+use hem3d::opt::Mode;
+
+fn tiny(workers: usize) -> Effort {
+    let mut e = Effort::quick();
+    e.stage.max_iters = 2;
+    e.stage.local.max_steps = 6;
+    e.stage.local.neighbors_per_step = 6;
+    e.stage.meta_candidates = 8;
+    e.amosa.t_final = 0.4;
+    e.amosa.iters_per_temp = 10;
+    e.validate_cap = 4;
+    e.workers = workers;
+    e
+}
+
+/// Bit-level equality of everything a leg reports except wall-clock times.
+fn assert_legs_identical(a: &LegResult, b: &LegResult) {
+    assert_eq!(a.evals, b.evals, "distinct-evaluation counts diverged");
+    assert_eq!(a.winner.et.to_bits(), b.winner.et.to_bits(), "winner ET diverged");
+    assert_eq!(
+        a.winner.temp_c.to_bits(),
+        b.winner.temp_c.to_bits(),
+        "winner temperature diverged"
+    );
+    assert_eq!(a.winner.design.tile_at, b.winner.design.tile_at);
+    assert_eq!(a.winner.design.links, b.winner.design.links);
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    for (x, y) in a.candidates.iter().zip(b.candidates.iter()) {
+        assert_eq!(x.et.to_bits(), y.et.to_bits());
+        assert_eq!(x.temp_c.to_bits(), y.temp_c.to_bits());
+        assert_eq!(x.design.tile_at, y.design.tile_at);
+        assert_eq!(x.design.links, y.design.links);
+    }
+    // PHV trajectories (sans elapsed time, which is wall-clock).
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "PHV trajectory diverged");
+        assert_eq!(x.1, y.1, "eval trajectory diverged");
+    }
+}
+
+#[test]
+fn moo_stage_leg_is_identical_for_1_and_4_workers() {
+    let world = LegWorld::new("knn", Tech::M3d, 9);
+    let serial = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny(1), 9);
+    let parallel =
+        run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny(4), 9);
+    assert_legs_identical(&serial, &parallel);
+}
+
+#[test]
+fn amosa_leg_is_identical_for_1_and_4_workers() {
+    // AMOSA's chain is sequential; workers only touch the validation stage.
+    let world = LegWorld::new("nw", Tech::Tsv, 5);
+    let serial = run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, &tiny(1), 5);
+    let parallel = run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, &tiny(4), 5);
+    assert_legs_identical(&serial, &parallel);
+}
+
+#[test]
+fn figure_assembly_is_identical_for_1_and_4_workers() {
+    // Two benches through the Fig-8 assembly (4 legs): the rendered JSON —
+    // the literal campaign output — must match byte for byte.
+    let benches = ["knn", "nw"];
+    let rows_serial = figures::fig8(&benches, &tiny(1), 11);
+    let rows_parallel = figures::fig8(&benches, &tiny(4), 11);
+    let json_serial = figures::fig8_json(&rows_serial).to_pretty();
+    let json_parallel = figures::fig8_json(&rows_parallel).to_pretty();
+    assert_eq!(json_serial, json_parallel, "fig8 JSON diverged across worker counts");
+}
+
+#[test]
+fn cache_replays_are_exact_at_the_leg_level() {
+    // Running the same leg twice on fresh Problems (fresh caches) is the
+    // baseline determinism guarantee the cache must not break.
+    let world = LegWorld::new("bp", Tech::M3d, 3);
+    let a = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &tiny(2), 3);
+    let b = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &tiny(2), 3);
+    assert_legs_identical(&a, &b);
+}
