@@ -15,11 +15,13 @@ use crate::runtime::evaluator::{dims, MooBatch};
 use crate::thermal::StackModel;
 use crate::traffic::Trace;
 
-/// The canonical design encoding used as the evaluation-memoization key:
-/// the placement permutation plus the normalised link set.  Two designs
-/// with equal keys are scored identically by every evaluator (sparse,
-/// dense, artifact), so `runtime::evaluator::EvalCache` may replay cached
-/// objectives for them.
+/// The canonical design encoding — the design half of the
+/// evaluation-memoization key: the placement permutation plus the
+/// normalised link set.  Two designs with equal keys are scored
+/// identically by every evaluator (sparse, dense, artifact) *under the
+/// same scenario*, so `runtime::evaluator::EvalCache` may replay cached
+/// objectives for them; `runtime::evaluator::EvalKey` pairs this with the
+/// scenario (workload, tech, fabric config — DESIGN.md §1.3).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct DesignKey {
     /// `tile_at` compacted to u16 (tile ids are < 2^16 by construction).

@@ -1,13 +1,18 @@
-//! `hem3d sim` — run the cycle-level NoC simulator (Garnet substitute) on a
-//! mesh or seeded SWNoC design under a benchmark's worst traffic window,
-//! reporting latency / throughput / backpressure and the per-channel load
-//! distribution.
+//! `hem3d sim` — run the cycle-level wormhole NoC simulator (Garnet
+//! substitute) on a mesh or seeded SWNoC design, under either a benchmark's
+//! worst traffic window (`--pattern trace`, the default) or one of the
+//! synthetic scenarios (`--pattern uniform|transpose|bitcomp|hotspot`),
+//! reporting latency / throughput / backpressure, the per-channel load
+//! distribution, and the per-VC flit breakdown.
 
 use anyhow::Result;
 use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
 use hem3d::config::{ArchConfig, Tech, TechParams};
-use hem3d::coordinator::noc_validate;
+use hem3d::coordinator::noc_validate_cfg;
+use hem3d::noc::sim::{NocSim, SimConfig, SimStats};
 use hem3d::noc::{routing::Routing, topology};
+use hem3d::log_warn;
+use hem3d::traffic::TrafficPattern;
 use hem3d::util::cli::Args;
 use hem3d::util::{stats, Rng};
 
@@ -19,32 +24,83 @@ pub fn run(args: &Args) -> Result<()> {
     let topo = args.opt_or("topology", "mesh");
     let cycles = args.u64_or("cycles", 20_000);
     let seed = args.u64_or("seed", 42);
+    let pattern_name = args.opt_or("pattern", "trace");
+    let pattern = TrafficPattern::parse(&pattern_name)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown pattern '{pattern_name}' (trace|uniform|transpose|bitcomp|hotspot)"
+        ))?;
+    let injection = args.f64_or("rate", 0.02);
+    // Flags that only one scenario family reads: say so instead of
+    // silently ignoring them.
+    if pattern.is_synthetic() && args.opt("bench").is_some() {
+        log_warn!("--bench is ignored for synthetic patterns (pattern={pattern_name})");
+    }
+    if !pattern.is_synthetic() && args.opt("rate").is_some() {
+        log_warn!("--rate is ignored for --pattern trace (rates come from the benchmark trace)");
+    }
 
     let cfg = ArchConfig::paper();
     let tech = TechParams::for_tech(tech);
     let geo = Geometry::new(&cfg, &tech);
     let tiles = TileSet::from_arch(&cfg);
-    let profile = hem3d::traffic::benchmark(&bench)
-        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench}'"))?;
-    let trace = hem3d::traffic::generate(&profile, &tiles, cfg.windows, seed);
-    let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
 
     let mut rng = Rng::seed_from_u64(seed);
+    let links = topology::by_name(&topo, &cfg, &geo, args.f64_or("alpha", 1.8), &mut rng)
+        .ok_or_else(|| anyhow::anyhow!("unknown topology '{topo}' (mesh|swnoc)"))?;
     let design = match topo.as_str() {
-        "mesh" => Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg)),
-        "swnoc" => {
-            let links = topology::swnoc_links(&cfg, &geo, args.f64_or("alpha", 1.8), &mut rng);
-            Design::random_placement(&cfg, links, &mut rng)
-        }
-        other => anyhow::bail!("unknown topology '{other}' (mesh|swnoc)"),
+        "mesh" => Design::with_identity_placement(cfg.n_tiles(), links),
+        _ => Design::random_placement(&cfg, links, &mut rng),
     };
     let routing = Routing::build(&design);
 
-    let st = noc_validate(&ctx, &design, &routing, cycles, seed);
-    println!(
-        "sim: bench={bench} tech={} topology={topo} cycles={cycles} seed={seed}",
-        tech.tech.name()
+    let sim_cfg = SimConfig {
+        router_stages: tech.router_stages as u32,
+        inject_cap: 64,
+        vcs: args.usize_or("vcs", SimConfig::default().vcs),
+        vc_depth: args.usize_or("vc-depth", SimConfig::default().vc_depth),
+        ..SimConfig::default()
+    };
+
+    let st = if pattern.is_synthetic() {
+        // Hotspot targets the placed LLC positions; the other synthetic
+        // patterns ignore the hotspot set.
+        let hotspots: Vec<usize> = tiles
+            .ids_of(hem3d::arch::tile::TileKind::Llc)
+            .map(|t| design.pos_of[t])
+            .collect();
+        let n = cfg.n_tiles();
+        let (rate, flits) = pattern
+            .rates(n, injection, &hotspots)
+            .expect("synthetic pattern has rates");
+        let sim = NocSim::new(&design, &routing, sim_cfg.clone());
+        let mut sim_rng = Rng::seed_from_u64(seed);
+        sim.run(&rate, &flits, cycles, &mut sim_rng)
+    } else {
+        let profile = hem3d::traffic::benchmark(&bench)
+            .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench}'"))?;
+        let trace = hem3d::traffic::generate(&profile, &tiles, cfg.windows, seed);
+        let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        noc_validate_cfg(&ctx, &design, &routing, cycles, seed, sim_cfg.clone())
+    };
+
+    print_stats(
+        &st,
+        &format!(
+            "sim: pattern={} bench={} tech={} topology={topo} cycles={cycles} seed={seed} \
+             vcs={} vc-depth={}",
+            pattern.name(),
+            if pattern.is_synthetic() { "-" } else { bench.as_str() },
+            tech.tech.name(),
+            sim_cfg.vcs,
+            sim_cfg.vc_depth
+        ),
     );
+    Ok(())
+}
+
+/// Print one run's stats block (shared by all scenarios).
+fn print_stats(st: &SimStats, header: &str) {
+    println!("{header}");
     println!("  delivered packets:   {}", st.delivered);
     println!("  throughput:          {:.4} flits/cycle", st.throughput());
     println!("  mean packet latency: {:.1} cycles", st.mean_latency);
@@ -58,5 +114,11 @@ pub fn run(args: &Args) -> Result<()> {
         stats::max(util),
         stats::std_pop(util)
     );
-    Ok(())
+    let total: u64 = st.vc_flits.iter().sum();
+    for (v, &f) in st.vc_flits.iter().enumerate() {
+        let share = if total > 0 { f as f64 / total as f64 } else { 0.0 };
+        let role = if v == 0 && st.vc_flits.len() > 1 { " (escape)" } else { "" };
+        println!("  vc[{v}] flits:        {f} ({:.1}%){role}", share * 100.0);
+    }
+    println!("  escape packets:      {}", st.escape_packets);
 }

@@ -9,4 +9,6 @@ pub mod report;
 pub mod validate;
 
 pub use campaign::{run_leg, Algo, Effort, LegResult, LegWorld, Selection, Validated};
-pub use validate::{detailed_peak_temp, noc_validate, power_grid};
+pub use validate::{
+    detailed_peak_temp, noc_validate, noc_validate_cfg, power_grid, trace_replay_rates,
+};

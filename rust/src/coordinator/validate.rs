@@ -90,30 +90,17 @@ pub fn detailed_peak_temp(ctx: &EncodeCtx<'_>, design: &Design) -> f64 {
     t_final
 }
 
-/// Cycle-level NoC validation: mean packet latency [cycles] and delivered
-/// throughput [flits/cycle] for the worst-traffic window.
-pub fn noc_validate(
-    ctx: &EncodeCtx<'_>,
-    design: &Design,
-    routing: &Routing,
-    cycles: u64,
-    seed: u64,
-) -> crate::noc::sim::SimStats {
+/// Position-space `(rate, flits)` matrices for the trace-replay scenario:
+/// the worst-traffic window of the context's trace, mapped through the
+/// design's placement.  LLC->core replies carry data packets, everything
+/// else short requests (`noc::packet::PacketClass`), keeping this scenario
+/// family's flit sizing in lockstep with `traffic::patterns`.
+pub fn trace_replay_rates(ctx: &EncodeCtx<'_>, design: &Design) -> (Vec<f64>, Vec<u16>) {
+    use crate::noc::packet::PacketClass;
     let n = ctx.tiles.n_tiles();
-    let worst = ctx
-        .trace
-        .windows
-        .iter()
-        .max_by(|a, b| {
-            let sa: f64 = a.f.iter().sum();
-            let sb: f64 = b.f.iter().sum();
-            sa.partial_cmp(&sb).unwrap()
-        })
-        .expect("empty trace");
-
-    // Position-space rates (the simulator works over router positions).
+    let worst = &ctx.trace.windows[ctx.trace.worst_window()];
     let mut rate = vec![0.0f64; n * n];
-    let mut flits = vec![1u16; n * n];
+    let mut flits = vec![PacketClass::Request.flits(); n * n];
     for i in 0..n {
         for j in 0..n {
             let f = worst.f[i * n + j];
@@ -122,17 +109,45 @@ pub fn noc_validate(
             }
             let (pi, pj) = (design.pos_of[i], design.pos_of[j]);
             rate[pi * n + pj] += f;
-            // LLC->core replies carry data (5 flits), requests 1 flit.
-            flits[pi * n + pj] =
-                if ctx.tiles.kind(i) == crate::arch::tile::TileKind::Llc { 5 } else { 1 };
+            flits[pi * n + pj] = if ctx.tiles.kind(i) == crate::arch::tile::TileKind::Llc {
+                PacketClass::Data.flits()
+            } else {
+                PacketClass::Request.flits()
+            };
         }
     }
+    (rate, flits)
+}
 
+/// Cycle-level NoC validation: mean packet latency [cycles] and delivered
+/// throughput [flits/cycle] for the worst-traffic window, under the
+/// default wormhole fabric configuration (DESIGN.md §8).
+pub fn noc_validate(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    routing: &Routing,
+    cycles: u64,
+    seed: u64,
+) -> crate::noc::sim::SimStats {
     let sim_cfg = SimConfig {
         router_stages: ctx.tech.router_stages as u32,
-        link_delay: 1,
         inject_cap: 64,
+        ..SimConfig::default()
     };
+    noc_validate_cfg(ctx, design, routing, cycles, seed, sim_cfg)
+}
+
+/// [`noc_validate`] with an explicit fabric configuration — `hem3d sim`
+/// uses this to wire `--vcs` / `--vc-depth` into the trace-replay scenario.
+pub fn noc_validate_cfg(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    routing: &Routing,
+    cycles: u64,
+    seed: u64,
+    sim_cfg: SimConfig,
+) -> crate::noc::sim::SimStats {
+    let (rate, flits) = trace_replay_rates(ctx, design);
     let sim = NocSim::new(design, routing, sim_cfg);
     let mut rng = Rng::seed_from_u64(seed);
     sim.run(&rate, &flits, cycles, &mut rng)

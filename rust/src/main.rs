@@ -36,8 +36,10 @@ COMMANDS:
   trace      Generate a traffic trace [--bench bp|nw|lv|lud|knn|pf]
              [--tech tsv|m3d] [--seed N] [--out FILE]
   pipeline   Fig 6: planar vs M3D GPU pipeline timing [--seed N]
-  sim        Cycle-level NoC simulation [--bench NAME] [--tech tsv|m3d]
-             [--topology mesh|swnoc] [--cycles N] [--seed N]
+  sim        Cycle-level wormhole NoC simulation [--bench NAME]
+             [--tech tsv|m3d] [--topology mesh|swnoc]
+             [--pattern trace|uniform|transpose|bitcomp|hotspot] [--rate X]
+             [--vcs N] [--vc-depth N] [--cycles N] [--seed N]
   optimize   Run one DSE leg [--bench NAME] [--tech tsv|m3d]
              [--algo moo-stage|amosa] [--mode po|pt] [--iters N] [--seed N]
              [--artifacts DIR|none] [--workers N]

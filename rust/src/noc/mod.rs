@@ -1,6 +1,7 @@
 //! Network-on-chip: topology generation (mesh + SWNoC), deterministic
-//! shortest-path routing, and the cycle-level simulator used to validate
-//! Pareto winners (the Garnet substitute).
+//! shortest-path routing with a spanning-tree escape layer, and the
+//! flit-level wormhole/VC simulator used to validate Pareto winners (the
+//! Garnet substitute; DESIGN.md §8).
 
 pub mod packet;
 pub mod routing;
@@ -8,4 +9,4 @@ pub mod sim;
 pub mod topology;
 
 pub use routing::Routing;
-pub use sim::{NocSim, SimConfig, SimStats};
+pub use sim::{NocSim, OfferedPacket, SimConfig, SimStats};

@@ -1,4 +1,26 @@
-//! Packet and message types shared by the cycle-level NoC simulator.
+//! Packet, flit and message types shared by the cycle-level NoC simulator.
+
+/// One flit of a packet in flight inside the wormhole fabric.
+///
+/// Flits are identified by their packet slot plus a sequence number;
+/// `seq == 0` is the head flit (the one that routes and allocates VCs),
+/// `is_tail` marks the flit that releases VC ownership downstream.
+#[derive(Debug, Clone, Copy)]
+pub struct Flit {
+    /// Index of the owning packet in the simulator's in-flight table.
+    pub pkt: u32,
+    /// Position within the packet (0 = head).
+    pub seq: u16,
+    /// Whether this is the last flit of its packet.
+    pub is_tail: bool,
+}
+
+impl Flit {
+    /// Whether this is the head flit (routes and allocates VCs).
+    pub fn is_head(&self) -> bool {
+        self.seq == 0
+    }
+}
 
 /// A network packet (one message; flit count = serialization length).
 #[derive(Debug, Clone, Copy)]

@@ -3,8 +3,10 @@
 //! All-pairs BFS with a fixed tie-break (parent with the smallest index),
 //! so that a given design always routes identically — a requirement both
 //! for reproducible figures and for the MOO-STAGE evaluation function to be
-//! well-defined.  Produces per-pair paths, hop counts, and the `q_ijk`
-//! link-pair incidence the Eq. (2) utilisation model consumes.
+//! well-defined.  Produces per-pair paths, hop counts, the `q_ijk`
+//! link-pair incidence the Eq. (2) utilisation model consumes, and the
+//! spanning-tree *escape* routes the wormhole simulator's deadlock-avoidance
+//! layer uses (DESIGN.md §8.4).
 
 use crate::arch::design::{Design, Link};
 
@@ -21,6 +23,14 @@ pub struct Routing {
     link_of: Vec<u16>,
     /// The design's normalised link set (the `q_ijk` link index space).
     pub links: Vec<Link>,
+    /// BFS spanning-tree parent per position (root 0 is its own parent).
+    /// The tree carries the escape routes of DESIGN.md §8.4.
+    pub tree_parent: Vec<u16>,
+    /// BFS spanning-tree depth per position (0 at the root).
+    pub tree_depth: Vec<u16>,
+    /// escape[u*n + d] = next hop on the tree-only route u -> d (u on the
+    /// diagonal).  Routes climb to the lowest common ancestor, then descend.
+    escape_next: Vec<u16>,
 }
 
 impl Routing {
@@ -66,7 +76,96 @@ impl Routing {
             link_of[a * n + b] = i as u16;
             link_of[b * n + a] = i as u16;
         }
-        Routing { n, hops, next_hop, link_of, links: design.links.clone() }
+
+        // Escape spanning tree (DESIGN.md §8.4): BFS from position 0 with
+        // the same sorted-adjacency determinism as the route tables.  Tree
+        // routes (up to the LCA, then down) have an acyclic channel
+        // dependency graph, which the simulator's escape VC relies on.
+        let mut tree_parent = vec![u16::MAX; n];
+        let mut tree_depth = vec![0u16; n];
+        tree_parent[0] = 0;
+        queue.clear();
+        queue.push_back(0);
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u] {
+                if tree_parent[v] == u16::MAX {
+                    tree_parent[v] = u as u16;
+                    tree_depth[v] = tree_depth[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+
+        // Per-pair escape next hops: mark the d -> root chain, then every
+        // source either descends (it is an ancestor of d) or climbs.
+        let mut escape_next = vec![u16::MAX; n * n];
+        let mut chain_child = vec![u16::MAX; n];
+        for d in 0..n {
+            let mut cur = d;
+            loop {
+                // chain_child[anc] = the chain node directly below `anc`
+                // (d maps to itself, which the u == d case masks).
+                if cur == d {
+                    chain_child[cur] = d as u16;
+                }
+                if cur == 0 {
+                    break;
+                }
+                let p = tree_parent[cur] as usize;
+                chain_child[p] = cur as u16;
+                cur = p;
+            }
+            for u in 0..n {
+                escape_next[u * n + d] = if u == d {
+                    u as u16
+                } else if chain_child[u] != u16::MAX {
+                    chain_child[u]
+                } else {
+                    tree_parent[u]
+                };
+            }
+            let mut cur = d;
+            loop {
+                chain_child[cur] = u16::MAX;
+                if cur == 0 {
+                    break;
+                }
+                cur = tree_parent[cur] as usize;
+            }
+        }
+
+        Routing {
+            n,
+            hops,
+            next_hop,
+            link_of,
+            links: design.links.clone(),
+            tree_parent,
+            tree_depth,
+            escape_next,
+        }
+    }
+
+    /// Next hop on the spanning-tree escape route u -> d (u on the
+    /// diagonal).  Escape routes climb to the lowest common ancestor of
+    /// `u` and `d`, then descend — never up after down — which keeps the
+    /// escape channel dependency graph acyclic (DESIGN.md §8.4).
+    #[inline]
+    pub fn escape_next_hop(&self, u: usize, d: usize) -> usize {
+        self.escape_next[u * self.n + d] as usize
+    }
+
+    /// Escape-route length u -> d in tree hops (>= `hop_count`, 0 on the
+    /// diagonal).  Diagnostic for the escape-path stretch.
+    pub fn escape_hops(&self, u: usize, d: usize) -> usize {
+        let mut cur = u;
+        let mut h = 0;
+        while cur != d {
+            cur = self.escape_next_hop(cur, d);
+            h += 1;
+            debug_assert!(h <= 2 * self.n, "escape route does not terminate");
+        }
+        h
     }
 
     #[inline]
@@ -76,6 +175,20 @@ impl Routing {
     }
 
     /// Full path s -> d as a position sequence (inclusive).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hem3d::arch::design::{Design, Link};
+    /// use hem3d::noc::routing::Routing;
+    ///
+    /// // A 4-position line 0 - 1 - 2 - 3.
+    /// let line = vec![Link::new(0, 1), Link::new(1, 2), Link::new(2, 3)];
+    /// let design = Design::with_identity_placement(4, line);
+    /// let routing = Routing::build(&design);
+    /// assert_eq!(routing.path(0, 3), vec![0, 1, 2, 3]);
+    /// assert_eq!(routing.hop_count(0, 3), 3);
+    /// ```
     pub fn path(&self, s: usize, d: usize) -> Vec<usize> {
         let mut path = vec![s];
         let mut cur = s;
@@ -210,6 +323,55 @@ mod tests {
     }
 
     #[test]
+    fn escape_routes_are_valid_tree_paths() {
+        // On mesh and SWNoC designs alike: every escape route terminates,
+        // uses only spanning-tree links, and never goes up after down.
+        let cfg = ArchConfig::paper();
+        let geo = crate::arch::geometry::Geometry::new(&cfg, &crate::config::TechParams::m3d());
+        let mut rng = crate::util::Rng::seed_from_u64(21);
+        let designs = vec![
+            Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg)),
+            Design::with_identity_placement(
+                cfg.n_tiles(),
+                topology::swnoc_links(&cfg, &geo, 1.8, &mut rng),
+            ),
+        ];
+        for d in designs {
+            let r = Routing::build(&d);
+            let adj = d.adjacency();
+            for s in (0..r.n).step_by(3) {
+                for t in (0..r.n).step_by(5) {
+                    if s == t {
+                        assert_eq!(r.escape_next_hop(s, t), s);
+                        continue;
+                    }
+                    let mut cur = s;
+                    let mut went_down = false;
+                    let mut hops = 0;
+                    while cur != t {
+                        let nxt = r.escape_next_hop(cur, t);
+                        assert!(adj[cur].contains(&nxt), "escape hop {cur}->{nxt} not a link");
+                        // Tree edge: one endpoint is the other's parent.
+                        let down = r.tree_parent[nxt] as usize == cur;
+                        let up = r.tree_parent[cur] as usize == nxt;
+                        assert!(down || up, "escape hop {cur}->{nxt} off the tree");
+                        if down {
+                            went_down = true;
+                        } else {
+                            assert!(!went_down, "escape route climbs after descending");
+                        }
+                        cur = nxt;
+                        hops += 1;
+                        assert!(hops <= 2 * r.n, "escape route loops");
+                    }
+                    assert_eq!(r.escape_hops(s, t), hops);
+                    assert!(hops >= r.hop_count(s, t));
+                }
+            }
+        }
+    }
+
+    #[test]
     fn routing_is_deterministic() {
         let cfg = ArchConfig::paper();
         let geo = crate::arch::geometry::Geometry::new(&cfg, &crate::config::TechParams::m3d());
@@ -220,5 +382,7 @@ mod tests {
         let r2 = Routing::build(&d);
         assert_eq!(r1.hops, r2.hops);
         assert_eq!(r1.next_hop, r2.next_hop);
+        assert_eq!(r1.tree_parent, r2.tree_parent);
+        assert_eq!(r1.escape_next, r2.escape_next);
     }
 }

@@ -76,10 +76,45 @@ pub fn swnoc_links(cfg: &ArchConfig, geo: &Geometry, alpha: f64, rng: &mut Rng) 
     links
 }
 
+/// All topology names [`by_name`] accepts (the scenario library and the
+/// deadlock smoke tests iterate these).
+pub const TOPOLOGY_NAMES: [&str; 2] = ["mesh", "swnoc"];
+
+/// Build a named topology's link set: `"mesh"` (3D mesh baseline) or
+/// `"swnoc"` (seeded small-world set with power-law exponent `alpha`).
+/// Returns `None` for unknown names.
+pub fn by_name(
+    name: &str,
+    cfg: &ArchConfig,
+    geo: &Geometry,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Option<Vec<Link>> {
+    match name {
+        "mesh" => Some(mesh_links(cfg)),
+        "swnoc" => Some(swnoc_links(cfg, geo, alpha, rng)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::design::Design;
+
+    #[test]
+    fn by_name_covers_all_topologies() {
+        let cfg = ArchConfig::paper();
+        let geo = Geometry::new(&cfg, &TechParams::m3d());
+        for name in TOPOLOGY_NAMES {
+            let mut rng = Rng::seed_from_u64(1);
+            let links = by_name(name, &cfg, &geo, 1.8, &mut rng).unwrap();
+            let d = Design::with_identity_placement(cfg.n_tiles(), links);
+            assert!(d.is_connected(), "{name} disconnected");
+        }
+        let mut rng = Rng::seed_from_u64(1);
+        assert!(by_name("torus", &cfg, &geo, 1.8, &mut rng).is_none());
+    }
 
     #[test]
     fn mesh_link_count_matches_formula() {

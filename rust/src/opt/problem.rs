@@ -5,7 +5,7 @@ use crate::arch::design::Design;
 use crate::arch::encode::{design_key, EncodeCtx};
 use crate::eval::objectives::{evaluate_sparse, Scores, SparseTraffic};
 use crate::noc::routing::Routing;
-use crate::runtime::EvalCache;
+use crate::runtime::{EvalCache, EvalKey, ScenarioKey};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Optimization flavour (Eq. 9).
@@ -68,6 +68,10 @@ pub struct Problem<'a> {
     pub traffic: SparseTraffic,
     /// Worker threads candidate evaluation may fan out over (>= 1).
     pub workers: usize,
+    /// Scenario component of every cache key this problem issues
+    /// (workload + tech + fabric config, DESIGN.md §1.3).  Shared, not
+    /// cloned, per probe: `score` is the DSE hot path.
+    pub scenario: std::sync::Arc<ScenarioKey>,
     evals: AtomicU64,
     cache: EvalCache,
 }
@@ -81,11 +85,17 @@ impl<'a> Problem<'a> {
             crate::runtime::dims::N_WINDOWS,
             Some(ctx.tiles),
         );
+        let scenario = std::sync::Arc::new(ScenarioKey::trace(
+            &ctx.trace.bench,
+            ctx.tech.tech.name(),
+            ctx.trace.windows.len(),
+        ));
         Problem {
             ctx,
             mode,
             traffic,
             workers: 1,
+            scenario,
             evals: AtomicU64::new(0),
             cache: EvalCache::new(),
         }
@@ -110,7 +120,7 @@ impl<'a> Problem<'a> {
     /// or scheduling (concurrent duplicate evaluations race benignly: both
     /// compute the same pure result, one wins the insert and the count).
     pub fn score(&self, design: &Design) -> Scores {
-        let key = design_key(design);
+        let key = EvalKey { design: design_key(design), scenario: self.scenario.clone() };
         if let Some(cached) = self.cache.get(&key) {
             return cached;
         }

@@ -3,4 +3,4 @@
 
 pub mod model;
 
-pub use model::{exec_time, ExecTime, PerfCoeffs};
+pub use model::{exec_time, hol_factor, ExecTime, PerfCoeffs, VC_CALIBRATION_POINT};

@@ -39,7 +39,17 @@ pub struct PerfCoeffs {
     pub gpu_mem_scale: f64,
     /// Memory-time scale per CPU access.
     pub cpu_mem_scale: f64,
+    /// Virtual channels per router port in the modeled fabric.  The
+    /// contention term is calibrated against the wormhole simulator at its
+    /// default `vcs = 4` (DESIGN.md §8.5): `vcs = 4.0` reproduces the
+    /// calibrated M/M/1 penalty exactly, while fewer VCs steepen it
+    /// (head-of-line blocking raises the *effective* load) and more VCs
+    /// relax it.
+    pub vcs: f64,
 }
+
+/// The VC count the contention coefficients were calibrated at.
+pub const VC_CALIBRATION_POINT: f64 = 4.0;
 
 impl Default for PerfCoeffs {
     fn default() -> Self {
@@ -50,8 +60,19 @@ impl Default for PerfCoeffs {
             flits_per_packet: 4.2,
             gpu_mem_scale: 0.30,
             cpu_mem_scale: 0.50,
+            vcs: VC_CALIBRATION_POINT,
         }
     }
+}
+
+/// Head-of-line blocking multiplier on the effective link load: 1.0 at the
+/// [`VC_CALIBRATION_POINT`], rising toward low VC counts the way the
+/// wormhole fabric's saturation point moves in a `--vcs` sweep (a
+/// single-queue port suffers the full HOL penalty, each added VC roughly
+/// halves the residual).
+pub fn hol_factor(vcs: f64) -> f64 {
+    let v = vcs.max(1.0);
+    (1.0 + 1.0 / v) / (1.0 + 1.0 / VC_CALIBRATION_POINT)
 }
 
 /// Execution-time breakdown for one design (arbitrary units; compare
@@ -101,10 +122,13 @@ pub fn exec_time(
     // Contention penalty from the load statistics (Eqs. 3-6): an
     // M/M/1-flavoured multiplier on every network traversal.  sigma enters
     // because the hottest links (mean + sigma) saturate first — exactly the
-    // load-balancing pressure the paper's GPU objective encodes.
+    // load-balancing pressure the paper's GPU objective encodes.  The VC
+    // count scales the *effective* load (DESIGN.md §8.5): head-of-line
+    // blocking in a low-VC fabric makes the same physical load bite harder.
     let rho = ((scores.umean + scores.usigma) * coeffs.flits_per_packet
-        * coeffs.contention_scale)
-        .min(0.93);
+        * coeffs.contention_scale
+        * hol_factor(coeffs.vcs))
+    .min(0.93);
     let contention = 1.0 / (1.0 - rho);
 
     let mut total = ExecTime {
@@ -234,6 +258,39 @@ mod tests {
         assert!(et.gpu_mem > 0.0 && et.cpu_mem > 0.0);
         // Total must be at least the GPU compute + CPU compute floor.
         assert!(et.total >= et.gpu_compute + et.cpu_compute - 1e-9);
+    }
+
+    #[test]
+    fn vc_anchor_reproduces_calibration_and_fewer_vcs_slow_the_chip() {
+        // hol_factor is exactly 1 at the calibration point, so the default
+        // coefficient set is bit-compatible with the pre-wormhole numbers.
+        assert_eq!(hol_factor(VC_CALIBRATION_POINT), 1.0);
+        assert!(hol_factor(1.0) > hol_factor(2.0));
+        assert!(hol_factor(2.0) > 1.0);
+        assert!(hol_factor(8.0) < 1.0);
+
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::tsv();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let profile = benchmark("bp").unwrap();
+        let trace = generate(&profile, &tiles, cfg.windows, 3);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let r = Routing::build(&d);
+        // Mid-load scores keep rho away from its cap so the HOL factor
+        // must separate the fabrics strictly.
+        let mut s = evaluate(&ctx, &d, &r);
+        s.umean = 0.03;
+        s.usigma = 0.02;
+        let mut single_vc = PerfCoeffs::default();
+        single_vc.vcs = 1.0;
+        let et_default = exec_time(&ctx, &profile, &d, &r, &s, &PerfCoeffs::default()).total;
+        let et_single = exec_time(&ctx, &profile, &d, &r, &s, &single_vc).total;
+        assert!(
+            et_single > et_default,
+            "1-VC fabric should be slower: {et_single} vs {et_default}"
+        );
     }
 
     #[test]

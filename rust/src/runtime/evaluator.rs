@@ -9,7 +9,7 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::client::{literal_f32, LoadedComputation, Runtime};
 use crate::arch::encode::DesignKey;
@@ -173,15 +173,67 @@ impl Evaluator {
 // Evaluation memoization
 // ---------------------------------------------------------------------------
 
+/// The evaluation *scenario*: everything besides the design itself that the
+/// objective scores depend on — workload, technology, and the NoC fabric
+/// configuration (DESIGN.md §1.3).
+///
+/// Two evaluations may share cached [`Scores`] only when both their design
+/// keys and their scenario keys match; this is what keeps the cache safe if
+/// it is ever shared across legs or across `--pattern`/`--vcs` sweeps.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ScenarioKey {
+    /// Workload tag: benchmark name, or a synthetic pattern name.
+    pub workload: String,
+    /// Technology name (`"tsv"` / `"m3d"`).
+    pub tech: &'static str,
+    /// Traffic windows folded into the objectives.
+    pub windows: u16,
+    /// Virtual channels per router port in the simulated fabric.
+    pub vcs: u16,
+    /// VC buffer depth [flits].
+    pub vc_depth: u16,
+}
+
+impl ScenarioKey {
+    /// Scenario for a benchmark-trace evaluation under the default fabric.
+    pub fn trace(bench: &str, tech: &'static str, windows: usize) -> Self {
+        let cfg = crate::noc::sim::SimConfig::default();
+        ScenarioKey {
+            workload: bench.to_string(),
+            tech,
+            windows: windows as u16,
+            vcs: cfg.vcs as u16,
+            vc_depth: cfg.vc_depth as u16,
+        }
+    }
+}
+
+/// Full cache key: canonical design encoding plus the evaluation scenario.
+///
+/// The scenario sits behind an [`Arc`] because it is constant per cache
+/// owner (one `opt::Problem` = one scenario) while `score` builds a key
+/// per candidate probe — cloning must not re-allocate the workload string
+/// on the DSE hot path.  `Arc`'s `Hash`/`Eq` delegate to the inner value,
+/// so keying semantics are unchanged.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EvalKey {
+    /// The `arch::encode` design encoding.
+    pub design: DesignKey,
+    /// The evaluation scenario (workload + tech + fabric).
+    pub scenario: Arc<ScenarioKey>,
+}
+
 /// Thread-safe memoization cache for design evaluations, keyed by the
-/// canonical `arch::encode` design encoding.
+/// canonical `arch::encode` design encoding *and* the evaluation scenario
+/// ([`EvalKey`]).
 ///
 /// The DSE optimizers repeatedly re-probe designs they have already scored
 /// (Pareto re-insertions, plateau walks, AMOSA chains revisiting states);
 /// objective evaluation is a pure function of the design under a fixed
-/// `(trace, tech)` context, so replaying the cached [`Scores`] is exact —
-/// not an approximation.  One cache lives inside each `opt::Problem` (i.e.
-/// per DSE leg), so entries never leak across contexts.
+/// scenario, so replaying the cached [`Scores`] is exact — not an
+/// approximation.  One cache lives inside each `opt::Problem` (i.e. per DSE
+/// leg); the scenario component of the key makes entries safe even if a
+/// cache is ever shared across benchmarks, technologies, or fabric sweeps.
 ///
 /// Concurrency: `insert` reports whether the key was newly inserted, and the
 /// first writer wins.  `opt::Problem` counts an evaluation only on a fresh
@@ -189,7 +241,7 @@ impl Evaluator {
 /// the property the `--workers` determinism test relies on.
 #[derive(Debug, Default)]
 pub struct EvalCache {
-    map: Mutex<HashMap<DesignKey, Scores>>,
+    map: Mutex<HashMap<EvalKey, Scores>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -201,7 +253,7 @@ impl EvalCache {
     }
 
     /// Cached scores for `key`, if present (counts a hit or a miss).
-    pub fn get(&self, key: &DesignKey) -> Option<Scores> {
+    pub fn get(&self, key: &EvalKey) -> Option<Scores> {
         let found = self.map.lock().unwrap().get(key).copied();
         match found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
@@ -212,7 +264,7 @@ impl EvalCache {
 
     /// Insert freshly computed scores; returns true if the key was new
     /// (false when a concurrent evaluation of the same design won the race).
-    pub fn insert(&self, key: DesignKey, scores: Scores) -> bool {
+    pub fn insert(&self, key: EvalKey, scores: Scores) -> bool {
         self.map.lock().unwrap().insert(key, scores).is_none()
     }
 
@@ -249,16 +301,23 @@ mod cache_tests {
         Scores { lat: x, umean: x, usigma: x, tmax: x }
     }
 
+    fn key_of(d: &Design) -> EvalKey {
+        EvalKey {
+            design: design_key(d),
+            scenario: Arc::new(ScenarioKey::trace("bp", "m3d", 8)),
+        }
+    }
+
     #[test]
     fn hit_and_miss_counters_track_lookups() {
         let cfg = ArchConfig::paper();
         let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
         let cache = EvalCache::new();
-        assert!(cache.get(&design_key(&d)).is_none());
+        assert!(cache.get(&key_of(&d)).is_none());
         assert_eq!((cache.hit_count(), cache.miss_count()), (0, 1));
 
-        assert!(cache.insert(design_key(&d), scores(1.0)));
-        let got = cache.get(&design_key(&d)).expect("cached");
+        assert!(cache.insert(key_of(&d), scores(1.0)));
+        let got = cache.get(&key_of(&d)).expect("cached");
         assert_eq!(got, scores(1.0));
         assert_eq!((cache.hit_count(), cache.miss_count()), (1, 1));
         assert_eq!(cache.len(), 1);
@@ -269,8 +328,8 @@ mod cache_tests {
         let cfg = ArchConfig::paper();
         let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
         let cache = EvalCache::new();
-        assert!(cache.insert(design_key(&d), scores(1.0)));
-        assert!(!cache.insert(design_key(&d), scores(1.0)));
+        assert!(cache.insert(key_of(&d), scores(1.0)));
+        assert!(!cache.insert(key_of(&d), scores(1.0)));
         assert_eq!(cache.len(), 1);
     }
 
@@ -281,11 +340,38 @@ mod cache_tests {
         let mut d2 = d.clone();
         d2.swap_positions(3, 9);
         let cache = EvalCache::new();
-        cache.insert(design_key(&d), scores(1.0));
-        assert!(cache.get(&design_key(&d2)).is_none());
-        cache.insert(design_key(&d2), scores(2.0));
+        cache.insert(key_of(&d), scores(1.0));
+        assert!(cache.get(&key_of(&d2)).is_none());
+        cache.insert(key_of(&d2), scores(2.0));
         assert_eq!(cache.len(), 2);
-        assert_eq!(cache.get(&design_key(&d)).unwrap(), scores(1.0));
-        assert_eq!(cache.get(&design_key(&d2)).unwrap(), scores(2.0));
+        assert_eq!(cache.get(&key_of(&d)).unwrap(), scores(1.0));
+        assert_eq!(cache.get(&key_of(&d2)).unwrap(), scores(2.0));
+    }
+
+    #[test]
+    fn scenario_distinguishes_otherwise_equal_designs() {
+        // Same design under a different workload, technology, or fabric
+        // configuration must never replay the other scenario's scores.
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let cache = EvalCache::new();
+        let base = key_of(&d);
+        cache.insert(base.clone(), scores(1.0));
+
+        let with_scenario = |f: &dyn Fn(&mut ScenarioKey)| {
+            let mut s = (*base.scenario).clone();
+            f(&mut s);
+            EvalKey { design: base.design.clone(), scenario: Arc::new(s) }
+        };
+        let other_bench = with_scenario(&|s| s.workload = "lv".to_string());
+        assert!(cache.get(&other_bench).is_none());
+
+        let other_tech = with_scenario(&|s| s.tech = "tsv");
+        assert!(cache.get(&other_tech).is_none());
+
+        let other_fabric = with_scenario(&|s| s.vcs = 1);
+        assert!(cache.get(&other_fabric).is_none());
+
+        assert_eq!(cache.get(&base).unwrap(), scores(1.0));
     }
 }

@@ -8,4 +8,4 @@ pub mod client;
 pub mod evaluator;
 
 pub use client::{literal_f32, LoadedComputation, Runtime};
-pub use evaluator::{dims, EvalCache, Evaluator, MooBatch, MooScores};
+pub use evaluator::{dims, EvalCache, EvalKey, Evaluator, MooBatch, MooScores, ScenarioKey};

@@ -35,9 +35,39 @@ impl Trace {
     pub fn total_rate(&self, w: usize) -> f64 {
         self.windows[w].f.iter().sum()
     }
+
+    /// Index of the window with the highest aggregate traffic — the window
+    /// the trace-replay scenario (`hem3d sim --pattern trace`) and the
+    /// Pareto NoC validation simulate.
+    pub fn worst_window(&self) -> usize {
+        let mut best = 0;
+        let mut best_rate = f64::NEG_INFINITY;
+        for w in 0..self.windows.len() {
+            let r = self.total_rate(w);
+            if r > best_rate {
+                best_rate = r;
+                best = w;
+            }
+        }
+        best
+    }
 }
 
 /// Generate a seeded trace for `profile` over `n_windows` windows.
+///
+/// # Examples
+///
+/// ```
+/// use hem3d::arch::tile::TileSet;
+/// use hem3d::traffic::{benchmark, generate};
+///
+/// let tiles = TileSet::new(2, 10, 4); // 2 CPU + 10 GPU + 4 LLC tiles
+/// let profile = benchmark("bp").unwrap();
+/// let trace = generate(&profile, &tiles, 3, 42);
+/// assert_eq!(trace.windows.len(), 3);
+/// assert_eq!(trace.n_tiles, 16);
+/// assert!(trace.total_rate(trace.worst_window()) > 0.0);
+/// ```
 pub fn generate(
     profile: &BenchProfile,
     tiles: &TileSet,

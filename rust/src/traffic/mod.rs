@@ -1,9 +1,12 @@
 //! Workload traffic: per-benchmark profiles, the windowed f_ij(t) trace
-//! generator (Gem5-GPU substitute), and trace file I/O.
+//! generator (Gem5-GPU substitute), trace file I/O, and the synthetic
+//! scenario library (`--pattern`) for the NoC simulator.
 
 pub mod generator;
+pub mod patterns;
 pub mod profile;
 pub mod trace;
 
 pub use generator::{generate, Trace, Window};
+pub use patterns::TrafficPattern;
 pub use profile::{all_benchmarks, benchmark, is_compute_intensive, BenchProfile};

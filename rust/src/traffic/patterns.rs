@@ -1,0 +1,290 @@
+//! Synthetic traffic scenario library for the NoC simulator.
+//!
+//! `hem3d sim --pattern <name>` selects one of these; the DSE's default
+//! remains [`TrafficPattern::TraceReplay`] (the benchmark trace's worst
+//! window, the Gem5-GPU-substitute workload).  The synthetic patterns are
+//! the standard NoC stress suite — uniform random, transpose,
+//! bit-complement, hotspot-to-LLC — expressed as per-ordered-pair Bernoulli
+//! injection rates over router *positions*, the input shape
+//! [`crate::noc::sim::NocSim::run`] consumes.
+//!
+//! All patterns are pure functions of `(n, injection, hotspots)`.  Note
+//! for cache-key builders: [`TrafficPattern::name`] identifies the pattern
+//! *shape* only — a scenario key covering a synthetic run (DESIGN.md §1.3)
+//! must also carry the injection rate and hotspot set, or a `--rate`
+//! sweep would collide on one key.  (The DSE's own cache only ever
+//! evaluates trace workloads, whose `ScenarioKey::trace` has no such free
+//! parameters.)
+
+use crate::noc::packet::PacketClass;
+
+/// Fraction of a source's injection aimed at the hotspot set under
+/// [`TrafficPattern::Hotspot`]; the rest is uniform background.
+pub const HOTSPOT_FRACTION: f64 = 0.8;
+
+/// A selectable traffic scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficPattern {
+    /// Every source sprays all other nodes evenly (data packets).
+    Uniform,
+    /// Fixed-partner permutation: bit-rotate the node index by half its
+    /// width (index reversal when `n` is not a power of two).
+    Transpose,
+    /// Fixed-partner permutation: `d = (n - 1) - s` (the bitwise
+    /// complement for power-of-two `n`).
+    BitComplement,
+    /// Many-to-few-to-many: short requests funnel into a hotspot set (the
+    /// LLC positions), data-heavy replies return.
+    Hotspot,
+    /// Replay the benchmark trace's worst window (the DSE default; rates
+    /// come from [`crate::traffic::generate`], not from this module).
+    TraceReplay,
+}
+
+impl TrafficPattern {
+    /// All patterns, in CLI listing order.
+    pub fn all() -> [TrafficPattern; 5] {
+        [
+            TrafficPattern::TraceReplay,
+            TrafficPattern::Uniform,
+            TrafficPattern::Transpose,
+            TrafficPattern::BitComplement,
+            TrafficPattern::Hotspot,
+        ]
+    }
+
+    /// Parse a CLI pattern name.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hem3d::traffic::TrafficPattern;
+    ///
+    /// assert_eq!(TrafficPattern::parse("hotspot"), Some(TrafficPattern::Hotspot));
+    /// assert_eq!(TrafficPattern::parse("trace"), Some(TrafficPattern::TraceReplay));
+    /// assert_eq!(TrafficPattern::parse("bitcomp"), Some(TrafficPattern::BitComplement));
+    /// assert_eq!(TrafficPattern::parse("warp-drive"), None);
+    /// ```
+    pub fn parse(s: &str) -> Option<TrafficPattern> {
+        match s {
+            "uniform" => Some(TrafficPattern::Uniform),
+            "transpose" => Some(TrafficPattern::Transpose),
+            "bitcomp" | "bit-complement" => Some(TrafficPattern::BitComplement),
+            "hotspot" => Some(TrafficPattern::Hotspot),
+            "trace" | "trace-replay" => Some(TrafficPattern::TraceReplay),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (the `--pattern` CLI key; identifies the pattern
+    /// shape only — see the module docs before using it in a cache key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficPattern::Uniform => "uniform",
+            TrafficPattern::Transpose => "transpose",
+            TrafficPattern::BitComplement => "bitcomp",
+            TrafficPattern::Hotspot => "hotspot",
+            TrafficPattern::TraceReplay => "trace",
+        }
+    }
+
+    /// Whether the pattern is synthesized here (vs. replayed from a trace).
+    pub fn is_synthetic(&self) -> bool {
+        !matches!(self, TrafficPattern::TraceReplay)
+    }
+
+    /// Build the `(rate, flits)` matrices for a synthetic pattern over `n`
+    /// router positions: `rate[s*n + d]` in packets/cycle, `flits[s*n + d]`
+    /// the pair's packet length.  `injection` is the per-source offered
+    /// load [packets/cycle]; `hotspots` names the hotspot positions (the
+    /// placed LLCs) and is only read by [`TrafficPattern::Hotspot`].
+    ///
+    /// Returns `None` for [`TrafficPattern::TraceReplay`], whose rates come
+    /// from the benchmark trace instead.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hem3d::traffic::TrafficPattern;
+    ///
+    /// let (rate, flits) = TrafficPattern::Uniform.rates(4, 0.1, &[]).unwrap();
+    /// assert_eq!(rate.len(), 16);
+    /// assert_eq!(flits.len(), 16);
+    /// // Each source offers its full injection rate, spread evenly.
+    /// let row: f64 = rate[..4].iter().sum();
+    /// assert!((row - 0.1).abs() < 1e-12);
+    /// assert!(TrafficPattern::TraceReplay.rates(4, 0.1, &[]).is_none());
+    /// ```
+    pub fn rates(
+        &self,
+        n: usize,
+        injection: f64,
+        hotspots: &[usize],
+    ) -> Option<(Vec<f64>, Vec<u16>)> {
+        let mut rate = vec![0.0f64; n * n];
+        let mut flits = vec![PacketClass::Data.flits(); n * n];
+        match self {
+            TrafficPattern::TraceReplay => return None,
+            TrafficPattern::Uniform => {
+                let per = injection / (n - 1).max(1) as f64;
+                for s in 0..n {
+                    for d in 0..n {
+                        if s != d {
+                            rate[s * n + d] = per;
+                        }
+                    }
+                }
+            }
+            TrafficPattern::Transpose => {
+                for s in 0..n {
+                    let d = transpose_partner(s, n);
+                    if s != d {
+                        rate[s * n + d] = injection;
+                    }
+                }
+            }
+            TrafficPattern::BitComplement => {
+                for s in 0..n {
+                    let d = (n - 1) - s;
+                    if s != d {
+                        rate[s * n + d] = injection;
+                    }
+                }
+            }
+            TrafficPattern::Hotspot => {
+                let hot: Vec<usize> =
+                    if hotspots.is_empty() { vec![0] } else { hotspots.to_vec() };
+                let is_hot = |p: usize| hot.contains(&p);
+                for s in 0..n {
+                    if is_hot(s) {
+                        continue; // hotspots only reply
+                    }
+                    // Requests funnel into the hotspot set...
+                    let req = injection * HOTSPOT_FRACTION / hot.len() as f64;
+                    for &h in &hot {
+                        rate[s * n + h] += req;
+                        flits[s * n + h] = PacketClass::Request.flits();
+                        // ...and data replies stream back.
+                        rate[h * n + s] += req;
+                        flits[h * n + s] = PacketClass::Data.flits();
+                    }
+                    // Uniform background over the non-hot remainder.
+                    let cold = n.saturating_sub(hot.len() + 1);
+                    if cold > 0 {
+                        let bg = injection * (1.0 - HOTSPOT_FRACTION) / cold as f64;
+                        for d in 0..n {
+                            if d != s && !is_hot(d) {
+                                rate[s * n + d] += bg;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Some((rate, flits))
+    }
+}
+
+/// Transpose partner: rotate the index by half its bit width when the
+/// width is even (an involution: rotating twice by b/2 is the identity);
+/// fall back to index reversal (also an involution) for odd widths and
+/// non-power-of-two `n`, so the pattern is always matched pairs.
+fn transpose_partner(s: usize, n: usize) -> usize {
+    if n.is_power_of_two() && n > 1 {
+        let b = n.trailing_zeros();
+        let rot = b / 2;
+        if b % 2 != 0 || rot == 0 {
+            return (n - 1) - s;
+        }
+        ((s << rot) | (s >> (b - rot))) & (n - 1)
+    } else {
+        (n - 1) - s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for p in TrafficPattern::all() {
+            assert_eq!(TrafficPattern::parse(p.name()), Some(p));
+        }
+        assert_eq!(TrafficPattern::parse("nope"), None);
+        assert!(!TrafficPattern::TraceReplay.is_synthetic());
+        assert!(TrafficPattern::Hotspot.is_synthetic());
+    }
+
+    #[test]
+    fn uniform_offers_injection_per_source() {
+        let n = 64;
+        let (rate, _) = TrafficPattern::Uniform.rates(n, 0.04, &[]).unwrap();
+        for s in 0..n {
+            let row: f64 = rate[s * n..(s + 1) * n].iter().sum();
+            assert!((row - 0.04).abs() < 1e-12, "source {s} offers {row}");
+            assert_eq!(rate[s * n + s], 0.0);
+        }
+    }
+
+    #[test]
+    fn transpose_is_an_involution_at_every_size() {
+        // Even bit widths rotate (6-bit indices by 3), odd widths and
+        // non-powers-of-two reverse — matched pairs either way.
+        for n in [2usize, 4, 8, 12, 16, 32, 64, 128] {
+            for s in 0..n {
+                let d = transpose_partner(s, n);
+                assert!(d < n);
+                assert_eq!(transpose_partner(d, n), s, "n={n} s={s}");
+            }
+        }
+        // The paper size really is the bit-rotation, not the fallback.
+        assert_eq!(transpose_partner(1, 64), 8);
+    }
+
+    #[test]
+    fn bit_complement_matches_xor_for_power_of_two() {
+        let n = 64;
+        let (rate, _) = TrafficPattern::BitComplement.rates(n, 0.1, &[]).unwrap();
+        for s in 0..n {
+            let d = s ^ (n - 1);
+            assert!(rate[s * n + d] > 0.0, "pair {s}->{d} silent");
+        }
+    }
+
+    #[test]
+    fn hotspot_concentrates_requests_and_replies() {
+        let n = 16;
+        let hot = [3usize, 7];
+        let (rate, flits) = TrafficPattern::Hotspot.rates(n, 0.1, &hot).unwrap();
+        // Requests into the hotspots dominate each source's row.
+        let into_hot: f64 = (0..n)
+            .filter(|s| !hot.contains(s))
+            .map(|s| hot.iter().map(|&h| rate[s * n + h]).sum::<f64>())
+            .sum();
+        let total: f64 = (0..n)
+            .filter(|s| !hot.contains(s))
+            .map(|s| rate[s * n..(s + 1) * n].iter().sum::<f64>())
+            .sum();
+        assert!(into_hot / total >= HOTSPOT_FRACTION - 1e-9);
+        // Requests are short, replies are data-sized.
+        assert_eq!(flits[0 * n + 3], PacketClass::Request.flits());
+        assert_eq!(flits[3 * n], PacketClass::Data.flits());
+        // Replies balance requests pairwise.
+        for s in 0..n {
+            if hot.contains(&s) {
+                continue;
+            }
+            for &h in &hot {
+                assert!((rate[s * n + h] - rate[h * n + s]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn hotspots_fall_back_to_node_zero() {
+        let (rate, _) = TrafficPattern::Hotspot.rates(8, 0.1, &[]).unwrap();
+        let into_zero: f64 = (1..8).map(|s| rate[s * 8]).sum();
+        assert!(into_zero > 0.0);
+    }
+}

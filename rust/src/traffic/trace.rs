@@ -1,5 +1,8 @@
 //! Trace file I/O (JSON) — lets `hem3d trace` export traces for inspection
-//! and lets examples/benches reload identical workloads.
+//! and lets examples/benches reload identical workloads.  A reloaded trace
+//! feeds the trace-replay scenario (`hem3d sim --pattern trace` simulates
+//! its worst window, `Trace::worst_window`) exactly like a freshly
+//! generated one.
 
 use super::generator::{Trace, Window};
 use crate::util::json::{self, Json};

@@ -18,6 +18,19 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of tokens (excluding argv[0]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hem3d::util::cli::Args;
+    ///
+    /// let argv = ["sim", "--pattern", "hotspot", "--vcs=4", "--vc-depth", "2"];
+    /// let args = Args::parse(argv.iter().map(|s| s.to_string()));
+    /// assert_eq!(args.command.as_deref(), Some("sim"));
+    /// assert_eq!(args.opt("pattern"), Some("hotspot"));
+    /// assert_eq!(args.usize_or("vcs", 1), 4);
+    /// assert_eq!(args.usize_or("vc-depth", 1), 2);
+    /// ```
     pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
         let mut args = Args::default();
         let mut iter = tokens.into_iter().peekable();
