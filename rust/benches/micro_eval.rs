@@ -51,6 +51,29 @@ fn main() {
     });
     report_rate("DSE candidate scoring", 1.0, t_full);
 
+    // --- thermal: seed path vs the reusable solve plan -----------------------
+    {
+        use hem3d::thermal::{GridParams, ThermalGrid, ThermalSolver};
+        let gp = GridParams::from_stack(&tech.layer_stack());
+        let grid = ThermalGrid::new(dims::TH_Z, dims::TH_Y, dims::TH_X, gp);
+        let cells = dims::TH_Z * dims::TH_Y * dims::TH_X;
+        let p64: Vec<f64> = (0..cells).map(|i| 0.05 + 0.01 * (i % 4) as f64).collect();
+        let t_seed = bench("thermal seed solve (10x8x8, 600 sweeps)", 1, 5, || {
+            let _ = grid.solve_peak(&p64, 600);
+        });
+        let mut plan = ThermalSolver::new(&grid);
+        let t_plan = bench("thermal planned solve (zero-alloc)", 1, 5, || {
+            let _ = plan.solve_peak(&p64, 600);
+        });
+        println!(
+            "thermal per-solve: seed {:.2} ms vs planned {:.2} ms ({:.2}x); \
+full trajectory: `hem3d bench --json`",
+            t_seed * 1e3,
+            t_plan * 1e3,
+            t_seed / t_plan.max(1e-12)
+        );
+    }
+
     // --- Encode + artifact path ----------------------------------------------
     let mut batch = MooBatch::zeroed();
     ctx.fill_shared(&mut batch);

@@ -1,0 +1,213 @@
+//! `hem3d bench` — the hot-path benchmark harness.
+//!
+//! Times the three kernels the DSE campaign actually spends its cycles in,
+//! offline and with fixed seeds (no external bench crate):
+//!
+//! * **thermal** — the detailed two-grid solve on the campaign grid
+//!   (10x8x8, M3D stack), seed path (`ThermalGrid::solve_peak`, which
+//!   reallocates scratch and recomputes denominators per call) vs the
+//!   planned path (`ThermalSolver`, zero allocations per call) vs the
+//!   batched planned path (plan amortised over a TH_BATCH-sized batch);
+//! * **moo** — one sparse-evaluator scoring step (the DSE inner loop);
+//! * **noc** — a cycle-level wormhole simulation leg, re-running one
+//!   `NocSim` instance so the reusable `SimScratch` is exercised.
+//!
+//! With `--json` the results land in `BENCH_hotpaths.json` at the repo
+//! root (override with `--out`), giving CI a perf trajectory to archive.
+//! Before timing, the harness asserts the planned solver is bit-identical
+//! to the seed schedule, so the reported speedup compares equal outputs.
+
+use anyhow::Result;
+use hem3d::arch::{design::Design, encode::EncodeCtx, geometry::Geometry, tile::TileSet};
+use hem3d::config::{ArchConfig, TechParams};
+use hem3d::eval::objectives::{evaluate_sparse, SparseTraffic};
+use hem3d::log_info;
+use hem3d::noc::routing::Routing;
+use hem3d::noc::sim::{NocSim, SimConfig};
+use hem3d::noc::topology;
+use hem3d::runtime::evaluator::dims;
+use hem3d::thermal::{solve_peak_batch_par, GridParams, ThermalGrid, ThermalSolver};
+use hem3d::traffic::{benchmark, generate};
+use hem3d::util::bench::bench;
+use hem3d::util::cli::Args;
+use hem3d::util::json::Json;
+use hem3d::util::Rng;
+
+/// Fine sweeps per cycle — the campaign/validation iteration count.
+const IT3D: usize = 600;
+
+/// Run the harness; writes JSON when `--json` is set.
+pub fn run(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let seed = args.u64_or("seed", 7);
+    // Same resolution rule as the other subcommands: 0 = auto.
+    let workers = match args.usize_or("workers", 1) {
+        0 => hem3d::util::threadpool::default_workers(),
+        w => w,
+    };
+    let (warmup, reps) = if quick { (1, 3) } else { (2, 10) };
+
+    // ---- thermal: seed vs planned vs batched planned ----------------------
+    let tech = TechParams::m3d();
+    let stack = tech.layer_stack();
+    anyhow::ensure!(stack.z() == dims::TH_Z, "stack depth != campaign grid Z");
+    let grid = ThermalGrid::new(
+        dims::TH_Z,
+        dims::TH_Y,
+        dims::TH_X,
+        GridParams::from_stack(&stack),
+    );
+    let cells = dims::TH_Z * dims::TH_Y * dims::TH_X;
+    let mut rng = Rng::seed_from_u64(seed);
+    let pow_: Vec<f64> = (0..cells)
+        .map(|_| if rng.chance(0.4) { rng.f32() as f64 } else { 0.0 })
+        .collect();
+
+    // Trust check: the planned solver must be bit-identical to the seed
+    // schedule before its timings mean anything.
+    let mut solver = ThermalSolver::new(&grid);
+    let want = grid.solve(&pow_, IT3D);
+    let mut got = vec![0.0; cells];
+    solver.solve_into(&pow_, IT3D, &mut got);
+    for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+        anyhow::ensure!(
+            w.to_bits() == g.to_bits(),
+            "planned solver diverged from seed at cell {i}: {w} vs {g}"
+        );
+    }
+    log_info!("planned solver bit-identical to seed schedule on {cells} cells");
+
+    let t_seed = bench("thermal seed solve (10x8x8, 600 sweeps)", warmup, reps, || {
+        let _ = grid.solve_peak(&pow_, IT3D);
+    });
+    let t_plan = bench("thermal planned solve (same schedule)", warmup, reps, || {
+        let _ = solver.solve_peak(&pow_, IT3D);
+    });
+
+    // Batched: TH_BATCH designs per call, plan amortised; also the
+    // worker-fanned variant used by campaign-style sweeps.
+    let n_batch = dims::TH_BATCH;
+    let pows: Vec<f64> = (0..n_batch).flat_map(|_| pow_.iter().copied()).collect();
+    let t_batch = bench(
+        &format!("thermal planned batch ({n_batch} designs)"),
+        warmup.min(1),
+        reps.min(5),
+        || {
+            let _ = solver.solve_peak_batch(&pows, n_batch, IT3D);
+        },
+    ) / n_batch as f64;
+    let t_batch_par = bench(
+        &format!("thermal planned batch, {workers} workers"),
+        warmup.min(1),
+        reps.min(5),
+        || {
+            let _ = solve_peak_batch_par(&grid, &pows, n_batch, IT3D, workers);
+        },
+    ) / n_batch as f64;
+
+    let speedup = t_seed / t_plan.max(1e-12);
+    println!(
+        "thermal: seed {:.3} ms vs planned {:.3} ms  ->  {speedup:.2}x",
+        t_seed * 1e3,
+        t_plan * 1e3
+    );
+
+    // ---- moo: one sparse scoring step (the DSE inner loop) ----------------
+    let cfg = ArchConfig::paper();
+    let geo = Geometry::new(&cfg, &tech);
+    let tiles = TileSet::from_arch(&cfg);
+    let trace = generate(&benchmark("bp").expect("bp profile"), &tiles, cfg.windows, seed);
+    let ctx = EncodeCtx::new(&geo, &tech, &tiles, &trace);
+    let sparse = SparseTraffic::from_trace_tiles(&trace, dims::N_WINDOWS, Some(&tiles));
+    let design = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+    let routing = Routing::build(&design);
+    let t_moo = bench("moo sparse scoring (1 design)", warmup, reps * 5, || {
+        let _ = evaluate_sparse(&ctx, &design, &routing, &sparse);
+    });
+    let t_moo_full = bench("moo routing + scoring (DSE inner step)", warmup, reps * 5, || {
+        let r = Routing::build(&design);
+        let _ = evaluate_sparse(&ctx, &design, &r, &sparse);
+    });
+
+    // ---- noc: cycle-level sim leg, one sim instance re-run ----------------
+    let noc_cycles: u64 = if quick { 2_000 } else { 5_000 };
+    let n = cfg.n_tiles();
+    // Transpose-style load: s -> n-1-s (self-pairs skipped).
+    let mut rate = vec![0.0f64; n * n];
+    for s in 0..n {
+        let d = n - 1 - s;
+        if d != s {
+            rate[s * n + d] = 0.02;
+        }
+    }
+    let flits = vec![3u16; n * n];
+    let mut sim = NocSim::new(&design, &routing, SimConfig::default());
+    let mut delivered = 0u64;
+    let t_noc = bench(
+        &format!("noc wormhole sim ({noc_cycles} cycles)"),
+        warmup.min(1),
+        reps.min(5),
+        || {
+            let mut sim_rng = Rng::seed_from_u64(seed);
+            let stats = sim.run(&rate, &flits, noc_cycles, &mut sim_rng);
+            delivered = stats.delivered;
+        },
+    );
+    println!(
+        "moo {:.1} us/score, noc {:.2} ms/run ({delivered} pkts)",
+        t_moo * 1e6,
+        t_noc * 1e3
+    );
+
+    if args.flag("json") {
+        let out = args.opt_or("out", "BENCH_hotpaths.json");
+        let json = Json::obj(vec![
+            ("schema", Json::str("hem3d-bench-hotpaths-v1")),
+            ("quick", Json::Bool(quick)),
+            ("seed", Json::num(seed as f64)),
+            ("workers", Json::num(workers as f64)),
+            (
+                "grid",
+                Json::obj(vec![
+                    ("z", Json::num(dims::TH_Z as f64)),
+                    ("y", Json::num(dims::TH_Y as f64)),
+                    ("x", Json::num(dims::TH_X as f64)),
+                    ("it3d", Json::num(IT3D as f64)),
+                ]),
+            ),
+            (
+                "thermal",
+                Json::obj(vec![
+                    ("seed_solve_s", Json::num(t_seed)),
+                    ("planned_solve_s", Json::num(t_plan)),
+                    ("planned_batch_per_solve_s", Json::num(t_batch)),
+                    ("planned_batch_par_per_solve_s", Json::num(t_batch_par)),
+                    ("planned_speedup_vs_seed", Json::num(speedup)),
+                    ("bit_identical_to_seed", Json::Bool(true)),
+                    (
+                        "zero_alloc_asserted_by",
+                        Json::str("tests/thermal_plan.rs::solve_into_performs_zero_heap_allocations"),
+                    ),
+                ]),
+            ),
+            (
+                "moo",
+                Json::obj(vec![
+                    ("score_s", Json::num(t_moo)),
+                    ("routing_plus_score_s", Json::num(t_moo_full)),
+                ]),
+            ),
+            (
+                "noc",
+                Json::obj(vec![
+                    ("sim_s", Json::num(t_noc)),
+                    ("cycles", Json::num(noc_cycles as f64)),
+                    ("delivered", Json::num(delivered as f64)),
+                ]),
+            ),
+        ]);
+        std::fs::write(&out, json.to_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

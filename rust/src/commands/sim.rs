@@ -72,7 +72,7 @@ pub fn run(args: &Args) -> Result<()> {
         let (rate, flits) = pattern
             .rates(n, injection, &hotspots)
             .expect("synthetic pattern has rates");
-        let sim = NocSim::new(&design, &routing, sim_cfg.clone());
+        let mut sim = NocSim::new(&design, &routing, sim_cfg.clone());
         let mut sim_rng = Rng::seed_from_u64(seed);
         sim.run(&rate, &flits, cycles, &mut sim_rng)
     } else {

@@ -10,5 +10,6 @@ pub mod validate;
 
 pub use campaign::{run_leg, Algo, Effort, LegResult, LegWorld, Selection, Validated};
 pub use validate::{
-    detailed_peak_temp, noc_validate, noc_validate_cfg, power_grid, trace_replay_rates,
+    detailed_peak_temp, detailed_peak_temp_with, noc_validate, noc_validate_cfg, power_grid,
+    thermal_plan, trace_replay_rates,
 };

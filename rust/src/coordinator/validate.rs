@@ -10,7 +10,7 @@ use crate::noc::routing::Routing;
 use crate::noc::sim::{NocSim, SimConfig};
 use crate::power::leakage;
 use crate::runtime::evaluator::dims;
-use crate::thermal::{GridParams, ThermalGrid, T_AMBIENT_C};
+use crate::thermal::{GridParams, ThermalGrid, ThermalSolver, T_AMBIENT_C};
 use crate::traffic::Window;
 use crate::util::Rng;
 
@@ -58,9 +58,39 @@ pub fn power_grid(
     grid
 }
 
+thread_local! {
+    /// Per-thread solve-plan cache for [`detailed_peak_temp`]: the
+    /// campaign's Pareto-validation fan-out calls `detailed_peak_temp`
+    /// per candidate from a shared `Fn` closure, and a worker thread
+    /// validates many designs against one stack — so the plan is built
+    /// once per (thread, stack), not once per candidate.  The key is
+    /// `(Tech, cooled)`, the exact determinants of
+    /// `TechParams::layer_stack`, so the probe-time check allocates
+    /// nothing.
+    static PLAN_CACHE: std::cell::RefCell<Option<((crate::config::Tech, bool), ThermalSolver)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
 /// Detailed peak temperature [°C] for one design: worst window, grid
-/// solve, leakage fixed point.
+/// solve, leakage fixed point.  The [`ThermalSolver`] plan comes from a
+/// per-thread cache keyed by the stack identity; callers that own a loop
+/// can instead hold a plan from [`thermal_plan`] and call
+/// [`detailed_peak_temp_with`] directly.
 pub fn detailed_peak_temp(ctx: &EncodeCtx<'_>, design: &Design) -> f64 {
+    PLAN_CACHE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let key = (ctx.tech.tech, ctx.tech.cooled);
+        let reusable = matches!(slot.as_ref(), Some((k, _)) if *k == key);
+        if !reusable {
+            *slot = Some((key, thermal_plan(ctx)));
+        }
+        let (_, solver) = slot.as_mut().expect("plan cache populated above");
+        detailed_peak_temp_with(ctx, design, solver)
+    })
+}
+
+/// The solve plan for a context's layer stack on the campaign thermal grid.
+pub fn thermal_plan(ctx: &EncodeCtx<'_>) -> ThermalSolver {
     let stack = ctx.tech.layer_stack();
     let grid = ThermalGrid::new(
         stack.z(),
@@ -68,7 +98,18 @@ pub fn detailed_peak_temp(ctx: &EncodeCtx<'_>, design: &Design) -> f64 {
         dims::TH_X,
         GridParams::from_stack(&stack),
     );
+    ThermalSolver::new(&grid)
+}
 
+/// [`detailed_peak_temp`] against a caller-owned solve plan: the leakage
+/// fixed point re-solves the grid up to 12 times per design, and a
+/// campaign validates many designs per stack — with the plan hoisted, no
+/// grid constants are rebuilt and no solver memory is allocated per probe.
+pub fn detailed_peak_temp_with(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    solver: &mut ThermalSolver,
+) -> f64 {
     // Worst window by chip power.
     let worst = ctx
         .trace
@@ -85,7 +126,7 @@ pub fn detailed_peak_temp(ctx: &EncodeCtx<'_>, design: &Design) -> f64 {
         T_AMBIENT_C + 20.0,
         12,
         |t_peak| power_grid(ctx, design, worst, t_peak),
-        |p| T_AMBIENT_C + grid.solve_peak(p, 600),
+        |p| T_AMBIENT_C + solver.solve_peak(p, 600),
     );
     t_final
 }
@@ -148,7 +189,7 @@ pub fn noc_validate_cfg(
     sim_cfg: SimConfig,
 ) -> crate::noc::sim::SimStats {
     let (rate, flits) = trace_replay_rates(ctx, design);
-    let sim = NocSim::new(design, routing, sim_cfg);
+    let mut sim = NocSim::new(design, routing, sim_cfg);
     let mut rng = Rng::seed_from_u64(seed);
     sim.run(&rate, &flits, cycles, &mut rng)
 }

@@ -103,15 +103,50 @@ pub fn evaluate(ctx: &EncodeCtx<'_>, design: &Design, routing: &Routing) -> Scor
     evaluate_sparse(ctx, design, routing, &sparse)
 }
 
+/// Reusable accumulation buffers for [`evaluate_sparse_with`]: per-window
+/// link utilisation and per-stack power.  One scratch per worker thread
+/// removes the two `vec![]` allocations every candidate probe previously
+/// paid on the DSE hot path (DESIGN.md §10); buffers are zeroed per call,
+/// so results are identical to the allocating form.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    /// `u[w * n_links + l]` link-utilisation accumulator.
+    u: Vec<f64>,
+    /// Per-stack Eq.(7) power accumulator.
+    per_stack: Vec<f64>,
+}
+
+thread_local! {
+    /// Per-thread scratch behind [`evaluate_sparse`]; sized lazily to the
+    /// largest design seen on this thread and reused across probes.
+    static EVAL_SCRATCH: std::cell::RefCell<EvalScratch> =
+        std::cell::RefCell::new(EvalScratch::default());
+}
+
 /// Evaluate with a pre-extracted sparse traffic table (the hot-loop entry).
 ///
 /// Pair-major: each active pair's route is walked once, accumulating all
 /// window rates along it (§Perf: ~10x over the window-major formulation).
+/// Accumulators come from a per-thread [`EvalScratch`], so steady-state
+/// probes are allocation-free.
 pub fn evaluate_sparse(
     ctx: &EncodeCtx<'_>,
     design: &Design,
     routing: &Routing,
     traffic: &SparseTraffic,
+) -> Scores {
+    EVAL_SCRATCH
+        .with(|s| evaluate_sparse_with(ctx, design, routing, traffic, &mut s.borrow_mut()))
+}
+
+/// [`evaluate_sparse`] with an explicit scratch (callers that own a loop
+/// can hold one scratch for its whole lifetime).
+pub fn evaluate_sparse_with(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    routing: &Routing,
+    traffic: &SparseTraffic,
+    scratch: &mut EvalScratch,
 ) -> Scores {
     let n = traffic.n;
     let n_links = design.links.len();
@@ -125,8 +160,10 @@ pub fn evaluate_sparse(
     let inv_cm = 1.0 / (c * m);
 
     let mut lat_acc = 0.0f64;
-    // u[w * n_links + l]
-    let mut u = vec![0.0f64; n_windows * n_links];
+    // u[w * n_links + l], zeroed per call, reused across calls.
+    scratch.u.clear();
+    scratch.u.resize(n_windows * n_links, 0.0);
+    let u = &mut scratch.u;
 
     for (p_idx, &(i, j)) in traffic.pairs.iter().enumerate() {
         let (i, j) = (i as usize, j as usize);
@@ -159,7 +196,9 @@ pub fn evaluate_sparse(
     // Eq. (7)/(8): stack thermal, max over windows and stacks.
     let n_stacks = ctx.geo.rows * ctx.geo.cols;
     let mut tmax = 0.0f64;
-    let mut per_stack = vec![0.0f64; n_stacks];
+    scratch.per_stack.clear();
+    scratch.per_stack.resize(n_stacks, 0.0);
+    let per_stack = &mut scratch.per_stack;
     for w in 0..n_windows {
         let win = &ctx.trace.windows[w];
         per_stack.iter_mut().for_each(|x| *x = 0.0);
@@ -169,7 +208,7 @@ pub fn evaluate_sparse(
             per_stack[ctx.geo.stack_of(pos)] +=
                 p * ctx.stack.coeff_per_tier[ctx.geo.tier_of(pos)];
         }
-        for &t in &per_stack {
+        for &t in per_stack.iter() {
             tmax = tmax.max(t);
         }
     }

@@ -8,6 +8,7 @@
 //!   trace      — generate a benchmark traffic trace (f_ij(t)) to JSON.
 //!   pipeline   — Fig 6: planar vs M3D GPU pipeline timing.
 //!   optimize   — run one DSE (MOO-STAGE or AMOSA) for a benchmark/tech.
+//!   bench      — hot-path benchmark harness (BENCH_hotpaths.json).
 //!   campaign   — full figure campaign (Figs 7-10) into a report directory.
 
 use anyhow::Result;
@@ -15,6 +16,7 @@ use hem3d::util::cli::Args;
 use hem3d::util::logger;
 
 mod commands {
+    pub mod bench;
     pub mod campaign;
     pub mod optimize;
     pub mod params;
@@ -43,6 +45,9 @@ COMMANDS:
   optimize   Run one DSE leg [--bench NAME] [--tech tsv|m3d]
              [--algo moo-stage|amosa] [--mode po|pt] [--iters N] [--seed N]
              [--artifacts DIR|none] [--workers N]
+  bench      Hot-path benchmark harness (thermal planned-vs-seed, moo
+             scoring, NoC sim) [--json] [--quick] [--out FILE] [--seed N]
+             [--workers N]
   campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
              [--iters N] [--seed N] [--artifacts DIR|none] [--workers N]
   help       Show this message
@@ -64,6 +69,7 @@ fn main() -> Result<()> {
         Some("pipeline") => commands::pipeline::run(&args),
         Some("sim") => commands::sim::run(&args),
         Some("optimize") => commands::optimize::run(&args),
+        Some("bench") => commands::bench::run(&args),
         Some("campaign") => commands::campaign::run(&args),
         Some("help") | None => {
             print!("{USAGE}");

@@ -147,7 +147,115 @@ enum DesireKind {
     Head { escape: bool },
 }
 
-/// The simulator.
+/// Reusable per-run simulation state (§Perf): every vector the cycle loop
+/// touches, allocated once in [`NocSim::new`] and reset (not reallocated)
+/// at the top of each run.  Before this, every `run()` call re-allocated
+/// ~20 state vectors plus a `VecDeque` per VC slot — allocator churn that
+/// dominated short validation runs in the DSE inner loop.
+#[derive(Debug)]
+struct SimScratch {
+    // Per input VC slot (chan * vcs + vc):
+    bufs: Vec<VecDeque<(Flit, u64)>>,
+    credits: Vec<u32>,
+    vc_owner: Vec<Option<u32>>,
+    fwd: Vec<Option<(u32, u8)>>,
+    wait: Vec<u32>,
+    moved: Vec<u64>,
+    wire: Vec<u32>,
+    // Per node:
+    inj_q: Vec<VecDeque<u32>>,
+    inj_fwd: Vec<Option<(u32, u8)>>,
+    inj_wait: Vec<u32>,
+    inj_moved: Vec<u64>,
+    node_work: Vec<u32>,
+    // Arbitration state:
+    rr_sw: Vec<usize>,
+    rr_vc: Vec<usize>,
+    rr_ej: Vec<usize>,
+    // Flit transit and packet bookkeeping:
+    arrivals: Vec<Vec<(u32, u8, Flit)>>,
+    flights: Vec<Flight>,
+    free: Vec<u32>,
+    offered: Vec<(u32, u32, u16)>,
+    desires: Vec<Option<(u32, DesireKind)>>,
+    // Stats accumulators:
+    deliveries: Vec<Delivery>,
+    busy: Vec<u64>,
+    vc_flits: Vec<u64>,
+    lats: Vec<f64>,
+}
+
+impl SimScratch {
+    fn new(n: usize, n_channels: usize, vcs: usize, ring: usize) -> Self {
+        let n_slots = n_channels * vcs;
+        SimScratch {
+            bufs: vec![VecDeque::new(); n_slots],
+            credits: vec![0; n_slots],
+            vc_owner: vec![None; n_slots],
+            fwd: vec![None; n_slots],
+            wait: vec![0; n_slots],
+            moved: vec![u64::MAX; n_slots],
+            wire: vec![0; n_slots],
+            inj_q: vec![VecDeque::new(); n],
+            inj_fwd: vec![None; n],
+            inj_wait: vec![0; n],
+            inj_moved: vec![u64::MAX; n],
+            node_work: vec![0; n],
+            rr_sw: vec![0; n_channels],
+            rr_vc: vec![0; n_channels],
+            rr_ej: vec![0; n],
+            arrivals: vec![Vec::new(); ring],
+            flights: Vec::new(),
+            free: Vec::new(),
+            offered: Vec::new(),
+            desires: vec![None; n_slots + n],
+            deliveries: Vec::new(),
+            busy: vec![0; n_channels],
+            vc_flits: vec![0; vcs],
+            lats: Vec::new(),
+        }
+    }
+
+    /// Reinitialize every field to its run-start value, keeping the
+    /// allocations (capacity survives across runs).
+    fn reset(&mut self, depth: u32) {
+        for q in &mut self.bufs {
+            q.clear();
+        }
+        self.credits.fill(depth);
+        self.vc_owner.fill(None);
+        self.fwd.fill(None);
+        self.wait.fill(0);
+        self.moved.fill(u64::MAX);
+        self.wire.fill(0);
+        for q in &mut self.inj_q {
+            q.clear();
+        }
+        self.inj_fwd.fill(None);
+        self.inj_wait.fill(0);
+        self.inj_moved.fill(u64::MAX);
+        self.node_work.fill(0);
+        self.rr_sw.fill(0);
+        self.rr_vc.fill(0);
+        self.rr_ej.fill(0);
+        for b in &mut self.arrivals {
+            b.clear();
+        }
+        self.flights.clear();
+        self.free.clear();
+        self.offered.clear();
+        self.desires.fill(None);
+        self.deliveries.clear();
+        self.busy.fill(0);
+        self.vc_flits.fill(0);
+        self.lats.clear();
+    }
+}
+
+/// The simulator.  Run methods take `&mut self` because the per-run state
+/// lives in an owned [`SimScratch`] that is reset — not reallocated — per
+/// run; results are independent of any previous run on the same instance
+/// (pinned by the repeated-run determinism tests in `tests/noc_fabric.rs`).
 pub struct NocSim<'a> {
     routing: &'a Routing,
     cfg: SimConfig,
@@ -162,6 +270,8 @@ pub struct NocSim<'a> {
     /// Per node: input VC slots (`chan * vcs + vc`), channel-major order.
     /// The injection port is implicit as one extra port after these.
     ports: Vec<Vec<u32>>,
+    /// Reusable per-run state (reset at each run start).
+    scratch: SimScratch,
 }
 
 impl<'a> NocSim<'a> {
@@ -179,7 +289,7 @@ impl<'a> NocSim<'a> {
     /// let design = Design::with_identity_placement(3, line);
     /// let routing = Routing::build(&design);
     /// let cfg = SimConfig { vcs: 2, vc_depth: 2, ..SimConfig::default() };
-    /// let sim = NocSim::new(&design, &routing, cfg);
+    /// let mut sim = NocSim::new(&design, &routing, cfg);
     /// ```
     pub fn new(design: &Design, routing: &'a Routing, cfg: SimConfig) -> Self {
         let mut cfg = cfg;
@@ -210,15 +320,9 @@ impl<'a> NocSim<'a> {
             }
         }
 
-        NocSim { routing, cfg, n_channels, chan_at, chan_src, chan_dst, ports }
-    }
-
-    /// Directed channel id for the u -> w hop (must be a design link).
-    #[inline]
-    fn chan(&self, u: usize, w: usize) -> u32 {
-        let c = self.chan_at[u * self.routing.n + w];
-        debug_assert!(c != u32::MAX, "hop {u}->{w} is not a link");
-        c
+        let ring = (cfg.link_delay as usize) + 1;
+        let scratch = SimScratch::new(n, n_channels, v, ring);
+        NocSim { routing, cfg, n_channels, chan_at, chan_src, chan_dst, ports, scratch }
     }
 
     /// Run for `cycles`, injecting Bernoulli traffic with per-pair rates
@@ -236,7 +340,7 @@ impl<'a> NocSim<'a> {
     /// let line = vec![Link::new(0, 1), Link::new(1, 2)];
     /// let design = Design::with_identity_placement(3, line);
     /// let routing = Routing::build(&design);
-    /// let sim = NocSim::new(&design, &routing, SimConfig::default());
+    /// let mut sim = NocSim::new(&design, &routing, SimConfig::default());
     ///
     /// let n = 3;
     /// let mut rate = vec![0.0; n * n];
@@ -246,7 +350,7 @@ impl<'a> NocSim<'a> {
     /// assert!(stats.delivered > 0);
     /// assert!(stats.mean_latency >= 8.0); // 2 hops x (3 stages + 1 wire)
     /// ```
-    pub fn run(&self, rate: &[f64], flits: &[u16], cycles: u64, rng: &mut Rng) -> SimStats {
+    pub fn run(&mut self, rate: &[f64], flits: &[u16], cycles: u64, rng: &mut Rng) -> SimStats {
         let n = self.routing.n;
         assert_eq!(rate.len(), n * n);
         assert_eq!(flits.len(), n * n);
@@ -275,7 +379,7 @@ impl<'a> NocSim<'a> {
     /// let line = vec![Link::new(0, 1), Link::new(1, 2)];
     /// let design = Design::with_identity_placement(3, line);
     /// let routing = Routing::build(&design);
-    /// let sim = NocSim::new(&design, &routing, SimConfig::default());
+    /// let mut sim = NocSim::new(&design, &routing, SimConfig::default());
     ///
     /// let one = [OfferedPacket { at: 0, src: 0, dst: 2, flits: 1 }];
     /// let stats = sim.run_packets(&one, 100);
@@ -283,7 +387,7 @@ impl<'a> NocSim<'a> {
     /// // Uncontended: 2 hops x (3 router stages + 1 wire cycle) = 8 cycles.
     /// assert_eq!(stats.mean_latency, 8.0);
     /// ```
-    pub fn run_packets(&self, offered: &[OfferedPacket], cycles: u64) -> SimStats {
+    pub fn run_packets(&mut self, offered: &[OfferedPacket], cycles: u64) -> SimStats {
         let mut sorted: Vec<OfferedPacket> = offered.to_vec();
         sorted.sort_by_key(|o| o.at);
         let mut idx = 0usize;
@@ -300,7 +404,7 @@ impl<'a> NocSim<'a> {
     /// The cycle loop shared by [`NocSim::run`] / [`NocSim::run_packets`]:
     /// `inject(now, out)` appends this cycle's offered `(src, dst, flits)`.
     fn run_inner(
-        &self,
+        &mut self,
         cycles: u64,
         mut inject: impl FnMut(u64, &mut Vec<(u32, u32, u16)>),
     ) -> SimStats {
@@ -311,46 +415,62 @@ impl<'a> NocSim<'a> {
         let ld = self.cfg.link_delay as u64;
         let patience = self.cfg.escape_patience;
         let cap = self.cfg.inject_cap;
+        let audit = self.cfg.audit;
         let ring = (ld + 1) as usize;
         let n_slots = self.n_channels * v;
+        let n_channels = self.n_channels;
 
-        // Per input VC slot (chan * v + vc):
-        let mut bufs: Vec<VecDeque<(Flit, u64)>> = vec![VecDeque::new(); n_slots];
-        let mut credits: Vec<u32> = vec![depth as u32; n_slots];
-        let mut vc_owner: Vec<Option<u32>> = vec![None; n_slots];
-        let mut fwd: Vec<Option<(u32, u8)>> = vec![None; n_slots];
-        let mut wait: Vec<u32> = vec![0; n_slots];
-        let mut moved: Vec<u64> = vec![u64::MAX; n_slots];
-        let mut wire: Vec<u32> = vec![0; n_slots];
-        // Per node:
-        let mut inj_q: Vec<VecDeque<u32>> = vec![VecDeque::new(); n];
-        let mut inj_fwd: Vec<Option<(u32, u8)>> = vec![None; n];
-        let mut inj_wait: Vec<u32> = vec![0; n];
-        let mut inj_moved: Vec<u64> = vec![u64::MAX; n];
-        // Buffered flits + queued injection packets at the node (fast skip).
-        let mut node_work: Vec<u32> = vec![0; n];
-        // Arbitration state:
-        let mut rr_sw: Vec<usize> = vec![0; self.n_channels];
-        let mut rr_vc: Vec<usize> = vec![0; self.n_channels];
-        let mut rr_ej: Vec<usize> = vec![0; n];
-        // Flit transit and packet bookkeeping:
-        let mut arrivals: Vec<Vec<(u32, u8, Flit)>> = vec![Vec::new(); ring];
-        let mut flights: Vec<Flight> = Vec::new();
-        let mut free: Vec<u32> = Vec::new();
-        let mut offered: Vec<(u32, u32, u16)> = Vec::new();
-        // Per-cycle desire cache: input VC slots first, injection ports
-        // (indexed n_slots + node) after.  A port's desire is fixed for the
-        // whole switch phase: it can change only when the port's own front
-        // flit is popped, and a popped port cannot be granted again this
-        // cycle (its next flit targets an already-arbitrated channel).
-        let mut desires: Vec<Option<(u32, DesireKind)>> = vec![None; n_slots + n];
-        // Stats:
-        let mut deliveries: Vec<Delivery> = Vec::new();
-        let mut busy = vec![0u64; self.n_channels];
-        let mut vc_flits = vec![0u64; v];
+        // Split borrows: immutable routing/topology tables on one side,
+        // the mutable per-run scratch (reset, not reallocated) on the
+        // other — the borrows are field-disjoint.  The scratch layout is
+        // documented on [`SimScratch`]; the desire-cache invariant note
+        // lives there too: input VC slots first, injection ports (indexed
+        // n_slots + node) after, and a port's desire is fixed for the
+        // whole switch phase because it can change only when the port's
+        // own front flit is popped, and a popped port cannot be granted
+        // again this cycle (its next flit targets an already-arbitrated
+        // channel).
+        self.scratch.reset(depth as u32);
+        let routing = self.routing;
+        let chan_at = &self.chan_at;
+        let chan_src = &self.chan_src;
+        let chan_dst = &self.chan_dst;
+        let ports = &self.ports;
+        let scr = &mut self.scratch;
+        let bufs = &mut scr.bufs;
+        let credits = &mut scr.credits;
+        let vc_owner = &mut scr.vc_owner;
+        let fwd = &mut scr.fwd;
+        let wait = &mut scr.wait;
+        let moved = &mut scr.moved;
+        let wire = &mut scr.wire;
+        let inj_q = &mut scr.inj_q;
+        let inj_fwd = &mut scr.inj_fwd;
+        let inj_wait = &mut scr.inj_wait;
+        let inj_moved = &mut scr.inj_moved;
+        let node_work = &mut scr.node_work;
+        let rr_sw = &mut scr.rr_sw;
+        let rr_vc = &mut scr.rr_vc;
+        let rr_ej = &mut scr.rr_ej;
+        let arrivals = &mut scr.arrivals;
+        let flights = &mut scr.flights;
+        let free = &mut scr.free;
+        let offered = &mut scr.offered;
+        let desires = &mut scr.desires;
+        let deliveries = &mut scr.deliveries;
+        let busy = &mut scr.busy;
+        let vc_flits = &mut scr.vc_flits;
+        let lats = &mut scr.lats;
         let mut escape_packets = 0u64;
         let mut dropped = 0u64;
         let mut next_id = 0u64;
+
+        // Directed channel id for the u -> w hop (must be a design link).
+        let chan = |u: usize, w: usize| -> u32 {
+            let c = chan_at[u * routing.n + w];
+            debug_assert!(c != u32::MAX, "hop {u}->{w} is not a link");
+            c
+        };
 
         // What the front flit of an input VC / injection port wants; None
         // when empty, not yet through the router pipeline, or destined here
@@ -371,7 +491,7 @@ impl<'a> NocSim<'a> {
                     if ready > now {
                         return None;
                     }
-                    let u = self.chan_dst[q / v] as usize;
+                    let u = chan_dst[q / v] as usize;
                     if flights[fl.pkt as usize].packet.dst as usize == u {
                         return None;
                     }
@@ -390,11 +510,11 @@ impl<'a> NocSim<'a> {
             let escape =
                 f.mode == RouteMode::Escape || (v >= 2 && waited >= patience);
             let next = if escape {
-                self.routing.escape_next_hop(u, dst)
+                routing.escape_next_hop(u, dst)
             } else {
-                self.routing.next_hop[u * n + dst] as usize
+                routing.next_hop[u * n + dst] as usize
             };
-            Some((self.chan(u, next), DesireKind::Head { escape }))
+            Some((chan(u, next), DesireKind::Head { escape }))
         };
 
         for now in 0..cycles {
@@ -404,15 +524,15 @@ impl<'a> NocSim<'a> {
             for (c, vc, flit) in pending.drain(..) {
                 let q = c as usize * v + vc as usize;
                 wire[q] -= 1;
-                node_work[self.chan_dst[c as usize] as usize] += 1;
+                node_work[chan_dst[c as usize] as usize] += 1;
                 bufs[q].push_back((flit, now + stages));
             }
             arrivals[bucket] = pending;
 
             // --- inject offered packets ----------------------------------
             offered.clear();
-            inject(now, &mut offered);
-            for &(src, dst, fl) in &offered {
+            inject(now, &mut *offered);
+            for &(src, dst, fl) in offered.iter() {
                 if cap > 0 && inj_q[src as usize].len() >= cap {
                     dropped += 1;
                     continue;
@@ -446,11 +566,11 @@ impl<'a> NocSim<'a> {
                 if node_work[u] == 0 {
                     continue;
                 }
-                let np = self.ports[u].len();
+                let np = ports[u].len();
                 let start = rr_ej[u];
                 for k in 0..np {
                     let pi = (start + k) % np;
-                    let q = self.ports[u][pi] as usize;
+                    let q = ports[u][pi] as usize;
                     let Some(&(flit, ready)) = bufs[q].front() else { continue };
                     if ready > now {
                         continue;
@@ -485,29 +605,31 @@ impl<'a> NocSim<'a> {
                 if node_work[u] == 0 {
                     continue;
                 }
-                for &qp in &self.ports[u] {
+                for &qp in &ports[u] {
                     let q = qp as usize;
                     desires[q] = desire(
-                        Ok(q), now, &bufs, &fwd, &wait, &inj_q, &inj_fwd, &inj_wait, &flights,
+                        Ok(q), now, &*bufs, &*fwd, &*wait, &*inj_q, &*inj_fwd, &*inj_wait,
+                        &*flights,
                     );
                 }
                 desires[n_slots + u] = desire(
-                    Err(u), now, &bufs, &fwd, &wait, &inj_q, &inj_fwd, &inj_wait, &flights,
+                    Err(u), now, &*bufs, &*fwd, &*wait, &*inj_q, &*inj_fwd, &*inj_wait,
+                    &*flights,
                 );
             }
-            for co in 0..self.n_channels {
-                let u = self.chan_src[co] as usize;
+            for co in 0..n_channels {
+                let u = chan_src[co] as usize;
                 if node_work[u] == 0 {
                     continue;
                 }
-                let n_ports = self.ports[u].len() + 1; // + injection port
+                let n_ports = ports[u].len() + 1; // + injection port
                 let start = rr_sw[co];
                 for k in 0..n_ports {
                     let pi = (start + k) % n_ports;
-                    let port = if pi == self.ports[u].len() {
+                    let port = if pi == ports[u].len() {
                         Err(u)
                     } else {
-                        Ok(self.ports[u][pi] as usize)
+                        Ok(ports[u][pi] as usize)
                     };
                     let Some((c, kind)) = (match port {
                         Ok(q) => desires[q],
@@ -624,7 +746,7 @@ impl<'a> NocSim<'a> {
                 if node_work[u] == 0 {
                     continue;
                 }
-                for &qp in &self.ports[u] {
+                for &qp in &ports[u] {
                     let q = qp as usize;
                     if moved[q] == now || fwd[q].is_some() {
                         continue;
@@ -644,7 +766,7 @@ impl<'a> NocSim<'a> {
             }
 
             // --- credit-conservation audit (DESIGN.md §8.2) --------------
-            if self.cfg.audit {
+            if audit {
                 for q in 0..n_slots {
                     let total =
                         credits[q] as usize + bufs[q].len() + wire[q] as usize;
@@ -660,7 +782,8 @@ impl<'a> NocSim<'a> {
         }
 
         // --- aggregate ----------------------------------------------------
-        let lats: Vec<f64> = deliveries.iter().map(|d| d.latency() as f64).collect();
+        lats.clear();
+        lats.extend(deliveries.iter().map(|d| d.latency() as f64));
         let total_flits: u64 = deliveries.iter().map(|d| d.packet.flits as u64).sum();
         let mean_hops = if deliveries.is_empty() {
             0.0
@@ -671,12 +794,12 @@ impl<'a> NocSim<'a> {
             delivered: deliveries.len() as u64,
             total_flits,
             cycles,
-            mean_latency: crate::util::stats::mean(&lats),
-            p95_latency: crate::util::stats::percentile(&lats, 95.0),
+            mean_latency: crate::util::stats::mean(lats),
+            p95_latency: crate::util::stats::percentile(lats, 95.0),
             mean_hops,
             dropped_at_inject: dropped,
             channel_utilization: busy.iter().map(|&b| b as f64 / cycles.max(1) as f64).collect(),
-            vc_flits,
+            vc_flits: vc_flits.clone(),
             escape_packets,
         }
     }
@@ -713,7 +836,7 @@ mod tests {
             vc_depth: 1,
             ..SimConfig::default()
         };
-        let sim = NocSim::new(&d, &r, audited(cfg));
+        let mut sim = NocSim::new(&d, &r, audited(cfg));
         for dst in [1usize, 3, 7] {
             let h = r.hop_count(0, dst) as f64;
             let stats = sim.run_packets(
@@ -736,7 +859,7 @@ mod tests {
         // A multi-flit packet pipelines: latency = hops * (stages + wire)
         // + (flits - 1), not hops * flits as store-and-forward would pay.
         let (d, r) = setup();
-        let sim = NocSim::new(&d, &r, audited(SimConfig::default()));
+        let mut sim = NocSim::new(&d, &r, audited(SimConfig::default()));
         let flits = 6u16;
         let dst = 7u32;
         let h = r.hop_count(0, dst as usize) as f64;
@@ -756,7 +879,7 @@ mod tests {
     #[test]
     fn zero_rate_delivers_nothing() {
         let (d, r) = setup();
-        let sim = NocSim::new(&d, &r, SimConfig::default());
+        let mut sim = NocSim::new(&d, &r, SimConfig::default());
         let n = r.n;
         let mut rng = crate::util::Rng::seed_from_u64(2);
         let stats = sim.run(&vec![0.0; n * n], &vec![1; n * n], 100, &mut rng);
@@ -767,7 +890,7 @@ mod tests {
     #[test]
     fn contention_raises_latency() {
         let (d, r) = setup();
-        let sim = NocSim::new(&d, &r, SimConfig::default());
+        let mut sim = NocSim::new(&d, &r, SimConfig::default());
         let n = r.n;
         let flits = vec![5u16; n * n];
         let mut low = vec![0.0; n * n];
@@ -788,7 +911,7 @@ mod tests {
     #[test]
     fn utilization_is_bounded_and_vc_stats_reported() {
         let (d, r) = setup();
-        let sim = NocSim::new(&d, &r, audited(SimConfig::default()));
+        let mut sim = NocSim::new(&d, &r, audited(SimConfig::default()));
         let n = r.n;
         let mut rate = vec![0.0; n * n];
         for s in 0..n {
@@ -816,7 +939,7 @@ mod tests {
     fn injection_cap_applies_backpressure() {
         let (d, r) = setup();
         let cfg = SimConfig { inject_cap: 2, ..SimConfig::default() };
-        let sim = NocSim::new(&d, &r, cfg);
+        let mut sim = NocSim::new(&d, &r, cfg);
         let n = r.n;
         let mut rate = vec![0.0; n * n];
         for s in 1..n {
@@ -833,7 +956,7 @@ mod tests {
         // at saturating hotspot load with tiny buffers must not trip it.
         let (d, r) = setup();
         let cfg = SimConfig { vcs: 2, vc_depth: 1, inject_cap: 8, ..SimConfig::default() };
-        let sim = NocSim::new(&d, &r, audited(cfg));
+        let mut sim = NocSim::new(&d, &r, audited(cfg));
         let n = r.n;
         let mut rate = vec![0.0; n * n];
         for s in 1..n {
@@ -847,7 +970,7 @@ mod tests {
     #[test]
     fn deterministic_for_equal_seeds() {
         let (d, r) = setup();
-        let sim = NocSim::new(&d, &r, SimConfig::default());
+        let mut sim = NocSim::new(&d, &r, SimConfig::default());
         let n = r.n;
         let mut rate = vec![0.0; n * n];
         for s in 1..n {

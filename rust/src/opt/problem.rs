@@ -59,6 +59,12 @@ impl Mode {
 /// instance.  Every evaluation goes through the [`EvalCache`], so re-probing
 /// an already-seen design (Pareto re-insertions, AMOSA revisits) replays the
 /// cached scores instead of re-simulating.
+///
+/// Hot-path allocation discipline (DESIGN.md §10): cache probes take a
+/// shared `RwLock` read (warm probes run concurrently across workers),
+/// `evaluate_sparse` accumulates into a per-thread `EvalScratch`, and the
+/// detailed thermal validation downstream reuses a `ThermalSolver` plan —
+/// steady-state scoring allocates nothing per candidate.
 pub struct Problem<'a> {
     /// Shared encoding context (trace, tech, geometry, power, stack).
     pub ctx: &'a EncodeCtx<'a>,

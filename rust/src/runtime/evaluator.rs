@@ -9,7 +9,7 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 use super::client::{literal_f32, LoadedComputation, Runtime};
 use crate::arch::encode::DesignKey;
@@ -235,13 +235,18 @@ pub struct EvalKey {
 /// leg); the scenario component of the key makes entries safe even if a
 /// cache is ever shared across benchmarks, technologies, or fabric sweeps.
 ///
-/// Concurrency: `insert` reports whether the key was newly inserted, and the
+/// Concurrency: the map sits behind an [`RwLock`], so the dominant
+/// operation — `get` on a warm cache — takes a *read* lock and probes run
+/// concurrently across workers (the previous `Mutex` serialized every
+/// lookup, and `score()` paid that serialization twice per cold probe:
+/// once for `get`, once for `insert`).  `insert` takes the write lock and
+/// is insert-once: it reports whether the key was newly inserted and the
 /// first writer wins.  `opt::Problem` counts an evaluation only on a fresh
 /// insert, which makes its `eval_count` independent of worker scheduling —
 /// the property the `--workers` determinism test relies on.
 #[derive(Debug, Default)]
 pub struct EvalCache {
-    map: Mutex<HashMap<EvalKey, Scores>>,
+    map: RwLock<HashMap<EvalKey, Scores>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -253,8 +258,9 @@ impl EvalCache {
     }
 
     /// Cached scores for `key`, if present (counts a hit or a miss).
+    /// Readers proceed concurrently: only a shared lock is taken.
     pub fn get(&self, key: &EvalKey) -> Option<Scores> {
-        let found = self.map.lock().unwrap().get(key).copied();
+        let found = self.map.read().unwrap().get(key).copied();
         match found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -263,9 +269,17 @@ impl EvalCache {
     }
 
     /// Insert freshly computed scores; returns true if the key was new
-    /// (false when a concurrent evaluation of the same design won the race).
+    /// (false when a concurrent evaluation of the same design won the
+    /// race — the first writer's entry is kept either way).
     pub fn insert(&self, key: EvalKey, scores: Scores) -> bool {
-        self.map.lock().unwrap().insert(key, scores).is_none()
+        use std::collections::hash_map::Entry;
+        match self.map.write().unwrap().entry(key) {
+            Entry::Occupied(_) => false,
+            Entry::Vacant(v) => {
+                v.insert(scores);
+                true
+            }
+        }
     }
 
     /// Number of lookup hits so far.
@@ -280,7 +294,7 @@ impl EvalCache {
 
     /// Number of distinct designs cached.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.map.read().unwrap().len()
     }
 
     /// Whether the cache is empty.

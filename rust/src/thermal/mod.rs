@@ -4,10 +4,12 @@
 
 pub mod grid;
 pub mod materials;
+pub mod plan;
 pub mod stack;
 
 pub use grid::{GridParams, ThermalGrid};
 pub use materials::LayerStack;
+pub use plan::{solve_peak_batch_par, ThermalSolver};
 pub use stack::StackModel;
 
 /// Ambient temperature assumed by all absolute-temperature reports [°C].

@@ -1,0 +1,579 @@
+//! Plan-based thermal solver — the zero-allocation fast path for the DSE.
+//!
+//! [`ThermalSolver`] is a *solve plan* built once per `(LayerStack, grid
+//! shape)`: it owns the per-cell Jacobi denominators for the fine 3D
+//! smoother, the residual denominators, the collapsed 2D coarse-level
+//! denominators, and every scratch buffer the two-grid schedule touches.
+//! After construction, [`ThermalSolver::solve_into`] / `solve_peak` /
+//! `solve_peak_batch_into` perform **zero heap allocations per call**
+//! (asserted by a counting-allocator test in `tests/thermal_plan.rs`).
+//!
+//! The schedule is the *exact* seed schedule from [`super::grid`]: 3 cycles
+//! of (residual → column-collapse → 300 coarse 2D sweeps → `it3d` fine 3D
+//! sweeps), with every per-cell floating-point operation in the same order —
+//! so results are **bit-identical** to [`ThermalGrid::solve`] (golden tests
+//! pin this on both technology stacks).  What changes is the cost model:
+//!
+//! * denominators are computed once per plan, not once per call;
+//! * each sweep splits into a branch-free interior kernel plus explicit
+//!   boundary loops (the seed branches on `y>0 / y+1<ny / x>0 / x+1<nx`
+//!   for every cell every sweep), with the vertical-neighbour branches
+//!   monomorphised away via `const` generics;
+//! * all buffers are reused across calls, so a DSE campaign's thermal leg
+//!   allocates only while building its plans (DESIGN.md §10).
+
+use super::grid::ThermalGrid;
+
+/// A reusable solve plan for one `(conductances, grid shape)` pair.
+///
+/// Build once with [`ThermalSolver::new`], then call the `solve_*` methods
+/// any number of times; buffers are recycled and results never depend on
+/// prior calls (pinned by the stale-scratch test in `tests/thermal_plan.rs`).
+#[derive(Debug, Clone)]
+pub struct ThermalSolver {
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    /// Per-layer conductances (copied out of the grid at plan build).
+    gdn: Vec<f64>,
+    gup: Vec<f64>,
+    glat: Vec<f64>,
+    /// Collapsed lateral conductance of the coarse level (Σ glat).
+    gl2: f64,
+    /// Coarse-level sink shunt (gdn[0] + Σ gamb).
+    gs: f64,
+    /// Fine-sweep per-cell denominators (seed `jacobi` order).
+    den3: Vec<f64>,
+    /// Residual per-cell denominators (seed `residual` order).
+    den_res: Vec<f64>,
+    /// Coarse 2D per-cell denominators (seed `jacobi2d` order).
+    den2: Vec<f64>,
+    // ---- scratch (reused across calls; contents are per-call state) -----
+    t: Vec<f64>,
+    t2: Vec<f64>,
+    r: Vec<f64>,
+    r2: Vec<f64>,
+    c: Vec<f64>,
+    c2: Vec<f64>,
+    pow64: Vec<f64>,
+}
+
+impl ThermalSolver {
+    /// Build the plan for a grid: precompute all denominators and allocate
+    /// every scratch buffer the schedule will ever need.
+    pub fn new(grid: &ThermalGrid) -> Self {
+        let (nz, ny, nx) = (grid.z, grid.y, grid.x);
+        assert!(nz >= 1 && ny >= 1 && nx >= 1, "degenerate grid");
+        let p = &grid.params;
+        assert_eq!(p.gdn.len(), nz);
+        let cells = nz * ny * nx;
+
+        // Same accumulation order as the seed solve(): iter().sum() folds.
+        let gl2: f64 = p.glat.iter().sum();
+        let gs: f64 = p.gdn[0] + p.gamb.iter().sum::<f64>();
+
+        let mut den3 = vec![0.0f64; cells];
+        let mut den_res = vec![0.0f64; cells];
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let i = (z * ny + y) * nx + x;
+                    let mut n_lat = 0.0;
+                    if y > 0 {
+                        n_lat += 1.0;
+                    }
+                    if y + 1 < ny {
+                        n_lat += 1.0;
+                    }
+                    if x > 0 {
+                        n_lat += 1.0;
+                    }
+                    if x + 1 < nx {
+                        n_lat += 1.0;
+                    }
+                    // Seed `jacobi` denominator, same operation order.
+                    den3[i] = p.gdn[z] + p.gup[z] + p.glat[z] * n_lat + p.gamb[z];
+                    // Seed `residual` denominator, same operation order.
+                    let mut dr = p.gdn[z] + p.gamb[z];
+                    if z + 1 < nz {
+                        dr += p.gup[z];
+                    }
+                    dr += p.glat[z] * n_lat;
+                    den_res[i] = dr;
+                }
+            }
+        }
+
+        let mut den2 = vec![0.0f64; ny * nx];
+        for y in 0..ny {
+            for x in 0..nx {
+                let mut n_lat = 0.0;
+                if y > 0 {
+                    n_lat += 1.0;
+                }
+                if y + 1 < ny {
+                    n_lat += 1.0;
+                }
+                if x > 0 {
+                    n_lat += 1.0;
+                }
+                if x + 1 < nx {
+                    n_lat += 1.0;
+                }
+                den2[y * nx + x] = gs + gl2 * n_lat;
+            }
+        }
+
+        ThermalSolver {
+            nz,
+            ny,
+            nx,
+            gdn: p.gdn.clone(),
+            gup: p.gup.clone(),
+            glat: p.glat.clone(),
+            gl2,
+            gs,
+            den3,
+            den_res,
+            den2,
+            t: vec![0.0; cells],
+            t2: vec![0.0; cells],
+            r: vec![0.0; cells],
+            r2: vec![0.0; ny * nx],
+            c: vec![0.0; ny * nx],
+            c2: vec![0.0; ny * nx],
+            pow64: vec![0.0; cells],
+        }
+    }
+
+    /// Cells per solve (`z * y * x`).
+    pub fn cells(&self) -> usize {
+        self.nz * self.ny * self.nx
+    }
+
+    /// Grid shape `(z, y, x)`.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.nz, self.ny, self.nx)
+    }
+
+    /// Two-grid solve into a caller buffer — bit-identical to
+    /// [`ThermalGrid::solve`] with the same `it3d`, zero heap allocations.
+    pub fn solve_into(&mut self, pow_: &[f64], it3d: usize, out: &mut [f64]) {
+        self.run_schedule(pow_, it3d);
+        out.copy_from_slice(&self.t);
+    }
+
+    /// Peak temperature rise for an f64 power grid (allocation-free).
+    pub fn solve_peak(&mut self, pow_: &[f64], it3d: usize) -> f64 {
+        self.run_schedule(pow_, it3d);
+        self.t.iter().copied().fold(f64::MIN, f64::max)
+    }
+
+    /// Peak rise for an f32 power grid (the artifact input dtype); the
+    /// widening conversion reuses an owned buffer, so still allocation-free.
+    pub fn solve_peak_f32(&mut self, pow_: &[f32], it3d: usize) -> f32 {
+        assert_eq!(pow_.len(), self.cells());
+        let mut p = std::mem::take(&mut self.pow64);
+        for (dst, &src) in p.iter_mut().zip(pow_.iter()) {
+            *dst = src as f64;
+        }
+        let peak = self.solve_peak(&p, it3d) as f32;
+        self.pow64 = p;
+        peak
+    }
+
+    /// Batched peak solve: `pows` holds `out.len()` concatenated power
+    /// grids of `cells()` each; the plan (denominators + scratch) is
+    /// amortised across the whole batch and no allocation happens per
+    /// design.  This is the native counterpart of the TH_BATCH artifact
+    /// dispatch.
+    pub fn solve_peak_batch_into(&mut self, pows: &[f64], it3d: usize, out: &mut [f64]) {
+        let cells = self.cells();
+        assert_eq!(
+            pows.len(),
+            out.len() * cells,
+            "pows must hold out.len() grids of {cells} cells"
+        );
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.solve_peak(&pows[i * cells..(i + 1) * cells], it3d);
+        }
+    }
+
+    /// [`Self::solve_peak_batch_into`] returning a fresh Vec (one
+    /// allocation for the result, none per design).
+    pub fn solve_peak_batch(&mut self, pows: &[f64], n: usize, it3d: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n];
+        self.solve_peak_batch_into(pows, it3d, &mut out);
+        out
+    }
+
+    /// The seed two-grid schedule, leaving the solution in `self.t`.
+    fn run_schedule(&mut self, pow_: &[f64], it3d: usize) {
+        let cells = self.cells();
+        assert_eq!(pow_.len(), cells, "power grid size mismatch");
+        let cycles = 3;
+        let it2d = 300;
+        let nynx = self.ny * self.nx;
+
+        self.t.fill(0.0);
+        for _ in 0..cycles {
+            // Residual r = P - G*T, collapsed over z into r2.
+            self.residual_into(pow_);
+            self.r2.fill(0.0);
+            for z in 0..self.nz {
+                let plane = &self.r[z * nynx..(z + 1) * nynx];
+                for (acc, &v) in self.r2.iter_mut().zip(plane.iter()) {
+                    *acc += v;
+                }
+            }
+
+            // Coarse 2D Jacobi: the single-layer kernel with no vertical
+            // neighbours is exactly the seed `jacobi2d` cell update.
+            self.c.fill(0.0);
+            for _ in 0..it2d {
+                sweep_layer::<false, false>(
+                    self.ny, self.nx, 0.0, 0.0, self.gl2, &self.r2, &[], &[], &self.c,
+                    &self.den2, &mut self.c2,
+                );
+                std::mem::swap(&mut self.c, &mut self.c2);
+            }
+            for z in 0..self.nz {
+                let plane = &mut self.t[z * nynx..(z + 1) * nynx];
+                for (acc, &v) in plane.iter_mut().zip(self.c.iter()) {
+                    *acc += v;
+                }
+            }
+
+            // Fine 3D sweeps.
+            for _ in 0..it3d {
+                self.sweep3d(pow_);
+            }
+        }
+    }
+
+    /// One fine-level Jacobi sweep `t -> t2`, then swap.
+    fn sweep3d(&mut self, pow_: &[f64]) {
+        let (nz, ny, nx) = (self.nz, self.ny, self.nx);
+        let nynx = ny * nx;
+        for z in 0..nz {
+            let base = z * nynx;
+            let pw = &pow_[base..base + nynx];
+            let below: &[f64] = if z > 0 { &self.t[base - nynx..base] } else { &[] };
+            let above: &[f64] =
+                if z + 1 < nz { &self.t[base + nynx..base + 2 * nynx] } else { &[] };
+            let cur = &self.t[base..base + nynx];
+            let den = &self.den3[base..base + nynx];
+            let out = &mut self.t2[base..base + nynx];
+            let (gdn, gup, gl) = (self.gdn[z], self.gup[z], self.glat[z]);
+            match (z > 0, z + 1 < nz) {
+                (false, false) => {
+                    sweep_layer::<false, false>(ny, nx, gdn, gup, gl, pw, below, above, cur, den, out)
+                }
+                (false, true) => {
+                    sweep_layer::<false, true>(ny, nx, gdn, gup, gl, pw, below, above, cur, den, out)
+                }
+                (true, false) => {
+                    sweep_layer::<true, false>(ny, nx, gdn, gup, gl, pw, below, above, cur, den, out)
+                }
+                (true, true) => {
+                    sweep_layer::<true, true>(ny, nx, gdn, gup, gl, pw, below, above, cur, den, out)
+                }
+            }
+        }
+        std::mem::swap(&mut self.t, &mut self.t2);
+    }
+
+    /// Stencil residual `r = P - G*T` into the owned buffer (cold path:
+    /// runs 3 times per solve vs `it3d` fine sweeps, so stays branchy but
+    /// uses the precomputed residual denominators).
+    fn residual_into(&mut self, pow_: &[f64]) {
+        let (nz, ny, nx) = (self.nz, self.ny, self.nx);
+        let nynx = ny * nx;
+        let t = &self.t;
+        for z in 0..nz {
+            let (gdn, gup, gl) = (self.gdn[z], self.gup[z], self.glat[z]);
+            for y in 0..ny {
+                for x in 0..nx {
+                    let i = (z * ny + y) * nx + x;
+                    let mut num = pow_[i];
+                    if z > 0 {
+                        num += gdn * t[i - nynx];
+                    }
+                    if z + 1 < nz {
+                        num += gup * t[i + nynx];
+                    }
+                    let mut lat = 0.0;
+                    if y > 0 {
+                        lat += t[i - nx];
+                    }
+                    if y + 1 < ny {
+                        lat += t[i + nx];
+                    }
+                    if x > 0 {
+                        lat += t[i - 1];
+                    }
+                    if x + 1 < nx {
+                        lat += t[i + 1];
+                    }
+                    num += gl * lat;
+                    self.r[i] = num - self.den_res[i] * t[i];
+                }
+            }
+        }
+    }
+}
+
+/// One Jacobi sweep over a single (ny, nx) plane: explicit boundary loops
+/// around a branch-free interior kernel.  `DN`/`UP` select the vertical
+/// neighbour terms at monomorphisation time; per-cell arithmetic replicates
+/// the seed order exactly (bit-identity contract).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn sweep_layer<const DN: bool, const UP: bool>(
+    ny: usize,
+    nx: usize,
+    gdn: f64,
+    gup: f64,
+    gl: f64,
+    pow_: &[f64],
+    below: &[f64],
+    above: &[f64],
+    t: &[f64],
+    den: &[f64],
+    out: &mut [f64],
+) {
+    // Length facts: one assert per slice lets the optimizer prove every
+    // interior access in-bounds and drop the per-access checks.
+    let nynx = ny * nx;
+    assert_eq!(pow_.len(), nynx);
+    assert_eq!(t.len(), nynx);
+    assert_eq!(den.len(), nynx);
+    assert_eq!(out.len(), nynx);
+    if DN {
+        assert_eq!(below.len(), nynx);
+    }
+    if UP {
+        assert_eq!(above.len(), nynx);
+    }
+
+    // Boundary row y = 0.
+    for x in 0..nx {
+        edge_cell::<DN, UP>(x, 0, x, ny, nx, gdn, gup, gl, pow_, below, above, t, den, out);
+    }
+    // Boundary row y = ny - 1.
+    if ny > 1 {
+        let y = ny - 1;
+        for x in 0..nx {
+            edge_cell::<DN, UP>(
+                y * nx + x,
+                y,
+                x,
+                ny,
+                nx,
+                gdn,
+                gup,
+                gl,
+                pow_,
+                below,
+                above,
+                t,
+                den,
+                out,
+            );
+        }
+    }
+    // Interior rows: full lateral stencil, no boundary tests per cell.
+    for y in 1..ny.saturating_sub(1) {
+        let row = y * nx;
+        edge_cell::<DN, UP>(row, y, 0, ny, nx, gdn, gup, gl, pow_, below, above, t, den, out);
+        for x in 1..nx - 1 {
+            let i = row + x;
+            let mut num = pow_[i];
+            if DN {
+                num += gdn * below[i];
+            }
+            if UP {
+                num += gup * above[i];
+            }
+            let mut lat = 0.0;
+            lat += t[i - nx];
+            lat += t[i + nx];
+            lat += t[i - 1];
+            lat += t[i + 1];
+            num += gl * lat;
+            out[i] = num / den[i];
+        }
+        if nx > 1 {
+            edge_cell::<DN, UP>(
+                row + nx - 1,
+                y,
+                nx - 1,
+                ny,
+                nx,
+                gdn,
+                gup,
+                gl,
+                pow_,
+                below,
+                above,
+                t,
+                den,
+                out,
+            );
+        }
+    }
+}
+
+/// Seed-order cell update with runtime lateral-boundary tests — used only
+/// on the boundary rows/columns `sweep_layer` peels off.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn edge_cell<const DN: bool, const UP: bool>(
+    i: usize,
+    y: usize,
+    x: usize,
+    ny: usize,
+    nx: usize,
+    gdn: f64,
+    gup: f64,
+    gl: f64,
+    pow_: &[f64],
+    below: &[f64],
+    above: &[f64],
+    t: &[f64],
+    den: &[f64],
+    out: &mut [f64],
+) {
+    let mut num = pow_[i];
+    if DN {
+        num += gdn * below[i];
+    }
+    if UP {
+        num += gup * above[i];
+    }
+    let mut lat = 0.0;
+    if y > 0 {
+        lat += t[i - nx];
+    }
+    if y + 1 < ny {
+        lat += t[i + nx];
+    }
+    if x > 0 {
+        lat += t[i - 1];
+    }
+    if x + 1 < nx {
+        lat += t[i + 1];
+    }
+    num += gl * lat;
+    out[i] = num / den[i];
+}
+
+/// Batched peak solve fanned over `workers` threads: each worker builds one
+/// plan for its contiguous chunk of designs, amortising plan construction
+/// across `TH_BATCH`-style batches exactly like the rest of the DSE fans
+/// out over `--workers`.  Results are position-stable and bit-identical for
+/// any worker count (`scope_map` preserves input order; each design's solve
+/// is independent).
+pub fn solve_peak_batch_par(
+    grid: &ThermalGrid,
+    pows: &[f64],
+    n: usize,
+    it3d: usize,
+    workers: usize,
+) -> Vec<f64> {
+    let cells = grid.z * grid.y * grid.x;
+    assert_eq!(pows.len(), n * cells, "pows must hold {n} grids of {cells} cells");
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    // Contiguous chunks, sized like scope_map's ordered fan-out.
+    let per = n.div_ceil(workers);
+    let chunks: Vec<(usize, usize)> = (0..n)
+        .step_by(per)
+        .map(|lo| (lo, (lo + per).min(n)))
+        .collect();
+    let parts = crate::util::threadpool::scope_map(chunks, workers, |(lo, hi)| {
+        let mut plan = ThermalSolver::new(grid);
+        plan.solve_peak_batch(&pows[lo * cells..hi * cells], hi - lo, it3d)
+    });
+    parts.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::grid::GridParams;
+    use crate::thermal::materials::LayerStack;
+
+    fn demo() -> ThermalGrid {
+        ThermalGrid::new(4, 3, 3, GridParams::uniform_demo(4))
+    }
+
+    fn checkerboard(cells: usize) -> Vec<f64> {
+        (0..cells).map(|i| if i % 3 == 0 { 0.4 + 0.01 * i as f64 } else { 0.0 }).collect()
+    }
+
+    #[test]
+    fn plan_matches_seed_solver_bitwise_on_demo_grid() {
+        let grid = demo();
+        let p = checkerboard(36);
+        let want = grid.solve(&p, 150);
+        let mut plan = ThermalSolver::new(&grid);
+        let mut got = vec![0.0; 36];
+        plan.solve_into(&p, 150, &mut got);
+        for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "cell {i}: {w} vs {g}");
+        }
+        assert_eq!(plan.solve_peak(&p, 150).to_bits(), grid.solve_peak(&p, 150).to_bits());
+    }
+
+    #[test]
+    fn plan_matches_seed_on_degenerate_shapes() {
+        // 1-wide rows/columns and single layers exercise every boundary arm.
+        for (z, y, x) in [(1, 1, 1), (1, 4, 1), (2, 1, 5), (3, 2, 2)] {
+            let grid = ThermalGrid::new(z, y, x, GridParams::uniform_demo(z));
+            let p = checkerboard(z * y * x);
+            let want = grid.solve(&p, 40);
+            let mut plan = ThermalSolver::new(&grid);
+            let mut got = vec![0.0; z * y * x];
+            plan.solve_into(&p, 40, &mut got);
+            for (w, g) in want.iter().zip(got.iter()) {
+                assert_eq!(w.to_bits(), g.to_bits(), "shape ({z},{y},{x})");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_individual_solves_for_any_worker_count() {
+        let stack = LayerStack::m3d();
+        let grid =
+            ThermalGrid::new(stack.z(), 4, 4, GridParams::from_stack(&stack));
+        let cells = stack.z() * 16;
+        let n = 5;
+        let pows: Vec<f64> = (0..n * cells).map(|i| ((i * 7) % 11) as f64 * 0.05).collect();
+
+        let mut plan = ThermalSolver::new(&grid);
+        let batched = plan.solve_peak_batch(&pows, n, 60);
+        for (i, &peak) in batched.iter().enumerate() {
+            let one = grid.solve_peak(&pows[i * cells..(i + 1) * cells], 60);
+            assert_eq!(peak.to_bits(), one.to_bits(), "design {i}");
+        }
+        for workers in [1, 2, 4] {
+            let par = solve_peak_batch_par(&grid, &pows, n, 60, workers);
+            for (a, b) in par.iter().zip(batched.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_entry_matches_seed_f32_path() {
+        let grid = demo();
+        let p32: Vec<f32> = (0..36).map(|i| (i % 5) as f32 * 0.2).collect();
+        let mut plan = ThermalSolver::new(&grid);
+        let got = plan.solve_peak_f32(&p32, 200);
+        let want = grid.solve_peak_f32(&p32, 200);
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+}

@@ -61,7 +61,7 @@ fn credit_conservation_holds_under_hotspot_saturation() {
         audit: true,
         ..SimConfig::default()
     };
-    let sim = NocSim::new(&design, &routing, cfg);
+    let mut sim = NocSim::new(&design, &routing, cfg);
     let (rate, flits) = hotspot_load(routing.n, 0.2);
     let mut rng = Rng::seed_from_u64(9);
     let stats = sim.run(&rate, &flits, 5_000, &mut rng);
@@ -81,7 +81,7 @@ fn fabric_keeps_delivering_at_high_injection_on_every_topology() {
             audit: true,
             ..SimConfig::default()
         };
-        let sim = NocSim::new(&design, &routing, cfg);
+        let mut sim = NocSim::new(&design, &routing, cfg);
         let (rate, flits) = hotspot_load(routing.n, 0.3);
         let mut rng_a = Rng::seed_from_u64(5);
         let mut rng_b = Rng::seed_from_u64(5);
@@ -115,7 +115,7 @@ fn escape_vc_rescues_blocked_heads_under_saturation() {
         audit: true,
         ..SimConfig::default()
     };
-    let sim = NocSim::new(&design, &routing, cfg);
+    let mut sim = NocSim::new(&design, &routing, cfg);
     let (rate, flits) = hotspot_load(routing.n, 0.4);
     let mut rng = Rng::seed_from_u64(11);
     let stats = sim.run(&rate, &flits, 5_000, &mut rng);
@@ -125,7 +125,7 @@ fn escape_vc_rescues_blocked_heads_under_saturation() {
 
 fn run_scenario(design: &Design, pattern: TrafficPattern, seed: u64) -> SimStats {
     let routing = Routing::build(design);
-    let sim = NocSim::new(design, &routing, SimConfig::default());
+    let mut sim = NocSim::new(design, &routing, SimConfig::default());
     let n = routing.n;
     let (rate, flits) = pattern.rates(n, 0.02, &[0, n - 1]).unwrap();
     let mut rng = Rng::seed_from_u64(seed);

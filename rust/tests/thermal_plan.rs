@@ -1,0 +1,269 @@
+//! Integration: the [`ThermalSolver`] solve-plan contract.
+//!
+//! * **Golden bit-identity** — the planned solver reproduces the seed
+//!   `ThermalGrid::solve` output bit-for-bit on both technology stacks
+//!   (and the dry-TSV variant), so every downstream consumer (campaign
+//!   validation, selftest, figures) is unchanged by the fast path.
+//! * **Scratch hygiene** — repeated `solve_into` calls on one plan never
+//!   leak state between solves.
+//! * **Zero allocation** — after plan construction, `solve_into` performs
+//!   zero heap allocations, asserted with a counting global allocator
+//!   (per-thread counters, so the parallel test harness cannot interfere).
+//! * **Oracle agreement** — the sparse CG `solve_exact` matches the dense
+//!   Gaussian `solve_exact_dense` on a stiff small grid.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use hem3d::thermal::{solve_peak_batch_par, GridParams, LayerStack, ThermalGrid, ThermalSolver};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: passes through to the system allocator, counting
+// allocations made by the *current thread* while armed.  Thread-local
+// counters keep other harness threads out of the measurement; `const`
+// thread_local initializers make the counter access itself allocation-free.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.with(|a| a.get()) {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.with(|a| a.get()) {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Count this thread's heap allocations across `f`.
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    ALLOCS.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    let r = f();
+    ARMED.with(|a| a.set(false));
+    (ALLOCS.with(|c| c.get()), r)
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+fn campaign_grid(stack: &LayerStack) -> ThermalGrid {
+    ThermalGrid::new(stack.z(), 8, 8, GridParams::from_stack(stack))
+}
+
+/// Deterministic top-tier-heavy power field (the campaign's hot shape).
+fn power_for(grid: &ThermalGrid, stack: &LayerStack, scale: f64) -> Vec<f64> {
+    let cells = grid.z * grid.y * grid.x;
+    let mut p = vec![0.0; cells];
+    let plane = grid.y * grid.x;
+    let zl = stack.tier_layer(3);
+    for i in 0..plane {
+        p[zl * plane + i] = scale * (0.3 + 0.07 * (i % 7) as f64);
+    }
+    let z0 = stack.tier_layer(0);
+    for i in 0..plane / 2 {
+        p[z0 * plane + i] += 0.1 * scale;
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Golden bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planned_solver_is_bit_identical_to_seed_on_all_stacks() {
+    for stack in [LayerStack::m3d(), LayerStack::tsv(true), LayerStack::tsv(false)] {
+        let grid = campaign_grid(&stack);
+        let p = power_for(&grid, &stack, 1.0);
+        let want = grid.solve(&p, 400);
+
+        let mut plan = ThermalSolver::new(&grid);
+        let mut got = vec![0.0; want.len()];
+        plan.solve_into(&p, 400, &mut got);
+        for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "cell {i}: planned {g} vs seed {w}"
+            );
+        }
+        // Peak entry points agree bitwise too.
+        assert_eq!(
+            plan.solve_peak(&p, 400).to_bits(),
+            grid.solve_peak(&p, 400).to_bits()
+        );
+    }
+}
+
+#[test]
+fn repeated_solve_into_has_no_stale_scratch_contamination() {
+    let stack = LayerStack::m3d();
+    let grid = campaign_grid(&stack);
+    let p1 = power_for(&grid, &stack, 1.0);
+    let p2 = power_for(&grid, &stack, 3.7);
+    let cells = p1.len();
+
+    let mut plan = ThermalSolver::new(&grid);
+    let mut first = vec![0.0; cells];
+    plan.solve_into(&p1, 200, &mut first);
+
+    // Interleave a different problem, then re-solve the first: the reused
+    // plan must reproduce its own first answer exactly.
+    let mut other = vec![0.0; cells];
+    plan.solve_into(&p2, 200, &mut other);
+    let mut again = vec![0.0; cells];
+    plan.solve_into(&p1, 200, &mut again);
+    for (a, b) in first.iter().zip(again.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "stale scratch leaked across solves");
+    }
+
+    // And a fresh plan agrees with the reused one on the second problem.
+    let mut fresh = ThermalSolver::new(&grid);
+    let mut fresh_out = vec![0.0; cells];
+    fresh.solve_into(&p2, 200, &mut fresh_out);
+    for (a, b) in other.iter().zip(fresh_out.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "reused plan diverged from fresh plan");
+    }
+}
+
+#[test]
+fn batch_and_parallel_batch_match_seed_solves() {
+    let stack = LayerStack::tsv(true);
+    let grid = campaign_grid(&stack);
+    let cells = grid.z * grid.y * grid.x;
+    let n = 6;
+    let mut pows = Vec::with_capacity(n * cells);
+    for k in 0..n {
+        pows.extend(power_for(&grid, &stack, 0.5 + k as f64 * 0.9));
+    }
+
+    let mut plan = ThermalSolver::new(&grid);
+    let batched = plan.solve_peak_batch(&pows, n, 120);
+    assert_eq!(batched.len(), n);
+    for (k, &peak) in batched.iter().enumerate() {
+        let want = grid.solve_peak(&pows[k * cells..(k + 1) * cells], 120);
+        assert_eq!(peak.to_bits(), want.to_bits(), "design {k}");
+    }
+    for workers in [1, 3, 8] {
+        let par = solve_peak_batch_par(&grid, &pows, n, 120, workers);
+        for (k, (a, b)) in par.iter().zip(batched.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "workers {workers}, design {k}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-allocation contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn solve_into_performs_zero_heap_allocations() {
+    let stack = LayerStack::m3d();
+    let grid = campaign_grid(&stack);
+    let p = power_for(&grid, &stack, 1.0);
+    let mut plan = ThermalSolver::new(&grid);
+    let mut out = vec![0.0; p.len()];
+
+    // Warm call outside the measurement (nothing should differ, but keep
+    // the assertion about steady state, which is what the DSE loop sees).
+    plan.solve_into(&p, 120, &mut out);
+
+    let (allocs, _) = count_allocs(|| {
+        plan.solve_into(&p, 120, &mut out);
+        let peak = plan.solve_peak(&p, 120);
+        assert!(peak > 0.0);
+    });
+    assert_eq!(allocs, 0, "solve plan allocated {allocs} times per call");
+}
+
+#[test]
+fn batched_planned_solve_allocates_only_the_result_vector() {
+    let stack = LayerStack::m3d();
+    let grid = campaign_grid(&stack);
+    let cells = grid.z * grid.y * grid.x;
+    let n = 4;
+    let p = power_for(&grid, &stack, 1.0);
+    let pows: Vec<f64> = (0..n).flat_map(|_| p.iter().copied()).collect();
+    let mut plan = ThermalSolver::new(&grid);
+    let mut out = vec![0.0; n];
+    plan.solve_peak_batch_into(&pows, 120, &mut out);
+
+    let (allocs, _) = count_allocs(|| {
+        plan.solve_peak_batch_into(&pows, 120, &mut out);
+    });
+    assert_eq!(allocs, 0, "batched solve allocated {allocs} times");
+    assert_eq!(pows.len(), n * cells);
+}
+
+// ---------------------------------------------------------------------------
+// Oracle agreement
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cg_oracle_matches_dense_gaussian_on_stiff_small_grid() {
+    // 6x6 lateral cells on the stiffest stack (dry TSV): the CG oracle
+    // must reproduce the dense solve to well below the MG validation
+    // tolerances.
+    for stack in [LayerStack::m3d(), LayerStack::tsv(false)] {
+        let grid = ThermalGrid::new(stack.z(), 6, 6, GridParams::from_stack(&stack));
+        let mut p = vec![0.0; stack.z() * 36];
+        let zl = stack.tier_layer(3);
+        for i in 0..36 {
+            p[zl * 36 + i] = 0.5 + 0.1 * (i % 5) as f64;
+        }
+        let cg = grid.solve_exact(&p);
+        let dense = grid.solve_exact_dense(&p);
+        for (i, (a, b)) in cg.iter().zip(dense.iter()).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1e-12);
+            assert!(rel < 1e-8, "cell {i}: cg {a} vs dense {b} (rel {rel:.2e})");
+        }
+    }
+}
+
+#[test]
+fn cg_oracle_is_feasible_beyond_the_campaign_grid() {
+    // The dense Gaussian was O(n^3) and capped validation at ~10x8x8;
+    // the CG oracle handles a 4x denser lateral grid comfortably and the
+    // two-grid schedule still lands within its validation tolerance.
+    let stack = LayerStack::m3d();
+    let grid = ThermalGrid::new(stack.z(), 16, 16, GridParams::from_stack(&stack));
+    let cells = stack.z() * 256;
+    let mut p = vec![0.0; cells];
+    let zl = stack.tier_layer(3);
+    for i in 0..256 {
+        p[zl * 256 + i] = 0.5 + 0.01 * (i % 13) as f64;
+    }
+    let exact_peak = grid
+        .solve_exact(&p)
+        .iter()
+        .copied()
+        .fold(f64::MIN, f64::max);
+    let mut plan = ThermalSolver::new(&grid);
+    let mg_peak = plan.solve_peak(&p, 400);
+    let rel = (mg_peak - exact_peak).abs() / exact_peak;
+    assert!(
+        rel < 1e-2,
+        "two-grid {mg_peak:.4} vs CG oracle {exact_peak:.4} on 10x16x16 (rel {rel:.3e})"
+    );
+}
