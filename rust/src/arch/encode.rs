@@ -38,6 +38,27 @@ pub fn design_key(design: &Design) -> DesignKey {
     }
 }
 
+impl DesignKey {
+    /// The compacted placement permutation (`tile_at` as u16).
+    pub fn tiles(&self) -> &[u16] {
+        &self.tiles
+    }
+
+    /// The sorted, deduplicated link set.
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Rebuild a key from its parts (the `store` cache-snapshot loader).
+    /// Links are re-normalised so a hand-edited snapshot cannot introduce
+    /// a key that `design_key` would never produce.
+    pub fn from_parts(tiles: Vec<u16>, mut links: Vec<Link>) -> DesignKey {
+        links.sort_unstable();
+        links.dedup();
+        DesignKey { tiles, links }
+    }
+}
+
 /// Precomputed per-(tech, trace) context shared by every encoded design.
 pub struct EncodeCtx<'a> {
     /// Physical grid geometry.

@@ -1,12 +1,41 @@
 //! `hem3d campaign` — regenerate the paper's figure data (Figs 7-10) into
 //! console tables + JSON files under a report directory.
+//!
+//! With `--run-dir DIR` (or `--name NAME`, short for `runs/NAME`) the
+//! campaign is *checkpointable*: every completed leg is persisted as an
+//! artifact and the eval cache is snapshotted, so re-running the same
+//! command resumes — completed legs replay from disk (the default;
+//! `--force` recomputes) and fresh legs warm-start from the snapshot.
+//! Resumed campaigns produce byte-identical figure JSON to uninterrupted
+//! ones (DESIGN.md §11).
 
 use anyhow::Result;
 use hem3d::coordinator::campaign::Effort;
 use hem3d::coordinator::figures::{self, BENCHES};
 use hem3d::coordinator::report::{self, f, table};
-use hem3d::util::cli::Args;
 use hem3d::log_info;
+use hem3d::store::Engine;
+use hem3d::util::cli::Args;
+use hem3d::util::json::Json;
+
+/// Resolve the run-directory convention shared by every store-aware
+/// command: `--run-dir DIR` wins, `--name NAME` means `runs/NAME`, neither
+/// means no store.
+pub fn run_dir_from_args(args: &Args) -> Option<String> {
+    match args.opt("run-dir") {
+        Some(d) => Some(d.to_string()),
+        None => args.opt("name").map(|n| format!("runs/{n}")),
+    }
+}
+
+/// Resolve the engine from `--run-dir` / `--name` / `--force`; `None` for
+/// both dir options means an ephemeral (non-persisted) campaign.
+pub fn engine_from_args(args: &Args) -> Result<Engine> {
+    Ok(match run_dir_from_args(args) {
+        Some(dir) => Engine::open_with(dir, args.flag("force"))?,
+        None => Engine::ephemeral(),
+    })
+}
 
 /// Regenerate the requested figures into `--out`.
 pub fn run(args: &Args) -> Result<()> {
@@ -15,22 +44,48 @@ pub fn run(args: &Args) -> Result<()> {
         .split(',')
         .filter_map(|s| s.trim().parse().ok())
         .collect();
-    let out = args.opt_or("out", "reports");
     let seed = args.u64_or("seed", 42);
     let benches_opt = args.opt_or("benches", &BENCHES.join(","));
     let benches: Vec<&str> = benches_opt.split(',').collect();
-    let effort = match args.opt_or("effort", "quick").as_str() {
+    let effort_name = args.opt_or("effort", "quick");
+    let effort = match effort_name.as_str() {
         "full" => Effort::full(),
         _ => Effort::quick(),
     }
     .with_workers(args.usize_or("workers", 1));
     log_info!("campaign workers: {}", effort.workers);
 
+    let engine = engine_from_args(args)?;
+    let out = match (args.opt("out"), engine.store()) {
+        (Some(o), _) => o.to_string(),
+        (None, Some(store)) => store.reports_dir().display().to_string(),
+        (None, None) => "reports".to_string(),
+    };
+    if let Some(store) = engine.store() {
+        log_info!(
+            "run store: {} ({} legs on disk, {} cached evaluations)",
+            store.root().display(),
+            store.list_leg_ids().len(),
+            store.cache_len(),
+        );
+        store.write_manifest(&Json::obj(vec![
+            ("benches", Json::arr(benches.iter().map(|b| Json::str(b)))),
+            ("effort", Json::str(&effort_name)),
+            ("effort_fp", Json::str(&effort.fingerprint())),
+            ("figs", Json::arr(figs.iter().map(|&x| Json::num(x as f64)))),
+            ("kind", Json::str("campaign")),
+            ("schema", Json::num(hem3d::store::ARTIFACT_SCHEMA_VERSION as f64)),
+            // Decimal string: exact for any u64 seed (f64 rounds >= 2^53),
+            // same rule as LegSpec's seed fields.
+            ("seed", Json::str(&seed.to_string())),
+        ]))?;
+    }
+
     for fig in figs {
         match fig {
             7 => {
                 log_info!("running Fig 7 (MOO-STAGE vs AMOSA convergence)...");
-                let rows = figures::fig7(&benches, &effort, seed);
+                let rows = figures::fig7_stored(&engine, &benches, &effort, seed);
                 let avg_tsv: f64 =
                     rows.iter().map(|r| r.speedup_tsv).sum::<f64>() / rows.len() as f64;
                 let avg_m3d: f64 =
@@ -55,7 +110,7 @@ pub fn run(args: &Args) -> Result<()> {
             }
             8 => {
                 log_info!("running Fig 8 (TSV PO vs PT)...");
-                let rows = figures::fig8(&benches, &effort, seed);
+                let rows = figures::fig8_stored(&engine, &benches, &effort, seed);
                 println!("\nFig 8 — TSV: performance-only vs performance-thermal");
                 println!(
                     "{}",
@@ -77,7 +132,7 @@ pub fn run(args: &Args) -> Result<()> {
             }
             9 => {
                 log_info!("running Fig 9 (TSV-BL vs HeM3D)...");
-                let rows = figures::fig9(&benches, &effort, seed);
+                let rows = figures::fig9_stored(&engine, &benches, &effort, seed);
                 println!("\nFig 9 — TSV-BL vs HeM3D-PO vs HeM3D-PT");
                 println!(
                     "{}",
@@ -117,7 +172,7 @@ pub fn run(args: &Args) -> Result<()> {
             }
             10 => {
                 log_info!("running Fig 10 (HeM3D PO vs PT, ET*T selection)...");
-                let rows = figures::fig10(&benches, &effort, seed);
+                let rows = figures::fig10_stored(&engine, &benches, &effort, seed);
                 println!("\nFig 10 — HeM3D: PO vs PT (ET*Temp product, no constraint)");
                 println!(
                     "{}",
@@ -140,6 +195,55 @@ pub fn run(args: &Args) -> Result<()> {
             other => anyhow::bail!("unknown figure {other} (supported: 7,8,9,10)"),
         }
     }
+
+    print_leg_summary(&engine);
     println!("\nreports written to {out}/");
     Ok(())
+}
+
+/// Per-leg cache/replay summary — the observable warm-start benefit
+/// (surfaced per the run-artifacts contract, DESIGN.md §11.4).
+pub fn print_leg_summary(engine: &Engine) {
+    let summaries = engine.summaries();
+    if summaries.is_empty() {
+        return;
+    }
+    println!("\nCampaign legs (eval-cache stats)");
+    println!(
+        "{}",
+        table(
+            &["leg", "status", "evals", "hits", "warm", "secs"],
+            &summaries
+                .iter()
+                .map(|s| {
+                    let label = if s.id.is_empty() {
+                        format!(
+                            "{}-{}-{}-{}",
+                            s.bench,
+                            s.tech.name(),
+                            s.mode.name(),
+                            s.algo.name()
+                        )
+                    } else {
+                        s.id.clone()
+                    };
+                    vec![
+                        label,
+                        if s.replayed { "replayed".into() } else { "computed".into() },
+                        s.evals.to_string(),
+                        s.cache.hits.to_string(),
+                        s.cache.warm_hits.to_string(),
+                        f(s.opt_seconds, 2),
+                    ]
+                })
+                .collect::<Vec<_>>()
+        )
+    );
+    let replayed = summaries.iter().filter(|s| s.replayed).count();
+    let evals: u64 = summaries.iter().map(|s| s.evals).sum();
+    let warm: u64 = summaries.iter().map(|s| s.cache.warm_hits).sum();
+    println!(
+        "legs replayed {replayed}/{} — evaluations this process: {evals}, warm-start cache hits: {warm}",
+        summaries.len()
+    );
 }

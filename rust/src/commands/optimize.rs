@@ -4,10 +4,16 @@
 //! With `--artifacts DIR` the Pareto front is additionally cross-scored
 //! through the AOT `moo_eval` kernel and the winners' temperatures through
 //! the batched `thermal_solve` artifact (L1<->L3 agreement is reported).
+//!
+//! With `--run-dir DIR` (or `--name NAME`) the leg goes through the same
+//! checkpointable engine as `hem3d campaign`: an already-stored leg
+//! replays from disk, a fresh one is persisted and warm-starts its eval
+//! cache from the run's snapshot — so `optimize` legs and `campaign` legs
+//! share one store (DESIGN.md §11).
 
 use anyhow::Result;
 use hem3d::config::Tech;
-use hem3d::coordinator::{batch, campaign};
+use hem3d::coordinator::batch;
 use hem3d::coordinator::campaign::{Algo, Effort, LegWorld, Selection};
 use hem3d::noc::routing::Routing;
 use hem3d::opt::Mode;
@@ -50,10 +56,18 @@ pub fn run(args: &Args) -> Result<()> {
         effort.workers
     );
     let world = LegWorld::new(&bench, tech, seed);
-    let leg = campaign::run_leg(&world, mode, algo, selection, &effort, seed);
+    let engine = super::campaign::engine_from_args(args)?;
+    let leg = engine.run_leg(&world, mode, algo, selection, &effort, seed);
 
     println!("leg: bench={} tech={} mode={} algo={}", leg.bench, leg.tech.name(), leg.mode.name(), leg.algo.name());
+    if leg.replayed {
+        println!("  replayed from run store (no evaluation this process)");
+    }
     println!("  evaluations:        {} (distinct; cache replays excluded)", leg.evals);
+    println!(
+        "  eval cache:         {} hits / {} misses ({} served by warm-start snapshot)",
+        leg.cache.hits, leg.cache.misses, leg.cache.warm_hits
+    );
     println!("  optimizer time:     {:.2} s", leg.opt_seconds);
     println!("  convergence time:   {:.2} s", leg.convergence_seconds);
     println!("  pareto candidates validated: {}", leg.candidates.len());

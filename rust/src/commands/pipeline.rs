@@ -1,9 +1,16 @@
 //! `hem3d pipeline` — Fig 6: planar vs M3D GPU pipeline timing, the derived
 //! clock frequencies, and the projected energy saving.
+//!
+//! With `--run-dir DIR` (or `--name NAME`) the Fig 6 result is also stored
+//! as `reports/fig6.json` inside the run directory (atomic tmp+rename,
+//! like every run-store write), so a run dir can hold the complete Fig
+//! 6–10 report set.
 
 use anyhow::Result;
+use hem3d::store::RunStore;
 use hem3d::timing::analyze_gpu_pipeline;
 use hem3d::util::cli::Args;
+use hem3d::util::json::Json;
 
 /// Print the Fig 6 planar-vs-M3D pipeline analysis.
 pub fn run(args: &Args) -> Result<()> {
@@ -43,5 +50,31 @@ pub fn run(args: &Args) -> Result<()> {
         r.energy_ratio,
         100.0 * (1.0 - r.energy_ratio)
     );
+
+    if let Some(dir) = super::campaign::run_dir_from_args(args) {
+        let store = RunStore::open(dir)?;
+        let doc = Json::obj(vec![
+            ("energy_ratio", Json::num(r.energy_ratio)),
+            ("m3d_crit_ps", Json::num(r.m3d_crit_ps)),
+            ("m3d_critical_stage", Json::str(r.m3d_critical_stage)),
+            ("m3d_freq_ghz", Json::num(r.m3d_freq_ghz)),
+            ("planar_crit_ps", Json::num(r.planar_crit_ps)),
+            ("planar_freq_ghz", Json::num(r.planar_freq_ghz)),
+            ("seed", Json::str(&seed.to_string())),
+            (
+                "stages",
+                Json::arr(r.stages.iter().map(|s| {
+                    Json::obj(vec![
+                        ("m3d_ps", Json::num(s.m3d_ps)),
+                        ("name", Json::str(s.name)),
+                        ("planar_ps", Json::num(s.planar_ps)),
+                    ])
+                })),
+            ),
+        ]);
+        let path = store.reports_dir().join("fig6.json");
+        RunStore::atomic_write(&path, &doc.to_pretty())?;
+        println!("fig6 report written to {}", path.display());
+    }
     Ok(())
 }

@@ -1,0 +1,128 @@
+//! `hem3d runs` — inspect persisted campaign runs.
+//!
+//! * `hem3d runs list [--root runs]` — one line per run directory:
+//!   stored legs, cached evaluations, figure reports present.
+//! * `hem3d runs show <name> [--root runs]` (or `--run-dir DIR`) — the
+//!   manifest plus a per-leg table assembled from the stored artifacts.
+
+use anyhow::Result;
+use hem3d::coordinator::report::{f, table};
+use hem3d::store::{artifact, RunStore};
+use hem3d::util::cli::Args;
+
+/// Dispatch `runs list` / `runs show`.
+pub fn run(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") | None => list(args),
+        Some("show") => show(args),
+        Some(other) => anyhow::bail!("unknown runs subcommand '{other}' (list|show)"),
+    }
+}
+
+fn list(args: &Args) -> Result<()> {
+    let root = args.opt_or("root", "runs");
+    let mut dirs: Vec<std::path::PathBuf> = match std::fs::read_dir(&root) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_dir())
+            .collect(),
+        Err(_) => {
+            println!("no runs under {root}/");
+            return Ok(());
+        }
+    };
+    dirs.sort();
+    let mut rows = Vec::new();
+    for dir in dirs {
+        // Only directories that look like runs: inspection must not
+        // scaffold store structure into unrelated directories.
+        if !dir.join("legs").is_dir() && !dir.join("manifest.json").is_file() {
+            continue;
+        }
+        let store = RunStore::open_existing(&dir)?;
+        let manifest = store.read_manifest();
+        let seed = manifest
+            .as_ref()
+            .and_then(|m| Some(m.get("seed")?.as_str()?.to_string()))
+            .unwrap_or_else(|| "-".into());
+        let effort = manifest
+            .as_ref()
+            .and_then(|m| Some(m.get("effort")?.as_str()?.to_string()))
+            .unwrap_or_else(|| "-".into());
+        let reports = std::fs::read_dir(store.reports_dir())
+            .map(|rd| rd.filter_map(|e| e.ok()).count())
+            .unwrap_or(0);
+        rows.push(vec![
+            store.name(),
+            store.list_leg_ids().len().to_string(),
+            store.cache_len().to_string(),
+            reports.to_string(),
+            seed,
+            effort,
+        ]);
+    }
+    if rows.is_empty() {
+        println!("no runs under {root}/");
+    } else {
+        println!(
+            "{}",
+            table(&["run", "legs", "cached evals", "reports", "seed", "effort"], &rows)
+        );
+    }
+    Ok(())
+}
+
+fn show(args: &Args) -> Result<()> {
+    let dir = match args.opt("run-dir") {
+        Some(d) => d.to_string(),
+        None => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: hem3d runs show <name> [--root runs]"))?;
+            format!("{}/{name}", args.opt_or("root", "runs"))
+        }
+    };
+    let store = RunStore::open_existing(&dir)?;
+    println!("run: {}", store.root().display());
+    if let Some(m) = store.read_manifest() {
+        println!("manifest: {}", m.to_string());
+    }
+    println!("cached evaluations: {}", store.cache_len());
+
+    let ids = store.list_leg_ids();
+    if ids.is_empty() {
+        println!("no stored legs");
+        return Ok(());
+    }
+    let mut rows = Vec::new();
+    for id in &ids {
+        let Some(doc) = store.load_leg(id) else {
+            rows.push(vec![id.clone(), "unreadable".into()]);
+            continue;
+        };
+        match artifact::leg_from_json(&doc) {
+            Ok((_, leg)) => rows.push(vec![
+                id.clone(),
+                leg.mode.name().into(),
+                leg.algo.name().into(),
+                leg.evals.to_string(),
+                format!("{}/{}", leg.cache.hits, leg.cache.warm_hits),
+                leg.front.members.len().to_string(),
+                f(leg.winner.et, 4),
+                f(leg.winner.temp_c, 1),
+                f(leg.opt_seconds, 2),
+            ]),
+            Err(e) => rows.push(vec![id.clone(), e]),
+        }
+    }
+    println!(
+        "{}",
+        table(
+            &["leg", "mode", "algo", "evals", "hits/warm", "front", "winner ET", "T [C]", "secs"],
+            &rows
+        )
+    );
+    Ok(())
+}

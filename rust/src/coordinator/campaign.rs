@@ -1,19 +1,24 @@
 //! Campaign runner: one "leg" = (benchmark x technology x mode x algorithm)
 //! DSE run, validated per Eq. (10); figures 7-10 are assemblies of legs.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::arch::design::Design;
 use crate::arch::encode::EncodeCtx;
 use crate::arch::geometry::Geometry;
 use crate::arch::tile::TileSet;
 use crate::config::{ArchConfig, Tech, TechParams};
-use crate::noc::routing::Routing;
 use crate::noc::topology;
-use crate::opt::{amosa, moo_stage, AmosaConfig, Mode, Problem, StageConfig};
-use crate::perf::{exec_time, PerfCoeffs};
+use crate::opt::amosa::AmosaIter;
+use crate::opt::moo_stage::IterRecord;
+use crate::opt::{amosa, moo_stage, AmosaConfig, Mode, ParetoSet, Problem, StageConfig};
+use crate::perf::PerfCoeffs;
+use crate::runtime::evaluator::EvalKey;
 use crate::traffic::{benchmark, generate, BenchProfile, Trace};
 use crate::util::Rng;
 
-use super::validate::detailed_peak_temp;
+use super::validate::validate_candidate;
 
 /// Which optimizer drives a leg.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +59,27 @@ pub enum Selection {
     MinEtTempProduct,
 }
 
+impl Selection {
+    /// Short stable name (part of a leg's identity in the run store).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Selection::MinEt => "min-et",
+            Selection::MinEtUnderTth => "min-et-under-tth",
+            Selection::MinEtTempProduct => "min-et-temp-product",
+        }
+    }
+
+    /// Parse a selection name; `None` for anything else.
+    pub fn parse(s: &str) -> Option<Selection> {
+        match s {
+            "min-et" => Some(Selection::MinEt),
+            "min-et-under-tth" => Some(Selection::MinEtUnderTth),
+            "min-et-temp-product" => Some(Selection::MinEtTempProduct),
+            _ => None,
+        }
+    }
+}
+
 /// One validated Pareto candidate.
 #[derive(Debug, Clone)]
 pub struct Validated {
@@ -63,6 +89,46 @@ pub struct Validated {
     pub et: f64,
     /// Detailed-solver peak temperature [degC].
     pub temp_c: f64,
+}
+
+/// Full optimizer trajectory, preserved per-algorithm so a leg artifact
+/// round-trips the history at native fidelity (not just the reduced
+/// `(phv, evals, secs)` triples the figures consume).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptHistory {
+    /// MOO-STAGE per-step records.
+    Stage(Vec<IterRecord>),
+    /// AMOSA per-temperature records.
+    Amosa(Vec<AmosaIter>),
+}
+
+impl OptHistory {
+    /// The reduced `(best_phv, evals, elapsed_s)` trajectory — the Fig 7
+    /// input.  `LegResult::history` is always derived from this, so a leg
+    /// rebuilt from its artifact reproduces the figures bit-identically.
+    pub fn points(&self) -> Vec<(f64, u64, f64)> {
+        match self {
+            OptHistory::Stage(h) => {
+                h.iter().map(|r| (r.best_phv, r.evals, r.elapsed_s)).collect()
+            }
+            OptHistory::Amosa(h) => {
+                h.iter().map(|r| (r.best_phv, r.evals, r.elapsed_s)).collect()
+            }
+        }
+    }
+}
+
+/// Eval-cache counters for one leg (surfaced in the campaign summary and
+/// persisted in the leg artifact so warm-start benefit is observable).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LegCacheStats {
+    /// Lookups answered by the leg's live cache (in-run re-probes).
+    pub hits: u64,
+    /// Lookups that fell through the live cache.
+    pub misses: u64,
+    /// Misses served from the persisted warm-start snapshot instead of
+    /// being recomputed.
+    pub warm_hits: u64,
 }
 
 /// Result of one DSE leg.
@@ -80,14 +146,23 @@ pub struct LegResult {
     /// Seconds until the optimizer's convergence point (self-plateau).
     pub convergence_seconds: f64,
     /// (best_phv, evals, elapsed_s) trajectory — drives the Fig 7
-    /// time-to-quality comparison.
+    /// time-to-quality comparison.  Derived from `opt_history`.
     pub history: Vec<(f64, u64, f64)>,
+    /// Full per-algorithm optimizer trajectory.
+    pub opt_history: OptHistory,
     /// Distinct design evaluations spent.
     pub evals: u64,
+    /// The optimizer's final non-dominated front (pre-validation).
+    pub front: ParetoSet,
     /// All validated Pareto members.
     pub candidates: Vec<Validated>,
     /// The Eq. (10) winner under the requested selection.
     pub winner: Validated,
+    /// Eval-cache counters for this leg.
+    pub cache: LegCacheStats,
+    /// True when this result was replayed from a run-store artifact rather
+    /// than computed in this process.
+    pub replayed: bool,
 }
 
 impl LegResult {
@@ -163,6 +238,33 @@ impl Effort {
         };
         self
     }
+
+    /// Hex fingerprint over every field that can change a leg's *results*.
+    ///
+    /// Part of a leg's identity in the run store: a stored artifact is only
+    /// replayed for an identical effort.  `workers` is deliberately
+    /// excluded — worker counts never change results (see
+    /// `tests/parallel_determinism.rs`), so a leg computed with
+    /// `--workers 8` is replayable in a `--workers 1` campaign.
+    pub fn fingerprint(&self) -> String {
+        let s = format!(
+            "stage:{},{},{},{},{},{},{};amosa:{},{},{},{},{};vcap:{}",
+            self.stage.local.neighbors_per_step,
+            self.stage.local.patience,
+            self.stage.local.max_steps,
+            self.stage.meta_candidates,
+            self.stage.max_iters,
+            self.stage.convergence_eps,
+            self.stage.convergence_window,
+            self.amosa.t_initial,
+            self.amosa.t_final,
+            self.amosa.alpha,
+            self.amosa.iters_per_temp,
+            self.amosa.archive_cap,
+            self.validate_cap,
+        );
+        format!("{:016x}", crate::store::fnv1a64(s.as_bytes()))
+    }
 }
 
 /// Build the shared context pieces for a (bench, tech) pair.
@@ -179,6 +281,9 @@ pub struct LegWorld {
     pub profile: BenchProfile,
     /// The generated traffic trace.
     pub trace: Trace,
+    /// Seed the trace was generated from (part of a leg's store identity:
+    /// a leg is only replayable against the same world).
+    pub seed: u64,
 }
 
 impl LegWorld {
@@ -190,7 +295,7 @@ impl LegWorld {
         let tiles = TileSet::from_arch(&cfg);
         let profile = benchmark(bench).expect("unknown benchmark");
         let trace = generate(&profile, &tiles, cfg.windows, seed);
-        LegWorld { cfg, tech, geo, tiles, profile, trace }
+        LegWorld { cfg, tech, geo, tiles, profile, trace, seed }
     }
 
     /// Borrow an encoding context over this world.
@@ -208,8 +313,35 @@ pub fn run_leg(
     effort: &Effort,
     seed: u64,
 ) -> LegResult {
+    run_leg_warm(world, mode, algo, selection, effort, seed, None).0
+}
+
+/// [`run_leg`] with an optional warm-start snapshot, additionally returning
+/// the leg's evaluation-cache export so the campaign engine
+/// (`store::engine`) can persist it.  Warm entries are exact replays of
+/// pure evaluations and the eval counter fires on the first probe of every
+/// design either way, so the returned `LegResult` is bit-identical for any
+/// `warm` — including `None`.
+///
+/// `Some(warm)` marks the run as store-backed (pass an empty map for a
+/// cold store): only then is the cache export collected.  With `None` the
+/// export is empty — plain [`run_leg`] callers don't pay for a snapshot
+/// clone they would discard.
+pub fn run_leg_warm(
+    world: &LegWorld,
+    mode: Mode,
+    algo: Algo,
+    selection: Selection,
+    effort: &Effort,
+    seed: u64,
+    warm: Option<Arc<HashMap<EvalKey, crate::eval::objectives::Scores>>>,
+) -> (LegResult, Vec<(EvalKey, crate::eval::objectives::Scores)>) {
     let ctx = world.encode_ctx();
-    let problem = Problem::new(&ctx, mode).with_workers(effort.workers);
+    let mut problem = Problem::new(&ctx, mode).with_workers(effort.workers);
+    let store_backed = warm.is_some();
+    if let Some(warm) = warm {
+        problem = problem.with_warm_cache(warm);
+    }
     let start = Design::with_identity_placement(
         world.cfg.n_tiles(),
         topology::mesh_links(&world.cfg),
@@ -217,26 +349,17 @@ pub fn run_leg(
     let mut rng = Rng::seed_from_u64(seed);
 
     let t0 = std::time::Instant::now();
-    let (pareto, history) = match algo {
+    let (pareto, opt_history) = match algo {
         Algo::MooStage => {
             let res = moo_stage(&problem, start, &effort.stage, &mut rng);
-            let hist: Vec<(f64, u64, f64)> = res
-                .history
-                .iter()
-                .map(|h| (h.best_phv, h.evals, h.elapsed_s))
-                .collect();
-            (res.pareto, hist)
+            (res.pareto, OptHistory::Stage(res.history))
         }
         Algo::Amosa => {
             let res = amosa(&problem, start, &effort.amosa, &mut rng);
-            let hist: Vec<(f64, u64, f64)> = res
-                .history
-                .iter()
-                .map(|h| (h.best_phv, h.evals, h.elapsed_s))
-                .collect();
-            (res.pareto, hist)
+            (res.pareto, OptHistory::Amosa(res.history))
         }
     };
+    let history = opt_history.points();
     let convergence_seconds =
         convergence_time(&history.iter().map(|h| (h.0, h.2)).collect::<Vec<_>>());
     let opt_seconds = t0.elapsed().as_secs_f64();
@@ -261,19 +384,19 @@ pub fn run_leg(
     let mut candidates: Vec<Validated> = crate::util::threadpool::scope_map(
         members,
         effort.workers,
-        |m| {
-            let routing = Routing::build(&m.design);
-            let scores = crate::eval::objectives::evaluate(&ctx, &m.design, &routing);
-            let et = exec_time(&ctx, &world.profile, &m.design, &routing, &scores, &coeffs);
-            let temp = detailed_peak_temp(&ctx, &m.design);
-            Validated { design: m.design.clone(), et: et.total, temp_c: temp }
-        },
+        |m| validate_candidate(&ctx, &world.profile, &m.design, &coeffs),
     );
 
     // Winner per the selection rule.
     let winner = select(&mut candidates, selection, world.cfg.t_threshold_c);
 
-    LegResult {
+    let cache = LegCacheStats {
+        hits: problem.cache_hits(),
+        misses: problem.cache_misses(),
+        warm_hits: problem.warm_hits(),
+    };
+    let export = if store_backed { problem.cache_export() } else { Vec::new() };
+    let leg = LegResult {
         bench: world.profile.name.to_string(),
         tech: world.tech.tech,
         mode,
@@ -281,10 +404,15 @@ pub fn run_leg(
         opt_seconds,
         convergence_seconds,
         history,
+        opt_history,
         evals,
+        front: pareto,
         winner,
         candidates,
-    }
+        cache,
+        replayed: false,
+    };
+    (leg, export)
 }
 
 /// Fig 7 metric: the paper compares the time each solver needs to reach a

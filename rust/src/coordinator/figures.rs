@@ -4,10 +4,11 @@
 
 use crate::config::Tech;
 use crate::opt::Mode;
+use crate::store::Engine;
 use crate::util::json::Json;
 use crate::util::threadpool::scope_map;
 
-use super::campaign::{run_leg, Algo, Effort, LegWorld, Selection};
+use super::campaign::{Algo, Effort, LegWorld, Selection};
 
 /// The six Rodinia benchmarks of §5.1, in figure order.
 pub const BENCHES: [&str; 6] = ["bp", "nw", "lv", "lud", "knn", "pf"];
@@ -45,12 +46,19 @@ pub struct Fig7Row {
 
 /// Fig 7: convergence-time speed-up of MOO-STAGE over AMOSA, PT objective.
 pub fn fig7(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig7Row> {
+    fig7_stored(&Engine::ephemeral(), benches, effort, seed)
+}
+
+/// [`fig7`] through a campaign engine: legs already in the engine's run
+/// store replay from disk, fresh legs are persisted — so a partial Fig 7
+/// campaign composes across processes.
+pub fn fig7_stored(engine: &Engine, benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig7Row> {
     map_benches(benches, effort, |b, effort| {
         let mut speedups = [0.0f64; 2];
         for (i, tech) in [Tech::Tsv, Tech::M3d].into_iter().enumerate() {
             let world = LegWorld::new(b, tech, seed);
-            let stage = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
-            let amosa = run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, effort, seed);
+            let stage = engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
+            let amosa = engine.run_leg(&world, Mode::Pt, Algo::Amosa, Selection::MinEtUnderTth, effort, seed);
             speedups[i] = super::campaign::speedup_time_to_quality(&stage, &amosa);
         }
         Fig7Row { bench: b.to_string(), speedup_tsv: speedups[0], speedup_m3d: speedups[1] }
@@ -72,10 +80,15 @@ pub struct Fig8Row {
 
 /// Fig 8: the TSV performance-thermal trade-off.
 pub fn fig8(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig8Row> {
+    fig8_stored(&Engine::ephemeral(), benches, effort, seed)
+}
+
+/// [`fig8`] through a campaign engine (see [`fig7_stored`]).
+pub fn fig8_stored(engine: &Engine, benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig8Row> {
     map_benches(benches, effort, |b, effort| {
         let world = LegWorld::new(b, Tech::Tsv, seed);
-        let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
-        let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
+        let po = engine.run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+        let pt = engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
         Fig8Row {
             bench: b.to_string(),
             temp_po_c: po.winner.temp_c,
@@ -104,12 +117,20 @@ pub struct Fig9Row {
 
 /// Fig 9: TSV-BL (= TSV-PT) vs HeM3D-PO vs HeM3D-PT.
 pub fn fig9(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig9Row> {
+    fig9_stored(&Engine::ephemeral(), benches, effort, seed)
+}
+
+/// [`fig9`] through a campaign engine (see [`fig7_stored`]).  Note the
+/// M3D PO leg has the same identity (bench, tech, mode, algo, selection,
+/// seeds, effort) as Fig 10's PO leg — a stored campaign computes the
+/// shared leg once and replays it for the other figure.
+pub fn fig9_stored(engine: &Engine, benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig9Row> {
     map_benches(benches, effort, |b, effort| {
         let tsv_world = LegWorld::new(b, Tech::Tsv, seed);
-        let bl = run_leg(&tsv_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
+        let bl = engine.run_leg(&tsv_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed);
         let m3d_world = LegWorld::new(b, Tech::M3d, seed);
-        let po = run_leg(&m3d_world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
-        let pt = run_leg(&m3d_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
+        let po = engine.run_leg(&m3d_world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+        let pt = engine.run_leg(&m3d_world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, effort, seed ^ 0x5a5a);
         Fig9Row {
             bench: b.to_string(),
             temp_tsv_bl_c: bl.winner.temp_c,
@@ -136,10 +157,15 @@ pub struct Fig10Row {
 
 /// Fig 10: what PT buys on M3D when selected by the ET*Temp product.
 pub fn fig10(benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig10Row> {
+    fig10_stored(&Engine::ephemeral(), benches, effort, seed)
+}
+
+/// [`fig10`] through a campaign engine (see [`fig7_stored`]).
+pub fn fig10_stored(engine: &Engine, benches: &[&str], effort: &Effort, seed: u64) -> Vec<Fig10Row> {
     map_benches(benches, effort, |b, effort| {
         let world = LegWorld::new(b, Tech::M3d, seed);
-        let po = run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
-        let pt = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtTempProduct, effort, seed ^ 0x5a5a);
+        let po = engine.run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, effort, seed);
+        let pt = engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtTempProduct, effort, seed ^ 0x5a5a);
         Fig10Row {
             bench: b.to_string(),
             temp_po_c: po.winner.temp_c,

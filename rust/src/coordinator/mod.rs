@@ -8,8 +8,11 @@ pub mod figures;
 pub mod report;
 pub mod validate;
 
-pub use campaign::{run_leg, Algo, Effort, LegResult, LegWorld, Selection, Validated};
+pub use campaign::{
+    run_leg, run_leg_warm, Algo, Effort, LegCacheStats, LegResult, LegWorld, OptHistory,
+    Selection, Validated,
+};
 pub use validate::{
     detailed_peak_temp, detailed_peak_temp_with, noc_validate, noc_validate_cfg, power_grid,
-    thermal_plan, trace_replay_rates,
+    thermal_plan, trace_replay_rates, validate_candidate,
 };

@@ -131,6 +131,24 @@ pub fn detailed_peak_temp_with(
     t_final
 }
 
+/// Eq. (10) validation of one Pareto candidate: routing + full objective
+/// scores + ET model + detailed thermal fixed point.  Pure in the design
+/// (given a fixed context/profile/coefficients), which is what lets the
+/// campaign engine persist the result and replay it from a leg artifact
+/// instead of re-running the fixed point.
+pub fn validate_candidate(
+    ctx: &EncodeCtx<'_>,
+    profile: &crate::traffic::BenchProfile,
+    design: &Design,
+    coeffs: &crate::perf::PerfCoeffs,
+) -> super::campaign::Validated {
+    let routing = Routing::build(design);
+    let scores = crate::eval::objectives::evaluate(ctx, design, &routing);
+    let et = crate::perf::exec_time(ctx, profile, design, &routing, &scores, coeffs);
+    let temp = detailed_peak_temp(ctx, design);
+    super::campaign::Validated { design: design.clone(), et: et.total, temp_c: temp }
+}
+
 /// Position-space `(rate, flits)` matrices for the trace-replay scenario:
 /// the worst-traffic window of the context's trace, mapped through the
 /// design's placement.  LLC->core replies carry data packets, everything

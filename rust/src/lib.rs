@@ -24,6 +24,7 @@ pub mod opt;
 pub mod perf;
 pub mod power;
 pub mod runtime;
+pub mod store;
 pub mod thermal;
 pub mod timing;
 pub mod traffic;

@@ -9,7 +9,9 @@
 //!   pipeline   — Fig 6: planar vs M3D GPU pipeline timing.
 //!   optimize   — run one DSE (MOO-STAGE or AMOSA) for a benchmark/tech.
 //!   bench      — hot-path benchmark harness (BENCH_hotpaths.json).
-//!   campaign   — full figure campaign (Figs 7-10) into a report directory.
+//!   campaign   — full figure campaign (Figs 7-10) into a report directory;
+//!                checkpointable/resumable with --run-dir (store::engine).
+//!   runs       — list/inspect persisted campaign runs (runs/<name>/).
 
 use anyhow::Result;
 use hem3d::util::cli::Args;
@@ -21,6 +23,7 @@ mod commands {
     pub mod optimize;
     pub mod params;
     pub mod pipeline;
+    pub mod runs;
     pub mod selftest;
     pub mod sim;
     pub mod trace;
@@ -45,17 +48,26 @@ COMMANDS:
   optimize   Run one DSE leg [--bench NAME] [--tech tsv|m3d]
              [--algo moo-stage|amosa] [--mode po|pt] [--iters N] [--seed N]
              [--artifacts DIR|none] [--workers N]
+             [--run-dir DIR | --name NAME] [--force]
   bench      Hot-path benchmark harness (thermal planned-vs-seed, moo
              scoring, NoC sim) [--json] [--quick] [--out FILE] [--seed N]
              [--workers N]
   campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
-             [--iters N] [--seed N] [--artifacts DIR|none] [--workers N]
+             [--seed N] [--benches a,b,...] [--effort quick|full]
+             [--workers N] [--run-dir DIR | --name NAME] [--force]
+  runs       Inspect persisted runs:  runs list [--root runs]
+             |  runs show <name> [--root runs | --run-dir DIR]
   help       Show this message
 
 Global: [--log error|warn|info|debug]
         --workers N fans candidate evaluation / figure legs over N threads
         (default 1; 0 = all cores or HEM3D_WORKERS; results are
         bit-identical for any worker count)
+        --run-dir DIR (or --name NAME = runs/NAME) makes campaign/optimize
+        checkpointable: completed legs replay from the store and the eval
+        cache warm-starts from its snapshot (resume is the default;
+        --force recomputes).  Results are bit-identical with or without a
+        store.  Inspect with `hem3d runs`.
 ";
 
 fn main() -> Result<()> {
@@ -71,6 +83,7 @@ fn main() -> Result<()> {
         Some("optimize") => commands::optimize::run(&args),
         Some("bench") => commands::bench::run(&args),
         Some("campaign") => commands::campaign::run(&args),
+        Some("runs") => commands::runs::run(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())

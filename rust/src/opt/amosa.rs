@@ -49,7 +49,7 @@ impl Default for AmosaConfig {
 }
 
 /// Convergence history entry (same shape as MOO-STAGE's for Fig 7).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AmosaIter {
     /// Temperature at this step.
     pub temp: f64,
@@ -59,6 +59,29 @@ pub struct AmosaIter {
     pub evals: u64,
     /// Wall-clock seconds since the run started.
     pub elapsed_s: f64,
+}
+
+impl AmosaIter {
+    /// Serialize for a leg artifact (`store::artifact`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("temp", Json::num(self.temp)),
+            ("best_phv", Json::num(self.best_phv)),
+            ("evals", Json::num(self.evals as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+        ])
+    }
+
+    /// Parse a record serialized by [`AmosaIter::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> Option<AmosaIter> {
+        Some(AmosaIter {
+            temp: j.get("temp")?.as_f64()?,
+            best_phv: j.get("best_phv")?.as_f64()?,
+            evals: j.get("evals")?.as_u64()?,
+            elapsed_s: j.get("elapsed_s")?.as_f64()?,
+        })
+    }
 }
 
 /// Full AMOSA output.

@@ -47,7 +47,7 @@ impl Default for StageConfig {
 
 /// Progress record (one per local-search step; drives Fig 7's
 /// convergence curves at evaluation granularity).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct IterRecord {
     /// Outer MOO-STAGE iteration this record belongs to.
     pub iter: usize,
@@ -57,6 +57,29 @@ pub struct IterRecord {
     pub evals: u64,
     /// Wall-clock seconds since the run started.
     pub elapsed_s: f64,
+}
+
+impl IterRecord {
+    /// Serialize for a leg artifact (`store::artifact`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("iter", Json::num(self.iter as f64)),
+            ("best_phv", Json::num(self.best_phv)),
+            ("evals", Json::num(self.evals as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+        ])
+    }
+
+    /// Parse a record serialized by [`IterRecord::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> Option<IterRecord> {
+        Some(IterRecord {
+            iter: j.get("iter")?.as_usize()?,
+            best_phv: j.get("best_phv")?.as_f64()?,
+            evals: j.get("evals")?.as_u64()?,
+            elapsed_s: j.get("elapsed_s")?.as_f64()?,
+        })
+    }
 }
 
 /// Full optimizer output.

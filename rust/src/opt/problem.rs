@@ -118,6 +118,19 @@ impl<'a> Problem<'a> {
         self
     }
 
+    /// Builder-style warm-start: seed the evaluation cache from a persisted
+    /// snapshot (`store::run_store`).  Warm entries are exact pure values
+    /// and the eval counter still fires on the first probe of each design,
+    /// so a warm-started run is bit-identical to a cold one — including
+    /// `eval_count` and the optimizer histories — just cheaper.
+    pub fn with_warm_cache(
+        mut self,
+        warm: std::sync::Arc<std::collections::HashMap<EvalKey, Scores>>,
+    ) -> Self {
+        self.cache = EvalCache::with_warm(warm);
+        self
+    }
+
     /// Full-score evaluation: cached designs replay their scores; fresh
     /// designs build routing, evaluate, and count toward the budget.
     ///
@@ -125,13 +138,20 @@ impl<'a> Problem<'a> {
     /// design key, so `eval_count` is identical whatever the worker count
     /// or scheduling (concurrent duplicate evaluations race benignly: both
     /// compute the same pure result, one wins the insert and the count).
+    /// Snapshot-seeded entries short-circuit the computation on the miss
+    /// path but take the same insert-and-count route.
     pub fn score(&self, design: &Design) -> Scores {
         let key = EvalKey { design: design_key(design), scenario: self.scenario.clone() };
         if let Some(cached) = self.cache.get(&key) {
             return cached;
         }
-        let routing = Routing::build(design);
-        let scores = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
+        let scores = match self.cache.warm_lookup(&key) {
+            Some(warm) => warm,
+            None => {
+                let routing = Routing::build(design);
+                evaluate_sparse(self.ctx, design, &routing, &self.traffic)
+            }
+        };
         if self.cache.insert(key, scores) {
             self.evals.fetch_add(1, Ordering::Relaxed);
         }
@@ -157,6 +177,17 @@ impl<'a> Problem<'a> {
     /// Cache lookups that fell through to a real evaluation.
     pub fn cache_misses(&self) -> u64 {
         self.cache.miss_count()
+    }
+
+    /// Misses served from the warm-start snapshot instead of recomputed.
+    pub fn warm_hits(&self) -> u64 {
+        self.cache.warm_hit_count()
+    }
+
+    /// Snapshot of every evaluation this problem computed or promoted from
+    /// the warm set — what the run store persists after a leg.
+    pub fn cache_export(&self) -> Vec<(EvalKey, Scores)> {
+        self.cache.export()
     }
 
     /// Reference point for PHV: component-wise multiple of a baseline
@@ -235,6 +266,41 @@ mod tests {
         assert_eq!(problem.score(&d_swapped), first);
         assert_eq!(problem.eval_count(), 2);
         assert_eq!(problem.cache_hits(), 2);
+    }
+
+    #[test]
+    fn warm_start_replays_scores_without_changing_counters() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("lud").unwrap(), &tiles, cfg.windows, 4);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+
+        let d1 = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let mut d2 = d1.clone();
+        d2.swap_positions(1, 7);
+
+        // Cold problem computes both designs; export its cache.
+        let cold = Problem::new(&ctx, Mode::Pt);
+        let (s1, s2) = (cold.score(&d1), cold.score(&d2));
+        assert_eq!(cold.eval_count(), 2);
+        let warm: std::collections::HashMap<_, _> = cold.cache_export().into_iter().collect();
+        assert_eq!(warm.len(), 2);
+
+        // Warm problem replays the snapshot: identical scores AND identical
+        // counters — warm entries go through the miss -> insert -> count
+        // path, so eval trajectories cannot depend on the snapshot.
+        let warmed = Problem::new(&ctx, Mode::Pt).with_warm_cache(std::sync::Arc::new(warm));
+        assert_eq!(warmed.score(&d1), s1);
+        assert_eq!(warmed.score(&d2), s2);
+        assert_eq!(warmed.eval_count(), 2, "warm-served designs still count as evals");
+        assert_eq!(warmed.warm_hits(), 2);
+        assert_eq!(warmed.cache_misses(), 2);
+        // Re-probes now hit the live cache, not the warm set.
+        warmed.score(&d1);
+        assert_eq!(warmed.cache_hits(), 1);
+        assert_eq!(warmed.warm_hits(), 2);
     }
 
     #[test]

@@ -208,6 +208,13 @@ impl ScenarioKey {
     }
 }
 
+/// Version of the persisted cache-entry schema (`store::run_store` snapshot
+/// lines carry it as `"v"`).  Bump whenever the meaning of a cached entry
+/// changes — a different objective definition, a different `DesignKey`
+/// canonicalisation, or new scenario determinants — so stale snapshots are
+/// skipped on load instead of replaying wrong scores.
+pub const CACHE_SCHEMA_VERSION: u64 = 1;
+
 /// Full cache key: canonical design encoding plus the evaluation scenario.
 ///
 /// The scenario sits behind an [`Arc`] because it is constant per cache
@@ -244,17 +251,32 @@ pub struct EvalKey {
 /// first writer wins.  `opt::Problem` counts an evaluation only on a fresh
 /// insert, which makes its `eval_count` independent of worker scheduling —
 /// the property the `--workers` determinism test relies on.
+/// Warm-start seeding never changes *results* (cached scores are exact pure
+/// values) or *counters* (a warm-served design still goes through the
+/// miss → insert → eval-count path exactly like a computed one), so a
+/// warm-started leg is bit-identical to a cold one — just faster.  See
+/// `EvalCache::warm_lookup`.
 #[derive(Debug, Default)]
 pub struct EvalCache {
     map: RwLock<HashMap<EvalKey, Scores>>,
+    /// Read-only entries seeded from a persisted snapshot (`store`), probed
+    /// only after a live-map miss.  Immutable after construction, so lookups
+    /// are lock-free and cannot depend on scheduling.
+    warm: Arc<HashMap<EvalKey, Scores>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    warm_hits: AtomicU64,
 }
 
 impl EvalCache {
     /// Empty cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Empty live cache warm-started from a snapshot's entries.
+    pub fn with_warm(warm: Arc<HashMap<EvalKey, Scores>>) -> Self {
+        EvalCache { warm, ..Self::default() }
     }
 
     /// Cached scores for `key`, if present (counts a hit or a miss).
@@ -282,6 +304,33 @@ impl EvalCache {
         }
     }
 
+    /// Probe the warm (snapshot-seeded) entries after a live-map miss.
+    ///
+    /// Deliberately *not* folded into [`EvalCache::get`]: the caller must
+    /// still run the returned scores through [`EvalCache::insert`] so the
+    /// first probe of a warm design counts as an evaluation exactly like a
+    /// computed one — that is what keeps eval counts (and therefore Fig 7
+    /// histories) identical between warm and cold runs.
+    pub fn warm_lookup(&self, key: &EvalKey) -> Option<Scores> {
+        let found = self.warm.get(key).copied();
+        if found.is_some() {
+            self.warm_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Snapshot the live entries (freshly computed plus warm-promoted) for
+    /// persistence.  Order is unspecified; `store::run_store` sorts the
+    /// serialized lines so snapshot files are deterministic.
+    pub fn export(&self) -> Vec<(EvalKey, Scores)> {
+        self.map
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
     /// Number of lookup hits so far.
     pub fn hit_count(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
@@ -290,6 +339,12 @@ impl EvalCache {
     /// Number of lookup misses so far.
     pub fn miss_count(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Misses that were served from the warm snapshot instead of being
+    /// recomputed — the observable warm-start benefit.
+    pub fn warm_hit_count(&self) -> u64 {
+        self.warm_hits.load(Ordering::Relaxed)
     }
 
     /// Number of distinct designs cached.

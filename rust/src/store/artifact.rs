@@ -1,0 +1,466 @@
+//! JSON round-trip encoding for run-store artifacts: designs, Pareto
+//! fronts, validated candidates, optimizer histories and whole DSE legs —
+//! plus the deterministic leg-ID scheme.
+//!
+//! Every `to_json`/`from_json` pair here is byte-stable: serialize → parse
+//! → re-serialize produces the identical string (object keys come out of
+//! `util::json`'s `BTreeMap` sorted, and finite f64s round-trip exactly).
+//! `tests/run_store.rs` pins this.
+
+use crate::arch::design::{Design, Link};
+use crate::config::Tech;
+use crate::coordinator::campaign::{
+    Algo, Effort, LegCacheStats, LegResult, LegWorld, OptHistory, Selection, Validated,
+};
+use crate::opt::amosa::AmosaIter;
+use crate::opt::moo_stage::IterRecord;
+use crate::opt::{Mode, ParetoSet, Solution};
+use crate::runtime::evaluator::ScenarioKey;
+use crate::util::json::Json;
+
+/// Version of the leg-artifact schema.  Bump on any breaking layout change;
+/// the loader refuses mismatched artifacts (they are recomputed, never
+/// misread).
+pub const ARTIFACT_SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Design / front / candidate encoding
+// ---------------------------------------------------------------------------
+
+/// Design -> `{"links": [[a,b],...], "tiles": [...]}`.
+pub fn design_json(d: &Design) -> Json {
+    Json::obj(vec![
+        (
+            "links",
+            Json::arr(d.links.iter().map(|l| {
+                Json::arr([Json::num(l.a as f64), Json::num(l.b as f64)])
+            })),
+        ),
+        ("tiles", Json::arr(d.tile_at.iter().map(|&t| Json::num(t as f64)))),
+    ])
+}
+
+/// Parse a design serialized by [`design_json`].  Structurally validated
+/// (permutation + connectivity), so a corrupt artifact cannot smuggle an
+/// invalid design into a resumed campaign.
+pub fn design_from_json(j: &Json) -> Option<Design> {
+    let tiles: Vec<usize> = j
+        .get("tiles")?
+        .as_arr()?
+        .iter()
+        .map(|t| t.as_usize())
+        .collect::<Option<_>>()?;
+    let n = tiles.len();
+    if n == 0 || tiles.iter().any(|&t| t >= n) {
+        return None;
+    }
+    let mut seen = vec![false; n];
+    for &t in &tiles {
+        if std::mem::replace(&mut seen[t], true) {
+            return None;
+        }
+    }
+    let mut links = Vec::new();
+    for l in j.get("links")?.as_arr()? {
+        let (a, b) = (l.at(0)?.as_usize()?, l.at(1)?.as_usize()?);
+        if a == b || a >= n || b >= n {
+            return None;
+        }
+        links.push(Link::new(a, b));
+    }
+    let d = Design::new(tiles, links);
+    d.validate().ok()?;
+    Some(d)
+}
+
+/// Solution -> `{"design": ..., "obj": [...]}`.
+pub fn solution_json(s: &Solution) -> Json {
+    Json::obj(vec![
+        ("design", design_json(&s.design)),
+        ("obj", Json::arr(s.obj.iter().map(|&o| Json::num(o)))),
+    ])
+}
+
+/// Parse a solution serialized by [`solution_json`].
+pub fn solution_from_json(j: &Json) -> Option<Solution> {
+    Some(Solution {
+        obj: j.get("obj")?.as_arr()?.iter().map(|o| o.as_f64()).collect::<Option<_>>()?,
+        design: design_from_json(j.get("design")?)?,
+    })
+}
+
+/// ParetoSet -> `{"capacity": n, "members": [...]}`.  Member order is
+/// preserved verbatim: the archive's insertion order is part of what makes
+/// a replayed leg bit-identical to the computed one.
+pub fn pareto_json(p: &ParetoSet) -> Json {
+    Json::obj(vec![
+        ("capacity", Json::num(p.capacity as f64)),
+        ("members", Json::arr(p.members.iter().map(solution_json))),
+    ])
+}
+
+/// Parse a front serialized by [`pareto_json`].
+pub fn pareto_from_json(j: &Json) -> Option<ParetoSet> {
+    Some(ParetoSet {
+        capacity: j.get("capacity")?.as_usize()?,
+        members: j
+            .get("members")?
+            .as_arr()?
+            .iter()
+            .map(solution_from_json)
+            .collect::<Option<_>>()?,
+    })
+}
+
+/// Validated candidate -> `{"design": ..., "et": x, "temp_c": y}`.
+pub fn validated_json(v: &Validated) -> Json {
+    Json::obj(vec![
+        ("design", design_json(&v.design)),
+        ("et", Json::num(v.et)),
+        ("temp_c", Json::num(v.temp_c)),
+    ])
+}
+
+/// Parse a candidate serialized by [`validated_json`].
+pub fn validated_from_json(j: &Json) -> Option<Validated> {
+    Some(Validated {
+        design: design_from_json(j.get("design")?)?,
+        et: j.get("et")?.as_f64()?,
+        temp_c: j.get("temp_c")?.as_f64()?,
+    })
+}
+
+/// Optimizer history -> `{"algo": ..., "records": [...]}` at native
+/// per-algorithm fidelity (`IterRecord` / `AmosaIter`).
+pub fn opt_history_json(h: &OptHistory) -> Json {
+    match h {
+        OptHistory::Stage(rs) => Json::obj(vec![
+            ("algo", Json::str(Algo::MooStage.name())),
+            ("records", Json::arr(rs.iter().map(|r| r.to_json()))),
+        ]),
+        OptHistory::Amosa(rs) => Json::obj(vec![
+            ("algo", Json::str(Algo::Amosa.name())),
+            ("records", Json::arr(rs.iter().map(|r| r.to_json()))),
+        ]),
+    }
+}
+
+/// Parse a history serialized by [`opt_history_json`].
+pub fn opt_history_from_json(j: &Json) -> Option<OptHistory> {
+    let records = j.get("records")?.as_arr()?;
+    match Algo::parse(j.get("algo")?.as_str()?)? {
+        Algo::MooStage => Some(OptHistory::Stage(
+            records.iter().map(IterRecord::from_json).collect::<Option<_>>()?,
+        )),
+        Algo::Amosa => Some(OptHistory::Amosa(
+            records.iter().map(AmosaIter::from_json).collect::<Option<_>>()?,
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leg identity
+// ---------------------------------------------------------------------------
+
+/// Everything that determines a leg's results — the leg's identity in the
+/// run store.  Two invocations with equal specs compute bit-identical
+/// `LegResult`s, so the stored artifact of one may be replayed by the
+/// other.  Worker counts are deliberately absent (they never change
+/// results); wall-clock fields are *outputs*, not identity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LegSpec {
+    /// Benchmark name.
+    pub bench: String,
+    /// Integration technology.
+    pub tech: Tech,
+    /// Objective mode.
+    pub mode: Mode,
+    /// Optimizer.
+    pub algo: Algo,
+    /// Winner-selection rule.
+    pub selection: Selection,
+    /// Seed the leg's traffic trace was generated from.
+    pub world_seed: u64,
+    /// Seed driving the optimizer's RNG.
+    pub opt_seed: u64,
+    /// `Effort::fingerprint()` of the search configuration.
+    pub effort_fp: String,
+    /// The evaluation scenario (workload + tech + fabric config).
+    pub scenario: ScenarioKey,
+}
+
+impl LegSpec {
+    /// Build the spec for a leg about to run in `world`.
+    pub fn new(
+        world: &LegWorld,
+        mode: Mode,
+        algo: Algo,
+        selection: Selection,
+        effort: &Effort,
+        opt_seed: u64,
+    ) -> LegSpec {
+        LegSpec {
+            bench: world.profile.name.to_string(),
+            tech: world.tech.tech,
+            mode,
+            algo,
+            selection,
+            world_seed: world.seed,
+            opt_seed,
+            effort_fp: effort.fingerprint(),
+            scenario: ScenarioKey::trace(
+                world.profile.name,
+                world.tech.tech.name(),
+                world.trace.windows.len(),
+            ),
+        }
+    }
+
+    /// Deterministic leg ID: a human-readable prefix plus a 16-hex FNV-1a
+    /// hash over every identity field.  Doubles as the artifact file name
+    /// (`legs/<id>.json`).
+    pub fn leg_id(&self) -> String {
+        let canon = format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            self.bench,
+            self.tech.name(),
+            self.mode.name(),
+            self.algo.name(),
+            self.selection.name(),
+            self.world_seed,
+            self.opt_seed,
+            self.effort_fp,
+            self.scenario.workload,
+            self.scenario.windows,
+            self.scenario.vcs,
+            self.scenario.vc_depth,
+        );
+        format!(
+            "{}-{}-{}-{}-{:016x}",
+            self.bench,
+            self.tech.name(),
+            self.mode.name(),
+            self.algo.name(),
+            super::fnv1a64(canon.as_bytes()),
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        // Seeds are arbitrary u64s; Json numbers are f64-backed, so values
+        // >= 2^53 would round and the spec would never compare equal on
+        // replay.  Decimal strings are exact for the full u64 range.
+        Json::obj(vec![
+            ("algo", Json::str(self.algo.name())),
+            ("bench", Json::str(&self.bench)),
+            ("effort_fp", Json::str(&self.effort_fp)),
+            ("mode", Json::str(self.mode.name())),
+            ("opt_seed", Json::str(&self.opt_seed.to_string())),
+            ("scenario", scenario_json(&self.scenario)),
+            ("selection", Json::str(self.selection.name())),
+            ("tech", Json::str(self.tech.name())),
+            ("world_seed", Json::str(&self.world_seed.to_string())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<LegSpec> {
+        Some(LegSpec {
+            bench: j.get("bench")?.as_str()?.to_string(),
+            tech: Tech::parse(j.get("tech")?.as_str()?)?,
+            mode: Mode::parse(j.get("mode")?.as_str()?)?,
+            algo: Algo::parse(j.get("algo")?.as_str()?)?,
+            selection: Selection::parse(j.get("selection")?.as_str()?)?,
+            world_seed: j.get("world_seed")?.as_str()?.parse().ok()?,
+            opt_seed: j.get("opt_seed")?.as_str()?.parse().ok()?,
+            effort_fp: j.get("effort_fp")?.as_str()?.to_string(),
+            scenario: scenario_from_json(j.get("scenario")?)?,
+        })
+    }
+}
+
+/// ScenarioKey -> JSON (shared by leg specs and cache-snapshot lines).
+pub fn scenario_json(s: &ScenarioKey) -> Json {
+    Json::obj(vec![
+        ("tech", Json::str(s.tech)),
+        ("vc_depth", Json::num(s.vc_depth as f64)),
+        ("vcs", Json::num(s.vcs as f64)),
+        ("windows", Json::num(s.windows as f64)),
+        ("workload", Json::str(&s.workload)),
+    ])
+}
+
+/// Parse a scenario serialized by [`scenario_json`].
+pub fn scenario_from_json(j: &Json) -> Option<ScenarioKey> {
+    Some(ScenarioKey {
+        workload: j.get("workload")?.as_str()?.to_string(),
+        // Round-trip through `Tech` to recover the &'static str the key
+        // requires (and to reject unknown technologies).
+        tech: Tech::parse(j.get("tech")?.as_str()?)?.name(),
+        windows: j.get("windows")?.as_u64()? as u16,
+        vcs: j.get("vcs")?.as_u64()? as u16,
+        vc_depth: j.get("vc_depth")?.as_u64()? as u16,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Whole-leg artifact
+// ---------------------------------------------------------------------------
+
+/// Leg result + spec -> the `legs/<id>.json` document.
+pub fn leg_json(leg: &LegResult, spec: &LegSpec) -> Json {
+    Json::obj(vec![
+        ("cache", cache_stats_json(&leg.cache)),
+        ("candidates", Json::arr(leg.candidates.iter().map(validated_json))),
+        ("convergence_seconds", Json::num(leg.convergence_seconds)),
+        ("evals", Json::num(leg.evals as f64)),
+        ("front", pareto_json(&leg.front)),
+        ("id", Json::str(&spec.leg_id())),
+        ("opt_history", opt_history_json(&leg.opt_history)),
+        ("opt_seconds", Json::num(leg.opt_seconds)),
+        ("schema", Json::num(ARTIFACT_SCHEMA_VERSION as f64)),
+        ("spec", spec.to_json()),
+        ("winner", validated_json(&leg.winner)),
+    ])
+}
+
+fn cache_stats_json(c: &LegCacheStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::num(c.hits as f64)),
+        ("misses", Json::num(c.misses as f64)),
+        ("warm_hits", Json::num(c.warm_hits as f64)),
+    ])
+}
+
+fn cache_stats_from_json(j: &Json) -> Option<LegCacheStats> {
+    Some(LegCacheStats {
+        hits: j.get("hits")?.as_u64()?,
+        misses: j.get("misses")?.as_u64()?,
+        warm_hits: j.get("warm_hits")?.as_u64()?,
+    })
+}
+
+/// Parse a `legs/<id>.json` document back into its spec and result.
+///
+/// The returned leg has `replayed = true`; its reduced `history` is
+/// re-derived from the stored full-fidelity `opt_history`, so every figure
+/// metric computed from a replayed leg matches the original run exactly.
+pub fn leg_from_json(j: &Json) -> Result<(LegSpec, LegResult), String> {
+    if j.get("schema").and_then(Json::as_u64) != Some(ARTIFACT_SCHEMA_VERSION) {
+        return Err(format!(
+            "artifact schema {:?} != supported {ARTIFACT_SCHEMA_VERSION}",
+            j.get("schema").and_then(Json::as_u64)
+        ));
+    }
+    let inner = || -> Option<(LegSpec, LegResult)> {
+        let spec = LegSpec::from_json(j.get("spec")?)?;
+        let opt_history = opt_history_from_json(j.get("opt_history")?)?;
+        let history = opt_history.points();
+        let leg = LegResult {
+            bench: spec.bench.clone(),
+            tech: spec.tech,
+            mode: spec.mode,
+            algo: spec.algo,
+            opt_seconds: j.get("opt_seconds")?.as_f64()?,
+            convergence_seconds: j.get("convergence_seconds")?.as_f64()?,
+            history,
+            opt_history,
+            evals: j.get("evals")?.as_u64()?,
+            front: pareto_from_json(j.get("front")?)?,
+            candidates: j
+                .get("candidates")?
+                .as_arr()?
+                .iter()
+                .map(validated_from_json)
+                .collect::<Option<_>>()?,
+            winner: validated_from_json(j.get("winner")?)?,
+            cache: cache_stats_from_json(j.get("cache")?)?,
+            replayed: true,
+        };
+        Some((spec, leg))
+    };
+    inner().ok_or_else(|| "malformed leg artifact".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::noc::topology;
+
+    #[test]
+    fn design_roundtrip_rejects_corruption() {
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let j = design_json(&d);
+        assert_eq!(design_from_json(&j).unwrap(), d);
+
+        // Duplicate tile id.
+        let bad = crate::util::json::parse(
+            &j.to_string().replacen("\"tiles\":[0,1", "\"tiles\":[0,0", 1),
+        )
+        .unwrap();
+        assert!(design_from_json(&bad).is_none());
+
+        // Self-link.
+        let bad = crate::util::json::parse(
+            &j.to_string().replacen("[0,1]", "[1,1]", 1),
+        )
+        .unwrap();
+        assert!(design_from_json(&bad).is_none());
+    }
+
+    #[test]
+    fn spec_roundtrips_seeds_above_f64_precision() {
+        // Seeds are stored as decimal strings precisely because 2^53 + 1
+        // is not representable as f64; the spec must survive exactly or
+        // replay would silently never match.
+        let world = LegWorld::new("bp", Tech::M3d, (1u64 << 53) + 1);
+        let effort = Effort::quick();
+        let mut spec =
+            LegSpec::new(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 0);
+        spec.opt_seed = u64::MAX;
+        let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(LegSpec::from_json(&j).unwrap(), spec);
+    }
+
+    #[test]
+    fn leg_id_is_stable_and_sensitive() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        let spec =
+            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 7);
+        let id = spec.leg_id();
+        assert!(id.starts_with("bp-m3d-pt-moo-stage-"));
+        // Same inputs -> same id.
+        let again =
+            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 7);
+        assert_eq!(id, again.leg_id());
+        // Any identity knob changes the id.
+        let sel =
+            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtTempProduct, &effort, 7);
+        assert_ne!(id, sel.leg_id());
+        let seed =
+            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 8);
+        assert_ne!(id, seed.leg_id());
+        let mut other_effort = Effort::quick();
+        other_effort.stage.max_iters += 1;
+        let eff = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinEtUnderTth,
+            &other_effort,
+            7,
+        );
+        assert_ne!(id, eff.leg_id());
+        // Workers are NOT identity.
+        let w = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinEtUnderTth,
+            &effort.clone().with_workers(8),
+            7,
+        );
+        assert_eq!(id, w.leg_id());
+    }
+}

@@ -1,0 +1,224 @@
+//! The checkpointable campaign engine: one store-aware `run_leg` shared by
+//! `hem3d campaign`, `hem3d optimize` and the figure assemblies.
+//!
+//! Resume semantics (DESIGN.md §11.3):
+//! * a leg whose deterministic ID already has an artifact in the store is
+//!   *replayed* from disk — no evaluation at all;
+//! * a leg that must compute warm-starts its eval cache from the snapshot
+//!   loaded when the engine was opened (immutable for the engine's
+//!   lifetime, so results cannot depend on leg scheduling);
+//! * after each computed leg the artifact is written (atomic tmp+rename)
+//!   and the leg's new cache entries are appended to the snapshot
+//!   (JSONL; a torn tail from a mid-append kill is skipped on load), so
+//!   killing a campaign between legs loses at most the in-flight leg.
+//!
+//! Warm-starting never changes results or counters (see
+//! `Problem::with_warm_cache`), which is what makes a resumed campaign's
+//! figure JSON byte-identical to an uninterrupted run.
+
+use std::collections::{HashMap, HashSet};
+use std::io;
+use std::sync::{Arc, Mutex};
+
+use crate::config::Tech;
+use crate::coordinator::campaign::{
+    run_leg_warm, Algo, Effort, LegCacheStats, LegResult, LegWorld, Selection,
+};
+use crate::eval::objectives::Scores;
+use crate::opt::Mode;
+use crate::runtime::evaluator::EvalKey;
+
+use super::artifact::{self, LegSpec};
+use super::run_store::RunStore;
+
+/// One line of the campaign summary: what happened to a leg.
+#[derive(Debug, Clone)]
+pub struct LegSummary {
+    /// Deterministic leg ID (empty for ephemeral engines).
+    pub id: String,
+    /// Benchmark name.
+    pub bench: String,
+    /// Integration technology.
+    pub tech: Tech,
+    /// Objective mode.
+    pub mode: Mode,
+    /// Optimizer.
+    pub algo: Algo,
+    /// True when the leg was replayed from a stored artifact.
+    pub replayed: bool,
+    /// Distinct design evaluations the leg spent (0 when replayed).
+    pub evals: u64,
+    /// Eval-cache counters for the leg.
+    pub cache: LegCacheStats,
+    /// Wall-clock seconds inside the optimizer (stored value on replay).
+    pub opt_seconds: f64,
+}
+
+#[derive(Default)]
+struct Shared {
+    /// Keys already present in the on-disk snapshot (loaded at open, plus
+    /// everything appended since) — the dedup set for incremental flushes.
+    known: HashSet<EvalKey>,
+    summaries: Vec<LegSummary>,
+}
+
+/// Store-aware leg runner.  `Sync`: figure assemblies fan legs over worker
+/// threads against one shared engine.
+pub struct Engine {
+    store: Option<RunStore>,
+    force: bool,
+    /// Snapshot loaded at open; immutable for the engine's lifetime.
+    warm: Arc<HashMap<EvalKey, Scores>>,
+    shared: Mutex<Shared>,
+}
+
+impl Engine {
+    /// Engine with no persistence: every leg computes, nothing is written.
+    /// Behaviourally identical to calling `campaign::run_leg` directly.
+    pub fn ephemeral() -> Engine {
+        Engine {
+            store: None,
+            force: false,
+            warm: Arc::new(HashMap::new()),
+            shared: Mutex::new(Shared::default()),
+        }
+    }
+
+    /// Open a run directory for resumable execution: stored legs replay,
+    /// fresh legs warm-start from the cache snapshot.
+    pub fn open(dir: impl Into<std::path::PathBuf>) -> io::Result<Engine> {
+        Self::open_with(dir, false)
+    }
+
+    /// Open a run directory with an explicit `force` policy: when true,
+    /// stored artifacts and the snapshot are ignored (every leg recomputes
+    /// cold) but results are still written back.  The snapshot's *keys*
+    /// are loaded even under force — the incremental flush must not
+    /// re-append entries the file already holds, and forcing one figure
+    /// must never discard the cache accumulated by other legs of the run.
+    pub fn open_with(dir: impl Into<std::path::PathBuf>, force: bool) -> io::Result<Engine> {
+        let store = RunStore::open(dir)?;
+        let (loaded, skipped) = store.load_cache();
+        if skipped > 0 {
+            // Compact: rewrite the snapshot from the surviving entries so
+            // stale-schema/corrupt/duplicate lines are paid for once, not
+            // re-parsed on every open.
+            match store.save_cache(loaded.iter()) {
+                Ok(()) => crate::log_info!(
+                    "run store {}: compacted cache snapshot ({} lines dropped)",
+                    store.name(),
+                    skipped
+                ),
+                Err(e) => crate::log_warn!("run store: cache compaction failed: {e}"),
+            }
+        }
+        let known: HashSet<EvalKey> = loaded.keys().cloned().collect();
+        let warm = if force { HashMap::new() } else { loaded };
+        if !warm.is_empty() {
+            crate::log_info!(
+                "run store {}: warm-starting eval cache with {} entries",
+                store.name(),
+                warm.len()
+            );
+        }
+        Ok(Engine {
+            store: Some(store),
+            force,
+            warm: Arc::new(warm),
+            shared: Mutex::new(Shared { known, summaries: Vec::new() }),
+        })
+    }
+
+    /// The underlying store, when this engine persists.
+    pub fn store(&self) -> Option<&RunStore> {
+        self.store.as_ref()
+    }
+
+    /// Run (or replay) one DSE leg.
+    ///
+    /// Drop-in replacement for `campaign::run_leg` — same arguments, same
+    /// result for any store state, plus persistence and the summary trail.
+    pub fn run_leg(
+        &self,
+        world: &LegWorld,
+        mode: Mode,
+        algo: Algo,
+        selection: Selection,
+        effort: &Effort,
+        seed: u64,
+    ) -> LegResult {
+        let Some(store) = &self.store else {
+            let (leg, _) = run_leg_warm(world, mode, algo, selection, effort, seed, None);
+            self.push_summary(String::new(), &leg);
+            return leg;
+        };
+
+        let spec = LegSpec::new(world, mode, algo, selection, effort, seed);
+        let id = spec.leg_id();
+
+        if !self.force {
+            if let Some(doc) = store.load_leg(&id) {
+                match artifact::leg_from_json(&doc) {
+                    Ok((stored_spec, leg)) if stored_spec == spec => {
+                        crate::log_info!("leg {id}: replayed from store");
+                        self.push_summary(id, &leg);
+                        return leg;
+                    }
+                    Ok(_) => crate::log_warn!(
+                        "leg {id}: stored spec does not match (hash collision?); recomputing"
+                    ),
+                    Err(e) => crate::log_warn!("leg {id}: {e}; recomputing"),
+                }
+            }
+        }
+
+        let (leg, export) =
+            run_leg_warm(world, mode, algo, selection, effort, seed, Some(self.warm.clone()));
+
+        if let Err(e) = store.save_leg(&id, &artifact::leg_json(&leg, &spec)) {
+            crate::log_warn!("leg {id}: artifact write failed: {e}");
+        }
+        {
+            // One lock covers dedup + append, serializing concurrent
+            // flushes from parallel figure legs.  Only entries the
+            // snapshot doesn't already hold are appended: O(new) IO per
+            // leg, and existing lines (other figures' evaluations) are
+            // never rewritten or lost.
+            let mut sh = self.shared.lock().unwrap();
+            let fresh: Vec<&(EvalKey, Scores)> =
+                export.iter().filter(|(k, _)| !sh.known.contains(k)).collect();
+            if let Err(e) = store.append_cache(fresh.iter().map(|(k, s)| (k, s))) {
+                crate::log_warn!("leg {id}: cache snapshot append failed: {e}");
+            } else {
+                for (k, _) in fresh {
+                    sh.known.insert(k.clone());
+                }
+            }
+        }
+        self.push_summary(id, &leg);
+        leg
+    }
+
+    fn push_summary(&self, id: String, leg: &LegResult) {
+        self.shared.lock().unwrap().summaries.push(LegSummary {
+            id,
+            bench: leg.bench.clone(),
+            tech: leg.tech,
+            mode: leg.mode,
+            algo: leg.algo,
+            replayed: leg.replayed,
+            evals: if leg.replayed { 0 } else { leg.evals },
+            cache: if leg.replayed { LegCacheStats::default() } else { leg.cache },
+            opt_seconds: leg.opt_seconds,
+        });
+    }
+
+    /// Summary of every leg this engine ran, sorted by ID then bench for a
+    /// stable report order (parallel legs complete in nondeterministic
+    /// order).
+    pub fn summaries(&self) -> Vec<LegSummary> {
+        let mut s = self.shared.lock().unwrap().summaries.clone();
+        s.sort_by(|a, b| (&a.id, &a.bench).cmp(&(&b.id, &b.bench)));
+        s
+    }
+}

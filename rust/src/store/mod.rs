@@ -1,0 +1,62 @@
+//! Persistent run artifacts: the checkpointable campaign engine.
+//!
+//! A *run* is a directory (`--run-dir`, conventionally `runs/<name>/`)
+//! holding everything a campaign produced, in a layout designed so that
+//! partially-complete campaigns compose across processes:
+//!
+//! ```text
+//! runs/<name>/
+//!   manifest.json      campaign parameters (schema, seed, effort, figs)
+//!   legs/<leg-id>.json one artifact per completed DSE leg
+//!   cache.jsonl        EvalCache snapshot (one versioned entry per line)
+//!   reports/fig*.json  figure assemblies (written by `hem3d campaign`)
+//! ```
+//!
+//! * [`artifact`] — JSON round-trip encoding for [`crate::arch::Design`],
+//!   Pareto fronts, validated winners and whole leg results, plus the
+//!   deterministic leg-ID scheme (DESIGN.md §11.1).
+//! * [`run_store`] — the directory layout and atomic tmp+rename writes
+//!   (DESIGN.md §11.2).
+//! * [`engine`] — the resumable leg runner shared by `hem3d campaign`,
+//!   `hem3d optimize` and the figure assemblies: completed legs replay
+//!   from disk, fresh legs warm-start their eval cache from the snapshot
+//!   (DESIGN.md §11.3).
+//!
+//! Everything is serialized through `util::json` (serde is unavailable in
+//! this workspace); all numeric fields survive serialize → parse → re-
+//! serialize byte-identically (see `tests/run_store.rs`), which is what
+//! makes `--resume` reproduce uninterrupted figure JSON exactly.
+
+pub mod artifact;
+pub mod engine;
+pub mod run_store;
+
+pub use artifact::{LegSpec, ARTIFACT_SCHEMA_VERSION};
+pub use engine::{Engine, LegSummary};
+pub use run_store::RunStore;
+
+/// FNV-1a 64-bit hash — the deterministic, dependency-free hash behind leg
+/// IDs and effort fingerprints.  Stability matters: the hash is part of the
+/// on-disk artifact naming contract, so it must not change across builds
+/// (which rules out `std::hash` — `RandomState` is seeded per process).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fnv1a64;
+
+    #[test]
+    fn fnv_is_stable_and_discriminating() {
+        // Reference vectors for the canonical FNV-1a 64 parameters.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"bp-m3d-pt"), fnv1a64(b"bp-m3d-po"));
+    }
+}

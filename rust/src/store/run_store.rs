@@ -1,0 +1,430 @@
+//! The run directory: layout, atomic writes, manifest, leg artifacts and
+//! the persistent eval-cache snapshot.
+//!
+//! Write discipline (DESIGN.md §11.2): manifest and leg artifacts are
+//! written to a `.tmp` sibling and `rename`d into place, so a reader (or
+//! a campaign killed mid-write) never observes a torn document — at worst
+//! the run dir holds the previous complete version plus an orphaned
+//! `.tmp`.  The cache snapshot is line-oriented and append-only; a torn
+//! final line is skipped (and counted) on load.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::arch::design::Link;
+use crate::arch::encode::DesignKey;
+use crate::eval::objectives::Scores;
+use crate::runtime::evaluator::{EvalKey, CACHE_SCHEMA_VERSION};
+use crate::util::json::{self, Json};
+
+use super::artifact::{scenario_from_json, scenario_json};
+
+/// Handle on one run directory (`runs/<name>/`).
+#[derive(Debug)]
+pub struct RunStore {
+    root: PathBuf,
+}
+
+impl RunStore {
+    /// Open (creating if needed) a run directory.
+    pub fn open(root: impl Into<PathBuf>) -> io::Result<RunStore> {
+        let root = root.into();
+        std::fs::create_dir_all(root.join("legs"))?;
+        Ok(RunStore { root })
+    }
+
+    /// Open an existing run directory without creating anything — for
+    /// read-only inspection (`hem3d runs`), which must not scaffold store
+    /// structure into arbitrary directories.  Errors if `root` is not a
+    /// directory; a missing `legs/` inside it simply reads as zero legs.
+    pub fn open_existing(root: impl Into<PathBuf>) -> io::Result<RunStore> {
+        let root = root.into();
+        if !root.is_dir() {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("no run directory at {}", root.display()),
+            ));
+        }
+        Ok(RunStore { root })
+    }
+
+    /// The run directory path.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The run's display name (final path component).
+    pub fn name(&self) -> String {
+        self.root
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| self.root.display().to_string())
+    }
+
+    /// `reports/` inside the run dir — the default `--out` for a stored
+    /// campaign's figure JSON.
+    pub fn reports_dir(&self) -> PathBuf {
+        self.root.join("reports")
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    fn cache_path(&self) -> PathBuf {
+        self.root.join("cache.jsonl")
+    }
+
+    fn leg_path(&self, id: &str) -> PathBuf {
+        self.root.join("legs").join(format!("{id}.json"))
+    }
+
+    /// Atomically replace `path` with `content` (tmp + rename).  The tmp
+    /// sibling name is unique per process and per call: two processes
+    /// sharing one run dir (`optimize` + `campaign` on the same store) may
+    /// race on the same destination, and a *shared* tmp name would let
+    /// one writer rename the other's half-written file into place.  With
+    /// unique tmps the last rename wins with a complete document.
+    pub fn atomic_write(path: &Path, content: &str) -> io::Result<()> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, content)?;
+        std::fs::rename(&tmp, path)
+    }
+
+    // --- manifest ----------------------------------------------------------
+
+    /// Atomically (re)write the campaign manifest.
+    pub fn write_manifest(&self, manifest: &Json) -> io::Result<()> {
+        Self::atomic_write(&self.manifest_path(), &manifest.to_pretty())
+    }
+
+    /// The manifest, if present and parseable.
+    pub fn read_manifest(&self) -> Option<Json> {
+        let raw = std::fs::read_to_string(self.manifest_path()).ok()?;
+        json::parse(&raw).ok()
+    }
+
+    // --- leg artifacts -----------------------------------------------------
+
+    /// Atomically write one leg artifact.
+    pub fn save_leg(&self, id: &str, doc: &Json) -> io::Result<()> {
+        Self::atomic_write(&self.leg_path(id), &doc.to_pretty())
+    }
+
+    /// Load one leg artifact, if present and parseable.  IO and parse
+    /// failures both read as "not stored" — the engine recomputes.
+    pub fn load_leg(&self, id: &str) -> Option<Json> {
+        let raw = std::fs::read_to_string(self.leg_path(id)).ok()?;
+        match json::parse(&raw) {
+            Ok(j) => Some(j),
+            Err(e) => {
+                crate::log_warn!("run store: unparseable leg artifact {id}: {e}");
+                None
+            }
+        }
+    }
+
+    /// Sorted IDs of every stored leg.
+    pub fn list_leg_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = std::fs::read_dir(self.root.join("legs"))
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let name = e.file_name().to_string_lossy().into_owned();
+                        name.strip_suffix(".json").map(|s| s.to_string())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        ids.sort();
+        ids
+    }
+
+    // --- eval-cache snapshot ----------------------------------------------
+
+    /// Atomically rewrite the whole eval-cache snapshot (`cache.jsonl`):
+    /// one versioned JSON object per line, lines sorted so the file is
+    /// deterministic for a given entry set.  This is the full-rewrite
+    /// (compaction) primitive; the engine's per-leg flush uses
+    /// [`RunStore::append_cache`] instead.
+    pub fn save_cache<'a>(
+        &self,
+        entries: impl Iterator<Item = (&'a EvalKey, &'a Scores)>,
+    ) -> io::Result<()> {
+        let mut lines: Vec<String> = entries.map(|(k, s)| cache_line(k, s).to_string()).collect();
+        lines.sort_unstable();
+        // Callers may pass overlapping sets; identical keys serialize
+        // identically, so adjacent dedup removes them.
+        lines.dedup();
+        let mut body = lines.join("\n");
+        if !body.is_empty() {
+            body.push('\n');
+        }
+        Self::atomic_write(&self.cache_path(), &body)
+    }
+
+    /// Append entries to the eval-cache snapshot (`cache.jsonl`), the
+    /// incremental flush the engine uses after each leg: O(new entries)
+    /// IO instead of rewriting the whole snapshot.  Appends are not
+    /// atomic, but JSONL tolerates a torn tail — [`RunStore::load_cache`]
+    /// skips (and counts) any partial last line.  Callers are responsible
+    /// for not appending keys already present (the engine tracks a known
+    /// set); if duplicates do occur, the later line wins on load.
+    pub fn append_cache<'a>(
+        &self,
+        entries: impl Iterator<Item = (&'a EvalKey, &'a Scores)>,
+    ) -> io::Result<()> {
+        use std::io::Write as _;
+        let mut lines: Vec<String> = entries.map(|(k, s)| cache_line(k, s).to_string()).collect();
+        if lines.is_empty() {
+            return Ok(());
+        }
+        lines.sort_unstable();
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.cache_path())?;
+        let mut body = lines.join("\n");
+        body.push('\n');
+        file.write_all(body.as_bytes())
+    }
+
+    /// Load the eval-cache snapshot.  Tolerant by design: unparseable or
+    /// version-mismatched lines are skipped (counted in the return), so a
+    /// snapshot from an older schema degrades to a cold start instead of
+    /// failing the campaign or replaying wrong scores.  Later lines win
+    /// over earlier ones for the same key (append semantics).
+    pub fn load_cache(&self) -> (HashMap<EvalKey, Scores>, usize) {
+        let raw = match std::fs::read_to_string(self.cache_path()) {
+            Ok(r) => r,
+            Err(_) => return (HashMap::new(), 0),
+        };
+        let mut map = HashMap::new();
+        let mut skipped = 0usize;
+        for line in raw.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match json::parse(line).ok().and_then(|j| cache_entry_from_json(&j)) {
+                Some((k, s)) => {
+                    map.insert(k, s);
+                }
+                None => skipped += 1,
+            }
+        }
+        if skipped > 0 {
+            crate::log_warn!(
+                "run store: skipped {skipped} stale/corrupt cache line(s) in {}",
+                self.cache_path().display()
+            );
+        }
+        (map, skipped)
+    }
+
+    /// Number of entries currently in the snapshot file (cheap line count).
+    pub fn cache_len(&self) -> usize {
+        std::fs::read_to_string(self.cache_path())
+            .map(|r| r.lines().filter(|l| !l.trim().is_empty()).count())
+            .unwrap_or(0)
+    }
+}
+
+fn cache_line(key: &EvalKey, scores: &Scores) -> Json {
+    Json::obj(vec![
+        (
+            "design",
+            Json::obj(vec![
+                (
+                    "links",
+                    Json::arr(key.design.links().iter().map(|l| {
+                        Json::arr([Json::num(l.a as f64), Json::num(l.b as f64)])
+                    })),
+                ),
+                (
+                    "tiles",
+                    Json::arr(key.design.tiles().iter().map(|&t| Json::num(t as f64))),
+                ),
+            ]),
+        ),
+        ("scenario", scenario_json(&key.scenario)),
+        (
+            "scores",
+            Json::obj(vec![
+                ("lat", Json::num(scores.lat)),
+                ("tmax", Json::num(scores.tmax)),
+                ("umean", Json::num(scores.umean)),
+                ("usigma", Json::num(scores.usigma)),
+            ]),
+        ),
+        ("v", Json::num(CACHE_SCHEMA_VERSION as f64)),
+    ])
+}
+
+fn cache_entry_from_json(j: &Json) -> Option<(EvalKey, Scores)> {
+    if j.get("v")?.as_u64()? != CACHE_SCHEMA_VERSION {
+        return None;
+    }
+    let d = j.get("design")?;
+    let tiles: Vec<u16> = d
+        .get("tiles")?
+        .as_arr()?
+        .iter()
+        .map(|t| t.as_u64().map(|x| x as u16))
+        .collect::<Option<_>>()?;
+    let mut links = Vec::new();
+    for l in d.get("links")?.as_arr()? {
+        let (a, b) = (l.at(0)?.as_usize()?, l.at(1)?.as_usize()?);
+        if a == b {
+            return None;
+        }
+        links.push(Link::new(a, b));
+    }
+    let key = EvalKey {
+        design: DesignKey::from_parts(tiles, links),
+        scenario: std::sync::Arc::new(scenario_from_json(j.get("scenario")?)?),
+    };
+    let s = j.get("scores")?;
+    let scores = Scores {
+        lat: s.get("lat")?.as_f64()?,
+        umean: s.get("umean")?.as_f64()?,
+        usigma: s.get("usigma")?.as_f64()?,
+        tmax: s.get("tmax")?.as_f64()?,
+    };
+    Some((key, scores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::design::Design;
+    use crate::arch::encode::design_key;
+    use crate::config::ArchConfig;
+    use crate::noc::topology;
+    use crate::runtime::evaluator::ScenarioKey;
+
+    fn tmp_store(tag: &str) -> RunStore {
+        let dir = std::env::temp_dir().join(format!("hem3d_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        RunStore::open(dir).unwrap()
+    }
+
+    fn entry(seed: u64) -> (EvalKey, Scores) {
+        let cfg = ArchConfig::paper();
+        let mut d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        d.swap_positions(0, (seed as usize % 63) + 1);
+        let key = EvalKey {
+            design: design_key(&d),
+            scenario: std::sync::Arc::new(ScenarioKey::trace("bp", "m3d", 8)),
+        };
+        let x = seed as f64 * 0.25 + 0.125;
+        (key, Scores { lat: x, umean: 2.0 * x, usigma: 3.0 * x, tmax: 4.0 * x })
+    }
+
+    #[test]
+    fn cache_snapshot_roundtrips_and_is_deterministic() {
+        let store = tmp_store("cache");
+        let entries: Vec<(EvalKey, Scores)> = (1..=5).map(entry).collect();
+        store.save_cache(entries.iter().map(|(k, s)| (k, s))).unwrap();
+        let first = std::fs::read_to_string(store.root().join("cache.jsonl")).unwrap();
+
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!(skipped, 0);
+        assert_eq!(loaded.len(), entries.len());
+        for (k, s) in &entries {
+            assert_eq!(loaded.get(k), Some(s), "entry lost in roundtrip");
+        }
+
+        // Re-saving the loaded map reproduces the identical file (sorted
+        // lines make the snapshot independent of HashMap iteration order).
+        store.save_cache(loaded.iter()).unwrap();
+        let second = std::fs::read_to_string(store.root().join("cache.jsonl")).unwrap();
+        assert_eq!(first, second);
+        assert_eq!(store.cache_len(), entries.len());
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn append_cache_is_incremental_and_tolerates_torn_tail() {
+        let store = tmp_store("append");
+        let e: Vec<(EvalKey, Scores)> = (1..=3).map(entry).collect();
+        store.append_cache(e[..2].iter().map(|(k, s)| (k, s))).unwrap();
+        store.append_cache(e[2..].iter().map(|(k, s)| (k, s))).unwrap();
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!((loaded.len(), skipped), (3, 0));
+        for (k, s) in &e {
+            assert_eq!(loaded.get(k), Some(s));
+        }
+
+        // A process killed mid-append leaves a torn tail: skipped on
+        // load, never fatal, earlier entries intact.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(store.root().join("cache.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"design\":{\"li").unwrap();
+        drop(f);
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!((loaded.len(), skipped), (3, 1));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn open_existing_never_scaffolds() {
+        let dir = std::env::temp_dir()
+            .join(format!("hem3d_store_noscaffold_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(RunStore::open_existing(&dir).is_err(), "missing dir must error");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = RunStore::open_existing(&dir).unwrap();
+        assert!(store.list_leg_ids().is_empty());
+        assert!(!dir.join("legs").exists(), "inspection must not create legs/");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_schema_lines_are_skipped_not_fatal() {
+        let store = tmp_store("stale");
+        let entries: Vec<(EvalKey, Scores)> = (1..=2).map(entry).collect();
+        store.save_cache(entries.iter().map(|(k, s)| (k, s))).unwrap();
+        // Append a stale-version line and a corrupt line.
+        let path = store.root().join("cache.jsonl");
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        raw.push_str(&format!("{}\n", raw.lines().next().unwrap().replace("\"v\":1", "\"v\":0")));
+        raw.push_str("{not json\n");
+        std::fs::write(&path, raw).unwrap();
+
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(skipped, 2);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp_and_replaces_content() {
+        let store = tmp_store("atomic");
+        let p = store.root().join("manifest.json");
+        RunStore::atomic_write(&p, "{\n}").unwrap();
+        RunStore::atomic_write(&p, "{\"a\": 1\n}").unwrap();
+        assert!(std::fs::read_to_string(&p).unwrap().contains('a'));
+        // No tmp siblings left behind (names carry pid + sequence).
+        let stray: Vec<String> = std::fs::read_dir(store.root())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains("tmp"))
+            .collect();
+        assert!(stray.is_empty(), "stray tmp files: {stray:?}");
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+}

@@ -44,6 +44,11 @@ impl Json {
         Json::Str(s.to_string())
     }
 
+    /// Boolean value.
+    pub fn bool(b: bool) -> Json {
+        Json::Bool(b)
+    }
+
     /// Field access for objects; None otherwise.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -71,6 +76,27 @@ impl Json {
     /// Number truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
+    }
+
+    /// Exact u64 value, if this is a non-negative integral number that f64
+    /// represents losslessly (<= 2^53).  Strict by design: the run-store
+    /// loaders treat fractional/negative counters and versions as
+    /// corruption, not as values to round.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= 9_007_199_254_740_992.0 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Boolean value, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     /// String slice, if this is a string.
@@ -108,7 +134,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity; `write!("{x}")` would emit
+                    // `NaN`/`inf`, which `parse` itself rejects.  Serialize
+                    // non-finite numbers as null so every document this
+                    // writer produces is parseable.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -397,6 +429,71 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("hello").is_err());
         assert!(parse("{\"a\":1} extra").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::arr([Json::num(x)]);
+            assert_eq!(j.to_string(), "[null]");
+            // What the writer emits must be parseable by our own parser.
+            assert_eq!(parse(&j.to_string()).unwrap(), Json::arr([Json::Null]));
+        }
+    }
+
+    #[test]
+    fn prop_number_roundtrip_is_exact_or_null() {
+        // Finite numbers survive serialize -> parse bit-exactly (Rust's
+        // `{}` float formatting is shortest-round-trip); non-finite ones
+        // degrade to null but never to an unparseable document.
+        crate::util::prop::check("json number roundtrip", 400, |g| {
+            let x = match g.rng.range(0, 6) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                3 => (g.f64(-1.0, 1.0)) * 1e300,
+                4 => (g.f64(-1.0, 1.0)) * 1e-300,
+                _ => g.f64(-1e9, 1e9),
+            };
+            let doc = Json::obj(vec![("x", Json::num(x))]);
+            let parsed = parse(&doc.to_string())
+                .map_err(|e| format!("writer produced unparseable JSON for {x}: {e}"))?;
+            match parsed.get("x") {
+                Some(Json::Null) if !x.is_finite() => Ok(()),
+                Some(Json::Num(y)) if x.is_finite() && x.to_bits() == y.to_bits() => Ok(()),
+                other => Err(format!("{x} round-tripped to {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_document_roundtrip_is_byte_identical() {
+        // serialize -> parse -> re-serialize must be byte-identical for
+        // finite documents (the run-store resume contract relies on this).
+        crate::util::prop::check("json document roundtrip", 200, |g| {
+            let n = g.int(0, 8);
+            let doc = Json::obj(vec![
+                ("name", Json::str("leg")),
+                ("flag", Json::bool(g.rng.chance(0.5))),
+                ("xs", Json::arr((0..n).map(|_| Json::num(g.f64(-1e6, 1e6))))),
+                (
+                    "nested",
+                    Json::obj(vec![("k", Json::num(g.int(0, 1000) as f64)), ("nil", Json::Null)]),
+                ),
+            ]);
+            let s1 = doc.to_string();
+            let reparsed = parse(&s1).map_err(|e| e.to_string())?;
+            let s2 = reparsed.to_string();
+            if s1 != s2 {
+                return Err(format!("reserialization differs:\n{s1}\n{s2}"));
+            }
+            let p1 = doc.to_pretty();
+            let p2 = parse(&p1).map_err(|e| e.to_string())?.to_pretty();
+            if p1 != p2 {
+                return Err("pretty reserialization differs".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

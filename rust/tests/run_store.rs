@@ -1,0 +1,221 @@
+//! Integration: the checkpointable campaign engine (`store::*`).
+//!
+//! Pins the run-artifacts contract of DESIGN.md §11:
+//! * leg artifacts round-trip byte-identically (serialize → parse →
+//!   re-serialize),
+//! * a replayed leg is semantically identical to the computed one,
+//! * an interrupted campaign resumed with the store produces byte-identical
+//!   figure JSON to an uninterrupted run (warm-start included),
+//! * a second identical campaign invocation replays every leg (no
+//!   re-evaluation — the CI smoke contract).
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{Algo, Effort, LegWorld, Selection};
+use hem3d::coordinator::figures;
+use hem3d::opt::Mode;
+use hem3d::store::{artifact, Engine, LegSpec, RunStore};
+
+fn tiny_effort() -> Effort {
+    let mut e = Effort::quick();
+    e.stage.max_iters = 2;
+    e.stage.local.max_steps = 6;
+    e.stage.local.neighbors_per_step = 5;
+    e.stage.meta_candidates = 8;
+    e.amosa.t_final = 0.4;
+    e.amosa.iters_per_temp = 10;
+    e.validate_cap = 3;
+    e
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hem3d_runstore_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn leg_artifact_roundtrip_is_byte_identical() {
+    let effort = tiny_effort();
+    let world = LegWorld::new("knn", Tech::M3d, 11);
+    let engine = Engine::ephemeral();
+    let leg = engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11);
+    let spec = LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11);
+
+    let s1 = artifact::leg_json(&leg, &spec).to_pretty();
+    let parsed = hem3d::util::json::parse(&s1).expect("artifact parses");
+    let (spec2, leg2) = artifact::leg_from_json(&parsed).expect("artifact decodes");
+    assert_eq!(spec, spec2);
+    let s2 = artifact::leg_json(&leg2, &spec2).to_pretty();
+    assert_eq!(s1, s2, "serialize -> parse -> re-serialize must be byte-identical");
+
+    // Decoded payloads match the originals exactly.
+    assert!(leg2.replayed);
+    assert_eq!(leg.evals, leg2.evals);
+    assert_eq!(leg.history, leg2.history);
+    assert_eq!(leg.opt_history, leg2.opt_history);
+    assert_eq!(leg.front.members.len(), leg2.front.members.len());
+    for (a, b) in leg.front.members.iter().zip(leg2.front.members.iter()) {
+        assert_eq!(a.obj, b.obj);
+        assert_eq!(a.design, b.design);
+    }
+    assert_eq!(leg.winner.design, leg2.winner.design);
+    assert_eq!(leg.winner.et, leg2.winner.et);
+    assert_eq!(leg.winner.temp_c, leg2.winner.temp_c);
+    assert_eq!(leg.cache, leg2.cache);
+}
+
+#[test]
+fn stored_leg_replays_and_reproduces_the_fresh_run() {
+    let dir = tmp_dir("replay");
+    let effort = tiny_effort();
+    let world = LegWorld::new("bp", Tech::Tsv, 5);
+
+    let fresh = Engine::ephemeral().run_leg(
+        &world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 5,
+    );
+
+    let store_run = Engine::open(&dir).unwrap().run_leg(
+        &world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 5,
+    );
+    assert!(!store_run.replayed);
+
+    // Second engine over the same dir: replay, no computation, same leg.
+    let engine = Engine::open(&dir).unwrap();
+    let replayed = engine.run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 5);
+    assert!(replayed.replayed, "second invocation must replay from the store");
+    let summaries = engine.summaries();
+    assert_eq!(summaries.len(), 1);
+    assert!(summaries[0].replayed);
+    assert_eq!(summaries[0].evals, 0, "a replayed leg spends no evaluations");
+
+    for leg in [&store_run, &replayed] {
+        assert_eq!(fresh.evals, leg.evals);
+        assert_eq!(fresh.history, leg.history);
+        assert_eq!(fresh.winner.et, leg.winner.et);
+        assert_eq!(fresh.winner.temp_c, leg.winner.temp_c);
+        assert_eq!(fresh.winner.design, leg.winner.design);
+        assert_eq!(fresh.front.members.len(), leg.front.members.len());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn interrupted_campaign_resumes_to_byte_identical_figures() {
+    let (seed, benches) = (13, ["bp"]);
+    let effort = tiny_effort();
+
+    // Uninterrupted reference run (its own store).
+    let ref_dir = tmp_dir("figs_ref");
+    let reference = figures::fig8_stored(&Engine::open(&ref_dir).unwrap(), &benches, &effort, seed);
+    let ref_json = figures::fig8_json(&reference).to_pretty();
+
+    // "Interrupted" run: only Fig 8's first (PO) leg completes before the
+    // process dies...
+    let dir = tmp_dir("figs_resume");
+    {
+        let engine = Engine::open(&dir).unwrap();
+        let world = LegWorld::new("bp", Tech::Tsv, seed);
+        engine.run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, seed);
+        assert_eq!(engine.store().unwrap().list_leg_ids().len(), 1);
+        assert!(engine.store().unwrap().root().join("cache.jsonl").exists());
+    }
+
+    // ...then a new process resumes the full figure: the PO leg replays,
+    // the PT leg computes warm-started from the snapshot.
+    let engine = Engine::open(&dir).unwrap();
+    let resumed = figures::fig8_stored(&engine, &benches, &effort, seed);
+    let resumed_json = figures::fig8_json(&resumed).to_pretty();
+    assert_eq!(ref_json, resumed_json, "resumed figure JSON must be byte-identical");
+
+    let summaries = engine.summaries();
+    assert_eq!(summaries.len(), 2);
+    assert_eq!(summaries.iter().filter(|s| s.replayed).count(), 1);
+    let pt = summaries.iter().find(|s| !s.replayed).expect("PT leg computed");
+    assert!(
+        pt.cache.warm_hits > 0,
+        "the fresh leg must draw on the warm-start snapshot (shared start design at minimum)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn second_campaign_invocation_replays_every_leg() {
+    let dir = tmp_dir("smoke");
+    let (seed, benches) = (7, ["bp"]);
+    let effort = tiny_effort();
+
+    let first = Engine::open(&dir).unwrap();
+    let rows1 = figures::fig8_stored(&first, &benches, &effort, seed);
+    assert!(first.summaries().iter().all(|s| !s.replayed));
+
+    let second = Engine::open(&dir).unwrap();
+    let rows2 = figures::fig8_stored(&second, &benches, &effort, seed);
+    let summaries = second.summaries();
+    assert_eq!(summaries.len(), 2);
+    assert!(summaries.iter().all(|s| s.replayed), "every leg must replay");
+    assert_eq!(summaries.iter().map(|s| s.evals).sum::<u64>(), 0);
+    assert_eq!(
+        figures::fig8_json(&rows1).to_pretty(),
+        figures::fig8_json(&rows2).to_pretty()
+    );
+
+    // --force recomputes (and still lands on the same results).
+    let forced = Engine::open_with(&dir, true).unwrap();
+    let rows3 = figures::fig8_stored(&forced, &benches, &effort, seed);
+    assert!(forced.summaries().iter().all(|s| !s.replayed));
+    assert_eq!(
+        figures::fig8_json(&rows1).to_pretty(),
+        figures::fig8_json(&rows3).to_pretty()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn effort_change_invalidates_stored_legs() {
+    let dir = tmp_dir("effort");
+    let world = LegWorld::new("bp", Tech::M3d, 3);
+    let effort = tiny_effort();
+    Engine::open(&dir).unwrap().run_leg(
+        &world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 3,
+    );
+
+    let mut deeper = tiny_effort();
+    deeper.stage.max_iters += 1;
+    let engine = Engine::open(&dir).unwrap();
+    let leg = engine.run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &deeper, 3);
+    assert!(!leg.replayed, "a different effort must not replay the stored artifact");
+    assert_eq!(engine.store().unwrap().list_leg_ids().len(), 2);
+
+    // A worker-count change is NOT an effort change: replay applies.
+    let engine = Engine::open(&dir).unwrap();
+    let leg = engine.run_leg(
+        &world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort.clone().with_workers(4), 3,
+    );
+    assert!(leg.replayed);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn runs_store_listing_reflects_artifacts() {
+    let dir = tmp_dir("listing");
+    let effort = tiny_effort();
+    let engine = Engine::open(&dir).unwrap();
+    let world = LegWorld::new("bp", Tech::M3d, 9);
+    engine.run_leg(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 9);
+    engine.run_leg(&world, Mode::Po, Algo::Amosa, Selection::MinEt, &effort, 9);
+
+    let store = RunStore::open(&dir).unwrap();
+    let ids = store.list_leg_ids();
+    assert_eq!(ids.len(), 2);
+    assert!(ids.iter().any(|i| i.contains("moo-stage")));
+    assert!(ids.iter().any(|i| i.contains("amosa")));
+    assert!(store.cache_len() > 0, "snapshot must hold the legs' evaluations");
+    for id in &ids {
+        let doc = store.load_leg(id).expect("stored leg readable");
+        let (spec, leg) = artifact::leg_from_json(&doc).expect("stored leg decodes");
+        assert_eq!(spec.leg_id(), *id);
+        assert!(!leg.candidates.is_empty());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
