@@ -10,7 +10,10 @@
 //!   batched planned path (plan amortised over a TH_BATCH-sized batch);
 //! * **moo** — one sparse-evaluator scoring step (the DSE inner loop);
 //! * **noc** — a cycle-level wormhole simulation leg, re-running one
-//!   `NocSim` instance so the reusable `SimScratch` is exercised.
+//!   `NocSim` instance so the reusable `SimScratch` is exercised;
+//! * **variation** — one Monte Carlo robustness evaluation (the
+//!   `--robust` DSE inner step: sample maps, derate, re-run thermal,
+//!   aggregate into a `RobustScore`).
 //!
 //! With `--json` the results land in `BENCH_hotpaths.json` at the repo
 //! root (override with `--out`), giving CI a perf trajectory to archive.
@@ -159,6 +162,29 @@ pub fn run(args: &Args) -> Result<()> {
         t_noc * 1e3
     );
 
+    // ---- variation: one Monte Carlo robustness evaluation -----------------
+    // The `--robust` DSE inner step: sample the correlated variation maps,
+    // derate timing/leakage, re-run the thermal objective, aggregate.
+    let nominal = evaluate_sparse(&ctx, &design, &routing, &sparse);
+    let vcfg = hem3d::variation::VariationConfig::default();
+    let vmodel = hem3d::variation::VariationModel::new(&vcfg, &tech, &geo);
+    let mut timing_yield = 0.0f64;
+    let t_mc = bench(
+        &format!("variation MC robust eval ({} samples)", vcfg.samples),
+        warmup,
+        reps,
+        || {
+            let r = hem3d::variation::robust_evaluate(&ctx, &design, &nominal, &vmodel, workers);
+            timing_yield = r.timing_yield;
+        },
+    );
+    println!(
+        "variation {:.2} ms/robust eval ({} samples, timing yield {:.0}%)",
+        t_mc * 1e3,
+        vcfg.samples,
+        100.0 * timing_yield
+    );
+
     if args.flag("json") {
         let out = args.opt_or("out", "BENCH_hotpaths.json");
         let json = Json::obj(vec![
@@ -203,6 +229,16 @@ pub fn run(args: &Args) -> Result<()> {
                     ("sim_s", Json::num(t_noc)),
                     ("cycles", Json::num(noc_cycles as f64)),
                     ("delivered", Json::num(delivered as f64)),
+                ]),
+            ),
+            (
+                "variation",
+                Json::obj(vec![
+                    ("robust_eval_s", Json::num(t_mc)),
+                    ("mc_samples", Json::num(vcfg.samples as f64)),
+                    ("sigma", Json::num(vcfg.sigma)),
+                    ("tier_shift", Json::num(vcfg.tier_shift)),
+                    ("timing_yield", Json::num(timing_yield)),
                 ]),
             ),
         ]);

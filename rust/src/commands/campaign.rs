@@ -28,13 +28,34 @@ pub fn run_dir_from_args(args: &Args) -> Option<String> {
     }
 }
 
-/// Resolve the engine from `--run-dir` / `--name` / `--force`; `None` for
-/// both dir options means an ephemeral (non-persisted) campaign.
+/// Resolve the Monte Carlo variation configuration shared by `optimize`
+/// and `campaign`: `--robust` enables it, `--variation-sigma` /
+/// `--tier-shift` / `--mc-samples` / `--mc-seed` tune it, and an explicit
+/// `--variation-sigma 0` disables the subsystem entirely (bit-identical
+/// nominal results, DESIGN.md §12).
+pub fn variation_from_args(args: &Args) -> Option<hem3d::variation::VariationConfig> {
+    if !args.flag("robust") {
+        return None;
+    }
+    let d = hem3d::variation::VariationConfig::default();
+    let cfg = hem3d::variation::VariationConfig {
+        sigma: args.f64_or("variation-sigma", d.sigma),
+        tier_shift: args.f64_or("tier-shift", d.tier_shift),
+        samples: args.usize_or("mc-samples", d.samples).max(1),
+        seed: args.u64_or("mc-seed", d.seed),
+    };
+    cfg.enabled().then_some(cfg)
+}
+
+/// Resolve the engine from `--run-dir` / `--name` / `--force` plus the
+/// `--robust` variation knobs; `None` for both dir options means an
+/// ephemeral (non-persisted) campaign.
 pub fn engine_from_args(args: &Args) -> Result<Engine> {
-    Ok(match run_dir_from_args(args) {
+    let engine = match run_dir_from_args(args) {
         Some(dir) => Engine::open_with(dir, args.flag("force"))?,
         None => Engine::ephemeral(),
-    })
+    };
+    Ok(engine.with_variation(variation_from_args(args)))
 }
 
 /// Regenerate the requested figures into `--out`.
@@ -55,6 +76,16 @@ pub fn run(args: &Args) -> Result<()> {
     .with_workers(args.usize_or("workers", 1));
     log_info!("campaign workers: {}", effort.workers);
 
+    let variation = variation_from_args(args);
+    if let Some(v) = &variation {
+        log_info!(
+            "robust campaign: sigma={} tier-shift={} mc-samples={} mc-seed={}",
+            v.sigma,
+            v.tier_shift,
+            v.samples,
+            v.seed
+        );
+    }
     let engine = engine_from_args(args)?;
     let out = match (args.opt("out"), engine.store()) {
         (Some(o), _) => o.to_string(),
@@ -78,6 +109,18 @@ pub fn run(args: &Args) -> Result<()> {
             // Decimal string: exact for any u64 seed (f64 rounds >= 2^53),
             // same rule as LegSpec's seed fields.
             ("seed", Json::str(&seed.to_string())),
+            (
+                "variation",
+                match &variation {
+                    Some(v) => Json::obj(vec![
+                        ("mc_samples", Json::num(v.samples as f64)),
+                        ("mc_seed", Json::str(&v.seed.to_string())),
+                        ("sigma", Json::num(v.sigma)),
+                        ("tier_shift", Json::num(v.tier_shift)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
         ]))?;
     }
 

@@ -43,9 +43,13 @@ pub fn run(args: &Args) -> Result<()> {
         effort.stage.max_iters = iters;
     }
 
-    let selection = match mode {
-        Mode::Po => Selection::MinEt,
-        Mode::Pt => Selection::MinEtUnderTth,
+    let variation = super::campaign::variation_from_args(args);
+    let selection = match (&variation, mode) {
+        // Robust mode optimizes the pessimistic tail: the winner is the
+        // cheapest p95 EDP among candidates clearing the yield floor.
+        (Some(_), _) => Selection::MinP95Edp,
+        (None, Mode::Po) => Selection::MinEt,
+        (None, Mode::Pt) => Selection::MinEtUnderTth,
     };
 
     log_info!(
@@ -55,6 +59,15 @@ pub fn run(args: &Args) -> Result<()> {
         algo.name(),
         effort.workers
     );
+    if let Some(v) = &variation {
+        log_info!(
+            "robust mode: sigma={} tier-shift={} mc-samples={} mc-seed={}",
+            v.sigma,
+            v.tier_shift,
+            v.samples,
+            v.seed
+        );
+    }
     let world = LegWorld::new(&bench, tech, seed);
     let engine = super::campaign::engine_from_args(args)?;
     let leg = engine.run_leg(&world, mode, algo, selection, &effort, seed);
@@ -72,9 +85,25 @@ pub fn run(args: &Args) -> Result<()> {
     println!("  convergence time:   {:.2} s", leg.convergence_seconds);
     println!("  pareto candidates validated: {}", leg.candidates.len());
     for (i, c) in leg.candidates.iter().enumerate() {
-        println!("    #{i}: ET={:.4}  T={:.1}C", c.et, c.temp_c);
+        match &c.robust {
+            Some(r) => println!(
+                "    #{i}: ET={:.4}  T={:.1}C  p95ET={:.4}  p95EDP={:.2}  yield={:.0}%",
+                c.et,
+                c.temp_c,
+                r.p95_et,
+                r.p95_edp,
+                100.0 * r.timing_yield
+            ),
+            None => println!("    #{i}: ET={:.4}  T={:.1}C", c.et, c.temp_c),
+        }
     }
     println!("  winner: ET={:.4}  T={:.1}C", leg.winner.et, leg.winner.temp_c);
+    if let Some(r) = &leg.winner.robust {
+        println!(
+            "  winner MC summary ({} samples): mean ET={:.4}  p50={:.4}  p95={:.4}  p95 EDP={:.2}  timing yield={:.0}%",
+            r.samples, r.mean_et, r.p50_et, r.p95_et, r.p95_edp, 100.0 * r.timing_yield
+        );
+    }
 
     // Optional L1<->L3 cross-check through the artifacts.
     if artifacts != "none" {

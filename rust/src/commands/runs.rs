@@ -97,32 +97,79 @@ fn show(args: &Args) -> Result<()> {
         return Ok(());
     }
     let mut rows = Vec::new();
+    let mut robust_winners: Vec<String> = Vec::new();
     for id in &ids {
         let Some(doc) = store.load_leg(id) else {
             rows.push(vec![id.clone(), "unreadable".into()]);
             continue;
         };
         match artifact::leg_from_json(&doc) {
-            Ok((_, leg)) => rows.push(vec![
-                id.clone(),
-                leg.mode.name().into(),
-                leg.algo.name().into(),
-                leg.evals.to_string(),
-                format!("{}/{}", leg.cache.hits, leg.cache.warm_hits),
-                leg.front.members.len().to_string(),
-                f(leg.winner.et, 4),
-                f(leg.winner.temp_c, 1),
-                f(leg.opt_seconds, 2),
-            ]),
+            Ok((spec, leg)) => {
+                let s = &spec.scenario;
+                // The full scenario: workload/tech, objective windows and
+                // the wormhole fabric configuration the leg was keyed by.
+                let scenario = format!(
+                    "{}/{} w{} vc{}x{}",
+                    s.workload, s.tech, s.windows, s.vcs, s.vc_depth
+                );
+                let variation = match &s.variation {
+                    Some(v) => format!(
+                        "sigma={} shift={} n={} seed={}",
+                        v.sigma(),
+                        v.tier_shift(),
+                        v.mc_samples,
+                        v.mc_seed
+                    ),
+                    None => "-".into(),
+                };
+                if let Some(r) = &leg.winner.robust {
+                    robust_winners.push(format!(
+                        "{id}: winner MC ({} samples) mean ET={} p95 ET={} p95 EDP={} yield={:.0}%",
+                        r.samples,
+                        f(r.mean_et, 4),
+                        f(r.p95_et, 4),
+                        f(r.p95_edp, 2),
+                        100.0 * r.timing_yield
+                    ));
+                }
+                rows.push(vec![
+                    id.clone(),
+                    leg.mode.name().into(),
+                    leg.algo.name().into(),
+                    scenario,
+                    variation,
+                    leg.evals.to_string(),
+                    format!("{}/{}", leg.cache.hits, leg.cache.warm_hits),
+                    leg.front.members.len().to_string(),
+                    f(leg.winner.et, 4),
+                    f(leg.winner.temp_c, 1),
+                    f(leg.opt_seconds, 2),
+                ])
+            }
             Err(e) => rows.push(vec![id.clone(), e]),
         }
     }
     println!(
         "{}",
         table(
-            &["leg", "mode", "algo", "evals", "hits/warm", "front", "winner ET", "T [C]", "secs"],
+            &[
+                "leg",
+                "mode",
+                "algo",
+                "scenario",
+                "variation",
+                "evals",
+                "hits/warm",
+                "front",
+                "winner ET",
+                "T [C]",
+                "secs"
+            ],
             &rows
         )
     );
+    for line in robust_winners {
+        println!("{line}");
+    }
     Ok(())
 }

@@ -17,8 +17,9 @@ use crate::perf::PerfCoeffs;
 use crate::runtime::evaluator::EvalKey;
 use crate::traffic::{benchmark, generate, BenchProfile, Trace};
 use crate::util::Rng;
+use crate::variation::{RobustEt, VariationConfig};
 
-use super::validate::validate_candidate;
+use super::validate::validate_candidate_robust;
 
 /// Which optimizer drives a leg.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,7 +49,8 @@ impl Algo {
     }
 }
 
-/// Winner-selection rule (Eq. 10 and the Fig 10 variant).
+/// Winner-selection rule (Eq. 10, the Fig 10 variant, and the robust
+/// p95-EDP rule of DESIGN.md §12.5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Selection {
     /// argmin ET (PO).
@@ -57,6 +59,10 @@ pub enum Selection {
     MinEtUnderTth,
     /// argmin ET * Temp (the Fig 10 "without constraint" PT variant).
     MinEtTempProduct,
+    /// argmin p95 EDP among candidates meeting the timing-yield floor
+    /// (`--robust`; falls back to the highest-yield candidate when none
+    /// clear the floor, and to plain min-ET when no robust data exists).
+    MinP95Edp,
 }
 
 impl Selection {
@@ -66,6 +72,7 @@ impl Selection {
             Selection::MinEt => "min-et",
             Selection::MinEtUnderTth => "min-et-under-tth",
             Selection::MinEtTempProduct => "min-et-temp-product",
+            Selection::MinP95Edp => "min-p95-edp",
         }
     }
 
@@ -75,6 +82,7 @@ impl Selection {
             "min-et" => Some(Selection::MinEt),
             "min-et-under-tth" => Some(Selection::MinEtUnderTth),
             "min-et-temp-product" => Some(Selection::MinEtTempProduct),
+            "min-p95-edp" => Some(Selection::MinP95Edp),
             _ => None,
         }
     }
@@ -89,6 +97,8 @@ pub struct Validated {
     pub et: f64,
     /// Detailed-solver peak temperature [degC].
     pub temp_c: f64,
+    /// Monte Carlo execution-time/EDP/yield summary (robust legs only).
+    pub robust: Option<RobustEt>,
 }
 
 /// Full optimizer trajectory, preserved per-algorithm so a leg artifact
@@ -313,7 +323,7 @@ pub fn run_leg(
     effort: &Effort,
     seed: u64,
 ) -> LegResult {
-    run_leg_warm(world, mode, algo, selection, effort, seed, None).0
+    run_leg_warm(world, mode, algo, selection, effort, seed, None, None).0
 }
 
 /// [`run_leg`] with an optional warm-start snapshot, additionally returning
@@ -327,6 +337,13 @@ pub fn run_leg(
 /// cold store): only then is the cache export collected.  With `None` the
 /// export is empty — plain [`run_leg`] callers don't pay for a snapshot
 /// clone they would discard.
+///
+/// `variation` switches the leg to robust scoring (`--robust`,
+/// DESIGN.md §12): candidate objectives become p95 Monte Carlo
+/// projections, every validated candidate carries a [`RobustEt`] summary,
+/// and a disabled configuration (`sigma == 0`) is bit-identical to
+/// passing `None`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_leg_warm(
     world: &LegWorld,
     mode: Mode,
@@ -335,12 +352,16 @@ pub fn run_leg_warm(
     effort: &Effort,
     seed: u64,
     warm: Option<Arc<HashMap<EvalKey, crate::eval::objectives::Scores>>>,
+    variation: Option<&VariationConfig>,
 ) -> (LegResult, Vec<(EvalKey, crate::eval::objectives::Scores)>) {
     let ctx = world.encode_ctx();
     let mut problem = Problem::new(&ctx, mode).with_workers(effort.workers);
     let store_backed = warm.is_some();
     if let Some(warm) = warm {
         problem = problem.with_warm_cache(warm);
+    }
+    if let Some(vcfg) = variation {
+        problem = problem.with_variation(vcfg);
     }
     let start = Design::with_identity_placement(
         world.cfg.n_tiles(),
@@ -378,13 +399,15 @@ pub fn run_leg_warm(
     }
 
     // Each member's validation (routing + ET model + detailed thermal
-    // fixed point) is independent and pure, so fan it out; `scope_map`
+    // fixed point, plus the robust Monte Carlo summary when variation is
+    // active) is independent and pure, so fan it out; `scope_map`
     // preserves order, keeping the winner selection deterministic.
     let coeffs = PerfCoeffs::default();
+    let vmodel = problem.variation_model();
     let mut candidates: Vec<Validated> = crate::util::threadpool::scope_map(
         members,
         effort.workers,
-        |m| validate_candidate(&ctx, &world.profile, &m.design, &coeffs),
+        |m| validate_candidate_robust(&ctx, &world.profile, &m.design, &coeffs, vmodel),
     );
 
     // Winner per the selection rule.
@@ -467,6 +490,29 @@ fn select(candidates: &mut [Validated], selection: Selection, t_th: f64) -> Vali
             })
             .cloned()
             .unwrap(),
+        Selection::MinP95Edp => {
+            // Robust rule (DESIGN.md §12.5): cheapest pessimistic EDP among
+            // candidates clearing the yield floor; if none clear it, the
+            // highest-yield candidate; without robust data (a nominal leg
+            // asked for the robust rule), plain min-ET.
+            let p95_edp = |c: &&Validated| c.robust.map(|r| r.p95_edp).unwrap_or(f64::MAX);
+            let feasible = candidates
+                .iter()
+                .filter(|c| c.robust.map(|r| r.meets_yield()).unwrap_or(false))
+                .min_by(|a, b| p95_edp(a).partial_cmp(&p95_edp(b)).unwrap())
+                .cloned();
+            feasible.unwrap_or_else(|| {
+                candidates
+                    .iter()
+                    .filter(|c| c.robust.is_some())
+                    .max_by(|a, b| {
+                        let y = |c: &&Validated| c.robust.map(|r| r.timing_yield).unwrap();
+                        y(a).partial_cmp(&y(b)).unwrap()
+                    })
+                    .cloned()
+                    .unwrap_or_else(|| pick(&mut candidates.iter()).unwrap())
+            })
+        }
     }
 }
 
@@ -496,11 +542,13 @@ mod tests {
                 design: Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]),
                 et: 1.0,
                 temp_c: 95.0,
+                robust: None,
             },
             Validated {
                 design: Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]),
                 et: 1.1,
                 temp_c: 70.0,
+                robust: None,
             },
         ];
         let w = select(&mut cands, Selection::MinEtUnderTth, 85.0);
@@ -509,6 +557,48 @@ mod tests {
         assert_eq!(w2.temp_c, 95.0);
         let w3 = select(&mut cands, Selection::MinEtTempProduct, 85.0);
         assert!((w3.et * w3.temp_c) <= 1.0 * 95.0 + 1e-12);
+        // Robust rule without robust data degrades to min-ET.
+        let w4 = select(&mut cands, Selection::MinP95Edp, 85.0);
+        assert_eq!(w4.et, 1.0);
+    }
+
+    #[test]
+    fn robust_selection_prefers_yield_then_p95_edp() {
+        let d = || Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]);
+        let r = |p95_edp: f64, yld: f64| {
+            Some(crate::variation::RobustEt {
+                samples: 8,
+                mean_et: 1.0,
+                p50_et: 1.0,
+                p95_et: 1.2,
+                p95_edp,
+                timing_yield: yld,
+            })
+        };
+        // Cheapest p95 EDP misses the yield floor (MIN_YIELD = 0.5 is
+        // inclusive, so 0.4 misses and 0.5 would meet): the cheapest
+        // feasible candidate wins.
+        let mut cands = vec![
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.4) },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9) },
+            Validated { design: d(), et: 1.1, temp_c: 70.0, robust: r(90.0, 1.0) },
+        ];
+        let w = select(&mut cands, Selection::MinP95Edp, 85.0);
+        assert_eq!(w.robust.unwrap().p95_edp, 80.0);
+        // The floor is inclusive: exactly MIN_YIELD is feasible.
+        let mut edge = vec![
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.5) },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9) },
+        ];
+        let w = select(&mut edge, Selection::MinP95Edp, 85.0);
+        assert_eq!(w.robust.unwrap().p95_edp, 50.0);
+        // No candidate clears the floor: highest yield wins.
+        let mut low = vec![
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.2) },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.4) },
+        ];
+        let w = select(&mut low, Selection::MinP95Edp, 85.0);
+        assert_eq!(w.robust.unwrap().timing_yield, 0.4);
     }
 
     #[test]

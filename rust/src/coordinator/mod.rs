@@ -14,5 +14,5 @@ pub use campaign::{
 };
 pub use validate::{
     detailed_peak_temp, detailed_peak_temp_with, noc_validate, noc_validate_cfg, power_grid,
-    thermal_plan, trace_replay_rates, validate_candidate,
+    thermal_plan, trace_replay_rates, validate_candidate, validate_candidate_robust,
 };

@@ -142,11 +142,31 @@ pub fn validate_candidate(
     design: &Design,
     coeffs: &crate::perf::PerfCoeffs,
 ) -> super::campaign::Validated {
+    validate_candidate_robust(ctx, profile, design, coeffs, None)
+}
+
+/// [`validate_candidate`] with an optional variation model: when present,
+/// the candidate additionally gets its Monte Carlo execution-time summary
+/// (`variation::RobustEt` — mean/p50/p95 ET, p95 EDP, timing yield), the
+/// per-design record the robust winner selection and the leg artifacts
+/// consume.  The sample fan-out runs serially here: candidates are
+/// already spread over the worker pool by the leg runner.
+pub fn validate_candidate_robust(
+    ctx: &EncodeCtx<'_>,
+    profile: &crate::traffic::BenchProfile,
+    design: &Design,
+    coeffs: &crate::perf::PerfCoeffs,
+    variation: Option<&crate::variation::VariationModel>,
+) -> super::campaign::Validated {
     let routing = Routing::build(design);
     let scores = crate::eval::objectives::evaluate(ctx, design, &routing);
     let et = crate::perf::exec_time(ctx, profile, design, &routing, &scores, coeffs);
     let temp = detailed_peak_temp(ctx, design);
-    super::campaign::Validated { design: design.clone(), et: et.total, temp_c: temp }
+    let robust = variation.map(|model| {
+        let effects = crate::variation::mc_effects(ctx, design, model, 1);
+        crate::variation::robust_et(et.total, &effects)
+    });
+    super::campaign::Validated { design: design.clone(), et: et.total, temp_c: temp, robust }
 }
 
 /// Position-space `(rate, flits)` matrices for the trace-replay scenario:

@@ -222,6 +222,77 @@ pub fn evaluate_sparse_with(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Robust (variation-derated) variants
+// ---------------------------------------------------------------------------
+
+/// Leakage power of one tile kind at the 40°C characterisation point [W]
+/// (the split `coordinator::validate::power_grid` uses, shared here so the
+/// Monte Carlo derate and the detailed thermal grid agree on what part of
+/// a tile's power is leakage).
+pub fn leak_40c(ctx: &EncodeCtx<'_>, kind: TileKind) -> f64 {
+    match kind {
+        TileKind::Gpu => ctx.power.budget.gpu_leak,
+        TileKind::Cpu => ctx.power.budget.cpu_leak,
+        TileKind::Llc => ctx.power.budget.llc_leak,
+    }
+}
+
+/// Fused robust thermal/power pass: Eq. (7)/(8) stack-thermal objective
+/// and mean whole-chip power [W] under per-*position* leakage derates.
+/// Each tile's power is split into dynamic + leakage and the leakage part
+/// scaled by `leak_factor[pos]` (a sampled `variation::VariationMap`
+/// projection); with an all-ones factor the `tmax` component reduces to
+/// the nominal accumulation.  One windows x tiles walk serves both
+/// results — this is the Monte Carlo inner loop, called once per sample
+/// per design.
+pub fn thermal_power_leak_derated(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    leak_factor: &[f64],
+) -> (f64, f64) {
+    let n = design.n_tiles();
+    let n_stacks = ctx.geo.rows * ctx.geo.cols;
+    let mut per_stack = vec![0.0f64; n_stacks];
+    let mut tmax = 0.0f64;
+    let mut acc = 0.0f64;
+    let mut windows = 0usize;
+    for win in ctx.trace.windows.iter().take(crate::runtime::dims::N_WINDOWS) {
+        per_stack.iter_mut().for_each(|x| *x = 0.0);
+        for pos in 0..n {
+            let tile = design.tile_at[pos];
+            let kind = ctx.tiles.kind(tile);
+            let p40 = ctx.power.tile_power(kind, win.activity[tile]);
+            let leak = leak_40c(ctx, kind);
+            let p = (p40 - leak) + leak * leak_factor[pos];
+            per_stack[ctx.geo.stack_of(pos)] +=
+                p * ctx.stack.coeff_per_tier[ctx.geo.tier_of(pos)];
+            acc += p;
+        }
+        for &t in per_stack.iter() {
+            tmax = tmax.max(t);
+        }
+        windows += 1;
+    }
+    let power = if windows == 0 { 0.0 } else { acc / windows as f64 };
+    (tmax, power)
+}
+
+/// The stack-thermal component of [`thermal_power_leak_derated`].
+pub fn tmax_leak_derated(ctx: &EncodeCtx<'_>, design: &Design, leak_factor: &[f64]) -> f64 {
+    thermal_power_leak_derated(ctx, design, leak_factor).0
+}
+
+/// The mean whole-chip power component of [`thermal_power_leak_derated`]
+/// — the energy term of the robust EDP.
+pub fn chip_power_leak_derated(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    leak_factor: &[f64],
+) -> f64 {
+    thermal_power_leak_derated(ctx, design, leak_factor).1
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +363,30 @@ mod tests {
         let t_near = evaluate(&ctx, &d_near, &rn).tmax;
         let t_far = evaluate(&ctx, &d_far, &rf).tmax;
         assert!(t_near < t_far, "near {t_near} vs far {t_far}");
+    }
+
+    #[test]
+    fn unit_leak_factors_reproduce_nominal_tmax_and_chip_power() {
+        let (cfg, tech, tiles) = setup(TechParams::m3d());
+        let geo = Geometry::new(&cfg, &tech);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 3);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let r = Routing::build(&d);
+        let nominal = evaluate(&ctx, &d, &r);
+        let ones = vec![1.0; cfg.n_tiles()];
+        let t = tmax_leak_derated(&ctx, &d, &ones);
+        assert!((t - nominal.tmax).abs() < 1e-9, "{t} vs {}", nominal.tmax);
+
+        // Scaling every tile's leakage up must heat the chip and raise
+        // the mean power; down must cool it.
+        let hot = vec![1.5; cfg.n_tiles()];
+        let cold = vec![0.6; cfg.n_tiles()];
+        assert!(tmax_leak_derated(&ctx, &d, &hot) > t);
+        assert!(tmax_leak_derated(&ctx, &d, &cold) < t);
+        let p = chip_power_leak_derated(&ctx, &d, &ones);
+        assert!(p > 0.0);
+        assert!(chip_power_leak_derated(&ctx, &d, &hot) > p);
     }
 
     #[test]

@@ -29,3 +29,4 @@ pub mod thermal;
 pub mod timing;
 pub mod traffic;
 pub mod util;
+pub mod variation;

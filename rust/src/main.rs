@@ -49,12 +49,16 @@ COMMANDS:
              [--algo moo-stage|amosa] [--mode po|pt] [--iters N] [--seed N]
              [--artifacts DIR|none] [--workers N]
              [--run-dir DIR | --name NAME] [--force]
+             [--robust] [--variation-sigma X] [--tier-shift X]
+             [--mc-samples N] [--mc-seed N]
   bench      Hot-path benchmark harness (thermal planned-vs-seed, moo
-             scoring, NoC sim) [--json] [--quick] [--out FILE] [--seed N]
-             [--workers N]
+             scoring, NoC sim, variation MC) [--json] [--quick]
+             [--out FILE] [--seed N] [--workers N]
   campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
              [--seed N] [--benches a,b,...] [--effort quick|full]
              [--workers N] [--run-dir DIR | --name NAME] [--force]
+             [--robust] [--variation-sigma X] [--tier-shift X]
+             [--mc-samples N] [--mc-seed N]
   runs       Inspect persisted runs:  runs list [--root runs]
              |  runs show <name> [--root runs | --run-dir DIR]
   help       Show this message
@@ -68,6 +72,11 @@ Global: [--log error|warn|info|debug]
         cache warm-starts from its snapshot (resume is the default;
         --force recomputes).  Results are bit-identical with or without a
         store.  Inspect with `hem3d runs`.
+        --robust evaluates designs under inter-tier process variation
+        (Monte Carlo over --mc-samples instances at --variation-sigma,
+        M3D upper tiers systematically derated by --tier-shift per tier)
+        and optimizes p95 objectives / p95 EDP under a timing-yield
+        floor.  --variation-sigma 0 is bit-identical to the nominal path.
 ";
 
 fn main() -> Result<()> {

@@ -5,7 +5,8 @@ use crate::arch::design::Design;
 use crate::arch::encode::{design_key, EncodeCtx};
 use crate::eval::objectives::{evaluate_sparse, Scores, SparseTraffic};
 use crate::noc::routing::Routing;
-use crate::runtime::{EvalCache, EvalKey, ScenarioKey};
+use crate::runtime::{EvalCache, EvalKey, ScenarioKey, VariationKey};
+use crate::variation::{robust_evaluate, VariationConfig, VariationModel};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Optimization flavour (Eq. 9).
@@ -78,6 +79,12 @@ pub struct Problem<'a> {
     /// (workload + tech + fabric config, DESIGN.md §1.3).  Shared, not
     /// cloned, per probe: `score` is the DSE hot path.
     pub scenario: std::sync::Arc<ScenarioKey>,
+    /// Robust-mode variation model; `None` scores nominally.  When set,
+    /// [`Problem::score`] returns the p95 Monte Carlo projection of the
+    /// objectives instead of the nominal point (DESIGN.md §12.4), and the
+    /// scenario carries the matching [`VariationKey`] so robust and
+    /// nominal cache entries can never collide.
+    variation: Option<VariationModel>,
     evals: AtomicU64,
     cache: EvalCache,
 }
@@ -102,9 +109,30 @@ impl<'a> Problem<'a> {
             traffic,
             workers: 1,
             scenario,
+            variation: None,
             evals: AtomicU64::new(0),
             cache: EvalCache::new(),
         }
+    }
+
+    /// Builder-style robust mode: score designs by the p95 Monte Carlo
+    /// projection under `cfg` instead of the nominal point.  A disabled
+    /// configuration (`sigma == 0`) is the identity — no variation key,
+    /// no model, bit-identical nominal results — which is the
+    /// `--variation-sigma 0` contract.
+    pub fn with_variation(mut self, cfg: &VariationConfig) -> Self {
+        let Some(key) = VariationKey::from_config(cfg) else {
+            return self;
+        };
+        self.scenario =
+            std::sync::Arc::new((*self.scenario).clone().with_variation(Some(key)));
+        self.variation = Some(VariationModel::new(cfg, self.ctx.tech, self.ctx.geo));
+        self
+    }
+
+    /// The robust-mode variation model, when active.
+    pub fn variation_model(&self) -> Option<&VariationModel> {
+        self.variation.as_ref()
     }
 
     /// Builder-style worker-count override, with the same resolution rule
@@ -149,7 +177,19 @@ impl<'a> Problem<'a> {
             Some(warm) => warm,
             None => {
                 let routing = Routing::build(design);
-                evaluate_sparse(self.ctx, design, &routing, &self.traffic)
+                let nominal = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
+                match &self.variation {
+                    None => nominal,
+                    // Robust mode: the cached value *is* the p95 Monte
+                    // Carlo projection (the variation key in the scenario
+                    // is what makes that sound).  The MC fan-out runs
+                    // serially here — candidates are already spread over
+                    // the worker pool, and sample order is fixed, so the
+                    // projection is identical for any `--workers`.
+                    Some(model) => {
+                        robust_evaluate(self.ctx, design, &nominal, model, 1).p95
+                    }
+                }
             }
         };
         if self.cache.insert(key, scores) {
@@ -301,6 +341,47 @@ mod tests {
         warmed.score(&d1);
         assert_eq!(warmed.cache_hits(), 1);
         assert_eq!(warmed.warm_hits(), 2);
+    }
+
+    #[test]
+    fn robust_mode_projects_p95_and_sigma_zero_is_identity() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 6);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let nominal = Problem::new(&ctx, Mode::Pt).score(&d);
+
+        // sigma = 0 disables the subsystem: same key, same bits.
+        let off = crate::variation::VariationConfig {
+            sigma: 0.0,
+            ..crate::variation::VariationConfig::default()
+        };
+        let p_off = Problem::new(&ctx, Mode::Pt).with_variation(&off);
+        assert!(p_off.scenario.variation.is_none());
+        assert!(p_off.variation_model().is_none());
+        let s_off = p_off.score(&d);
+        assert_eq!(s_off.lat.to_bits(), nominal.lat.to_bits());
+        assert_eq!(s_off.tmax.to_bits(), nominal.tmax.to_bits());
+
+        // Active variation keys the scenario and pessimises the tail:
+        // p95 latency can only stretch (perf factor >= 1) and the load
+        // objectives are untouched.
+        let on = crate::variation::VariationConfig::default();
+        let p_on = Problem::new(&ctx, Mode::Pt).with_variation(&on);
+        assert!(p_on.scenario.variation.is_some());
+        let s_on = p_on.score(&d);
+        assert!(s_on.lat >= nominal.lat);
+        assert_eq!(s_on.umean.to_bits(), nominal.umean.to_bits());
+        assert_eq!(s_on.usigma.to_bits(), nominal.usigma.to_bits());
+        assert_eq!(p_on.eval_count(), 1);
+        // Re-probe replays the cached projection.
+        let replay = p_on.score(&d);
+        assert_eq!(replay, s_on);
+        assert_eq!(p_on.eval_count(), 1);
     }
 
     #[test]

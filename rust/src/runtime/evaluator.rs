@@ -173,9 +173,68 @@ impl Evaluator {
 // Evaluation memoization
 // ---------------------------------------------------------------------------
 
+/// The Monte Carlo variation component of a scenario (DESIGN.md §12.3):
+/// everything that determines a *robust* evaluation's scores beyond the
+/// nominal scenario.  Present only when variation is enabled — nominal
+/// evaluations carry `None`, so their keys (and serialized snapshot
+/// lines) are unchanged, and a robust score can never be replayed for a
+/// nominal probe or vice versa.
+///
+/// `sigma`/`tier_shift` are stored as IEEE-754 bit patterns: the key must
+/// be `Eq + Hash`, and bit equality is exactly the right notion — two
+/// configurations score identically iff their parameters are the same
+/// floats.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct VariationKey {
+    sigma_bits: u64,
+    tier_shift_bits: u64,
+    /// Monte Carlo samples aggregated per evaluation.
+    pub mc_samples: u32,
+    /// Seed of the Monte Carlo sample streams.
+    pub mc_seed: u64,
+}
+
+impl VariationKey {
+    /// Key of an active variation configuration; `None` when the
+    /// configuration is disabled (`sigma == 0`), which is what makes
+    /// `--variation-sigma 0` bit-identical to the nominal path.
+    pub fn from_config(cfg: &crate::variation::VariationConfig) -> Option<VariationKey> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(VariationKey {
+            sigma_bits: cfg.sigma.to_bits(),
+            tier_shift_bits: cfg.tier_shift.to_bits(),
+            mc_samples: cfg.samples as u32,
+            mc_seed: cfg.seed,
+        })
+    }
+
+    /// Build a key from raw field values (the snapshot loader).
+    pub fn from_parts(sigma: f64, tier_shift: f64, mc_samples: u32, mc_seed: u64) -> VariationKey {
+        VariationKey {
+            sigma_bits: sigma.to_bits(),
+            tier_shift_bits: tier_shift.to_bits(),
+            mc_samples,
+            mc_seed,
+        }
+    }
+
+    /// Within-tier random sigma.
+    pub fn sigma(&self) -> f64 {
+        f64::from_bits(self.sigma_bits)
+    }
+
+    /// Systematic per-tier shift.
+    pub fn tier_shift(&self) -> f64 {
+        f64::from_bits(self.tier_shift_bits)
+    }
+}
+
 /// The evaluation *scenario*: everything besides the design itself that the
-/// objective scores depend on — workload, technology, and the NoC fabric
-/// configuration (DESIGN.md §1.3).
+/// objective scores depend on — workload, technology, the NoC fabric
+/// configuration (DESIGN.md §1.3), and the Monte Carlo variation
+/// configuration when robust scoring is active (DESIGN.md §12.3).
 ///
 /// Two evaluations may share cached [`Scores`] only when both their design
 /// keys and their scenario keys match; this is what keeps the cache safe if
@@ -192,6 +251,8 @@ pub struct ScenarioKey {
     pub vcs: u16,
     /// VC buffer depth [flits].
     pub vc_depth: u16,
+    /// Monte Carlo variation configuration; `None` for nominal scoring.
+    pub variation: Option<VariationKey>,
 }
 
 impl ScenarioKey {
@@ -204,7 +265,15 @@ impl ScenarioKey {
             windows: windows as u16,
             vcs: cfg.vcs as u16,
             vc_depth: cfg.vc_depth as u16,
+            variation: None,
         }
+    }
+
+    /// The same scenario with a variation component attached (`None`
+    /// when the configuration is disabled — see [`VariationKey`]).
+    pub fn with_variation(mut self, variation: Option<VariationKey>) -> Self {
+        self.variation = variation;
+        self
     }
 }
 
@@ -213,7 +282,11 @@ impl ScenarioKey {
 /// changes — a different objective definition, a different `DesignKey`
 /// canonicalisation, or new scenario determinants — so stale snapshots are
 /// skipped on load instead of replaying wrong scores.
-pub const CACHE_SCHEMA_VERSION: u64 = 1;
+///
+/// v2: the scenario gained its optional [`VariationKey`] component — a v1
+/// reader would silently strip a robust line's variation field and replay
+/// p95 scores for a nominal probe, so v1 snapshots are retired wholesale.
+pub const CACHE_SCHEMA_VERSION: u64 = 2;
 
 /// Full cache key: canonical design encoding plus the evaluation scenario.
 ///
@@ -441,6 +514,20 @@ mod cache_tests {
         let other_fabric = with_scenario(&|s| s.vcs = 1);
         assert!(cache.get(&other_fabric).is_none());
 
+        // A robust (variation-keyed) evaluation of the same design under
+        // the same workload must never replay the nominal scores...
+        let robust = with_scenario(&|s| {
+            s.variation = Some(VariationKey::from_parts(0.05, 0.03, 16, 1))
+        });
+        assert!(cache.get(&robust).is_none());
+        cache.insert(robust.clone(), scores(9.0));
+        // ...nor leak back: nominal probes still see the nominal entry,
+        // and a different sigma is a different robust entry.
         assert_eq!(cache.get(&base).unwrap(), scores(1.0));
+        let other_sigma = with_scenario(&|s| {
+            s.variation = Some(VariationKey::from_parts(0.10, 0.03, 16, 1))
+        });
+        assert!(cache.get(&other_sigma).is_none());
+        assert_eq!(cache.get(&robust).unwrap(), scores(9.0));
     }
 }

@@ -8,4 +8,6 @@ pub mod client;
 pub mod evaluator;
 
 pub use client::{literal_f32, LoadedComputation, Runtime};
-pub use evaluator::{dims, EvalCache, EvalKey, Evaluator, MooBatch, MooScores, ScenarioKey};
+pub use evaluator::{
+    dims, EvalCache, EvalKey, Evaluator, MooBatch, MooScores, ScenarioKey, VariationKey,
+};

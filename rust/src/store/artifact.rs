@@ -15,8 +15,9 @@ use crate::coordinator::campaign::{
 use crate::opt::amosa::AmosaIter;
 use crate::opt::moo_stage::IterRecord;
 use crate::opt::{Mode, ParetoSet, Solution};
-use crate::runtime::evaluator::ScenarioKey;
+use crate::runtime::evaluator::{ScenarioKey, VariationKey};
 use crate::util::json::Json;
+use crate::variation::{RobustEt, VariationConfig};
 
 /// Version of the leg-artifact schema.  Bump on any breaking layout change;
 /// the loader refuses mismatched artifacts (they are recomputed, never
@@ -112,21 +113,55 @@ pub fn pareto_from_json(j: &Json) -> Option<ParetoSet> {
     })
 }
 
-/// Validated candidate -> `{"design": ..., "et": x, "temp_c": y}`.
+/// Validated candidate -> `{"design": ..., "et": x, "temp_c": y}` plus a
+/// `"robust"` Monte Carlo summary when the leg ran under variation.
 pub fn validated_json(v: &Validated) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("design", design_json(&v.design)),
         ("et", Json::num(v.et)),
         ("temp_c", Json::num(v.temp_c)),
-    ])
+    ];
+    if let Some(r) = &v.robust {
+        fields.push(("robust", robust_et_json(r)));
+    }
+    Json::obj(fields)
 }
 
 /// Parse a candidate serialized by [`validated_json`].
 pub fn validated_from_json(j: &Json) -> Option<Validated> {
+    let robust = match j.get("robust") {
+        Some(r) => Some(robust_et_from_json(r)?),
+        None => None,
+    };
     Some(Validated {
         design: design_from_json(j.get("design")?)?,
         et: j.get("et")?.as_f64()?,
         temp_c: j.get("temp_c")?.as_f64()?,
+        robust,
+    })
+}
+
+/// RobustEt -> JSON (per-candidate Monte Carlo summary).
+pub fn robust_et_json(r: &RobustEt) -> Json {
+    Json::obj(vec![
+        ("mean_et", Json::num(r.mean_et)),
+        ("p50_et", Json::num(r.p50_et)),
+        ("p95_edp", Json::num(r.p95_edp)),
+        ("p95_et", Json::num(r.p95_et)),
+        ("samples", Json::num(r.samples as f64)),
+        ("timing_yield", Json::num(r.timing_yield)),
+    ])
+}
+
+/// Parse a summary serialized by [`robust_et_json`].
+pub fn robust_et_from_json(j: &Json) -> Option<RobustEt> {
+    Some(RobustEt {
+        samples: j.get("samples")?.as_u64()? as u32,
+        mean_et: j.get("mean_et")?.as_f64()?,
+        p50_et: j.get("p50_et")?.as_f64()?,
+        p95_et: j.get("p95_et")?.as_f64()?,
+        p95_edp: j.get("p95_edp")?.as_f64()?,
+        timing_yield: j.get("timing_yield")?.as_f64()?,
     })
 }
 
@@ -190,7 +225,11 @@ pub struct LegSpec {
 }
 
 impl LegSpec {
-    /// Build the spec for a leg about to run in `world`.
+    /// Build the spec for a leg about to run in `world`.  An enabled
+    /// `variation` configuration joins the scenario (robust legs have
+    /// their own identity); a disabled one (`sigma == 0`) is spec-
+    /// identical to `None`, so `--variation-sigma 0` replays nominal
+    /// artifacts.
     pub fn new(
         world: &LegWorld,
         mode: Mode,
@@ -198,7 +237,9 @@ impl LegSpec {
         selection: Selection,
         effort: &Effort,
         opt_seed: u64,
+        variation: Option<&VariationConfig>,
     ) -> LegSpec {
+        let vkey = variation.and_then(VariationKey::from_config);
         LegSpec {
             bench: world.profile.name.to_string(),
             tech: world.tech.tech,
@@ -212,7 +253,8 @@ impl LegSpec {
                 world.profile.name,
                 world.tech.tech.name(),
                 world.trace.windows.len(),
-            ),
+            )
+            .with_variation(vkey),
         }
     }
 
@@ -220,8 +262,21 @@ impl LegSpec {
     /// hash over every identity field.  Doubles as the artifact file name
     /// (`legs/<id>.json`).
     pub fn leg_id(&self) -> String {
+        // Nominal scenarios keep the historical canonical string (their
+        // IDs — and therefore stored artifacts — stay valid); a variation
+        // component appends its four key fields.
+        let variation = match &self.scenario.variation {
+            None => String::new(),
+            Some(v) => format!(
+                "|var:{},{},{},{}",
+                v.sigma(),
+                v.tier_shift(),
+                v.mc_samples,
+                v.mc_seed
+            ),
+        };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}{}",
             self.bench,
             self.tech.name(),
             self.mode.name(),
@@ -234,6 +289,7 @@ impl LegSpec {
             self.scenario.windows,
             self.scenario.vcs,
             self.scenario.vc_depth,
+            variation,
         );
         format!(
             "{}-{}-{}-{}-{:016x}",
@@ -278,18 +334,28 @@ impl LegSpec {
 }
 
 /// ScenarioKey -> JSON (shared by leg specs and cache-snapshot lines).
+/// The `variation` key is present only for robust scenarios, so nominal
+/// lines serialize exactly as they always have.
 pub fn scenario_json(s: &ScenarioKey) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("tech", Json::str(s.tech)),
         ("vc_depth", Json::num(s.vc_depth as f64)),
         ("vcs", Json::num(s.vcs as f64)),
         ("windows", Json::num(s.windows as f64)),
         ("workload", Json::str(&s.workload)),
-    ])
+    ];
+    if let Some(v) = &s.variation {
+        fields.push(("variation", variation_key_json(v)));
+    }
+    Json::obj(fields)
 }
 
 /// Parse a scenario serialized by [`scenario_json`].
 pub fn scenario_from_json(j: &Json) -> Option<ScenarioKey> {
+    let variation = match j.get("variation") {
+        Some(v) => Some(variation_key_from_json(v)?),
+        None => None,
+    };
     Some(ScenarioKey {
         workload: j.get("workload")?.as_str()?.to_string(),
         // Round-trip through `Tech` to recover the &'static str the key
@@ -298,7 +364,30 @@ pub fn scenario_from_json(j: &Json) -> Option<ScenarioKey> {
         windows: j.get("windows")?.as_u64()? as u16,
         vcs: j.get("vcs")?.as_u64()? as u16,
         vc_depth: j.get("vc_depth")?.as_u64()? as u16,
+        variation,
     })
+}
+
+/// VariationKey -> JSON.  `sigma`/`tier_shift` are finite f64s and
+/// `util::json` round-trips those exactly; the seed follows the decimal-
+/// string rule every other u64 seed in the store uses.
+pub fn variation_key_json(v: &VariationKey) -> Json {
+    Json::obj(vec![
+        ("mc_samples", Json::num(v.mc_samples as f64)),
+        ("mc_seed", Json::str(&v.mc_seed.to_string())),
+        ("sigma", Json::num(v.sigma())),
+        ("tier_shift", Json::num(v.tier_shift())),
+    ])
+}
+
+/// Parse a key serialized by [`variation_key_json`].
+pub fn variation_key_from_json(j: &Json) -> Option<VariationKey> {
+    Some(VariationKey::from_parts(
+        j.get("sigma")?.as_f64()?,
+        j.get("tier_shift")?.as_f64()?,
+        j.get("mc_samples")?.as_u64()? as u32,
+        j.get("mc_seed")?.as_str()?.parse().ok()?,
+    ))
 }
 
 // ---------------------------------------------------------------------------
@@ -416,8 +505,28 @@ mod tests {
         let world = LegWorld::new("bp", Tech::M3d, (1u64 << 53) + 1);
         let effort = Effort::quick();
         let mut spec =
-            LegSpec::new(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 0);
+            LegSpec::new(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 0, None);
         spec.opt_seed = u64::MAX;
+        let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(LegSpec::from_json(&j).unwrap(), spec);
+    }
+
+    #[test]
+    fn robust_spec_roundtrips_with_its_variation_key() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        let mut vcfg = VariationConfig::default();
+        vcfg.seed = u64::MAX; // decimal-string rule must hold for MC seeds
+        let spec = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinP95Edp,
+            &effort,
+            7,
+            Some(&vcfg),
+        );
+        assert!(spec.scenario.variation.is_some());
         let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
         assert_eq!(LegSpec::from_json(&j).unwrap(), spec);
     }
@@ -426,20 +535,48 @@ mod tests {
     fn leg_id_is_stable_and_sensitive() {
         let world = LegWorld::new("bp", Tech::M3d, 7);
         let effort = Effort::quick();
-        let spec =
-            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 7);
+        let spec = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinEtUnderTth,
+            &effort,
+            7,
+            None,
+        );
         let id = spec.leg_id();
         assert!(id.starts_with("bp-m3d-pt-moo-stage-"));
         // Same inputs -> same id.
-        let again =
-            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 7);
+        let again = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinEtUnderTth,
+            &effort,
+            7,
+            None,
+        );
         assert_eq!(id, again.leg_id());
         // Any identity knob changes the id.
-        let sel =
-            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtTempProduct, &effort, 7);
+        let sel = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinEtTempProduct,
+            &effort,
+            7,
+            None,
+        );
         assert_ne!(id, sel.leg_id());
-        let seed =
-            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 8);
+        let seed = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinEtUnderTth,
+            &effort,
+            8,
+            None,
+        );
         assert_ne!(id, seed.leg_id());
         let mut other_effort = Effort::quick();
         other_effort.stage.max_iters += 1;
@@ -450,6 +587,7 @@ mod tests {
             Selection::MinEtUnderTth,
             &other_effort,
             7,
+            None,
         );
         assert_ne!(id, eff.leg_id());
         // Workers are NOT identity.
@@ -460,7 +598,39 @@ mod tests {
             Selection::MinEtUnderTth,
             &effort.clone().with_workers(8),
             7,
+            None,
         );
         assert_eq!(id, w.leg_id());
+    }
+
+    #[test]
+    fn variation_is_leg_identity_and_sigma_zero_is_nominal() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        let mk = |v: Option<&VariationConfig>| {
+            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7, v)
+                .leg_id()
+        };
+        let nominal = mk(None);
+        let robust = mk(Some(&VariationConfig::default()));
+        assert_ne!(nominal, robust, "robust legs need their own artifacts");
+        // Every variation knob is identity.
+        let mut sigma = VariationConfig::default();
+        sigma.sigma = 0.08;
+        assert_ne!(robust, mk(Some(&sigma)));
+        let mut samples = VariationConfig::default();
+        samples.samples = 32;
+        assert_ne!(robust, mk(Some(&samples)));
+        let mut mc_seed = VariationConfig::default();
+        mc_seed.seed = 9;
+        assert_ne!(robust, mk(Some(&mc_seed)));
+        let mut shift = VariationConfig::default();
+        shift.tier_shift = 0.05;
+        assert_ne!(robust, mk(Some(&shift)));
+        // sigma = 0 disables the subsystem: spec-identical to nominal, so
+        // `--variation-sigma 0` replays nominal artifacts byte-for-byte.
+        let mut off = VariationConfig::default();
+        off.sigma = 0.0;
+        assert_eq!(nominal, mk(Some(&off)));
     }
 }

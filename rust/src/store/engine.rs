@@ -27,6 +27,7 @@ use crate::coordinator::campaign::{
 use crate::eval::objectives::Scores;
 use crate::opt::Mode;
 use crate::runtime::evaluator::EvalKey;
+use crate::variation::VariationConfig;
 
 use super::artifact::{self, LegSpec};
 use super::run_store::RunStore;
@@ -69,6 +70,10 @@ pub struct Engine {
     force: bool,
     /// Snapshot loaded at open; immutable for the engine's lifetime.
     warm: Arc<HashMap<EvalKey, Scores>>,
+    /// Robust-mode variation configuration applied to every leg this
+    /// engine runs (`--robust`); a disabled configuration (`sigma == 0`)
+    /// behaves exactly like `None`.
+    variation: Option<VariationConfig>,
     shared: Mutex<Shared>,
 }
 
@@ -80,8 +85,19 @@ impl Engine {
             store: None,
             force: false,
             warm: Arc::new(HashMap::new()),
+            variation: None,
             shared: Mutex::new(Shared::default()),
         }
+    }
+
+    /// Builder-style robust mode: every leg run by this engine scores
+    /// under `variation` (see `Problem::with_variation`).  Robust legs
+    /// have their own deterministic IDs — the variation key is part of
+    /// the leg spec's scenario — so robust and nominal artifacts coexist
+    /// in one run directory without colliding.
+    pub fn with_variation(mut self, variation: Option<VariationConfig>) -> Engine {
+        self.variation = variation;
+        self
     }
 
     /// Open a run directory for resumable execution: stored legs replay,
@@ -125,6 +141,7 @@ impl Engine {
             store: Some(store),
             force,
             warm: Arc::new(warm),
+            variation: None,
             shared: Mutex::new(Shared { known, summaries: Vec::new() }),
         })
     }
@@ -147,13 +164,15 @@ impl Engine {
         effort: &Effort,
         seed: u64,
     ) -> LegResult {
+        let variation = self.variation.as_ref();
         let Some(store) = &self.store else {
-            let (leg, _) = run_leg_warm(world, mode, algo, selection, effort, seed, None);
+            let (leg, _) =
+                run_leg_warm(world, mode, algo, selection, effort, seed, None, variation);
             self.push_summary(String::new(), &leg);
             return leg;
         };
 
-        let spec = LegSpec::new(world, mode, algo, selection, effort, seed);
+        let spec = LegSpec::new(world, mode, algo, selection, effort, seed, variation);
         let id = spec.leg_id();
 
         if !self.force {
@@ -172,8 +191,16 @@ impl Engine {
             }
         }
 
-        let (leg, export) =
-            run_leg_warm(world, mode, algo, selection, effort, seed, Some(self.warm.clone()));
+        let (leg, export) = run_leg_warm(
+            world,
+            mode,
+            algo,
+            selection,
+            effort,
+            seed,
+            Some(self.warm.clone()),
+            variation,
+        );
 
         if let Err(e) = store.save_leg(&id, &artifact::leg_json(&leg, &spec)) {
             crate::log_warn!("leg {id}: artifact write failed: {e}");

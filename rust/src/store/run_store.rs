@@ -354,6 +354,45 @@ mod tests {
     }
 
     #[test]
+    fn variation_keyed_entries_roundtrip_beside_nominal_ones() {
+        // Robust (variation-keyed) and nominal entries for the same
+        // design share a snapshot without collapsing into one key.
+        use crate::runtime::evaluator::VariationKey;
+        let store = tmp_store("variation");
+        let (key, s) = entry(1);
+        let robust_key = EvalKey {
+            design: key.design.clone(),
+            scenario: std::sync::Arc::new(
+                (*key.scenario)
+                    .clone()
+                    .with_variation(Some(VariationKey::from_parts(0.05, 0.03, 16, u64::MAX))),
+            ),
+        };
+        let robust_scores = Scores { lat: 9.0, umean: s.umean, usigma: s.usigma, tmax: 11.0 };
+        let entries = vec![(key.clone(), s), (robust_key.clone(), robust_scores)];
+        store.save_cache(entries.iter().map(|(k, v)| (k, v))).unwrap();
+
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!((loaded.len(), skipped), (2, 0));
+        assert_eq!(loaded.get(&key), Some(&s));
+        assert_eq!(loaded.get(&robust_key), Some(&robust_scores));
+        let v = loaded
+            .keys()
+            .find_map(|k| k.scenario.variation.clone())
+            .expect("variation key survived");
+        assert_eq!(v.sigma(), 0.05);
+        assert_eq!(v.tier_shift(), 0.03);
+        assert_eq!((v.mc_samples, v.mc_seed), (16, u64::MAX));
+
+        // Deterministic re-save, exactly like nominal-only snapshots.
+        let first = std::fs::read_to_string(store.root().join("cache.jsonl")).unwrap();
+        store.save_cache(loaded.iter()).unwrap();
+        let second = std::fs::read_to_string(store.root().join("cache.jsonl")).unwrap();
+        assert_eq!(first, second);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
     fn append_cache_is_incremental_and_tolerates_torn_tail() {
         let store = tmp_store("append");
         let e: Vec<(EvalKey, Scores)> = (1..=3).map(entry).collect();
@@ -400,7 +439,8 @@ mod tests {
         // Append a stale-version line and a corrupt line.
         let path = store.root().join("cache.jsonl");
         let mut raw = std::fs::read_to_string(&path).unwrap();
-        raw.push_str(&format!("{}\n", raw.lines().next().unwrap().replace("\"v\":1", "\"v\":0")));
+        let current = format!("\"v\":{CACHE_SCHEMA_VERSION}");
+        raw.push_str(&format!("{}\n", raw.lines().next().unwrap().replace(&current, "\"v\":0")));
         raw.push_str("{not json\n");
         std::fs::write(&path, raw).unwrap();
 

@@ -151,19 +151,19 @@ impl StageSpec {
 }
 
 /// The nine GPU pipeline blocks of Fig 3, calibrated so the *planar* STA
-/// profile reproduces Fig 6's shape (SIMD slowest, LSU within 2%, the rest
-/// 60-90% of the clock).  Wire-length scales differ per block: datapath
-/// blocks (SIMD/SIMF/LSU) carry long vector-lane and operand-bus routes,
-/// control blocks are logic-dominated — this is what differentiates their
-/// M3D gains (8-14%).
+/// profile reproduces Fig 6's shape (SIMD slowest, LSU and SIMF next at
+/// ~90%, the rest 50-80% of the clock).  Wire-length scales differ per
+/// block: datapath blocks (SIMD/SIMF/LSU) carry long vector-lane and
+/// operand-bus routes, control blocks are logic-dominated — this is what
+/// differentiates their M3D gains (8-14%).
 pub fn gpu_stage_specs() -> Vec<StageSpec> {
     vec![
         StageSpec { name: "fetch",    depth: 22, mean_net_um: 27.0, n_paths: 40, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 38.0 },
-        StageSpec { name: "wavepool", depth: 20, mean_net_um: 19.0, n_paths: 40, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 30.0 },
+        StageSpec { name: "wavepool", depth: 21, mean_net_um: 21.0, n_paths: 40, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 30.0 },
         StageSpec { name: "decode",   depth: 19, mean_net_um: 22.0, n_paths: 40, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 26.0 },
         StageSpec { name: "issue",    depth: 23, mean_net_um: 26.0, n_paths: 40, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 34.0 },
         StageSpec { name: "salu",     depth: 25, mean_net_um: 24.0, n_paths: 40, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 40.0 },
-        StageSpec { name: "simd",     depth: 27, mean_net_um: 30.0, n_paths: 60, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 120.0 },
+        StageSpec { name: "simd",     depth: 30, mean_net_um: 30.0, n_paths: 60, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 120.0 },
         StageSpec { name: "simf",     depth: 26, mean_net_um: 30.0, n_paths: 60, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 110.0 },
         StageSpec { name: "lsu",      depth: 23, mean_net_um: 54.0, n_paths: 50, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 70.0 },
         StageSpec { name: "rf",       depth: 16, mean_net_um: 28.0, n_paths: 40, branch_frac: 0.02, redundant_frac: 0.01, block_cap_pf: 90.0 },

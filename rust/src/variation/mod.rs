@@ -1,0 +1,30 @@
+//! Inter-tier process-variation subsystem (DESIGN.md §12).
+//!
+//! Turns the deterministic evaluation pipeline into a distribution: a
+//! per-tier systematic component models M3D's sequential-fabrication
+//! degradation of upper tiers (TSV stacks get none), a spatially
+//! correlated within-tier Gaussian field models within-die variation, and
+//! a Monte Carlo harness fans sampled chip instances over `--workers`,
+//! derating the STA-measured delay response and per-tile leakage, then
+//! re-running the perf/thermal objectives into a [`RobustScore`]
+//! (mean / p50 / p95, timing yield at the fmax target).
+//!
+//! * [`model`] — [`VariationConfig`] (the `--robust` knobs),
+//!   [`VariationModel`] (systematic shifts + measured delay response);
+//! * [`sample`] — deterministic per-(seed, index) [`VariationMap`]s;
+//! * [`monte_carlo`] — the worker-fanned harness and aggregations.
+//!
+//! Integration: `opt::Problem::with_variation` switches scoring to the
+//! p95 projection, `runtime::evaluator::VariationKey` extends the eval
+//! cache key so robust and nominal entries never collide, and the run
+//! store persists per-candidate [`RobustEt`] summaries in leg artifacts.
+
+pub mod model;
+pub mod monte_carlo;
+pub mod sample;
+
+pub use model::{VariationConfig, VariationModel};
+pub use monte_carlo::{
+    mc_effects, robust_et, robust_evaluate, robust_score, RobustEt, RobustScore, SampleEffects,
+};
+pub use sample::{sample_map, VariationMap};

@@ -1,0 +1,295 @@
+//! Inter-tier process-variation model for sequential (M3D) integration.
+//!
+//! M3D's sequential fabrication grows upper device tiers at a reduced
+//! thermal budget, degrading their transistors relative to the base tier:
+//! a systematic threshold-voltage shift per tier plus a spatially
+//! correlated within-tier random component ("Inter-Tier Process
+//! Variation-Aware Monolithic 3D NoC Architectures", PAPERS.md).  TSV
+//! stacks bond independently fabricated dies, so they carry only the
+//! within-die random component — which is exactly what sharpens the
+//! M3D-vs-TSV comparison under variation.
+//!
+//! The per-device disturbance is a single scalar `delta` (the fractional
+//! Vth/drive shift).  Two derating responses map it onto the models:
+//!
+//! * **delay** — gate intrinsic delays, drive resistance and repeater
+//!   delay all scale with `(1 + delta)`, and the response of a *block* is
+//!   measured by re-timing the calibration GPU critical stage through
+//!   `timing::sta` with the derated process and netlist (repeater
+//!   insertion re-solved per point) rather than assumed — the wire-RC
+//!   component does not derate, which is what keeps the measured curve
+//!   slightly below `1 + delta` (see [`DelayResponse`]);
+//! * **leakage** — subthreshold current moves exponentially opposite to
+//!   the Vth shift: `leak_factor(delta) = exp(-LEAK_PER_DELTA * delta)`
+//!   (slow corners leak less, fast corners leak more — the fast-leaky
+//!   corner is what degrades the thermal tail).
+
+use crate::arch::geometry::Geometry;
+use crate::config::{Tech, TechParams};
+use crate::timing::m3d::{time_block_m3d, M3dConfig};
+use crate::timing::netlist::{gpu_stage_specs, Process};
+use crate::timing::sta::time_block_planar;
+
+use super::sample::{sample_map, VariationMap};
+
+/// Leakage response steepness: `leak_factor = exp(-LEAK_PER_DELTA * delta)`
+/// (a +10% drive-side slowdown roughly -22% leakage, and symmetrically a
+/// fast corner leaks more).
+pub const LEAK_PER_DELTA: f64 = 2.5;
+
+/// Timing-yield target: a Monte Carlo sample passes when its achieved
+/// fmax is at least this fraction of the nominal (sign-off) clock — a
+/// 12% variation guardband.  At the default `sigma = 0.05` this
+/// separates the technologies the way the inter-tier-variation
+/// literature reports: TSV stacks pass almost always, M3D passes mostly
+/// when the DSE keeps cores off the degraded upper tiers.
+pub const FMAX_MARGIN: f64 = 0.88;
+
+/// Yield floor for the robust winner selection: a candidate "meets yield"
+/// when at least this fraction of samples pass the [`FMAX_MARGIN`] check.
+pub const MIN_YIELD: f64 = 0.5;
+
+/// Netlist seed the delay response is measured at — the same calibration
+/// seed that anchors the Fig 6 projection and the `TechParams` constants.
+const CALIBRATION_SEED: u64 = 42;
+
+/// Monte Carlo variation configuration (the `--robust` CLI knobs).
+///
+/// `sigma == 0` disables the subsystem entirely: no variation key is
+/// attached to evaluations and every result is bit-identical to the
+/// nominal path (the acceptance contract for `--variation-sigma 0`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariationConfig {
+    /// Standard deviation of the within-tier random `delta` field.
+    pub sigma: f64,
+    /// Systematic `delta` shift per sequential tier above the base
+    /// (applied to M3D only; TSV dies are fabricated independently).
+    pub tier_shift: f64,
+    /// Monte Carlo samples per evaluation.
+    pub samples: usize,
+    /// Seed of the Monte Carlo sample streams (independent of the
+    /// optimizer and trace seeds).
+    pub seed: u64,
+}
+
+impl Default for VariationConfig {
+    fn default() -> Self {
+        VariationConfig { sigma: 0.05, tier_shift: 0.03, samples: 16, seed: 1 }
+    }
+}
+
+impl VariationConfig {
+    /// Whether the model is active (`sigma > 0`); see the type docs for
+    /// the `sigma == 0` nominal contract.
+    pub fn enabled(&self) -> bool {
+        self.sigma > 0.0
+    }
+}
+
+/// Piecewise-linear block-delay response `delta -> delay factor`, measured
+/// through the repeater-aware STA instead of assumed: gate delays and
+/// drive resistance derate with `(1 + delta)` while the wire RC itself
+/// does not, and the optimal repeater insertion is re-solved per point —
+/// so the block response tracks `1 + delta` from below.
+#[derive(Debug, Clone)]
+pub struct DelayResponse {
+    /// `(delta, critical_delay / nominal_critical_delay)` knots, sorted
+    /// by `delta`.  The range covers the default configuration's
+    /// reachable disturbances with headroom (systematic max + several
+    /// sigma); beyond it the response clamps to the end knots.
+    knots: Vec<(f64, f64)>,
+}
+
+impl DelayResponse {
+    /// Knot positions the response is measured at.
+    const DELTAS: [f64; 13] = [
+        -0.40, -0.30, -0.20, -0.15, -0.10, -0.05, 0.0, 0.05, 0.10, 0.15, 0.20, 0.30, 0.40,
+    ];
+
+    /// Measure the response for one technology by re-timing the
+    /// calibration critical stage (the SIMD block) with every
+    /// transistor-limited delay — gate intrinsics, gate/repeater drive —
+    /// scaled by `(1 + delta)`.
+    fn measure(tech: Tech) -> DelayResponse {
+        let spec = gpu_stage_specs()
+            .into_iter()
+            .find(|s| s.name == "simd")
+            .expect("simd stage spec");
+        let nl = spec.generate(CALIBRATION_SEED);
+        let crit = |delta: f64| {
+            let base = Process::default();
+            let proc_ = Process {
+                r_buf: base.r_buf * (1.0 + delta),
+                r_gate: base.r_gate * (1.0 + delta),
+                d_buf: base.d_buf * (1.0 + delta),
+                ..base
+            };
+            // Gate intrinsic delays live in the netlist, not the Process.
+            let mut derated = nl.clone();
+            for path in &mut derated.paths {
+                for g in &mut path.gate_delays {
+                    *g *= 1.0 + delta;
+                }
+            }
+            match tech {
+                Tech::M3d => {
+                    time_block_m3d(&proc_, &derated, &M3dConfig::default()).critical_ps
+                }
+                Tech::Tsv => time_block_planar(&proc_, &derated).critical_ps,
+            }
+        };
+        let nominal = crit(0.0);
+        let knots = Self::DELTAS
+            .iter()
+            .map(|&d| (d, crit(d) / nominal))
+            .collect();
+        DelayResponse { knots }
+    }
+
+    /// Delay factor for an arbitrary `delta` (linear interpolation,
+    /// clamped to the measured range).
+    pub fn factor(&self, delta: f64) -> f64 {
+        let first = self.knots.first().expect("non-empty response");
+        let last = self.knots.last().expect("non-empty response");
+        if delta <= first.0 {
+            return first.1;
+        }
+        if delta >= last.0 {
+            return last.1;
+        }
+        for w in self.knots.windows(2) {
+            let (d0, f0) = w[0];
+            let (d1, f1) = w[1];
+            if delta <= d1 {
+                let t = (delta - d0) / (d1 - d0);
+                return f0 + t * (f1 - f0);
+            }
+        }
+        last.1
+    }
+}
+
+/// The process-variation model bound to one (technology, geometry): the
+/// per-tier systematic shifts, the measured delay response, and the grid
+/// shape the correlated field is sampled on.
+#[derive(Debug, Clone)]
+pub struct VariationModel {
+    /// The configuration this model was built from.
+    pub cfg: VariationConfig,
+    /// Logic tiers of the placement grid.
+    pub tiers: usize,
+    /// Tile rows per tier.
+    pub rows: usize,
+    /// Tile columns per tier.
+    pub cols: usize,
+    /// Systematic `delta` per tier (`0` for every TSV tier, `t *
+    /// tier_shift` for M3D tier `t` — sequential growth degrades upward).
+    pub systematic: Vec<f64>,
+    /// Measured `delta -> delay factor` response.
+    pub response: DelayResponse,
+    /// The `cfg.samples` Monte Carlo maps, precomputed once: a map is a
+    /// pure function of `(cfg.seed, index)` and independent of the
+    /// design, so the DSE hot path reuses one set for every candidate
+    /// instead of re-sampling per evaluation.
+    maps: Vec<VariationMap>,
+}
+
+impl VariationModel {
+    /// Build the model for one technology and placement grid.
+    pub fn new(cfg: &VariationConfig, tech: &TechParams, geo: &Geometry) -> VariationModel {
+        let systematic = (0..geo.tiers)
+            .map(|t| match tech.tech {
+                Tech::M3d => cfg.tier_shift * t as f64,
+                Tech::Tsv => 0.0,
+            })
+            .collect();
+        let mut model = VariationModel {
+            cfg: cfg.clone(),
+            tiers: geo.tiers,
+            rows: geo.rows,
+            cols: geo.cols,
+            systematic,
+            response: DelayResponse::measure(tech.tech),
+            maps: Vec::new(),
+        };
+        model.maps = (0..model.cfg.samples as u64).map(|k| sample_map(&model, k)).collect();
+        model
+    }
+
+    /// The `k`-th Monte Carlo map: served from the precomputed set for
+    /// `k < cfg.samples`, sampled on demand beyond it (identical values
+    /// either way — maps are pure in `(cfg.seed, k)`).
+    pub fn map(&self, k: u64) -> std::borrow::Cow<'_, VariationMap> {
+        match self.maps.get(k as usize) {
+            Some(m) => std::borrow::Cow::Borrowed(m),
+            None => std::borrow::Cow::Owned(sample_map(self, k)),
+        }
+    }
+
+    /// Leakage factor for a device disturbance `delta`.
+    pub fn leak_factor(delta: f64) -> f64 {
+        (-LEAK_PER_DELTA * delta).exp()
+    }
+
+    /// Delay factor for a device disturbance `delta` (measured response).
+    pub fn delay_factor(&self, delta: f64) -> f64 {
+        self.response.factor(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+
+    fn model(tech: TechParams, cfg: &VariationConfig) -> VariationModel {
+        let arch = ArchConfig::paper();
+        let geo = Geometry::new(&arch, &tech);
+        VariationModel::new(cfg, &tech, &geo)
+    }
+
+    #[test]
+    fn m3d_upper_tiers_carry_systematic_shift_and_tsv_none() {
+        let cfg = VariationConfig::default();
+        let m3d = model(TechParams::m3d(), &cfg);
+        assert_eq!(m3d.systematic[0], 0.0, "base tier is pristine");
+        for t in 1..m3d.tiers {
+            assert!(m3d.systematic[t] > m3d.systematic[t - 1]);
+        }
+        let tsv = model(TechParams::tsv(), &cfg);
+        assert!(tsv.systematic.iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn delay_response_is_monotone_and_anchored_at_nominal() {
+        let cfg = VariationConfig::default();
+        let m = model(TechParams::m3d(), &cfg);
+        assert!((m.delay_factor(0.0) - 1.0).abs() < 1e-12);
+        let mut prev = 0.0;
+        for d in [-0.2, -0.1, 0.0, 0.07, 0.13, 0.2] {
+            let f = m.delay_factor(d);
+            assert!(f > prev, "response not monotone at {d}");
+            prev = f;
+        }
+        // Tracks 1 + delta from below: the wire-RC component does not
+        // derate, so the block response stays within [1.05, 1 + delta].
+        assert!(m.delay_factor(0.2) <= 1.2 + 1e-9);
+        assert!(m.delay_factor(0.2) > 1.05);
+        // Clamped outside the measured range.
+        assert_eq!(m.delay_factor(0.6), m.delay_factor(0.4));
+    }
+
+    #[test]
+    fn leakage_moves_opposite_to_delay() {
+        assert!((VariationModel::leak_factor(0.0) - 1.0).abs() < 1e-12);
+        assert!(VariationModel::leak_factor(0.1) < 1.0, "slow corner leaks less");
+        assert!(VariationModel::leak_factor(-0.1) > 1.0, "fast corner leaks more");
+    }
+
+    #[test]
+    fn sigma_zero_is_disabled() {
+        let cfg = VariationConfig { sigma: 0.0, ..VariationConfig::default() };
+        assert!(!cfg.enabled());
+        assert!(VariationConfig::default().enabled());
+    }
+}

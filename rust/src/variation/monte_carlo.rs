@@ -1,0 +1,324 @@
+//! Monte Carlo robustness harness: fan N sampled chip instances over the
+//! worker pool, derate the timing/power models per instance, re-run the
+//! perf/thermal objectives and aggregate the distribution.
+//!
+//! Determinism contract: sample `k` is a pure function of
+//! `(cfg.seed, k)` (`sample::sample_map`), `scope_map` returns results in
+//! input order, and the aggregation folds them in index order — so every
+//! statistic here is bit-identical for any worker count (pinned by
+//! `tests/variation.rs`).
+
+use crate::arch::design::Design;
+use crate::arch::encode::EncodeCtx;
+use crate::arch::tile::TileKind;
+use crate::eval::objectives::{thermal_power_leak_derated, Scores};
+use crate::util::stats::{mean, percentile};
+use crate::util::threadpool::scope_map;
+
+use super::model::{VariationModel, FMAX_MARGIN, MIN_YIELD};
+
+/// Per-sample derived effects of one chip instance on one design.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleEffects {
+    /// Worst block delay factor over positions holding CPU/GPU tiles —
+    /// the chip's critical path lands on a logic tile somewhere, so the
+    /// slowest core position sets the achieved clock.  Placement matters:
+    /// keeping cores off the degraded upper M3D tiers recovers yield.
+    pub worst_delay_factor: f64,
+    /// Eq. (7) stack-thermal objective under the instance's leakage map.
+    pub tmax: f64,
+    /// Mean whole-chip power [W] under the instance's leakage map.
+    pub chip_power_w: f64,
+}
+
+impl SampleEffects {
+    /// Execution-time stretch of this instance: the chip clocks at
+    /// `min(nominal, achieved)` fmax (sign-off never overclocks a fast
+    /// corner), so time scales by `max(1, worst delay factor)`.
+    pub fn perf_factor(&self) -> f64 {
+        self.worst_delay_factor.max(1.0)
+    }
+
+    /// Whether this instance meets the [`FMAX_MARGIN`] timing target.
+    pub fn meets_fmax(&self) -> bool {
+        1.0 / self.worst_delay_factor >= FMAX_MARGIN
+    }
+}
+
+/// Compute the per-sample effects of every Monte Carlo instance, fanned
+/// over `workers` threads (results in sample order regardless of count).
+pub fn mc_effects(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    model: &VariationModel,
+    workers: usize,
+) -> Vec<SampleEffects> {
+    let idxs: Vec<u64> = (0..model.cfg.samples as u64).collect();
+    scope_map(idxs, workers, |k| sample_effects(ctx, design, model, k))
+}
+
+/// Effects of the `k`-th sampled instance on one design.  The map itself
+/// is design-independent and comes precomputed from the model
+/// (`VariationModel::map`); only the placement-dependent projections are
+/// computed here.
+pub fn sample_effects(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    model: &VariationModel,
+    k: u64,
+) -> SampleEffects {
+    let map = model.map(k);
+    let mut worst = f64::MIN;
+    for pos in 0..design.n_tiles() {
+        let kind = ctx.tiles.kind(design.tile_at[pos]);
+        if kind == TileKind::Llc {
+            continue; // SRAM-dominated; core logic sets the clock
+        }
+        worst = worst.max(map.delay_factor[pos]);
+    }
+    let (tmax, chip_power_w) = thermal_power_leak_derated(ctx, design, &map.leak_factor);
+    SampleEffects { worst_delay_factor: worst, tmax, chip_power_w }
+}
+
+/// Aggregated Monte Carlo distribution of the objective scores.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustScore {
+    /// Samples aggregated.
+    pub samples: u32,
+    /// Per-objective mean over samples.
+    pub mean: Scores,
+    /// Per-objective median.
+    pub p50: Scores,
+    /// Per-objective 95th percentile (the robust optimization target).
+    pub p95: Scores,
+    /// Fraction of samples meeting the [`FMAX_MARGIN`] timing target.
+    pub timing_yield: f64,
+    /// Mean worst-position delay factor.
+    pub mean_delay_factor: f64,
+    /// 95th-percentile worst-position delay factor.
+    pub p95_delay_factor: f64,
+}
+
+impl RobustScore {
+    /// Whether the design clears the [`MIN_YIELD`] floor.
+    pub fn meets_yield(&self) -> bool {
+        self.timing_yield >= MIN_YIELD
+    }
+}
+
+/// Aggregate sampled effects against the nominal scores.
+///
+/// Per sample: `lat` stretches by the instance's perf factor (network
+/// cycles are paid at the derated clock), `tmax` is the re-run thermal
+/// objective, and `umean`/`usigma` are dimensionless load ratios that
+/// variation does not move.
+pub fn robust_score(nominal: &Scores, effects: &[SampleEffects]) -> RobustScore {
+    assert!(!effects.is_empty(), "robust_score needs at least one sample");
+    let lats: Vec<f64> = effects.iter().map(|e| nominal.lat * e.perf_factor()).collect();
+    let tmaxes: Vec<f64> = effects.iter().map(|e| e.tmax).collect();
+    let factors: Vec<f64> = effects.iter().map(|e| e.worst_delay_factor).collect();
+    let passed = effects.iter().filter(|e| e.meets_fmax()).count();
+    let with = |lat: f64, tmax: f64| Scores {
+        lat,
+        umean: nominal.umean,
+        usigma: nominal.usigma,
+        tmax,
+    };
+    RobustScore {
+        samples: effects.len() as u32,
+        mean: with(mean(&lats), mean(&tmaxes)),
+        p50: with(percentile(&lats, 50.0), percentile(&tmaxes, 50.0)),
+        p95: with(percentile(&lats, 95.0), percentile(&tmaxes, 95.0)),
+        timing_yield: passed as f64 / effects.len() as f64,
+        mean_delay_factor: mean(&factors),
+        p95_delay_factor: percentile(&factors, 95.0),
+    }
+}
+
+/// Monte Carlo evaluation of one design: sample, derate, aggregate.
+/// The objective projection the robust optimizer consumes is
+/// [`RobustScore::p95`].
+pub fn robust_evaluate(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    nominal: &Scores,
+    model: &VariationModel,
+    workers: usize,
+) -> RobustScore {
+    robust_score(nominal, &mc_effects(ctx, design, model, workers))
+}
+
+/// Execution-time / EDP distribution of a validated candidate — what the
+/// leg artifacts persist per Pareto member and the `--robust` winner
+/// selection minimises.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustEt {
+    /// Samples aggregated.
+    pub samples: u32,
+    /// Mean execution time over instances.
+    pub mean_et: f64,
+    /// Median execution time.
+    pub p50_et: f64,
+    /// 95th-percentile execution time.
+    pub p95_et: f64,
+    /// 95th-percentile energy-delay product (`chip_power * et^2`).
+    pub p95_edp: f64,
+    /// Fraction of instances meeting the [`FMAX_MARGIN`] timing target.
+    pub timing_yield: f64,
+}
+
+impl RobustEt {
+    /// Whether the candidate clears the [`MIN_YIELD`] floor.
+    pub fn meets_yield(&self) -> bool {
+        self.timing_yield >= MIN_YIELD
+    }
+}
+
+/// Robust execution-time statistics from sampled effects: `et` scales by
+/// each instance's perf factor (every term of the ET model divides by the
+/// chip clock), and EDP folds in the instance's derated mean power.
+pub fn robust_et(et_nominal: f64, effects: &[SampleEffects]) -> RobustEt {
+    assert!(!effects.is_empty(), "robust_et needs at least one sample");
+    let ets: Vec<f64> = effects.iter().map(|e| et_nominal * e.perf_factor()).collect();
+    let edps: Vec<f64> = effects
+        .iter()
+        .zip(ets.iter())
+        .map(|(e, &et)| e.chip_power_w * et * et)
+        .collect();
+    let passed = effects.iter().filter(|e| e.meets_fmax()).count();
+    RobustEt {
+        samples: effects.len() as u32,
+        mean_et: mean(&ets),
+        p50_et: percentile(&ets, 50.0),
+        p95_et: percentile(&ets, 95.0),
+        p95_edp: percentile(&edps, 95.0),
+        timing_yield: passed as f64 / effects.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{geometry::Geometry, tile::TileSet};
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::{routing::Routing, topology};
+    use crate::traffic::{benchmark, generate};
+    use crate::variation::model::VariationConfig;
+
+    struct World {
+        cfg: ArchConfig,
+        tech: TechParams,
+        geo: Geometry,
+        tiles: TileSet,
+        trace: crate::traffic::Trace,
+    }
+
+    fn world(tech: TechParams) -> World {
+        let cfg = ArchConfig::paper();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 5);
+        World { cfg, tech, geo, tiles, trace }
+    }
+
+    fn eval_robust(w: &World, vcfg: &VariationConfig, workers: usize) -> RobustScore {
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let model = VariationModel::new(vcfg, &w.tech, &w.geo);
+        let d = Design::with_identity_placement(w.cfg.n_tiles(), topology::mesh_links(&w.cfg));
+        let r = Routing::build(&d);
+        let nominal = crate::eval::objectives::evaluate(&ctx, &d, &r);
+        robust_score(&nominal, &mc_effects(&ctx, &d, &model, workers))
+    }
+
+    #[test]
+    fn distribution_brackets_the_nominal_point() {
+        let w = world(TechParams::m3d());
+        let vcfg = VariationConfig::default();
+        let r = eval_robust(&w, &vcfg, 1);
+        assert_eq!(r.samples, vcfg.samples as u32);
+        // p95 is the pessimistic tail: at least the median, and the
+        // stretch factors never shrink latency below nominal.
+        assert!(r.p95.lat >= r.p50.lat);
+        assert!(r.p95.tmax >= r.p50.tmax);
+        assert!(r.mean_delay_factor >= 1.0, "M3D systematic shift slows the chip");
+        assert!((0.0..=1.0).contains(&r.timing_yield));
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_distribution() {
+        let w = world(TechParams::m3d());
+        let vcfg = VariationConfig::default();
+        let serial = eval_robust(&w, &vcfg, 1);
+        let parallel = eval_robust(&w, &vcfg, 8);
+        assert_eq!(serial, parallel, "MC aggregation must be worker-invariant");
+    }
+
+    #[test]
+    fn tsv_yields_better_than_m3d_under_the_same_sigma() {
+        // The systematic inter-tier shift is M3D-only, so TSV's timing
+        // yield can only be better at equal sigma — the comparison the
+        // subsystem exists to sharpen.
+        let vcfg = VariationConfig { samples: 48, ..VariationConfig::default() };
+        let wm = world(TechParams::m3d());
+        let wt = world(TechParams::tsv());
+        let rm = eval_robust(&wm, &vcfg, 1);
+        let rt = eval_robust(&wt, &vcfg, 1);
+        assert!(
+            rt.timing_yield >= rm.timing_yield,
+            "tsv yield {} < m3d yield {}",
+            rt.timing_yield,
+            rm.timing_yield
+        );
+        assert!(rt.mean_delay_factor < rm.mean_delay_factor);
+    }
+
+    #[test]
+    fn lowering_cores_improves_m3d_yield_metrics() {
+        // Placement-awareness: GPUs/CPUs on the degraded top tiers must
+        // read as slower than cores kept on the pristine base tiers.
+        let w = world(TechParams::m3d());
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let model =
+            VariationModel::new(&VariationConfig { samples: 32, ..Default::default() }, &w.tech, &w.geo);
+        let links = topology::mesh_links(&w.cfg);
+        // Cores (tiles 0..48) low vs high in the stack.
+        let mut low: Vec<usize> = Vec::new();
+        low.extend(0..48);
+        low.extend(48..64);
+        let d_low = Design::new(low, links.clone());
+        let mut high: Vec<usize> = Vec::new();
+        high.extend(48..64); // LLCs on the base tier
+        high.extend(0..48); // cores pushed upward
+        let d_high = Design::new(high, links);
+        let f_low = mean(
+            &mc_effects(&ctx, &d_low, &model, 1)
+                .iter()
+                .map(|e| e.worst_delay_factor)
+                .collect::<Vec<_>>(),
+        );
+        let f_high = mean(
+            &mc_effects(&ctx, &d_high, &model, 1)
+                .iter()
+                .map(|e| e.worst_delay_factor)
+                .collect::<Vec<_>>(),
+        );
+        assert!(f_low < f_high, "low-core placement {f_low} !< high {f_high}");
+    }
+
+    #[test]
+    fn robust_et_scales_with_the_delay_tail() {
+        let effects = vec![
+            SampleEffects { worst_delay_factor: 1.00, tmax: 10.0, chip_power_w: 100.0 },
+            SampleEffects { worst_delay_factor: 1.15, tmax: 11.0, chip_power_w: 105.0 },
+            SampleEffects { worst_delay_factor: 0.95, tmax: 9.0, chip_power_w: 110.0 },
+        ];
+        let r = robust_et(2.0, &effects);
+        assert_eq!(r.samples, 3);
+        // Fast corner clamps to nominal: min et is the nominal 2.0.
+        assert!((r.p50_et - 2.0).abs() < 1e-12);
+        assert!(r.p95_et > 2.0 && r.p95_et <= 2.0 * 1.15 + 1e-12);
+        assert!(r.p95_edp > 0.0);
+        // 1.15 misses the 12% fmax guardband (1/1.15 < 0.88); the rest pass.
+        assert!((r.timing_yield - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,173 @@
+//! Deterministic variation-map sampling: one spatially-correlated `delta`
+//! field per (seed, sample index), interpolated from a coarse control grid.
+//!
+//! Within-die variation is spatially correlated (neighbouring devices share
+//! lithography and anneal conditions), so the random component is drawn on
+//! a coarse per-tier control grid and bilinearly interpolated to tile
+//! positions — adjacent tiles get similar disturbances, opposite corners
+//! are nearly independent.  Every map is a pure function of
+//! `(cfg.seed, sample_idx)` and the model; worker scheduling can never
+//! change a sample, which is what makes the Monte Carlo harness
+//! bit-identical for any `--workers` count.
+
+use crate::util::Rng;
+
+use super::model::VariationModel;
+
+/// Control points per tier edge for the correlated field (a `CTRL x CTRL`
+/// grid bilinearly interpolated over the `rows x cols` tile grid: one
+/// correlation length of roughly half the die edge).
+const CTRL: usize = 3;
+
+/// One sampled chip instance: the per-position disturbance and its two
+/// derating projections (position indexing follows `arch::Geometry`).
+#[derive(Debug, Clone)]
+pub struct VariationMap {
+    /// Raw per-position device disturbance `delta` (systematic + random).
+    pub delta: Vec<f64>,
+    /// Per-position block delay factor (measured STA response of `delta`).
+    pub delay_factor: Vec<f64>,
+    /// Per-position leakage factor (`exp(-LEAK_PER_DELTA * delta)`).
+    pub leak_factor: Vec<f64>,
+}
+
+/// Stream seed for sample `k`: SplitMix-style odd-constant mix so
+/// consecutive sample indices land in unrelated xoshiro states.
+fn sample_seed(seed: u64, sample_idx: u64) -> u64 {
+    seed ^ sample_idx
+        .wrapping_add(1)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Draw the `sample_idx`-th variation map of the model's Monte Carlo
+/// stream.  Deterministic in `(model.cfg.seed, sample_idx)` alone.
+pub fn sample_map(model: &VariationModel, sample_idx: u64) -> VariationMap {
+    let mut rng = Rng::seed_from_u64(sample_seed(model.cfg.seed, sample_idx));
+    let (tiers, rows, cols) = (model.tiers, model.rows, model.cols);
+    let n = tiers * rows * cols;
+    let mut delta = Vec::with_capacity(n);
+
+    // Fixed draw order (tier-major, then control-row-major) pins the map
+    // to the seed regardless of how it is later consumed.
+    let mut ctrl = [[0.0f64; CTRL]; CTRL];
+    for tier in 0..tiers {
+        for row in ctrl.iter_mut() {
+            for cell in row.iter_mut() {
+                *cell = model.cfg.sigma * rng.normal();
+            }
+        }
+        let sys = model.systematic[tier];
+        for r in 0..rows {
+            for c in 0..cols {
+                let fr = frac_coord(r, rows);
+                let fc = frac_coord(c, cols);
+                let (i0, wr) = split(fr);
+                let (j0, wc) = split(fc);
+                let (i1, j1) = ((i0 + 1).min(CTRL - 1), (j0 + 1).min(CTRL - 1));
+                let field = ctrl[i0][j0] * (1.0 - wr) * (1.0 - wc)
+                    + ctrl[i1][j0] * wr * (1.0 - wc)
+                    + ctrl[i0][j1] * (1.0 - wr) * wc
+                    + ctrl[i1][j1] * wr * wc;
+                delta.push(sys + field);
+            }
+        }
+    }
+
+    let delay_factor = delta.iter().map(|&d| model.delay_factor(d)).collect();
+    let leak_factor = delta.iter().map(|&d| VariationModel::leak_factor(d)).collect();
+    VariationMap { delta, delay_factor, leak_factor }
+}
+
+/// Tile coordinate mapped into control-grid space `[0, CTRL-1]`.
+fn frac_coord(i: usize, extent: usize) -> f64 {
+    if extent <= 1 {
+        0.0
+    } else {
+        i as f64 / (extent - 1) as f64 * (CTRL - 1) as f64
+    }
+}
+
+/// Split a control-space coordinate into its cell index and weight.
+fn split(f: f64) -> (usize, f64) {
+    let i = (f.floor() as usize).min(CTRL - 1);
+    (i, f - i as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::geometry::Geometry;
+    use crate::config::{ArchConfig, TechParams};
+    use crate::variation::model::VariationConfig;
+
+    fn model(tech: TechParams, cfg: VariationConfig) -> VariationModel {
+        let arch = ArchConfig::paper();
+        let geo = Geometry::new(&arch, &tech);
+        VariationModel::new(&cfg, &tech, &geo)
+    }
+
+    #[test]
+    fn maps_are_deterministic_per_seed_and_index() {
+        let m = model(TechParams::m3d(), VariationConfig::default());
+        let a = sample_map(&m, 3);
+        let b = sample_map(&m, 3);
+        assert_eq!(a.delta, b.delta);
+        let c = sample_map(&m, 4);
+        assert_ne!(a.delta, c.delta, "sample streams must differ per index");
+        let mut other = m.clone();
+        other.cfg.seed = 2;
+        let d = sample_map(&other, 3);
+        assert_ne!(a.delta, d.delta, "sample streams must differ per seed");
+    }
+
+    #[test]
+    fn neighbours_correlate_more_than_corners() {
+        // Averaged over samples, adjacent tiles' random components track
+        // each other far more closely than opposite die corners.
+        let cfg = VariationConfig { tier_shift: 0.0, ..VariationConfig::default() };
+        let m = model(TechParams::m3d(), cfg);
+        let (mut adj, mut far) = (0.0, 0.0);
+        let samples = 200;
+        for k in 0..samples {
+            let map = sample_map(&m, k);
+            // Tier 0: position (r, c) = r * cols + c.
+            adj += (map.delta[0] - map.delta[1]).powi(2);
+            far += (map.delta[0] - map.delta[m.rows * m.cols - 1]).powi(2);
+        }
+        assert!(adj < far, "adjacent {adj} not tighter than corners {far}");
+    }
+
+    #[test]
+    fn m3d_upper_tier_maps_are_slower_but_leak_less_on_average() {
+        let m = model(TechParams::m3d(), VariationConfig::default());
+        let per_tier = m.rows * m.cols;
+        let (mut top_delay, mut base_delay) = (0.0, 0.0);
+        let (mut top_leak, mut base_leak) = (0.0, 0.0);
+        let samples = 64;
+        for k in 0..samples {
+            let map = sample_map(&m, k);
+            base_delay += map.delay_factor[..per_tier].iter().sum::<f64>();
+            top_delay += map.delay_factor[(m.tiers - 1) * per_tier..].iter().sum::<f64>();
+            base_leak += map.leak_factor[..per_tier].iter().sum::<f64>();
+            top_leak += map.leak_factor[(m.tiers - 1) * per_tier..].iter().sum::<f64>();
+        }
+        assert!(
+            top_delay > base_delay,
+            "systematic shift must slow the top tier: {top_delay} vs {base_delay}"
+        );
+        assert!(
+            top_leak < base_leak,
+            "high-Vth top tier must leak less: {top_leak} vs {base_leak}"
+        );
+    }
+
+    #[test]
+    fn zero_sigma_zero_shift_is_the_identity_map() {
+        let cfg = VariationConfig { sigma: 0.0, tier_shift: 0.0, ..VariationConfig::default() };
+        let m = model(TechParams::tsv(), cfg);
+        let map = sample_map(&m, 0);
+        assert!(map.delta.iter().all(|&d| d == 0.0));
+        assert!(map.delay_factor.iter().all(|&f| (f - 1.0).abs() < 1e-12));
+        assert!(map.leak_factor.iter().all(|&f| (f - 1.0).abs() < 1e-12));
+    }
+}

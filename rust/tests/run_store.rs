@@ -39,7 +39,8 @@ fn leg_artifact_roundtrip_is_byte_identical() {
     let world = LegWorld::new("knn", Tech::M3d, 11);
     let engine = Engine::ephemeral();
     let leg = engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11);
-    let spec = LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11);
+    let spec =
+        LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11, None);
 
     let s1 = artifact::leg_json(&leg, &spec).to_pretty();
     let parsed = hem3d::util::json::parse(&s1).expect("artifact parses");

@@ -1,0 +1,198 @@
+//! Integration: the inter-tier process-variation subsystem (DESIGN.md §12).
+//!
+//! Pins the robustness-harness contract:
+//! * a robust leg is bit-identical for any `--workers` count at a fixed
+//!   `--mc-seed` (sample streams are indexed, not scheduled),
+//! * `VariationKey`-carrying cache entries round-trip through
+//!   `cache.jsonl` and robust legs resume from the store with zero
+//!   evaluations,
+//! * `--variation-sigma 0` degrades to the nominal path bit-for-bit.
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{run_leg, run_leg_warm, Algo, Effort, LegResult, LegWorld, Selection};
+use hem3d::opt::Mode;
+use hem3d::store::Engine;
+use hem3d::variation::VariationConfig;
+
+fn tiny(workers: usize) -> Effort {
+    let mut e = Effort::quick();
+    e.stage.max_iters = 2;
+    e.stage.local.max_steps = 5;
+    e.stage.local.neighbors_per_step = 5;
+    e.stage.meta_candidates = 6;
+    e.amosa.t_final = 0.4;
+    e.amosa.iters_per_temp = 8;
+    e.validate_cap = 3;
+    e.workers = workers;
+    e
+}
+
+fn vcfg(samples: usize) -> VariationConfig {
+    VariationConfig { samples, ..VariationConfig::default() }
+}
+
+fn robust_leg(world: &LegWorld, workers: usize, v: &VariationConfig) -> LegResult {
+    run_leg_warm(
+        world,
+        Mode::Pt,
+        Algo::MooStage,
+        Selection::MinP95Edp,
+        &tiny(workers),
+        9,
+        None,
+        Some(v),
+    )
+    .0
+}
+
+fn assert_legs_identical(a: &LegResult, b: &LegResult) {
+    assert_eq!(a.evals, b.evals, "distinct-evaluation counts diverged");
+    assert_eq!(a.winner.et.to_bits(), b.winner.et.to_bits());
+    assert_eq!(a.winner.temp_c.to_bits(), b.winner.temp_c.to_bits());
+    assert_eq!(a.winner.design.tile_at, b.winner.design.tile_at);
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    for (x, y) in a.candidates.iter().zip(b.candidates.iter()) {
+        assert_eq!(x.et.to_bits(), y.et.to_bits());
+        assert_eq!(x.design.tile_at, y.design.tile_at);
+        match (&x.robust, &y.robust) {
+            (Some(rx), Some(ry)) => {
+                assert_eq!(rx.samples, ry.samples);
+                assert_eq!(rx.mean_et.to_bits(), ry.mean_et.to_bits());
+                assert_eq!(rx.p50_et.to_bits(), ry.p50_et.to_bits());
+                assert_eq!(rx.p95_et.to_bits(), ry.p95_et.to_bits());
+                assert_eq!(rx.p95_edp.to_bits(), ry.p95_edp.to_bits());
+                assert_eq!(rx.timing_yield.to_bits(), ry.timing_yield.to_bits());
+            }
+            (None, None) => {}
+            _ => panic!("robust summaries diverged between runs"),
+        }
+    }
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "PHV trajectory diverged");
+        assert_eq!(x.1, y.1, "eval trajectory diverged");
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hem3d_variation_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn robust_leg_is_identical_for_1_and_8_workers() {
+    let world = LegWorld::new("knn", Tech::M3d, 9);
+    let v = vcfg(6);
+    let serial = robust_leg(&world, 1, &v);
+    let parallel = robust_leg(&world, 8, &v);
+    assert_legs_identical(&serial, &parallel);
+    // And the robust summaries are actually present.
+    assert!(serial.winner.robust.is_some(), "robust leg must carry MC summaries");
+    for c in &serial.candidates {
+        let r = c.robust.expect("every validated candidate has a summary");
+        assert_eq!(r.samples, v.samples as u32);
+        assert!(r.p95_et >= c.et, "p95 can only stretch the nominal ET");
+        assert!((0.0..=1.0).contains(&r.timing_yield));
+    }
+}
+
+#[test]
+fn sigma_zero_is_bit_identical_to_the_nominal_path() {
+    let world = LegWorld::new("bp", Tech::M3d, 5);
+    // Nominal leg through the plain path...
+    let nominal = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny(1), 5);
+    // ...vs the "robust" path with sigma = 0 under the same selection:
+    // the variation layer must vanish entirely.
+    let off = VariationConfig { sigma: 0.0, ..VariationConfig::default() };
+    let zero = run_leg_warm(
+        &world,
+        Mode::Pt,
+        Algo::MooStage,
+        Selection::MinEtUnderTth,
+        &tiny(1),
+        5,
+        None,
+        Some(&off),
+    )
+    .0;
+    assert_legs_identical(&nominal, &zero);
+    assert!(zero.winner.robust.is_none(), "sigma=0 must not attach MC summaries");
+}
+
+#[test]
+fn robust_leg_resumes_from_the_store_with_zero_evaluations() {
+    let dir = tmp_dir("resume");
+    let world = LegWorld::new("bp", Tech::M3d, 7);
+    let v = vcfg(4);
+    let effort = tiny(1);
+
+    let first = Engine::open(&dir).unwrap().with_variation(Some(v.clone()));
+    let leg = first.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7);
+    assert!(!leg.replayed);
+    assert!(leg.winner.robust.is_some());
+    let id = first.store().unwrap().list_leg_ids()[0].clone();
+    let artifact_path = dir.join("legs").join(format!("{id}.json"));
+    let artifact_bytes = std::fs::read(&artifact_path).unwrap();
+    assert!(
+        String::from_utf8_lossy(&artifact_bytes).contains("\"robust\""),
+        "leg artifact must carry the MC summaries"
+    );
+
+    // The cache snapshot carries variation-keyed lines.
+    let snapshot = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+    assert!(snapshot.contains("\"variation\""), "cache.jsonl must key robust entries");
+    let (loaded, skipped) = first.store().unwrap().load_cache();
+    assert_eq!(skipped, 0);
+    assert!(
+        loaded.keys().all(|k| k.scenario.variation.is_some()),
+        "every entry of a robust-only run is variation-keyed"
+    );
+
+    // Second engine, same configuration: replay, byte-identical artifact.
+    let second = Engine::open(&dir).unwrap().with_variation(Some(v.clone()));
+    let replayed =
+        second.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7);
+    assert!(replayed.replayed, "robust leg must replay from the store");
+    assert_legs_identical(&leg, &replayed);
+    assert_eq!(artifact_bytes, std::fs::read(&artifact_path).unwrap());
+
+    // A different MC seed is a different leg identity: computes fresh.
+    let other = VariationConfig { seed: 99, ..v };
+    let third = Engine::open(&dir).unwrap().with_variation(Some(other));
+    let fresh = third.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7);
+    assert!(!fresh.replayed, "a different --mc-seed must not replay");
+    assert_eq!(third.store().unwrap().list_leg_ids().len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn robust_and_nominal_legs_share_a_store_without_collisions() {
+    let dir = tmp_dir("mixed");
+    let world = LegWorld::new("bp", Tech::Tsv, 3);
+    let effort = tiny(1);
+
+    let nominal_engine = Engine::open(&dir).unwrap();
+    let nominal =
+        nominal_engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3);
+    let robust_engine = Engine::open(&dir).unwrap().with_variation(Some(vcfg(4)));
+    let robust =
+        robust_engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3);
+    assert!(!robust.replayed, "robust leg must not replay the nominal artifact");
+    assert_eq!(robust_engine.store().unwrap().list_leg_ids().len(), 2);
+
+    // Both replay on a second pass, each from its own artifact.
+    let again = Engine::open(&dir).unwrap();
+    assert!(again
+        .run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3)
+        .replayed);
+    let again_robust = Engine::open(&dir).unwrap().with_variation(Some(vcfg(4)));
+    let replayed =
+        again_robust.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3);
+    assert!(replayed.replayed);
+    assert_legs_identical(&robust, &replayed);
+    // The nominal leg carries no MC summary; the robust one does.
+    assert!(nominal.winner.robust.is_none());
+    assert!(robust.winner.robust.is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
