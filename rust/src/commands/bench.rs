@@ -13,7 +13,10 @@
 //!   `NocSim` instance so the reusable `SimScratch` is exercised;
 //! * **variation** — one Monte Carlo robustness evaluation (the
 //!   `--robust` DSE inner step: sample maps, derate, re-run thermal,
-//!   aggregate into a `RobustScore`).
+//!   aggregate into a `RobustScore`);
+//! * **transient** — one zero-alloc implicit-Euler step and one whole
+//!   throttled DTM scenario on the campaign grid (the `--transient`
+//!   validation inner loop).
 //!
 //! With `--json` the results land in `BENCH_hotpaths.json` at the repo
 //! root (override with `--out`), giving CI a perf trajectory to archive.
@@ -185,6 +188,41 @@ pub fn run(args: &Args) -> Result<()> {
         100.0 * timing_yield
     );
 
+    // ---- transient: implicit-Euler stepping + DTM scenario ----------------
+    // The `--transient` validation inner loop: one zero-alloc implicit-Euler
+    // step on the campaign grid, and one whole throttled scenario
+    // (default horizon/dt -> steps() steps).
+    let tcfg = hem3d::thermal::TransientConfig {
+        controller: hem3d::thermal::Controller::Throttle { trip_c: 85.0, relief: 0.7 },
+        ..hem3d::thermal::TransientConfig::default()
+    };
+    let mut tplan = hem3d::thermal::TransientPlan::new(&grid, &stack.cap(), tcfg.dt_s);
+    let t_step = bench("transient planned step (10x8x8, 600 sweeps)", warmup, reps, || {
+        let _ = tplan.step_scaled(&pow_, 1.0, IT3D);
+    });
+    let mut tstats = hem3d::thermal::TransientStats {
+        peak_c: 0.0,
+        final_c: 0.0,
+        time_over_s: 0.0,
+        sustained_frac: 1.0,
+    };
+    let t_scenario = bench(
+        &format!("transient throttled scenario ({} steps)", tcfg.steps()),
+        warmup.min(1),
+        reps.min(5),
+        || {
+            tstats = hem3d::thermal::simulate(&mut tplan, &pow_, 1, &tcfg, 85.0, IT3D);
+        },
+    );
+    println!(
+        "transient {:.3} ms/step, {:.1} ms/scenario ({} steps, peak {:.1}C, sustained {:.0}%)",
+        t_step * 1e3,
+        t_scenario * 1e3,
+        tcfg.steps(),
+        tstats.peak_c,
+        100.0 * tstats.sustained_frac
+    );
+
     if args.flag("json") {
         let out = args.opt_or("out", "BENCH_hotpaths.json");
         let json = Json::obj(vec![
@@ -239,6 +277,23 @@ pub fn run(args: &Args) -> Result<()> {
                     ("sigma", Json::num(vcfg.sigma)),
                     ("tier_shift", Json::num(vcfg.tier_shift)),
                     ("timing_yield", Json::num(timing_yield)),
+                ]),
+            ),
+            (
+                "transient",
+                Json::obj(vec![
+                    ("step_s", Json::num(t_step)),
+                    ("scenario_s", Json::num(t_scenario)),
+                    ("steps", Json::num(tcfg.steps() as f64)),
+                    ("horizon_s", Json::num(tcfg.horizon_s)),
+                    ("dt_s", Json::num(tcfg.dt_s)),
+                    ("controller", Json::str(&tcfg.controller.desc())),
+                    ("peak_c", Json::num(tstats.peak_c)),
+                    ("sustained_frac", Json::num(tstats.sustained_frac)),
+                    (
+                        "zero_alloc_asserted_by",
+                        Json::str("tests/thermal_transient.rs::transient_step_performs_zero_heap_allocations"),
+                    ),
                 ]),
             ),
         ]);

@@ -47,15 +47,52 @@ pub fn variation_from_args(args: &Args) -> Option<hem3d::variation::VariationCon
     cfg.enabled().then_some(cfg)
 }
 
+/// Resolve the transient DTM scenario shared by `optimize` and `campaign`:
+/// `--transient` enables it, `--horizon` / `--dt` / `--ambient` shape the
+/// stepping, `--throttle` (with `--trip` / `--relief`) or `--sprint-rest`
+/// (with `--sprint-steps` / `--rest-steps` / `--rest-scale`) picks the DVFS
+/// controller, and an explicit `--horizon 0` disables the subsystem
+/// entirely (bit-identical steady results, DESIGN.md §13).
+pub fn transient_from_args(args: &Args) -> Option<hem3d::thermal::TransientConfig> {
+    use hem3d::thermal::{Controller, TransientConfig};
+    if !args.flag("transient") {
+        return None;
+    }
+    let d = TransientConfig::default();
+    let controller = if args.flag("throttle") {
+        Controller::Throttle {
+            trip_c: args.f64_or("trip", 85.0),
+            relief: args.f64_or("relief", 0.7),
+        }
+    } else if args.flag("sprint-rest") {
+        Controller::SprintRest {
+            sprint_steps: args.usize_or("sprint-steps", 6) as u32,
+            rest_steps: args.usize_or("rest-steps", 2) as u32,
+            rest_scale: args.f64_or("rest-scale", 0.5),
+        }
+    } else {
+        Controller::None
+    };
+    let cfg = TransientConfig {
+        horizon_s: args.f64_or("horizon", d.horizon_s),
+        dt_s: args.f64_or("dt", d.dt_s),
+        ambient_c: args.f64_or("ambient", d.ambient_c),
+        controller,
+    };
+    cfg.enabled().then_some(cfg)
+}
+
 /// Resolve the engine from `--run-dir` / `--name` / `--force` plus the
-/// `--robust` variation knobs; `None` for both dir options means an
-/// ephemeral (non-persisted) campaign.
+/// `--robust` variation knobs and the `--transient` DTM knobs; `None` for
+/// both dir options means an ephemeral (non-persisted) campaign.
 pub fn engine_from_args(args: &Args) -> Result<Engine> {
     let engine = match run_dir_from_args(args) {
         Some(dir) => Engine::open_with(dir, args.flag("force"))?,
         None => Engine::ephemeral(),
     };
-    Ok(engine.with_variation(variation_from_args(args)))
+    Ok(engine
+        .with_variation(variation_from_args(args))
+        .with_transient(transient_from_args(args)))
 }
 
 /// Regenerate the requested figures into `--out`.
@@ -86,6 +123,16 @@ pub fn run(args: &Args) -> Result<()> {
             v.seed
         );
     }
+    let transient = transient_from_args(args);
+    if let Some(t) = &transient {
+        log_info!(
+            "transient campaign: horizon={}s dt={}s ambient={}C controller={}",
+            t.horizon_s,
+            t.dt_s,
+            t.ambient_c,
+            t.controller.desc()
+        );
+    }
     let engine = engine_from_args(args)?;
     let out = match (args.opt("out"), engine.store()) {
         (Some(o), _) => o.to_string(),
@@ -109,6 +156,16 @@ pub fn run(args: &Args) -> Result<()> {
             // Decimal string: exact for any u64 seed (f64 rounds >= 2^53),
             // same rule as LegSpec's seed fields.
             ("seed", Json::str(&seed.to_string())),
+            (
+                "transient",
+                match transient
+                    .as_ref()
+                    .and_then(hem3d::runtime::TransientKey::from_config)
+                {
+                    Some(t) => hem3d::store::artifact::transient_key_json(&t),
+                    None => Json::Null,
+                },
+            ),
             (
                 "variation",
                 match &variation {

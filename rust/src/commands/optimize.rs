@@ -68,6 +68,15 @@ pub fn run(args: &Args) -> Result<()> {
             v.seed
         );
     }
+    if let Some(t) = &super::campaign::transient_from_args(args) {
+        log_info!(
+            "transient mode: horizon={}s dt={}s ambient={}C controller={}",
+            t.horizon_s,
+            t.dt_s,
+            t.ambient_c,
+            t.controller.desc()
+        );
+    }
     let world = LegWorld::new(&bench, tech, seed);
     let engine = super::campaign::engine_from_args(args)?;
     let leg = engine.run_leg(&world, mode, algo, selection, &effort, seed);
@@ -96,12 +105,27 @@ pub fn run(args: &Args) -> Result<()> {
             ),
             None => println!("    #{i}: ET={:.4}  T={:.1}C", c.et, c.temp_c),
         }
+        if let Some(t) = &c.transient {
+            println!(
+                "         transient: peak={:.1}C  final={:.1}C  over-threshold={:.3}s  sustained={:.0}%",
+                t.peak_c,
+                t.final_c,
+                t.time_over_s,
+                100.0 * t.sustained_frac
+            );
+        }
     }
     println!("  winner: ET={:.4}  T={:.1}C", leg.winner.et, leg.winner.temp_c);
     if let Some(r) = &leg.winner.robust {
         println!(
             "  winner MC summary ({} samples): mean ET={:.4}  p50={:.4}  p95={:.4}  p95 EDP={:.2}  timing yield={:.0}%",
             r.samples, r.mean_et, r.p50_et, r.p95_et, r.p95_edp, 100.0 * r.timing_yield
+        );
+    }
+    if let Some(t) = &leg.winner.transient {
+        println!(
+            "  winner transient summary: peak={:.1}C  final={:.1}C  time over threshold={:.3}s  sustained throughput={:.0}%",
+            t.peak_c, t.final_c, t.time_over_s, 100.0 * t.sustained_frac
         );
     }
 

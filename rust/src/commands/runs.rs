@@ -122,6 +122,25 @@ fn show(args: &Args) -> Result<()> {
                     ),
                     None => "-".into(),
                 };
+                let transient = match &s.transient {
+                    Some(t) => format!(
+                        "h={}s dt={}s amb={}C {}",
+                        t.horizon_s(),
+                        t.dt_s(),
+                        t.ambient_c(),
+                        t.controller().desc()
+                    ),
+                    None => "-".into(),
+                };
+                if let Some(t) = &leg.winner.transient {
+                    robust_winners.push(format!(
+                        "{id}: winner transient peak={}C final={}C over-threshold={}s sustained={:.0}%",
+                        f(t.peak_c, 1),
+                        f(t.final_c, 1),
+                        f(t.time_over_s, 3),
+                        100.0 * t.sustained_frac
+                    ));
+                }
                 if let Some(r) = &leg.winner.robust {
                     robust_winners.push(format!(
                         "{id}: winner MC ({} samples) mean ET={} p95 ET={} p95 EDP={} yield={:.0}%",
@@ -138,6 +157,7 @@ fn show(args: &Args) -> Result<()> {
                     leg.algo.name().into(),
                     scenario,
                     variation,
+                    transient,
                     leg.evals.to_string(),
                     format!("{}/{}", leg.cache.hits, leg.cache.warm_hits),
                     leg.front.members.len().to_string(),
@@ -158,6 +178,7 @@ fn show(args: &Args) -> Result<()> {
                 "algo",
                 "scenario",
                 "variation",
+                "transient",
                 "evals",
                 "hits/warm",
                 "front",

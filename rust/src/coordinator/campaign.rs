@@ -15,11 +15,12 @@ use crate::opt::moo_stage::IterRecord;
 use crate::opt::{amosa, moo_stage, AmosaConfig, Mode, ParetoSet, Problem, StageConfig};
 use crate::perf::PerfCoeffs;
 use crate::runtime::evaluator::EvalKey;
+use crate::thermal::{TransientConfig, TransientStats};
 use crate::traffic::{benchmark, generate, BenchProfile, Trace};
 use crate::util::Rng;
 use crate::variation::{RobustEt, VariationConfig};
 
-use super::validate::validate_candidate_robust;
+use super::validate::validate_candidate_full;
 
 /// Which optimizer drives a leg.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,6 +100,8 @@ pub struct Validated {
     pub temp_c: f64,
     /// Monte Carlo execution-time/EDP/yield summary (robust legs only).
     pub robust: Option<RobustEt>,
+    /// Full-grid transient DTM summary (transient legs only).
+    pub transient: Option<TransientStats>,
 }
 
 /// Full optimizer trajectory, preserved per-algorithm so a leg artifact
@@ -323,7 +326,7 @@ pub fn run_leg(
     effort: &Effort,
     seed: u64,
 ) -> LegResult {
-    run_leg_warm(world, mode, algo, selection, effort, seed, None, None).0
+    run_leg_warm(world, mode, algo, selection, effort, seed, None, None, None).0
 }
 
 /// [`run_leg`] with an optional warm-start snapshot, additionally returning
@@ -343,6 +346,12 @@ pub fn run_leg(
 /// projections, every validated candidate carries a [`RobustEt`] summary,
 /// and a disabled configuration (`sigma == 0`) is bit-identical to
 /// passing `None`.
+///
+/// `transient` switches the leg to a DTM scenario (`--transient`,
+/// DESIGN.md §13): candidate objectives are reshaped by the cheap-RC
+/// transient reduction, every validated candidate carries a
+/// [`TransientStats`] summary from the full-grid stepper, and a disabled
+/// configuration (`horizon == 0`) is bit-identical to passing `None`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_leg_warm(
     world: &LegWorld,
@@ -353,6 +362,7 @@ pub fn run_leg_warm(
     seed: u64,
     warm: Option<Arc<HashMap<EvalKey, crate::eval::objectives::Scores>>>,
     variation: Option<&VariationConfig>,
+    transient: Option<&TransientConfig>,
 ) -> (LegResult, Vec<(EvalKey, crate::eval::objectives::Scores)>) {
     let ctx = world.encode_ctx();
     let mut problem = Problem::new(&ctx, mode).with_workers(effort.workers);
@@ -362,6 +372,9 @@ pub fn run_leg_warm(
     }
     if let Some(vcfg) = variation {
         problem = problem.with_variation(vcfg);
+    }
+    if let Some(tcfg) = transient {
+        problem = problem.with_transient(tcfg);
     }
     let start = Design::with_identity_placement(
         world.cfg.n_tiles(),
@@ -404,10 +417,11 @@ pub fn run_leg_warm(
     // preserves order, keeping the winner selection deterministic.
     let coeffs = PerfCoeffs::default();
     let vmodel = problem.variation_model();
+    let tcfg = problem.transient_config().map(|cfg| (cfg, world.cfg.t_threshold_c));
     let mut candidates: Vec<Validated> = crate::util::threadpool::scope_map(
         members,
         effort.workers,
-        |m| validate_candidate_robust(&ctx, &world.profile, &m.design, &coeffs, vmodel),
+        |m| validate_candidate_full(&ctx, &world.profile, &m.design, &coeffs, vmodel, tcfg),
     );
 
     // Winner per the selection rule.
@@ -543,12 +557,14 @@ mod tests {
                 et: 1.0,
                 temp_c: 95.0,
                 robust: None,
+                transient: None,
             },
             Validated {
                 design: Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]),
                 et: 1.1,
                 temp_c: 70.0,
                 robust: None,
+                transient: None,
             },
         ];
         let w = select(&mut cands, Selection::MinEtUnderTth, 85.0);
@@ -579,23 +595,23 @@ mod tests {
         // inclusive, so 0.4 misses and 0.5 would meet): the cheapest
         // feasible candidate wins.
         let mut cands = vec![
-            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.4) },
-            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9) },
-            Validated { design: d(), et: 1.1, temp_c: 70.0, robust: r(90.0, 1.0) },
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.4), transient: None },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9), transient: None },
+            Validated { design: d(), et: 1.1, temp_c: 70.0, robust: r(90.0, 1.0), transient: None },
         ];
         let w = select(&mut cands, Selection::MinP95Edp, 85.0);
         assert_eq!(w.robust.unwrap().p95_edp, 80.0);
         // The floor is inclusive: exactly MIN_YIELD is feasible.
         let mut edge = vec![
-            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.5) },
-            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9) },
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.5), transient: None },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9), transient: None },
         ];
         let w = select(&mut edge, Selection::MinP95Edp, 85.0);
         assert_eq!(w.robust.unwrap().p95_edp, 50.0);
         // No candidate clears the floor: highest yield wins.
         let mut low = vec![
-            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.2) },
-            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.4) },
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.2), transient: None },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.4), transient: None },
         ];
         let w = select(&mut low, Selection::MinP95Edp, 85.0);
         assert_eq!(w.robust.unwrap().timing_yield, 0.4);

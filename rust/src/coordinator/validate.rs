@@ -10,7 +10,10 @@ use crate::noc::routing::Routing;
 use crate::noc::sim::{NocSim, SimConfig};
 use crate::power::leakage;
 use crate::runtime::evaluator::dims;
-use crate::thermal::{GridParams, ThermalGrid, ThermalSolver, T_AMBIENT_C};
+use crate::thermal::{
+    simulate_with, GridParams, ThermalGrid, ThermalSolver, TransientConfig, TransientPlan,
+    TransientStats, T_AMBIENT_C,
+};
 use crate::traffic::Window;
 use crate::util::Rng;
 
@@ -27,8 +30,25 @@ pub fn power_grid(
     t_peak_c: f64,
 ) -> Vec<f64> {
     let stack = ctx.tech.layer_stack();
-    let (z, y, x) = (stack.z(), dims::TH_Y, dims::TH_X);
-    let mut grid = vec![0.0f64; z * y * x];
+    let mut grid = vec![0.0f64; stack.z() * dims::TH_Y * dims::TH_X];
+    power_grid_into(ctx, design, win, t_peak_c, &mut grid);
+    grid
+}
+
+/// [`power_grid`] into a caller-owned buffer — the transient stepper
+/// rebuilds the power map every step (leakage tracks the simulated
+/// temperature), so the per-step path must not allocate.
+pub fn power_grid_into(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    win: &Window,
+    t_peak_c: f64,
+    grid: &mut [f64],
+) {
+    let stack = ctx.tech.layer_stack();
+    let (y, x) = (dims::TH_Y, dims::TH_X);
+    debug_assert_eq!(grid.len(), stack.z() * y * x);
+    grid.fill(0.0);
     let geo = ctx.geo;
     let leak_scale = leakage::leakage_scale(t_peak_c);
 
@@ -55,7 +75,25 @@ pub fn power_grid(
             }
         }
     }
-    grid
+}
+
+/// Index of the trace window that is thermally worst *for this design*:
+/// argmax of the Eq. (7) per-window peak-rise envelope (first max on
+/// ties).  This is the same power-trace source the transient scenarios
+/// step through, which makes steady validation its horizon-0 special
+/// case.  Selecting by *total chip power* instead — the historical
+/// behaviour — is design-independent and can pick a window whose power is
+/// spread evenly while a slightly cheaper window concentrates its power
+/// on one stack's top tier.
+pub fn worst_window_index(ctx: &EncodeCtx<'_>, design: &Design) -> usize {
+    let rises = crate::eval::objectives::window_peak_rises(ctx, design);
+    let mut best = 0;
+    for (w, &r) in rises.iter().enumerate() {
+        if r > rises[best] {
+            best = w;
+        }
+    }
+    best
 }
 
 thread_local! {
@@ -110,17 +148,10 @@ pub fn detailed_peak_temp_with(
     design: &Design,
     solver: &mut ThermalSolver,
 ) -> f64 {
-    // Worst window by chip power.
-    let worst = ctx
-        .trace
-        .windows
-        .iter()
-        .max_by(|a, b| {
-            let pa: f64 = ctx.power.window_power(ctx.tiles, a).iter().sum();
-            let pb: f64 = ctx.power.window_power(ctx.tiles, b).iter().sum();
-            pa.partial_cmp(&pb).unwrap()
-        })
-        .expect("empty trace");
+    // Worst window for THIS design (placement-aware peak-rise envelope),
+    // not by design-independent total chip power — see
+    // [`worst_window_index`].
+    let worst = &ctx.trace.windows[worst_window_index(ctx, design)];
 
     let (t_final, _iters) = leakage::fixed_point(
         T_AMBIENT_C + 20.0,
@@ -129,6 +160,35 @@ pub fn detailed_peak_temp_with(
         |p| T_AMBIENT_C + solver.solve_peak(p, 600),
     );
     t_final
+}
+
+/// Full-grid transient DTM simulation of one design: implicit-Euler
+/// stepping over the cycling window trace, controller scaling applied to
+/// the dynamic+leakage power map, leakage tracking the *simulated*
+/// temperature step by step.  `threshold_c` feeds the time-over-threshold
+/// statistic.  Like the steady fixed point, this is pure in the design,
+/// so leg artifacts can persist and replay it.
+pub fn transient_stats(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    cfg: &TransientConfig,
+    threshold_c: f64,
+) -> TransientStats {
+    let stack = ctx.tech.layer_stack();
+    let mut plan = TransientPlan::new(
+        &ThermalGrid::new(
+            stack.z(),
+            dims::TH_Y,
+            dims::TH_X,
+            GridParams::from_stack(&stack),
+        ),
+        &stack.cap(),
+        cfg.dt_s,
+    );
+    let windows = &ctx.trace.windows;
+    simulate_with(&mut plan, windows.len(), cfg, threshold_c, 600, |w, last_c, buf| {
+        power_grid_into(ctx, design, &windows[w], last_c, buf);
+    })
 }
 
 /// Eq. (10) validation of one Pareto candidate: routing + full objective
@@ -142,7 +202,7 @@ pub fn validate_candidate(
     design: &Design,
     coeffs: &crate::perf::PerfCoeffs,
 ) -> super::campaign::Validated {
-    validate_candidate_robust(ctx, profile, design, coeffs, None)
+    validate_candidate_full(ctx, profile, design, coeffs, None, None)
 }
 
 /// [`validate_candidate`] with an optional variation model: when present,
@@ -158,6 +218,21 @@ pub fn validate_candidate_robust(
     coeffs: &crate::perf::PerfCoeffs,
     variation: Option<&crate::variation::VariationModel>,
 ) -> super::campaign::Validated {
+    validate_candidate_full(ctx, profile, design, coeffs, variation, None)
+}
+
+/// [`validate_candidate_robust`] with an optional transient DTM scenario:
+/// when present, the candidate additionally gets its full-grid
+/// [`TransientStats`] (peak/final temperature, time over the given
+/// threshold, sustained-throughput fraction) from [`transient_stats`].
+pub fn validate_candidate_full(
+    ctx: &EncodeCtx<'_>,
+    profile: &crate::traffic::BenchProfile,
+    design: &Design,
+    coeffs: &crate::perf::PerfCoeffs,
+    variation: Option<&crate::variation::VariationModel>,
+    transient: Option<(&TransientConfig, f64)>,
+) -> super::campaign::Validated {
     let routing = Routing::build(design);
     let scores = crate::eval::objectives::evaluate(ctx, design, &routing);
     let et = crate::perf::exec_time(ctx, profile, design, &routing, &scores, coeffs);
@@ -166,7 +241,15 @@ pub fn validate_candidate_robust(
         let effects = crate::variation::mc_effects(ctx, design, model, 1);
         crate::variation::robust_et(et.total, &effects)
     });
-    super::campaign::Validated { design: design.clone(), et: et.total, temp_c: temp, robust }
+    let transient =
+        transient.map(|(cfg, threshold_c)| transient_stats(ctx, design, cfg, threshold_c));
+    super::campaign::Validated {
+        design: design.clone(),
+        et: et.total,
+        temp_c: temp,
+        robust,
+        transient,
+    }
 }
 
 /// Position-space `(rate, flits)` matrices for the trace-replay scenario:
@@ -296,6 +379,84 @@ mod tests {
         let t_wet = detailed_peak_temp(&ctx_wet, &d);
         let t_dry = detailed_peak_temp(&ctx_dry, &d);
         assert!(t_wet < t_dry, "cooling did nothing: {t_wet} vs {t_dry}");
+    }
+
+    #[test]
+    fn detailed_validation_uses_the_design_dependent_worst_window() {
+        // Regression for the worst-window selection bugfix: validation used
+        // to pick the window by *total chip power*, which is independent of
+        // the placement.  It must instead consult the same design-dependent
+        // Eq. (7) envelope the transient scenarios step through.
+        let (cfg, tech) = ctx_for(TechParams::m3d());
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("lv").unwrap(), &tiles, cfg.windows, 5);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let mut rng = Rng::seed_from_u64(5);
+        let d = Design::random_placement(&cfg, topology::mesh_links(&cfg), &mut rng);
+
+        // The index is the first argmax of the per-window envelope...
+        let rises = crate::eval::objectives::window_peak_rises(&ctx, &d);
+        let wi = worst_window_index(&ctx, &d);
+        assert!(rises.iter().all(|&r| r <= rises[wi]), "window {wi} is not the argmax");
+        assert_eq!(
+            wi,
+            rises.iter().position(|&r| r == rises[wi]).unwrap(),
+            "ties must break toward the first maximum"
+        );
+
+        // ...and the detailed fixed point is routed through exactly that
+        // window: recomputing it by hand is bit-identical.
+        let worst = &ctx.trace.windows[wi];
+        let mut solver = thermal_plan(&ctx);
+        let (want, _) = leakage::fixed_point(
+            T_AMBIENT_C + 20.0,
+            12,
+            |t_peak| power_grid(&ctx, &d, worst, t_peak),
+            |p| T_AMBIENT_C + solver.solve_peak(p, 600),
+        );
+        let mut solver2 = thermal_plan(&ctx);
+        let got = detailed_peak_temp_with(&ctx, &d, &mut solver2);
+        assert_eq!(want.to_bits(), got.to_bits(), "validation bypassed the envelope window");
+    }
+
+    #[test]
+    fn transient_stats_respond_to_throttling() {
+        let (cfg, tech) = ctx_for(TechParams::m3d());
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 2);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let free_cfg = TransientConfig {
+            horizon_s: 8.0e-3,
+            dt_s: 2.0e-3,
+            ..TransientConfig::default()
+        };
+        let free = transient_stats(&ctx, &d, &free_cfg, 85.0);
+        assert!(free.peak_c > free_cfg.ambient_c, "heating must raise the peak");
+        assert!(free.peak_c >= free.final_c);
+        assert_eq!(free.sustained_frac, 1.0, "no controller, no throttling");
+
+        // A thermostat tripped from the start strictly lowers the peak and
+        // reports the lost throughput.
+        let thr_cfg = TransientConfig {
+            controller: crate::thermal::Controller::Throttle {
+                trip_c: free_cfg.ambient_c,
+                relief: 0.5,
+            },
+            ..free_cfg.clone()
+        };
+        let thr = transient_stats(&ctx, &d, &thr_cfg, 85.0);
+        assert!(thr.sustained_frac < 1.0);
+        assert!(thr.peak_c <= free.peak_c + 1e-9, "throttling raised the peak");
+
+        // The threshold is a pure readout: at ambient everything counts.
+        let hot = transient_stats(&ctx, &d, &free_cfg, free_cfg.ambient_c);
+        assert!(hot.time_over_s > 0.0);
+        assert!(hot.time_over_s <= free_cfg.horizon_s + free_cfg.dt_s);
+        assert_eq!(hot.peak_c.to_bits(), free.peak_c.to_bits());
     }
 
     #[test]

@@ -222,6 +222,29 @@ pub fn evaluate_sparse_with(
     }
 }
 
+/// Per-window Eq.(7)/(8) peak stack rise: the window-resolved form of the
+/// `tmax` objective (`tmax` is the max of these).  This is the power trace
+/// the score-path transient RC reduction consumes — each window's rise is
+/// the steady-state target the stack relaxes toward while that trace
+/// window is active (`thermal::cheap_transient`).
+pub fn window_peak_rises(ctx: &EncodeCtx<'_>, design: &Design) -> Vec<f64> {
+    let n = design.n_tiles();
+    let n_stacks = ctx.geo.rows * ctx.geo.cols;
+    let mut per_stack = vec![0.0f64; n_stacks];
+    let mut rises = Vec::new();
+    for win in ctx.trace.windows.iter().take(crate::runtime::dims::N_WINDOWS) {
+        per_stack.iter_mut().for_each(|x| *x = 0.0);
+        for pos in 0..n {
+            let tile = design.tile_at[pos];
+            let p = ctx.power.tile_power(ctx.tiles.kind(tile), win.activity[tile]);
+            per_stack[ctx.geo.stack_of(pos)] +=
+                p * ctx.stack.coeff_per_tier[ctx.geo.tier_of(pos)];
+        }
+        rises.push(per_stack.iter().copied().fold(0.0f64, f64::max));
+    }
+    rises
+}
+
 // ---------------------------------------------------------------------------
 // Robust (variation-derated) variants
 // ---------------------------------------------------------------------------
@@ -387,6 +410,22 @@ mod tests {
         let p = chip_power_leak_derated(&ctx, &d, &ones);
         assert!(p > 0.0);
         assert!(chip_power_leak_derated(&ctx, &d, &hot) > p);
+    }
+
+    #[test]
+    fn window_rises_max_reproduces_the_tmax_objective() {
+        let (cfg, tech, tiles) = setup(TechParams::m3d());
+        let geo = Geometry::new(&cfg, &tech);
+        let trace = generate(&benchmark("knn").unwrap(), &tiles, cfg.windows, 4);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let r = Routing::build(&d);
+        let nominal = evaluate(&ctx, &d, &r);
+        let rises = window_peak_rises(&ctx, &d);
+        assert_eq!(rises.len(), crate::runtime::dims::N_WINDOWS);
+        let max = rises.iter().copied().fold(0.0f64, f64::max);
+        assert_eq!(max.to_bits(), nominal.tmax.to_bits(), "{max} vs {}", nominal.tmax);
+        assert!(rises.iter().all(|&x| x >= 0.0));
     }
 
     #[test]

@@ -51,14 +51,20 @@ COMMANDS:
              [--run-dir DIR | --name NAME] [--force]
              [--robust] [--variation-sigma X] [--tier-shift X]
              [--mc-samples N] [--mc-seed N]
+             [--transient] [--horizon S] [--dt S] [--ambient C]
+             [--throttle --trip C --relief X |
+              --sprint-rest --sprint-steps N --rest-steps N --rest-scale X]
   bench      Hot-path benchmark harness (thermal planned-vs-seed, moo
-             scoring, NoC sim, variation MC) [--json] [--quick]
-             [--out FILE] [--seed N] [--workers N]
+             scoring, NoC sim, variation MC, transient stepper)
+             [--json] [--quick] [--out FILE] [--seed N] [--workers N]
   campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
              [--seed N] [--benches a,b,...] [--effort quick|full]
              [--workers N] [--run-dir DIR | --name NAME] [--force]
              [--robust] [--variation-sigma X] [--tier-shift X]
              [--mc-samples N] [--mc-seed N]
+             [--transient] [--horizon S] [--dt S] [--ambient C]
+             [--throttle --trip C --relief X |
+              --sprint-rest --sprint-steps N --rest-steps N --rest-scale X]
   runs       Inspect persisted runs:  runs list [--root runs]
              |  runs show <name> [--root runs | --run-dir DIR]
   help       Show this message
@@ -77,6 +83,15 @@ Global: [--log error|warn|info|debug]
         M3D upper tiers systematically derated by --tier-shift per tier)
         and optimizes p95 objectives / p95 EDP under a timing-yield
         floor.  --variation-sigma 0 is bit-identical to the nominal path.
+        --transient evaluates designs under a transient DTM scenario:
+        implicit-Euler stepping of the thermal grid over --horizon seconds
+        in --dt steps from --ambient, with an optional DVFS controller
+        (--throttle trips at --trip C and scales power by --relief;
+        --sprint-rest duty-cycles --sprint-steps on / --rest-steps at
+        --rest-scale).  DSE objectives become the transient peak rise and
+        throttling-adjusted latency; validated winners carry peak/final
+        temperature, time over threshold and sustained throughput.
+        --horizon 0 is bit-identical to the steady-state path.
 ";
 
 fn main() -> Result<()> {

@@ -5,7 +5,8 @@ use crate::arch::design::Design;
 use crate::arch::encode::{design_key, EncodeCtx};
 use crate::eval::objectives::{evaluate_sparse, Scores, SparseTraffic};
 use crate::noc::routing::Routing;
-use crate::runtime::{EvalCache, EvalKey, ScenarioKey, VariationKey};
+use crate::runtime::{EvalCache, EvalKey, ScenarioKey, TransientKey, VariationKey};
+use crate::thermal::{cheap_transient, stack_tau_s, TransientConfig};
 use crate::variation::{robust_evaluate, VariationConfig, VariationModel};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -85,6 +86,13 @@ pub struct Problem<'a> {
     /// scenario carries the matching [`VariationKey`] so robust and
     /// nominal cache entries can never collide.
     variation: Option<VariationModel>,
+    /// Transient DTM scenario; `None` scores at steady state.  When set,
+    /// [`Problem::score`] replaces `tmax` by the cheap-RC transient peak
+    /// rise and divides latency by the controller's sustained-throughput
+    /// fraction (DESIGN.md §13), and the scenario carries the matching
+    /// [`TransientKey`] so transient and steady cache entries can never
+    /// collide.  The second element is the stack time constant `tau` [s].
+    transient: Option<(TransientConfig, f64)>,
     evals: AtomicU64,
     cache: EvalCache,
 }
@@ -110,6 +118,7 @@ impl<'a> Problem<'a> {
             workers: 1,
             scenario,
             variation: None,
+            transient: None,
             evals: AtomicU64::new(0),
             cache: EvalCache::new(),
         }
@@ -133,6 +142,27 @@ impl<'a> Problem<'a> {
     /// The robust-mode variation model, when active.
     pub fn variation_model(&self) -> Option<&VariationModel> {
         self.variation.as_ref()
+    }
+
+    /// Builder-style transient DTM mode: score designs under the cheap-RC
+    /// transient reduction of `cfg` instead of the steady-state point.  A
+    /// disabled configuration (`horizon == 0` or `dt == 0`) is the
+    /// identity — no transient key, bit-identical steady results — which
+    /// is the `--horizon 0` contract.
+    pub fn with_transient(mut self, cfg: &TransientConfig) -> Self {
+        let Some(key) = TransientKey::from_config(cfg) else {
+            return self;
+        };
+        self.scenario =
+            std::sync::Arc::new((*self.scenario).clone().with_transient(Some(key)));
+        let tau = stack_tau_s(&self.ctx.tech.layer_stack());
+        self.transient = Some((cfg.clone(), tau));
+        self
+    }
+
+    /// The transient scenario configuration, when active.
+    pub fn transient_config(&self) -> Option<&TransientConfig> {
+        self.transient.as_ref().map(|(cfg, _)| cfg)
     }
 
     /// Builder-style worker-count override, with the same resolution rule
@@ -178,7 +208,7 @@ impl<'a> Problem<'a> {
             None => {
                 let routing = Routing::build(design);
                 let nominal = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
-                match &self.variation {
+                let projected = match &self.variation {
                     None => nominal,
                     // Robust mode: the cached value *is* the p95 Monte
                     // Carlo projection (the variation key in the scenario
@@ -188,6 +218,25 @@ impl<'a> Problem<'a> {
                     // projection is identical for any `--workers`.
                     Some(model) => {
                         robust_evaluate(self.ctx, design, &nominal, model, 1).p95
+                    }
+                };
+                match &self.transient {
+                    None => projected,
+                    // Transient mode composes after the robust projection:
+                    // `tmax` becomes the cheap-RC peak rise of the design's
+                    // per-window power envelope under the DTM controller,
+                    // and latency is penalised by the throughput the
+                    // controller gives up (the transient key in the
+                    // scenario is what makes caching this sound).
+                    Some((cfg, tau)) => {
+                        let rises =
+                            crate::eval::objectives::window_peak_rises(self.ctx, design);
+                        let ct = cheap_transient(&rises, *tau, cfg);
+                        Scores {
+                            lat: projected.lat / ct.sustained_frac.max(1e-9),
+                            tmax: ct.peak_rise,
+                            ..projected
+                        }
                     }
                 }
             }
@@ -382,6 +431,64 @@ mod tests {
         let replay = p_on.score(&d);
         assert_eq!(replay, s_on);
         assert_eq!(p_on.eval_count(), 1);
+    }
+
+    #[test]
+    fn transient_mode_reshapes_objectives_and_horizon_zero_is_identity() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 6);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let nominal = Problem::new(&ctx, Mode::Pt).score(&d);
+
+        // horizon = 0 disables the subsystem: same key, same bits.
+        let off = TransientConfig { horizon_s: 0.0, ..TransientConfig::default() };
+        let p_off = Problem::new(&ctx, Mode::Pt).with_transient(&off);
+        assert!(p_off.scenario.transient.is_none());
+        assert!(p_off.transient_config().is_none());
+        let s_off = p_off.score(&d);
+        assert_eq!(s_off.lat.to_bits(), nominal.lat.to_bits());
+        assert_eq!(s_off.tmax.to_bits(), nominal.tmax.to_bits());
+
+        // An uncontrolled transient keys the scenario; with a horizon far
+        // past the stack time constant the RC peak approaches the steady
+        // worst-window rise from below, and with no throttling latency is
+        // untouched.
+        let on = TransientConfig { horizon_s: 10.0, ..TransientConfig::default() };
+        let p_on = Problem::new(&ctx, Mode::Pt).with_transient(&on);
+        assert!(p_on.scenario.transient.is_some());
+        let s_on = p_on.score(&d);
+        assert!(s_on.tmax > 0.0 && s_on.tmax <= nominal.tmax + 1e-12);
+        assert!(s_on.tmax > 0.5 * nominal.tmax, "long horizon should approach steady");
+        assert_eq!(s_on.lat.to_bits(), nominal.lat.to_bits());
+        assert_eq!(s_on.umean.to_bits(), nominal.umean.to_bits());
+        assert_eq!(s_on.usigma.to_bits(), nominal.usigma.to_bits());
+        assert_eq!(p_on.eval_count(), 1);
+
+        // A duty-cycle controller trades latency for temperature: the
+        // sustained fraction stretches latency and the peak drops.
+        let rest = TransientConfig {
+            horizon_s: 10.0,
+            controller: crate::thermal::Controller::SprintRest {
+                sprint_steps: 1,
+                rest_steps: 1,
+                rest_scale: 0.0,
+            },
+            ..TransientConfig::default()
+        };
+        let p_rest = Problem::new(&ctx, Mode::Pt).with_transient(&rest);
+        let s_rest = p_rest.score(&d);
+        assert!(s_rest.lat > s_on.lat, "giving up throughput must cost latency");
+        assert!(s_rest.tmax < s_on.tmax, "resting must lower the transient peak");
+
+        // Re-probe replays the cached transient projection.
+        let replay = p_rest.score(&d);
+        assert_eq!(replay, s_rest);
+        assert_eq!(p_rest.eval_count(), 1);
     }
 
     #[test]

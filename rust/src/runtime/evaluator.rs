@@ -231,6 +231,113 @@ impl VariationKey {
     }
 }
 
+/// The transient/DTM component of a scenario (DESIGN.md §13.4):
+/// everything that determines a *transient* evaluation's scores beyond the
+/// nominal scenario — horizon, step, controller, ambient.  Present only
+/// when the transient scenario is enabled; nominal (steady) evaluations
+/// carry `None`, so their keys and serialized snapshot lines are
+/// unchanged, and a transient score can never be replayed for a steady
+/// probe or vice versa.
+///
+/// All real-valued fields are stored as IEEE-754 bit patterns for the same
+/// reason as [`VariationKey`]: two configurations score identically iff
+/// their parameters are the same floats.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TransientKey {
+    horizon_bits: u64,
+    dt_bits: u64,
+    ambient_bits: u64,
+    /// Controller discriminant: 0 none, 1 throttle, 2 sprint-rest.
+    ctrl_kind: u8,
+    /// Controller parameters (bit patterns / integer widenings; unused
+    /// slots are 0): throttle = (trip_c, relief, 0); sprint-rest =
+    /// (sprint_steps, rest_steps, rest_scale).
+    c0: u64,
+    c1: u64,
+    c2: u64,
+}
+
+impl TransientKey {
+    /// Key of an active transient configuration; `None` when the
+    /// configuration is disabled (`horizon <= 0` or `dt <= 0`), which is
+    /// what makes a disabled `--transient` bit-identical to the steady
+    /// path.
+    pub fn from_config(cfg: &crate::thermal::TransientConfig) -> Option<TransientKey> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(Self::from_parts(cfg.horizon_s, cfg.dt_s, cfg.ambient_c, cfg.controller))
+    }
+
+    /// Build a key from raw field values (the snapshot loader).
+    pub fn from_parts(
+        horizon_s: f64,
+        dt_s: f64,
+        ambient_c: f64,
+        controller: crate::thermal::Controller,
+    ) -> TransientKey {
+        use crate::thermal::Controller;
+        let (ctrl_kind, c0, c1, c2) = match controller {
+            Controller::None => (0u8, 0u64, 0u64, 0u64),
+            Controller::Throttle { trip_c, relief } => (1, trip_c.to_bits(), relief.to_bits(), 0),
+            Controller::SprintRest { sprint_steps, rest_steps, rest_scale } => {
+                (2, sprint_steps as u64, rest_steps as u64, rest_scale.to_bits())
+            }
+        };
+        TransientKey {
+            horizon_bits: horizon_s.to_bits(),
+            dt_bits: dt_s.to_bits(),
+            ambient_bits: ambient_c.to_bits(),
+            ctrl_kind,
+            c0,
+            c1,
+            c2,
+        }
+    }
+
+    /// Simulated horizon [s].
+    pub fn horizon_s(&self) -> f64 {
+        f64::from_bits(self.horizon_bits)
+    }
+
+    /// Implicit-Euler step [s].
+    pub fn dt_s(&self) -> f64 {
+        f64::from_bits(self.dt_bits)
+    }
+
+    /// Ambient temperature [°C].
+    pub fn ambient_c(&self) -> f64 {
+        f64::from_bits(self.ambient_bits)
+    }
+
+    /// Decode the controller back out of the key.
+    pub fn controller(&self) -> crate::thermal::Controller {
+        use crate::thermal::Controller;
+        match self.ctrl_kind {
+            1 => Controller::Throttle {
+                trip_c: f64::from_bits(self.c0),
+                relief: f64::from_bits(self.c1),
+            },
+            2 => Controller::SprintRest {
+                sprint_steps: self.c0 as u32,
+                rest_steps: self.c1 as u32,
+                rest_scale: f64::from_bits(self.c2),
+            },
+            _ => Controller::None,
+        }
+    }
+
+    /// Reconstruct the full configuration the key encodes.
+    pub fn to_config(&self) -> crate::thermal::TransientConfig {
+        crate::thermal::TransientConfig {
+            horizon_s: self.horizon_s(),
+            dt_s: self.dt_s(),
+            controller: self.controller(),
+            ambient_c: self.ambient_c(),
+        }
+    }
+}
+
 /// The evaluation *scenario*: everything besides the design itself that the
 /// objective scores depend on — workload, technology, the NoC fabric
 /// configuration (DESIGN.md §1.3), and the Monte Carlo variation
@@ -253,6 +360,8 @@ pub struct ScenarioKey {
     pub vc_depth: u16,
     /// Monte Carlo variation configuration; `None` for nominal scoring.
     pub variation: Option<VariationKey>,
+    /// Transient/DTM scenario configuration; `None` for steady scoring.
+    pub transient: Option<TransientKey>,
 }
 
 impl ScenarioKey {
@@ -266,6 +375,7 @@ impl ScenarioKey {
             vcs: cfg.vcs as u16,
             vc_depth: cfg.vc_depth as u16,
             variation: None,
+            transient: None,
         }
     }
 
@@ -273,6 +383,13 @@ impl ScenarioKey {
     /// when the configuration is disabled — see [`VariationKey`]).
     pub fn with_variation(mut self, variation: Option<VariationKey>) -> Self {
         self.variation = variation;
+        self
+    }
+
+    /// The same scenario with a transient component attached (`None`
+    /// when the configuration is disabled — see [`TransientKey`]).
+    pub fn with_transient(mut self, transient: Option<TransientKey>) -> Self {
+        self.transient = transient;
         self
     }
 }
@@ -286,7 +403,12 @@ impl ScenarioKey {
 /// v2: the scenario gained its optional [`VariationKey`] component — a v1
 /// reader would silently strip a robust line's variation field and replay
 /// p95 scores for a nominal probe, so v1 snapshots are retired wholesale.
-pub const CACHE_SCHEMA_VERSION: u64 = 2;
+///
+/// v3: the scenario gained its optional [`TransientKey`] component — a v2
+/// reader would strip a transient line's horizon/controller fields and
+/// replay throttle-transformed scores for a steady probe, so v2 snapshots
+/// are likewise retired.
+pub const CACHE_SCHEMA_VERSION: u64 = 3;
 
 /// Full cache key: canonical design encoding plus the evaluation scenario.
 ///
@@ -529,5 +651,63 @@ mod cache_tests {
         });
         assert!(cache.get(&other_sigma).is_none());
         assert_eq!(cache.get(&robust).unwrap(), scores(9.0));
+    }
+
+    #[test]
+    fn transient_scenarios_never_share_entries_with_steady_ones() {
+        use crate::thermal::Controller;
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let cache = EvalCache::new();
+        let base = key_of(&d);
+        cache.insert(base.clone(), scores(1.0));
+
+        let with_scenario = |f: &dyn Fn(&mut ScenarioKey)| {
+            let mut s = (*base.scenario).clone();
+            f(&mut s);
+            EvalKey { design: base.design.clone(), scenario: Arc::new(s) }
+        };
+        let throttle = Controller::Throttle { trip_c: 85.0, relief: 0.7 };
+        let transient = with_scenario(&|s| {
+            s.transient = Some(TransientKey::from_parts(0.08, 2.0e-3, 40.0, throttle))
+        });
+        // A transient probe never replays the steady scores...
+        assert!(cache.get(&transient).is_none());
+        cache.insert(transient.clone(), scores(7.0));
+        // ...nor leaks back, and every scenario knob is identity-bearing:
+        // horizon, dt, ambient, and controller parameters all separate.
+        assert_eq!(cache.get(&base).unwrap(), scores(1.0));
+        for other in [
+            TransientKey::from_parts(0.16, 2.0e-3, 40.0, throttle),
+            TransientKey::from_parts(0.08, 1.0e-3, 40.0, throttle),
+            TransientKey::from_parts(0.08, 2.0e-3, 45.0, throttle),
+            TransientKey::from_parts(0.08, 2.0e-3, 40.0, Controller::None),
+            TransientKey::from_parts(
+                0.08,
+                2.0e-3,
+                40.0,
+                Controller::Throttle { trip_c: 85.0, relief: 0.5 },
+            ),
+            TransientKey::from_parts(
+                0.08,
+                2.0e-3,
+                40.0,
+                Controller::SprintRest { sprint_steps: 6, rest_steps: 2, rest_scale: 0.5 },
+            ),
+        ] {
+            let k = with_scenario(&|s| s.transient = Some(other.clone()));
+            assert!(cache.get(&k).is_none(), "{other:?} must not alias");
+        }
+        assert_eq!(cache.get(&transient).unwrap(), scores(7.0));
+        // And the key round-trips its configuration exactly.
+        let key = TransientKey::from_parts(0.08, 2.0e-3, 40.0, throttle);
+        let cfg2 = key.to_config();
+        assert_eq!(TransientKey::from_config(&cfg2), Some(key));
+        // Disabled configurations produce no key at all.
+        let off = crate::thermal::TransientConfig {
+            horizon_s: 0.0,
+            ..crate::thermal::TransientConfig::default()
+        };
+        assert_eq!(TransientKey::from_config(&off), None);
     }
 }

@@ -15,7 +15,8 @@ use crate::coordinator::campaign::{
 use crate::opt::amosa::AmosaIter;
 use crate::opt::moo_stage::IterRecord;
 use crate::opt::{Mode, ParetoSet, Solution};
-use crate::runtime::evaluator::{ScenarioKey, VariationKey};
+use crate::runtime::evaluator::{ScenarioKey, TransientKey, VariationKey};
+use crate::thermal::{Controller, TransientConfig, TransientStats};
 use crate::util::json::Json;
 use crate::variation::{RobustEt, VariationConfig};
 
@@ -114,7 +115,8 @@ pub fn pareto_from_json(j: &Json) -> Option<ParetoSet> {
 }
 
 /// Validated candidate -> `{"design": ..., "et": x, "temp_c": y}` plus a
-/// `"robust"` Monte Carlo summary when the leg ran under variation.
+/// `"robust"` Monte Carlo summary when the leg ran under variation and a
+/// `"transient"` stepper summary when it ran a DTM scenario.
 pub fn validated_json(v: &Validated) -> Json {
     let mut fields = vec![
         ("design", design_json(&v.design)),
@@ -123,6 +125,9 @@ pub fn validated_json(v: &Validated) -> Json {
     ];
     if let Some(r) = &v.robust {
         fields.push(("robust", robust_et_json(r)));
+    }
+    if let Some(t) = &v.transient {
+        fields.push(("transient", transient_stats_json(t)));
     }
     Json::obj(fields)
 }
@@ -133,11 +138,36 @@ pub fn validated_from_json(j: &Json) -> Option<Validated> {
         Some(r) => Some(robust_et_from_json(r)?),
         None => None,
     };
+    let transient = match j.get("transient") {
+        Some(t) => Some(transient_stats_from_json(t)?),
+        None => None,
+    };
     Some(Validated {
         design: design_from_json(j.get("design")?)?,
         et: j.get("et")?.as_f64()?,
         temp_c: j.get("temp_c")?.as_f64()?,
         robust,
+        transient,
+    })
+}
+
+/// TransientStats -> JSON (per-candidate DTM simulation summary).
+pub fn transient_stats_json(t: &TransientStats) -> Json {
+    Json::obj(vec![
+        ("final_c", Json::num(t.final_c)),
+        ("peak_c", Json::num(t.peak_c)),
+        ("sustained_frac", Json::num(t.sustained_frac)),
+        ("time_over_s", Json::num(t.time_over_s)),
+    ])
+}
+
+/// Parse a summary serialized by [`transient_stats_json`].
+pub fn transient_stats_from_json(j: &Json) -> Option<TransientStats> {
+    Some(TransientStats {
+        peak_c: j.get("peak_c")?.as_f64()?,
+        final_c: j.get("final_c")?.as_f64()?,
+        time_over_s: j.get("time_over_s")?.as_f64()?,
+        sustained_frac: j.get("sustained_frac")?.as_f64()?,
     })
 }
 
@@ -229,7 +259,10 @@ impl LegSpec {
     /// `variation` configuration joins the scenario (robust legs have
     /// their own identity); a disabled one (`sigma == 0`) is spec-
     /// identical to `None`, so `--variation-sigma 0` replays nominal
-    /// artifacts.
+    /// artifacts.  The same rule holds for `transient`: a disabled
+    /// configuration (`horizon == 0` or `dt == 0`) is spec-identical to
+    /// `None`.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         world: &LegWorld,
         mode: Mode,
@@ -238,8 +271,10 @@ impl LegSpec {
         effort: &Effort,
         opt_seed: u64,
         variation: Option<&VariationConfig>,
+        transient: Option<&TransientConfig>,
     ) -> LegSpec {
         let vkey = variation.and_then(VariationKey::from_config);
+        let tkey = transient.and_then(TransientKey::from_config);
         LegSpec {
             bench: world.profile.name.to_string(),
             tech: world.tech.tech,
@@ -254,7 +289,8 @@ impl LegSpec {
                 world.tech.tech.name(),
                 world.trace.windows.len(),
             )
-            .with_variation(vkey),
+            .with_variation(vkey)
+            .with_transient(tkey),
         }
     }
 
@@ -264,7 +300,8 @@ impl LegSpec {
     pub fn leg_id(&self) -> String {
         // Nominal scenarios keep the historical canonical string (their
         // IDs — and therefore stored artifacts — stay valid); a variation
-        // component appends its four key fields.
+        // component appends its four key fields and a transient component
+        // its horizon/dt/ambient plus the controller's canonical spelling.
         let variation = match &self.scenario.variation {
             None => String::new(),
             Some(v) => format!(
@@ -275,8 +312,18 @@ impl LegSpec {
                 v.mc_seed
             ),
         };
+        let transient = match &self.scenario.transient {
+            None => String::new(),
+            Some(t) => format!(
+                "|tr:{},{},{},{}",
+                t.horizon_s(),
+                t.dt_s(),
+                t.ambient_c(),
+                t.controller().desc()
+            ),
+        };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}{}{}",
             self.bench,
             self.tech.name(),
             self.mode.name(),
@@ -290,6 +337,7 @@ impl LegSpec {
             self.scenario.vcs,
             self.scenario.vc_depth,
             variation,
+            transient,
         );
         format!(
             "{}-{}-{}-{}-{:016x}",
@@ -347,6 +395,9 @@ pub fn scenario_json(s: &ScenarioKey) -> Json {
     if let Some(v) = &s.variation {
         fields.push(("variation", variation_key_json(v)));
     }
+    if let Some(t) = &s.transient {
+        fields.push(("transient", transient_key_json(t)));
+    }
     Json::obj(fields)
 }
 
@@ -354,6 +405,10 @@ pub fn scenario_json(s: &ScenarioKey) -> Json {
 pub fn scenario_from_json(j: &Json) -> Option<ScenarioKey> {
     let variation = match j.get("variation") {
         Some(v) => Some(variation_key_from_json(v)?),
+        None => None,
+    };
+    let transient = match j.get("transient") {
+        Some(t) => Some(transient_key_from_json(t)?),
         None => None,
     };
     Some(ScenarioKey {
@@ -365,6 +420,7 @@ pub fn scenario_from_json(j: &Json) -> Option<ScenarioKey> {
         vcs: j.get("vcs")?.as_u64()? as u16,
         vc_depth: j.get("vc_depth")?.as_u64()? as u16,
         variation,
+        transient,
     })
 }
 
@@ -387,6 +443,56 @@ pub fn variation_key_from_json(j: &Json) -> Option<VariationKey> {
         j.get("tier_shift")?.as_f64()?,
         j.get("mc_samples")?.as_u64()? as u32,
         j.get("mc_seed")?.as_str()?.parse().ok()?,
+    ))
+}
+
+/// TransientKey -> JSON.  All three scalars are finite f64s, which
+/// `util::json` round-trips exactly; the controller serializes as a tagged
+/// object so new controller kinds extend the schema without ambiguity.
+pub fn transient_key_json(t: &TransientKey) -> Json {
+    let controller = match t.controller() {
+        Controller::None => Json::obj(vec![("kind", Json::str("none"))]),
+        Controller::Throttle { trip_c, relief } => Json::obj(vec![
+            ("kind", Json::str("throttle")),
+            ("relief", Json::num(relief)),
+            ("trip_c", Json::num(trip_c)),
+        ]),
+        Controller::SprintRest { sprint_steps, rest_steps, rest_scale } => Json::obj(vec![
+            ("kind", Json::str("sprint-rest")),
+            ("rest_scale", Json::num(rest_scale)),
+            ("rest_steps", Json::num(rest_steps as f64)),
+            ("sprint_steps", Json::num(sprint_steps as f64)),
+        ]),
+    };
+    Json::obj(vec![
+        ("ambient_c", Json::num(t.ambient_c())),
+        ("controller", controller),
+        ("dt_s", Json::num(t.dt_s())),
+        ("horizon_s", Json::num(t.horizon_s())),
+    ])
+}
+
+/// Parse a key serialized by [`transient_key_json`].
+pub fn transient_key_from_json(j: &Json) -> Option<TransientKey> {
+    let c = j.get("controller")?;
+    let controller = match c.get("kind")?.as_str()? {
+        "none" => Controller::None,
+        "throttle" => Controller::Throttle {
+            trip_c: c.get("trip_c")?.as_f64()?,
+            relief: c.get("relief")?.as_f64()?,
+        },
+        "sprint-rest" => Controller::SprintRest {
+            sprint_steps: c.get("sprint_steps")?.as_u64()? as u32,
+            rest_steps: c.get("rest_steps")?.as_u64()? as u32,
+            rest_scale: c.get("rest_scale")?.as_f64()?,
+        },
+        _ => return None,
+    };
+    Some(TransientKey::from_parts(
+        j.get("horizon_s")?.as_f64()?,
+        j.get("dt_s")?.as_f64()?,
+        j.get("ambient_c")?.as_f64()?,
+        controller,
     ))
 }
 
@@ -504,8 +610,16 @@ mod tests {
         // replay would silently never match.
         let world = LegWorld::new("bp", Tech::M3d, (1u64 << 53) + 1);
         let effort = Effort::quick();
-        let mut spec =
-            LegSpec::new(&world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort, 0, None);
+        let mut spec = LegSpec::new(
+            &world,
+            Mode::Po,
+            Algo::MooStage,
+            Selection::MinEt,
+            &effort,
+            0,
+            None,
+            None,
+        );
         spec.opt_seed = u64::MAX;
         let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
         assert_eq!(LegSpec::from_json(&j).unwrap(), spec);
@@ -525,10 +639,53 @@ mod tests {
             &effort,
             7,
             Some(&vcfg),
+            None,
         );
         assert!(spec.scenario.variation.is_some());
         let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
         assert_eq!(LegSpec::from_json(&j).unwrap(), spec);
+    }
+
+    #[test]
+    fn transient_spec_roundtrips_with_every_controller_kind() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        for controller in [
+            Controller::None,
+            Controller::Throttle { trip_c: 85.0, relief: 0.7 },
+            Controller::SprintRest { sprint_steps: 6, rest_steps: 2, rest_scale: 0.5 },
+        ] {
+            let tcfg = TransientConfig { controller, ..TransientConfig::default() };
+            let spec = LegSpec::new(
+                &world,
+                Mode::Pt,
+                Algo::MooStage,
+                Selection::MinEtUnderTth,
+                &effort,
+                7,
+                None,
+                Some(&tcfg),
+            );
+            assert!(spec.scenario.transient.is_some());
+            let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
+            assert_eq!(LegSpec::from_json(&j).unwrap(), spec);
+        }
+        // Robust + transient compose: both keys survive the round trip.
+        let vcfg = VariationConfig::default();
+        let tcfg = TransientConfig::default();
+        let both = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinP95Edp,
+            &effort,
+            7,
+            Some(&vcfg),
+            Some(&tcfg),
+        );
+        assert!(both.scenario.variation.is_some() && both.scenario.transient.is_some());
+        let j = crate::util::json::parse(&both.to_json().to_string()).unwrap();
+        assert_eq!(LegSpec::from_json(&j).unwrap(), both);
     }
 
     #[test]
@@ -543,6 +700,7 @@ mod tests {
             &effort,
             7,
             None,
+            None,
         );
         let id = spec.leg_id();
         assert!(id.starts_with("bp-m3d-pt-moo-stage-"));
@@ -555,6 +713,7 @@ mod tests {
             &effort,
             7,
             None,
+            None,
         );
         assert_eq!(id, again.leg_id());
         // Any identity knob changes the id.
@@ -566,6 +725,7 @@ mod tests {
             &effort,
             7,
             None,
+            None,
         );
         assert_ne!(id, sel.leg_id());
         let seed = LegSpec::new(
@@ -575,6 +735,7 @@ mod tests {
             Selection::MinEtUnderTth,
             &effort,
             8,
+            None,
             None,
         );
         assert_ne!(id, seed.leg_id());
@@ -588,6 +749,7 @@ mod tests {
             &other_effort,
             7,
             None,
+            None,
         );
         assert_ne!(id, eff.leg_id());
         // Workers are NOT identity.
@@ -599,6 +761,7 @@ mod tests {
             &effort.clone().with_workers(8),
             7,
             None,
+            None,
         );
         assert_eq!(id, w.leg_id());
     }
@@ -608,8 +771,17 @@ mod tests {
         let world = LegWorld::new("bp", Tech::M3d, 7);
         let effort = Effort::quick();
         let mk = |v: Option<&VariationConfig>| {
-            LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7, v)
-                .leg_id()
+            LegSpec::new(
+                &world,
+                Mode::Pt,
+                Algo::MooStage,
+                Selection::MinP95Edp,
+                &effort,
+                7,
+                v,
+                None,
+            )
+            .leg_id()
         };
         let nominal = mk(None);
         let robust = mk(Some(&VariationConfig::default()));
@@ -631,6 +803,49 @@ mod tests {
         // `--variation-sigma 0` replays nominal artifacts byte-for-byte.
         let mut off = VariationConfig::default();
         off.sigma = 0.0;
+        assert_eq!(nominal, mk(Some(&off)));
+    }
+
+    #[test]
+    fn transient_is_leg_identity_and_horizon_zero_is_nominal() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        let mk = |t: Option<&TransientConfig>| {
+            LegSpec::new(
+                &world,
+                Mode::Pt,
+                Algo::MooStage,
+                Selection::MinEtUnderTth,
+                &effort,
+                7,
+                None,
+                t,
+            )
+            .leg_id()
+        };
+        let nominal = mk(None);
+        let transient = mk(Some(&TransientConfig::default()));
+        assert_ne!(nominal, transient, "transient legs need their own artifacts");
+        // Every transient knob is identity.
+        let mut horizon = TransientConfig::default();
+        horizon.horizon_s *= 2.0;
+        assert_ne!(transient, mk(Some(&horizon)));
+        let mut dt = TransientConfig::default();
+        dt.dt_s /= 2.0;
+        assert_ne!(transient, mk(Some(&dt)));
+        let mut ambient = TransientConfig::default();
+        ambient.ambient_c += 5.0;
+        assert_ne!(transient, mk(Some(&ambient)));
+        let mut ctrl = TransientConfig::default();
+        ctrl.controller = Controller::Throttle { trip_c: 85.0, relief: 0.7 };
+        assert_ne!(transient, mk(Some(&ctrl)));
+        let mut relief = TransientConfig::default();
+        relief.controller = Controller::Throttle { trip_c: 85.0, relief: 0.8 };
+        assert_ne!(mk(Some(&ctrl)), mk(Some(&relief)));
+        // horizon = 0 disables the subsystem: spec-identical to nominal,
+        // so `--horizon 0` replays nominal artifacts byte-for-byte.
+        let mut off = TransientConfig::default();
+        off.horizon_s = 0.0;
         assert_eq!(nominal, mk(Some(&off)));
     }
 }

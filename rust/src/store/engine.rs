@@ -27,6 +27,7 @@ use crate::coordinator::campaign::{
 use crate::eval::objectives::Scores;
 use crate::opt::Mode;
 use crate::runtime::evaluator::EvalKey;
+use crate::thermal::TransientConfig;
 use crate::variation::VariationConfig;
 
 use super::artifact::{self, LegSpec};
@@ -74,6 +75,10 @@ pub struct Engine {
     /// engine runs (`--robust`); a disabled configuration (`sigma == 0`)
     /// behaves exactly like `None`.
     variation: Option<VariationConfig>,
+    /// Transient DTM scenario applied to every leg this engine runs
+    /// (`--transient`); a disabled configuration (`horizon == 0`)
+    /// behaves exactly like `None`.
+    transient: Option<TransientConfig>,
     shared: Mutex<Shared>,
 }
 
@@ -86,6 +91,7 @@ impl Engine {
             force: false,
             warm: Arc::new(HashMap::new()),
             variation: None,
+            transient: None,
             shared: Mutex::new(Shared::default()),
         }
     }
@@ -97,6 +103,17 @@ impl Engine {
     /// in one run directory without colliding.
     pub fn with_variation(mut self, variation: Option<VariationConfig>) -> Engine {
         self.variation = variation;
+        self
+    }
+
+    /// Builder-style transient mode: every leg run by this engine scores
+    /// and validates under the DTM scenario (see `Problem::with_transient`
+    /// and `validate::transient_stats`).  Transient legs have their own
+    /// deterministic IDs — the transient key is part of the leg spec's
+    /// scenario — so transient, robust and nominal artifacts coexist in
+    /// one run directory without colliding.
+    pub fn with_transient(mut self, transient: Option<TransientConfig>) -> Engine {
+        self.transient = transient;
         self
     }
 
@@ -142,6 +159,7 @@ impl Engine {
             force,
             warm: Arc::new(warm),
             variation: None,
+            transient: None,
             shared: Mutex::new(Shared { known, summaries: Vec::new() }),
         })
     }
@@ -165,14 +183,17 @@ impl Engine {
         seed: u64,
     ) -> LegResult {
         let variation = self.variation.as_ref();
+        let transient = self.transient.as_ref();
         let Some(store) = &self.store else {
-            let (leg, _) =
-                run_leg_warm(world, mode, algo, selection, effort, seed, None, variation);
+            let (leg, _) = run_leg_warm(
+                world, mode, algo, selection, effort, seed, None, variation, transient,
+            );
             self.push_summary(String::new(), &leg);
             return leg;
         };
 
-        let spec = LegSpec::new(world, mode, algo, selection, effort, seed, variation);
+        let spec =
+            LegSpec::new(world, mode, algo, selection, effort, seed, variation, transient);
         let id = spec.leg_id();
 
         if !self.force {
@@ -200,6 +221,7 @@ impl Engine {
             seed,
             Some(self.warm.clone()),
             variation,
+            transient,
         );
 
         if let Err(e) = store.save_leg(&id, &artifact::leg_json(&leg, &spec)) {

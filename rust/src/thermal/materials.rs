@@ -14,6 +14,9 @@ pub struct Layer {
     pub thickness: f64,
     /// Thermal conductivity [W/(m K)].
     pub k: f64,
+    /// Volumetric heat capacity [J/(m^3 K)] — the transient stepper's
+    /// per-cell thermal mass; irrelevant at steady state.
+    pub cv: f64,
     /// If this is an active silicon layer: which logic tier (0..4) it hosts.
     pub tier: Option<usize>,
 }
@@ -34,7 +37,8 @@ pub struct LayerStack {
 
 fn si(name: &'static str, thickness: f64, tier: usize) -> Layer {
     // Bulk silicon conductivity; thinned dies keep ~130 W/mK at die scale.
-    Layer { name, thickness, k: 130.0, tier: Some(tier) }
+    // cv = rho * cp = 2330 kg/m^3 * 700 J/(kg K).
+    Layer { name, thickness, k: 130.0, cv: 1.63e6, tier: Some(tier) }
 }
 
 impl LayerStack {
@@ -43,10 +47,11 @@ impl LayerStack {
     /// `cooled` enables the microfluidic inter-tier channels the paper uses
     /// for both TSV-PO and TSV-PT.
     pub fn tsv(cooled: bool) -> Self {
-        let bond = |name| Layer { name, thickness: 12e-6, k: 0.42, tier: None };
+        // BCB-like adhesive: rho ~ 1050 kg/m^3, cp ~ 2180 J/(kg K).
+        let bond = |name| Layer { name, thickness: 12e-6, k: 0.42, cv: 2.3e6, tier: None };
         LayerStack {
             layers: vec![
-                Layer { name: "base", thickness: 200e-6, k: 130.0, tier: None },
+                Layer { name: "base", thickness: 200e-6, k: 130.0, cv: 1.63e6, tier: None },
                 si("si_t0", 100e-6, 0),
                 bond("bond_01"),
                 si("si_t1", 100e-6, 1),
@@ -54,8 +59,8 @@ impl LayerStack {
                 si("si_t2", 100e-6, 2),
                 bond("bond_23"),
                 si("si_t3", 100e-6, 3),
-                Layer { name: "beol", thickness: 12e-6, k: 2.25, tier: None },
-                Layer { name: "passiv", thickness: 20e-6, k: 1.4, tier: None },
+                Layer { name: "beol", thickness: 12e-6, k: 2.25, cv: 2.0e6, tier: None },
+                Layer { name: "passiv", thickness: 20e-6, k: 1.4, cv: 1.6e6, tier: None },
             ],
             cell_pitch: 1.0e-3,
             r_sink_cell: 16.0, // TSV: thick die stack + TIM to the sink
@@ -67,10 +72,11 @@ impl LayerStack {
     /// silicon) separated by a sub-micron ILD with good thermal contact [5].
     /// No bonding adhesive anywhere; no liquid cooling needed.
     pub fn m3d() -> Self {
-        let ild = |name| Layer { name, thickness: 0.30e-6, k: 1.4, tier: None };
+        // SiO2-like ILD: rho ~ 2200 kg/m^3, cp ~ 730 J/(kg K).
+        let ild = |name| Layer { name, thickness: 0.30e-6, k: 1.4, cv: 1.6e6, tier: None };
         LayerStack {
             layers: vec![
-                Layer { name: "base", thickness: 200e-6, k: 130.0, tier: None },
+                Layer { name: "base", thickness: 200e-6, k: 130.0, cv: 1.63e6, tier: None },
                 si("si_t0", 3e-6, 0),
                 ild("ild_01"),
                 si("si_t1", 3e-6, 1),
@@ -78,8 +84,8 @@ impl LayerStack {
                 si("si_t2", 3e-6, 2),
                 ild("ild_23"),
                 si("si_t3", 3e-6, 3),
-                Layer { name: "beol", thickness: 6e-6, k: 2.25, tier: None },
-                Layer { name: "passiv", thickness: 20e-6, k: 1.4, tier: None },
+                Layer { name: "beol", thickness: 6e-6, k: 2.25, cv: 2.0e6, tier: None },
+                Layer { name: "passiv", thickness: 20e-6, k: 1.4, cv: 1.6e6, tier: None },
             ],
             cell_pitch: 1.0e-3,
             r_sink_cell: 5.0, // M3D: thin stack, low-resistance sink path
@@ -128,6 +134,14 @@ impl LayerStack {
     /// k * t * w / w = k * t for square cells.
     pub fn glat(&self) -> Vec<f64> {
         self.layers.iter().map(|l| l.k * l.thickness).collect()
+    }
+
+    /// Per-cell heat capacity of each layer [J/K]: `cv * thickness * A`.
+    /// The transient stepper divides this by `dt` to form the implicit-Euler
+    /// self term; steady-state solves never read it.
+    pub fn cap(&self) -> Vec<f64> {
+        let a = self.cell_pitch * self.cell_pitch;
+        self.layers.iter().map(|l| l.cv * l.thickness * a).collect()
     }
 
     /// Convective ambient shunt per layer [W/K]: non-zero only at the
@@ -189,6 +203,23 @@ mod tests {
         }
         assert!(LayerStack::tsv(false).gamb().iter().all(|&g| g == 0.0));
         assert!(LayerStack::m3d().gamb().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn per_cell_capacity_is_positive_and_m3d_tiers_are_light() {
+        // Every layer carries thermal mass, and an M3D device tier (3 um)
+        // holds far less heat than a thinned TSV die (100 um) — the physics
+        // behind M3D's faster transients.
+        let tsv = LayerStack::tsv(true);
+        let m3d = LayerStack::m3d();
+        assert!(tsv.cap().iter().all(|&c| c > 0.0));
+        assert!(m3d.cap().iter().all(|&c| c > 0.0));
+        let c_tsv = tsv.cap()[tsv.tier_layer(1)];
+        let c_m3d = m3d.cap()[m3d.tier_layer(1)];
+        assert!(
+            c_tsv > 20.0 * c_m3d,
+            "expected TSV tier thermal mass >> M3D: {c_tsv} vs {c_m3d}"
+        );
     }
 
     #[test]

@@ -6,11 +6,16 @@ pub mod grid;
 pub mod materials;
 pub mod plan;
 pub mod stack;
+pub mod transient;
 
 pub use grid::{GridParams, ThermalGrid};
 pub use materials::LayerStack;
 pub use plan::{solve_peak_batch_par, ThermalSolver};
 pub use stack::StackModel;
+pub use transient::{
+    cheap_transient, simulate, simulate_batch_par, simulate_with, stack_tau_s, CheapTransient,
+    Controller, TransientConfig, TransientPlan, TransientStats,
+};
 
 /// Ambient temperature assumed by all absolute-temperature reports [°C].
 pub const T_AMBIENT_C: f64 = 40.0;

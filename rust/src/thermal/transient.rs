@@ -1,0 +1,574 @@
+//! Transient thermal stepping + DTM (DVFS/throttling) scenarios
+//! (DESIGN.md §13).
+//!
+//! [`TransientPlan`] extends the zero-allocation solve plan to the time
+//! domain with implicit (backward) Euler:
+//!
+//! ```text
+//! C dT/dt = P - G T      =>      (G + C/dt) T_{n+1} = P + (C/dt) T_n
+//! ```
+//!
+//! The per-cell capacitance term `C/dt` enters the system matrix exactly
+//! like an ambient shunt: `gamb[z]` appears only in the Jacobi / residual
+//! denominators and the coarse-level sink sum, so a [`ThermalSolver`] built
+//! over a grid with `gamb[z] += cap[z]/dt` *is* the implicit-Euler system —
+//! the whole two-grid machinery (and its zero-allocation contract) is
+//! reused unchanged.  Each step solves that system with effective power
+//! `P + (C/dt) T_n`; at a fixed point (`T_{n+1} = T_n`) the capacitance
+//! terms cancel and the state satisfies the steady equation `G T = P`, so
+//! stepping to t→∞ reproduces the steady plan solve (golden-tested on all
+//! three stacks in `tests/thermal_transient.rs`).
+//!
+//! On top of the stepper sits the DTM scenario family: a [`Controller`]
+//! maps (step index, last simulated peak temperature) to a power scale in
+//! `[0, 1]` — threshold throttling, sprint-and-rest duty cycles, or none —
+//! and [`simulate_with`] runs the closed loop over a cycling window
+//! schedule, reporting [`TransientStats`] (peak/final temperature,
+//! time-over-threshold, sustained throughput fraction).  A first-order RC
+//! reduction ([`cheap_transient`]) applies the same controller semantics to
+//! the Eq.(7) stack-model rises on the DSE score hot path.
+
+use super::grid::{GridParams, ThermalGrid};
+use super::materials::LayerStack;
+use super::plan::ThermalSolver;
+
+/// DTM power controller: a pure function of (step index, last peak
+/// temperature) so simulations are deterministic and replayable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Controller {
+    /// No DTM: full power every step.
+    None,
+    /// Bang-bang thermostat: whenever the last simulated peak temperature
+    /// reaches `trip_c`, scale power to `relief` (< 1) for the next step.
+    Throttle {
+        /// Trip temperature [°C].
+        trip_c: f64,
+        /// Power scale applied while tripped (clamped to `[0, 1]`).
+        relief: f64,
+    },
+    /// Open-loop duty cycle: `sprint_steps` at full power, then
+    /// `rest_steps` at `rest_scale`, repeating.
+    SprintRest {
+        /// Full-power steps per period.
+        sprint_steps: u32,
+        /// Reduced-power steps per period.
+        rest_steps: u32,
+        /// Power scale during rest (clamped to `[0, 1]`).
+        rest_scale: f64,
+    },
+}
+
+impl Controller {
+    /// Power scale for step `step` given the last simulated peak
+    /// temperature; always in `[0, 1]` (the throttled-power invariant
+    /// pinned by `tests/prop_transient.rs`).
+    pub fn scale(&self, step: usize, last_peak_c: f64) -> f64 {
+        let s = match *self {
+            Controller::None => 1.0,
+            Controller::Throttle { trip_c, relief } => {
+                if last_peak_c >= trip_c {
+                    relief
+                } else {
+                    1.0
+                }
+            }
+            Controller::SprintRest { sprint_steps, rest_steps, rest_scale } => {
+                let period = (sprint_steps + rest_steps).max(1) as usize;
+                if step % period < sprint_steps as usize {
+                    1.0
+                } else {
+                    rest_scale
+                }
+            }
+        };
+        s.clamp(0.0, 1.0)
+    }
+
+    /// Canonical short description — the leg-identity / log spelling
+    /// (`none`, `throttle:85,0.7`, `sprint-rest:6,2,0.5`).
+    pub fn desc(&self) -> String {
+        match *self {
+            Controller::None => "none".into(),
+            Controller::Throttle { trip_c, relief } => format!("throttle:{trip_c},{relief}"),
+            Controller::SprintRest { sprint_steps, rest_steps, rest_scale } => {
+                format!("sprint-rest:{sprint_steps},{rest_steps},{rest_scale}")
+            }
+        }
+    }
+}
+
+/// Transient scenario configuration.  `horizon_s <= 0` or `dt_s <= 0`
+/// disables the scenario entirely (the steady path is the horizon-0
+/// special case, mirroring `--variation-sigma 0`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransientConfig {
+    /// Simulated horizon [s].
+    pub horizon_s: f64,
+    /// Implicit-Euler step [s] (unconditionally stable for any `dt`; the
+    /// step only controls time resolution, not stability).
+    pub dt_s: f64,
+    /// DTM controller applied to the power trace.
+    pub controller: Controller,
+    /// Ambient temperature [°C] for absolute-temperature readouts.
+    pub ambient_c: f64,
+}
+
+impl Default for TransientConfig {
+    fn default() -> Self {
+        TransientConfig {
+            horizon_s: 0.08,
+            dt_s: 2.0e-3,
+            controller: Controller::None,
+            ambient_c: super::T_AMBIENT_C,
+        }
+    }
+}
+
+impl TransientConfig {
+    /// Whether the scenario does anything; disabled configs are
+    /// bit-identical to the nominal (steady) path.
+    pub fn enabled(&self) -> bool {
+        self.horizon_s > 0.0 && self.dt_s > 0.0
+    }
+
+    /// Number of implicit-Euler steps covering the horizon (at least 1
+    /// when enabled).
+    pub fn steps(&self) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        (self.horizon_s / self.dt_s).ceil().max(1.0) as usize
+    }
+}
+
+/// Summary of one transient simulation (absolute temperatures).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransientStats {
+    /// Peak temperature over the horizon [°C].
+    pub peak_c: f64,
+    /// Peak temperature at the final step [°C].
+    pub final_c: f64,
+    /// Time spent with peak temperature above the threshold [s].
+    pub time_over_s: f64,
+    /// Mean controller power scale over the horizon (1.0 = never
+    /// throttled); sustained throughput relative to the burst trace.
+    pub sustained_frac: f64,
+}
+
+/// A reusable implicit-Euler stepping plan for one `(stack, grid shape,
+/// dt)` triple.
+///
+/// Build once with [`TransientPlan::new`] / [`TransientPlan::for_stack`],
+/// then call [`step_into`](TransientPlan::step_into) /
+/// [`step_scaled`](TransientPlan::step_scaled) any number of times — zero
+/// heap allocations per step (pinned by a counting-allocator test in
+/// `tests/thermal_transient.rs`).
+#[derive(Debug, Clone)]
+pub struct TransientPlan {
+    solver: ThermalSolver,
+    /// Per-layer `cap[z] / dt` [W/K].
+    cap_dt: Vec<f64>,
+    dt: f64,
+    /// State: temperature rise after the last step (starts at 0 = ambient).
+    t_prev: Vec<f64>,
+    /// Scratch: effective power `P + (C/dt) T_n`.
+    p_eff: Vec<f64>,
+    /// Scratch: solve output for the peak-returning entry points.
+    out: Vec<f64>,
+}
+
+impl TransientPlan {
+    /// Build the plan: the solver is constructed over a copy of `grid`
+    /// with `gamb[z] += cap[z]/dt`, which is exactly the implicit-Euler
+    /// system matrix `G + C/dt`.
+    pub fn new(grid: &ThermalGrid, cap: &[f64], dt: f64) -> Self {
+        assert!(dt > 0.0, "transient step must be positive");
+        assert_eq!(cap.len(), grid.z, "one capacitance per layer");
+        let cap_dt: Vec<f64> = cap.iter().map(|&c| c / dt).collect();
+        let mut sys = grid.clone();
+        for (g, &cdt) in sys.params.gamb.iter_mut().zip(cap_dt.iter()) {
+            *g += cdt;
+        }
+        let solver = ThermalSolver::new(&sys);
+        let cells = solver.cells();
+        TransientPlan {
+            solver,
+            cap_dt,
+            dt,
+            t_prev: vec![0.0; cells],
+            p_eff: vec![0.0; cells],
+            out: vec![0.0; cells],
+        }
+    }
+
+    /// Plan for a physical stack on an `(ny, nx)` lateral grid.
+    pub fn for_stack(stack: &LayerStack, ny: usize, nx: usize, dt: f64) -> Self {
+        let grid = ThermalGrid::new(stack.z(), ny, nx, GridParams::from_stack(stack));
+        TransientPlan::new(&grid, &stack.cap(), dt)
+    }
+
+    /// Cells per step (`z * y * x`).
+    pub fn cells(&self) -> usize {
+        self.solver.cells()
+    }
+
+    /// The implicit-Euler step [s].
+    pub fn dt(&self) -> f64 {
+        self.dt
+    }
+
+    /// Current state: temperature rise per cell after the last step.
+    pub fn state(&self) -> &[f64] {
+        &self.t_prev
+    }
+
+    /// Reset the state to ambient (rise 0 everywhere).
+    pub fn reset(&mut self) {
+        self.t_prev.fill(0.0);
+    }
+
+    /// One implicit-Euler step under power `pow_`, writing the new
+    /// temperature-rise field into `out` (which also becomes the state for
+    /// the next step).  Zero heap allocations.
+    pub fn step_into(&mut self, pow_: &[f64], it3d: usize, out: &mut [f64]) {
+        self.fill_effective_power(pow_, 1.0);
+        self.solver.solve_into(&self.p_eff, it3d, out);
+        self.t_prev.copy_from_slice(out);
+    }
+
+    /// One step under `scale * pow_` (the DTM-scaled trace), returning the
+    /// peak temperature rise.  Zero heap allocations.
+    pub fn step_scaled(&mut self, pow_: &[f64], scale: f64, it3d: usize) -> f64 {
+        self.fill_effective_power(pow_, scale);
+        let mut out = std::mem::take(&mut self.out);
+        self.solver.solve_into(&self.p_eff, it3d, &mut out);
+        self.t_prev.copy_from_slice(&out);
+        let peak = out.iter().copied().fold(f64::MIN, f64::max);
+        self.out = out;
+        peak
+    }
+
+    /// `p_eff = scale * P + (C/dt) T_n`, per layer plane.
+    fn fill_effective_power(&mut self, pow_: &[f64], scale: f64) {
+        let cells = self.cells();
+        assert_eq!(pow_.len(), cells, "power grid size mismatch");
+        let nynx = cells / self.cap_dt.len();
+        for (z, &cdt) in self.cap_dt.iter().enumerate() {
+            let base = z * nynx;
+            for i in base..base + nynx {
+                self.p_eff[i] = scale * pow_[i] + cdt * self.t_prev[i];
+            }
+        }
+    }
+}
+
+/// Run the closed DTM loop: `steps()` implicit-Euler steps over a cycling
+/// window schedule, the controller scaling each step's power from the last
+/// simulated peak temperature.  `power_of(window, last_peak_c, buf)` writes
+/// the unscaled power grid for the given trace window (temperature is
+/// passed so callers can couple leakage to the simulated state).
+///
+/// The plan state is reset to ambient first, so results depend only on the
+/// arguments — deterministic for any worker count.
+pub fn simulate_with<F>(
+    plan: &mut TransientPlan,
+    n_windows: usize,
+    cfg: &TransientConfig,
+    threshold_c: f64,
+    it3d: usize,
+    mut power_of: F,
+) -> TransientStats
+where
+    F: FnMut(usize, f64, &mut [f64]),
+{
+    let steps = cfg.steps();
+    let mut base = vec![0.0; plan.cells()];
+    let mut last_c = cfg.ambient_c;
+    let mut peak_c = cfg.ambient_c;
+    let mut final_c = cfg.ambient_c;
+    let mut time_over = 0.0;
+    let mut scale_sum = 0.0;
+    plan.reset();
+    for k in 0..steps {
+        let w = if n_windows == 0 { 0 } else { k % n_windows };
+        let scale = cfg.controller.scale(k, last_c);
+        scale_sum += scale;
+        power_of(w, last_c, &mut base);
+        let rise = plan.step_scaled(&base, scale, it3d);
+        last_c = cfg.ambient_c + rise;
+        peak_c = peak_c.max(last_c);
+        final_c = last_c;
+        if last_c > threshold_c {
+            time_over += cfg.dt_s;
+        }
+    }
+    TransientStats {
+        peak_c,
+        final_c,
+        time_over_s: time_over,
+        sustained_frac: if steps > 0 { scale_sum / steps as f64 } else { 1.0 },
+    }
+}
+
+/// [`simulate_with`] over a fixed window trace: `pows` holds `n_windows`
+/// concatenated power grids of `plan.cells()` each.
+pub fn simulate(
+    plan: &mut TransientPlan,
+    pows: &[f64],
+    n_windows: usize,
+    cfg: &TransientConfig,
+    threshold_c: f64,
+    it3d: usize,
+) -> TransientStats {
+    let cells = plan.cells();
+    assert!(n_windows > 0, "at least one trace window");
+    assert_eq!(pows.len(), n_windows * cells, "pows must hold {n_windows} grids");
+    simulate_with(plan, n_windows, cfg, threshold_c, it3d, |w, _t, buf| {
+        buf.copy_from_slice(&pows[w * cells..(w + 1) * cells]);
+    })
+}
+
+/// Batched scenario simulation fanned over `workers` threads: `pows` holds
+/// `n` designs × `n_windows` window grids; each worker builds one plan for
+/// its contiguous chunk.  Position-stable and bit-identical for any worker
+/// count (mirrors [`super::plan::solve_peak_batch_par`]).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_batch_par(
+    grid: &ThermalGrid,
+    cap: &[f64],
+    pows: &[f64],
+    n: usize,
+    n_windows: usize,
+    cfg: &TransientConfig,
+    threshold_c: f64,
+    it3d: usize,
+    workers: usize,
+) -> Vec<TransientStats> {
+    let cells = grid.z * grid.y * grid.x;
+    let per_design = n_windows * cells;
+    assert_eq!(pows.len(), n * per_design, "pows must hold {n} designs");
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let per = n.div_ceil(workers);
+    let chunks: Vec<(usize, usize)> =
+        (0..n).step_by(per).map(|lo| (lo, (lo + per).min(n))).collect();
+    let parts = crate::util::threadpool::scope_map(chunks, workers, |(lo, hi)| {
+        let mut plan = TransientPlan::new(grid, cap, cfg.dt_s);
+        (lo..hi)
+            .map(|i| {
+                simulate(
+                    &mut plan,
+                    &pows[i * per_design..(i + 1) * per_design],
+                    n_windows,
+                    cfg,
+                    threshold_c,
+                    it3d,
+                )
+            })
+            .collect::<Vec<_>>()
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Dominant thermal time constant of a stack column [s]: total column heat
+/// capacity over the sink-path conductance.  Drives the first-order RC
+/// reduction used on the DSE score path.
+pub fn stack_tau_s(stack: &LayerStack) -> f64 {
+    stack.cap().iter().sum::<f64>() / stack.gdn()[0]
+}
+
+/// Score-path transient summary from the cheap RC reduction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheapTransient {
+    /// Peak transient temperature rise over the horizon (throttle-aware).
+    pub peak_rise: f64,
+    /// Mean controller power scale (sustained-vs-burst throughput).
+    pub sustained_frac: f64,
+}
+
+/// First-order RC transient over the Eq.(7) per-window peak rises: the
+/// same implicit-Euler scheme and controller semantics as the full-grid
+/// path, reduced to one state (`h' = (scale * rise - h) / tau`).  This is
+/// what [`crate::opt::Problem`] applies per probe — a handful of scalar
+/// operations, cheap enough for the score hot path.
+pub fn cheap_transient(rises: &[f64], tau_s: f64, cfg: &TransientConfig) -> CheapTransient {
+    assert!(!rises.is_empty(), "at least one window rise");
+    assert!(tau_s > 0.0, "time constant must be positive");
+    let steps = cfg.steps();
+    let a = cfg.dt_s / tau_s;
+    let mut h = 0.0f64;
+    let mut peak = 0.0f64;
+    let mut scale_sum = 0.0f64;
+    for k in 0..steps {
+        let r = rises[k % rises.len()];
+        let scale = cfg.controller.scale(k, cfg.ambient_c + h);
+        scale_sum += scale;
+        // Implicit Euler on the scalar RC (same scheme as the grid path).
+        h = (h + a * scale * r) / (1.0 + a);
+        peak = peak.max(h);
+    }
+    CheapTransient {
+        peak_rise: peak,
+        sustained_frac: if steps > 0 { scale_sum / steps as f64 } else { 1.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::T_AMBIENT_C;
+
+    fn small_plan(stack: &LayerStack, dt: f64) -> TransientPlan {
+        TransientPlan::for_stack(stack, 4, 4, dt)
+    }
+
+    fn top_tier_power(stack: &LayerStack, ny: usize, nx: usize, scale: f64) -> Vec<f64> {
+        let mut p = vec![0.0; stack.z() * ny * nx];
+        let plane = ny * nx;
+        let zl = stack.tier_layer(3);
+        for i in 0..plane {
+            p[zl * plane + i] = scale * (0.2 + 0.05 * (i % 3) as f64);
+        }
+        p
+    }
+
+    #[test]
+    fn stepping_is_monotone_toward_steady_state_under_constant_power() {
+        let stack = LayerStack::m3d();
+        let mut plan = small_plan(&stack, 1.0e-3);
+        let p = top_tier_power(&stack, 4, 4, 1.0);
+        let mut prev = 0.0;
+        for _ in 0..20 {
+            let peak = plan.step_scaled(&p, 1.0, 120);
+            assert!(peak >= prev - 1e-12, "warm-up must be monotone: {peak} < {prev}");
+            prev = peak;
+        }
+        assert!(prev > 0.0);
+    }
+
+    #[test]
+    fn zero_dt_horizon_disables_the_scenario() {
+        let mut cfg = TransientConfig::default();
+        assert!(cfg.enabled());
+        cfg.horizon_s = 0.0;
+        assert!(!cfg.enabled());
+        assert_eq!(cfg.steps(), 0);
+        let cfg2 = TransientConfig { dt_s: 0.0, ..TransientConfig::default() };
+        assert!(!cfg2.enabled());
+    }
+
+    #[test]
+    fn controller_scale_is_always_a_fraction() {
+        let ctrls = [
+            Controller::None,
+            Controller::Throttle { trip_c: 85.0, relief: 0.7 },
+            Controller::Throttle { trip_c: 85.0, relief: 1.7 }, // clamped
+            Controller::SprintRest { sprint_steps: 3, rest_steps: 2, rest_scale: 0.5 },
+            Controller::SprintRest { sprint_steps: 0, rest_steps: 0, rest_scale: -0.5 },
+        ];
+        for c in ctrls {
+            for step in 0..16 {
+                for t in [20.0, 84.9, 85.0, 120.0] {
+                    let s = c.scale(step, t);
+                    assert!((0.0..=1.0).contains(&s), "{c:?} step {step} t {t} -> {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sprint_rest_follows_the_duty_cycle() {
+        let c = Controller::SprintRest { sprint_steps: 2, rest_steps: 1, rest_scale: 0.25 };
+        let scales: Vec<f64> = (0..6).map(|k| c.scale(k, T_AMBIENT_C)).collect();
+        assert_eq!(scales, vec![1.0, 1.0, 0.25, 1.0, 1.0, 0.25]);
+    }
+
+    #[test]
+    fn throttle_relieves_hot_and_passes_cool() {
+        let c = Controller::Throttle { trip_c: 85.0, relief: 0.6 };
+        assert_eq!(c.scale(0, 84.9), 1.0);
+        assert_eq!(c.scale(0, 85.0), 0.6);
+        assert_eq!(c.scale(0, 200.0), 0.6);
+    }
+
+    #[test]
+    fn simulate_reports_sustained_fraction_and_threshold_time() {
+        let stack = LayerStack::m3d();
+        let cfg = TransientConfig {
+            horizon_s: 8.0e-3,
+            dt_s: 1.0e-3,
+            controller: Controller::SprintRest { sprint_steps: 1, rest_steps: 1, rest_scale: 0.5 },
+            ambient_c: T_AMBIENT_C,
+        };
+        let mut plan = small_plan(&stack, cfg.dt_s);
+        let p = top_tier_power(&stack, 4, 4, 1.0);
+        let stats = simulate(&mut plan, &p, 1, &cfg, 1000.0, 120);
+        assert!((stats.sustained_frac - 0.75).abs() < 1e-12);
+        assert_eq!(stats.time_over_s, 0.0, "nothing exceeds a 1000 C threshold");
+        assert!(stats.peak_c >= stats.final_c);
+        assert!(stats.peak_c > T_AMBIENT_C);
+        // Everything is over an ambient-level threshold after step 1.
+        let mut plan2 = small_plan(&stack, cfg.dt_s);
+        let hot = simulate(&mut plan2, &p, 1, &cfg, T_AMBIENT_C, 120);
+        assert!(hot.time_over_s > 0.0);
+        assert!(hot.time_over_s <= cfg.horizon_s + cfg.dt_s);
+    }
+
+    #[test]
+    fn batch_par_matches_serial_for_any_worker_count() {
+        let stack = LayerStack::tsv(true);
+        let grid = ThermalGrid::new(stack.z(), 4, 4, GridParams::from_stack(&stack));
+        let cap = stack.cap();
+        let cfg = TransientConfig {
+            horizon_s: 5.0e-3,
+            dt_s: 1.0e-3,
+            controller: Controller::Throttle { trip_c: 42.0, relief: 0.5 },
+            ambient_c: T_AMBIENT_C,
+        };
+        let cells = grid.z * 16;
+        let n = 3;
+        let n_windows = 2;
+        let pows: Vec<f64> = (0..n * n_windows * cells)
+            .map(|i| ((i * 13) % 7) as f64 * 0.08)
+            .collect();
+        let serial = simulate_batch_par(&grid, &cap, &pows, n, n_windows, &cfg, 60.0, 60, 1);
+        for workers in [2, 4] {
+            let par = simulate_batch_par(&grid, &cap, &pows, n, n_windows, &cfg, 60.0, 60, workers);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(par.iter()) {
+                assert_eq!(a.peak_c.to_bits(), b.peak_c.to_bits(), "workers {workers}");
+                assert_eq!(a.final_c.to_bits(), b.final_c.to_bits());
+                assert_eq!(a.time_over_s.to_bits(), b.time_over_s.to_bits());
+                assert_eq!(a.sustained_frac.to_bits(), b.sustained_frac.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cheap_transient_peaks_below_the_steady_rise_and_throttle_helps() {
+        let stack = LayerStack::m3d();
+        let tau = stack_tau_s(&stack);
+        assert!(tau > 0.0);
+        let rises = [12.0, 30.0, 22.0, 8.0];
+        let cfg = TransientConfig {
+            horizon_s: 20.0 * tau,
+            dt_s: tau / 4.0,
+            controller: Controller::None,
+            ambient_c: T_AMBIENT_C,
+        };
+        let free = cheap_transient(&rises, tau, &cfg);
+        assert!(free.peak_rise > 0.0);
+        assert!(free.peak_rise <= 30.0 + 1e-9, "cannot exceed the worst window rise");
+        assert_eq!(free.sustained_frac, 1.0);
+
+        let throttled_cfg = TransientConfig {
+            controller: Controller::Throttle { trip_c: T_AMBIENT_C + 15.0, relief: 0.4 },
+            ..cfg
+        };
+        let thr = cheap_transient(&rises, tau, &throttled_cfg);
+        assert!(thr.peak_rise <= free.peak_rise + 1e-12);
+        assert!(thr.sustained_frac < 1.0);
+    }
+}

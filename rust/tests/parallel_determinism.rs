@@ -7,9 +7,12 @@
 //! Together these make every leg bit-identical for any worker count.
 
 use hem3d::config::Tech;
-use hem3d::coordinator::campaign::{run_leg, Algo, Effort, LegResult, LegWorld, Selection};
+use hem3d::coordinator::campaign::{
+    run_leg, run_leg_warm, Algo, Effort, LegResult, LegWorld, Selection,
+};
 use hem3d::coordinator::figures;
 use hem3d::opt::Mode;
+use hem3d::thermal::{Controller, TransientConfig};
 
 fn tiny(workers: usize) -> Effort {
     let mut e = Effort::quick();
@@ -41,6 +44,16 @@ fn assert_legs_identical(a: &LegResult, b: &LegResult) {
         assert_eq!(x.temp_c.to_bits(), y.temp_c.to_bits());
         assert_eq!(x.design.tile_at, y.design.tile_at);
         assert_eq!(x.design.links, y.design.links);
+        match (&x.transient, &y.transient) {
+            (Some(tx), Some(ty)) => {
+                assert_eq!(tx.peak_c.to_bits(), ty.peak_c.to_bits());
+                assert_eq!(tx.final_c.to_bits(), ty.final_c.to_bits());
+                assert_eq!(tx.time_over_s.to_bits(), ty.time_over_s.to_bits());
+                assert_eq!(tx.sustained_frac.to_bits(), ty.sustained_frac.to_bits());
+            }
+            (None, None) => {}
+            _ => panic!("transient summaries diverged between runs"),
+        }
     }
     // PHV trajectories (sans elapsed time, which is wall-clock).
     assert_eq!(a.history.len(), b.history.len());
@@ -78,6 +91,44 @@ fn figure_assembly_is_identical_for_1_and_4_workers() {
     let json_serial = figures::fig8_json(&rows_serial).to_pretty();
     let json_parallel = figures::fig8_json(&rows_parallel).to_pretty();
     assert_eq!(json_serial, json_parallel, "fig8 JSON diverged across worker counts");
+}
+
+#[test]
+fn throttled_transient_leg_is_identical_for_1_and_4_workers() {
+    // DTM scenarios must keep the worker-count contract: the controller is
+    // a pure function of (step, last peak), the transient validation is
+    // pure in the design, and the cheap-RC score transform is applied
+    // inside the cached evaluation — nothing is schedule-dependent.
+    let world = LegWorld::new("bp", Tech::M3d, 7);
+    let tcfg = TransientConfig {
+        horizon_s: 0.016,
+        dt_s: 2.0e-3,
+        controller: Controller::Throttle { trip_c: 85.0, relief: 0.7 },
+        ..TransientConfig::default()
+    };
+    let leg_with = |workers: usize| {
+        run_leg_warm(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinEtUnderTth,
+            &tiny(workers),
+            7,
+            None,
+            None,
+            Some(&tcfg),
+        )
+        .0
+    };
+    let serial = leg_with(1);
+    let parallel = leg_with(4);
+    assert_legs_identical(&serial, &parallel);
+    assert!(serial.winner.transient.is_some(), "transient leg must carry DTM stats");
+    for c in &serial.candidates {
+        let t = c.transient.expect("every validated candidate has DTM stats");
+        assert!(t.peak_c >= t.final_c, "peak {} below final {}", t.peak_c, t.final_c);
+        assert!((0.0..=1.0).contains(&t.sustained_frac));
+    }
 }
 
 #[test]

@@ -1,0 +1,202 @@
+//! Property layer for the transient DTM subsystem (DESIGN.md §13), on the
+//! offline mini-framework in `util::prop`.
+//!
+//! * **Throttling only helps** — under any throttle controller the
+//!   simulated peak-rise trace never exceeds the unthrottled trace, step
+//!   by step (power monotonicity of the M-matrix solve).
+//! * **Bounded temperature** — the transient peak rise over any cycling
+//!   window schedule is bounded by the steady solve of the elementwise
+//!   window-power envelope.
+//! * **Threshold monotonicity** — `time_over_s` is nonincreasing in the
+//!   threshold, bounded by the horizon, and the threshold never perturbs
+//!   the dynamics (peak/final/sustained are bit-identical across
+//!   thresholds).
+
+use hem3d::prop_assert;
+use hem3d::thermal::{
+    cheap_transient, simulate, stack_tau_s, Controller, GridParams, LayerStack, ThermalGrid,
+    ThermalSolver, TransientConfig, TransientPlan,
+};
+use hem3d::util::prop::{check, Gen};
+
+/// Small-but-real fixture: the full 10-layer M3D stack on a 3x3 lateral
+/// grid keeps each case cheap while exercising every layer coupling.
+fn small_grid(stack: &LayerStack) -> ThermalGrid {
+    ThermalGrid::new(stack.z(), 3, 3, GridParams::from_stack(stack))
+}
+
+fn random_power(g: &mut Gen, cells: usize) -> Vec<f64> {
+    g.vec(cells, |g| g.f64(0.0, 0.4))
+}
+
+#[test]
+fn throttled_trace_never_exceeds_the_unthrottled_trace() {
+    let stack = LayerStack::m3d();
+    let grid = small_grid(&stack);
+    let cap = stack.cap();
+    check("throttle-dominated", 10, |g| {
+        let dt = g.f64(5.0e-4, 5.0e-3);
+        let ambient = g.f64(25.0, 55.0);
+        let ctrl = Controller::Throttle {
+            trip_c: g.f64(ambient, ambient + 30.0),
+            relief: g.f64(0.0, 1.0),
+        };
+        let p = random_power(g, grid.z * grid.y * grid.x);
+
+        let mut free = TransientPlan::new(&grid, &cap, dt);
+        let mut throttled = TransientPlan::new(&grid, &cap, dt);
+        let mut last_rise = 0.0;
+        for k in 0..6 {
+            let pf = free.step_scaled(&p, 1.0, 100);
+            let scale = ctrl.scale(k, ambient + last_rise);
+            prop_assert!((0.0..=1.0).contains(&scale), "scale {scale} out of [0,1]");
+            let pt = throttled.step_scaled(&p, scale, 100);
+            prop_assert!(
+                pt <= pf * (1.0 + 1e-9) + 1e-9,
+                "step {k}: throttled rise {pt} exceeds free rise {pf}"
+            );
+            last_rise = pt;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transient_peak_is_bounded_by_the_steady_envelope_solve() {
+    let stack = LayerStack::m3d();
+    let grid = small_grid(&stack);
+    let cap = stack.cap();
+    let cells = grid.z * grid.y * grid.x;
+    check("bounded-by-envelope", 8, |g| {
+        let n_windows = 1 + g.int(0, 2);
+        let pows: Vec<f64> = random_power(g, n_windows * cells);
+        // Elementwise window-power envelope: the steady solve of this
+        // dominates every reachable transient state.
+        let mut envelope = vec![0.0f64; cells];
+        for w in 0..n_windows {
+            for (e, &p) in envelope.iter_mut().zip(pows[w * cells..(w + 1) * cells].iter()) {
+                *e = e.max(p);
+            }
+        }
+        let steady = ThermalSolver::new(&grid).solve_peak(&envelope, 200);
+
+        let dt = g.f64(5.0e-4, 5.0e-3);
+        let steps = 2 + g.int(0, 4);
+        let cfg = TransientConfig {
+            horizon_s: dt * steps as f64,
+            dt_s: dt,
+            controller: Controller::None,
+            ambient_c: g.f64(25.0, 55.0),
+        };
+        let mut plan = TransientPlan::new(&grid, &cap, dt);
+        let stats = simulate(&mut plan, &pows, n_windows, &cfg, 1.0e9, 200);
+        let rise = stats.peak_c - cfg.ambient_c;
+        prop_assert!(
+            rise <= steady * 1.001 + 1e-9,
+            "transient rise {rise} exceeds steady envelope solve {steady}"
+        );
+        prop_assert!(rise >= -1e-12, "negative rise {rise} from nonnegative power");
+        prop_assert!(
+            stats.final_c <= stats.peak_c + 1e-12,
+            "final {} above peak {}",
+            stats.final_c,
+            stats.peak_c
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn time_over_threshold_is_monotone_in_the_threshold() {
+    let stack = LayerStack::tsv(true);
+    let grid = small_grid(&stack);
+    let cap = stack.cap();
+    let cells = grid.z * grid.y * grid.x;
+    check("threshold-monotone", 8, |g| {
+        let dt = g.f64(5.0e-4, 5.0e-3);
+        let steps = 2 + g.int(0, 4);
+        let cfg = TransientConfig {
+            horizon_s: dt * steps as f64,
+            dt_s: dt,
+            controller: Controller::SprintRest {
+                sprint_steps: 1 + g.int(0, 2) as u32,
+                rest_steps: g.int(0, 2) as u32,
+                rest_scale: g.f64(0.0, 1.0),
+            },
+            ambient_c: 40.0,
+        };
+        let pows = random_power(g, cells);
+        let lo = g.f64(35.0, 60.0);
+        let hi = lo + g.f64(0.0, 30.0);
+
+        let mut plan = TransientPlan::new(&grid, &cap, dt);
+        let a = simulate(&mut plan, &pows, 1, &cfg, lo, 100);
+        let b = simulate(&mut plan, &pows, 1, &cfg, hi, 100);
+        prop_assert!(
+            a.time_over_s >= b.time_over_s,
+            "raising the threshold {lo} -> {hi} grew time-over: {} -> {}",
+            a.time_over_s,
+            b.time_over_s
+        );
+        prop_assert!(
+            a.time_over_s <= cfg.horizon_s + cfg.dt_s + 1e-12,
+            "time-over {} exceeds the horizon {}",
+            a.time_over_s,
+            cfg.horizon_s
+        );
+        // The threshold is a pure readout: dynamics are bit-identical.
+        prop_assert!(a.peak_c.to_bits() == b.peak_c.to_bits(), "peak depends on threshold");
+        prop_assert!(a.final_c.to_bits() == b.final_c.to_bits(), "final depends on threshold");
+        prop_assert!(
+            a.sustained_frac.to_bits() == b.sustained_frac.to_bits(),
+            "sustained depends on threshold"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn cheap_transient_is_bounded_and_throttling_only_helps() {
+    let stack = LayerStack::m3d();
+    let tau = stack_tau_s(&stack);
+    check("cheap-rc-bounds", 64, |g| {
+        let len = 1 + g.int(0, 7);
+        let rises = g.vec(len, |g| g.f64(0.0, 50.0));
+        let worst = rises.iter().copied().fold(0.0f64, f64::max);
+        let cfg = TransientConfig {
+            horizon_s: tau * g.f64(0.5, 10.0),
+            dt_s: tau * g.f64(0.05, 0.5),
+            controller: Controller::None,
+            ambient_c: 40.0,
+        };
+        let free = cheap_transient(&rises, tau, &cfg);
+        prop_assert!(
+            free.peak_rise <= worst + 1e-9,
+            "peak {} above the worst window rise {worst}",
+            free.peak_rise
+        );
+        prop_assert!(free.peak_rise >= 0.0, "negative peak {}", free.peak_rise);
+        prop_assert!(free.sustained_frac == 1.0, "uncontrolled sustained != 1");
+
+        let throttled_cfg = TransientConfig {
+            controller: Controller::Throttle {
+                trip_c: cfg.ambient_c + g.f64(0.0, 40.0),
+                relief: g.f64(0.0, 1.0),
+            },
+            ..cfg
+        };
+        let thr = cheap_transient(&rises, tau, &throttled_cfg);
+        prop_assert!(
+            thr.peak_rise <= free.peak_rise + 1e-12,
+            "throttled peak {} above free peak {}",
+            thr.peak_rise,
+            free.peak_rise
+        );
+        prop_assert!(
+            (0.0..=1.0).contains(&thr.sustained_frac),
+            "sustained {} out of [0,1]",
+            thr.sustained_frac
+        );
+        Ok(())
+    });
+}

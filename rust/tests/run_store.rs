@@ -14,6 +14,8 @@ use hem3d::coordinator::campaign::{Algo, Effort, LegWorld, Selection};
 use hem3d::coordinator::figures;
 use hem3d::opt::Mode;
 use hem3d::store::{artifact, Engine, LegSpec, RunStore};
+use hem3d::thermal::{Controller, TransientConfig};
+use hem3d::variation::VariationConfig;
 
 fn tiny_effort() -> Effort {
     let mut e = Effort::quick();
@@ -39,8 +41,9 @@ fn leg_artifact_roundtrip_is_byte_identical() {
     let world = LegWorld::new("knn", Tech::M3d, 11);
     let engine = Engine::ephemeral();
     let leg = engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11);
-    let spec =
-        LegSpec::new(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11, None);
+    let spec = LegSpec::new(
+        &world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 11, None, None,
+    );
 
     let s1 = artifact::leg_json(&leg, &spec).to_pretty();
     let parsed = hem3d::util::json::parse(&s1).expect("artifact parses");
@@ -194,6 +197,131 @@ fn effort_change_invalidates_stored_legs() {
         &world, Mode::Po, Algo::MooStage, Selection::MinEt, &effort.clone().with_workers(4), 3,
     );
     assert!(leg.replayed);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn throttle_cfg() -> TransientConfig {
+    TransientConfig {
+        horizon_s: 0.02,
+        dt_s: 2.0e-3,
+        controller: Controller::Throttle { trip_c: 85.0, relief: 0.7 },
+        ..TransientConfig::default()
+    }
+}
+
+#[test]
+fn transient_leg_resumes_byte_identically() {
+    let dir = tmp_dir("transient_resume");
+    let world = LegWorld::new("bp", Tech::M3d, 17);
+    let effort = tiny_effort();
+    let tcfg = throttle_cfg();
+
+    let first = Engine::open(&dir).unwrap().with_transient(Some(tcfg.clone()));
+    let leg =
+        first.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 17);
+    assert!(!leg.replayed);
+    let t = leg.winner.transient.expect("transient leg must carry DTM stats");
+    assert!(t.peak_c >= t.final_c, "peak {} below final {}", t.peak_c, t.final_c);
+    assert!((0.0..=1.0).contains(&t.sustained_frac));
+
+    // The transient scenario is part of the leg identity and of the
+    // persisted artifact.
+    let id = first.store().unwrap().list_leg_ids()[0].clone();
+    assert!(id.contains("tr:"), "leg identity must carry the transient scenario: {id}");
+    let artifact_path = dir.join("legs").join(format!("{id}.json"));
+    let artifact_bytes = std::fs::read(&artifact_path).unwrap();
+    assert!(
+        String::from_utf8_lossy(&artifact_bytes).contains("\"transient\""),
+        "leg artifact must carry the DTM stats"
+    );
+
+    // The cache snapshot is transient-keyed and loads back cleanly.
+    let snapshot = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+    assert!(snapshot.contains("\"transient\""), "cache.jsonl must key transient entries");
+    let (loaded, skipped) = first.store().unwrap().load_cache();
+    assert_eq!(skipped, 0);
+    assert!(
+        loaded.keys().all(|k| k.scenario.transient.is_some()),
+        "every entry of a transient-only run is transient-keyed"
+    );
+
+    // Second engine, same configuration: replay, byte-identical artifact,
+    // bit-identical DTM stats.
+    let second = Engine::open(&dir).unwrap().with_transient(Some(tcfg.clone()));
+    let replayed =
+        second.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 17);
+    assert!(replayed.replayed, "transient leg must replay from the store");
+    assert_eq!(artifact_bytes, std::fs::read(&artifact_path).unwrap());
+    assert_eq!(leg.evals, replayed.evals);
+    assert_eq!(leg.winner.et.to_bits(), replayed.winner.et.to_bits());
+    let rt = replayed.winner.transient.expect("replayed leg keeps its DTM stats");
+    assert_eq!(t.peak_c.to_bits(), rt.peak_c.to_bits());
+    assert_eq!(t.final_c.to_bits(), rt.final_c.to_bits());
+    assert_eq!(t.time_over_s.to_bits(), rt.time_over_s.to_bits());
+    assert_eq!(t.sustained_frac.to_bits(), rt.sustained_frac.to_bits());
+
+    // A different controller is a different leg identity: computes fresh.
+    let other = TransientConfig {
+        controller: Controller::SprintRest { sprint_steps: 2, rest_steps: 1, rest_scale: 0.5 },
+        ..tcfg
+    };
+    let third = Engine::open(&dir).unwrap().with_transient(Some(other));
+    let fresh =
+        third.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 17);
+    assert!(!fresh.replayed, "a different controller must not replay");
+    assert_eq!(third.store().unwrap().list_leg_ids().len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn transient_robust_and_nominal_legs_share_a_store() {
+    let dir = tmp_dir("transient_mixed");
+    let world = LegWorld::new("bp", Tech::Tsv, 3);
+    let effort = tiny_effort();
+    let tcfg = throttle_cfg();
+    let vcfg = VariationConfig { samples: 3, ..VariationConfig::default() };
+    let run = |engine: Engine| {
+        engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3)
+    };
+
+    // Four scenario flavours into one store: nominal, robust, transient,
+    // robust+transient — distinct leg identities, no collisions.
+    let nominal = run(Engine::open(&dir).unwrap());
+    let robust = run(Engine::open(&dir).unwrap().with_variation(Some(vcfg.clone())));
+    let transient = run(Engine::open(&dir).unwrap().with_transient(Some(tcfg.clone())));
+    let both = run(Engine::open(&dir)
+        .unwrap()
+        .with_variation(Some(vcfg.clone()))
+        .with_transient(Some(tcfg.clone())));
+    for (name, leg) in
+        [("robust", &robust), ("transient", &transient), ("both", &both)]
+    {
+        assert!(!leg.replayed, "{name} leg must not replay another scenario's artifact");
+    }
+    assert_eq!(RunStore::open_existing(&dir).unwrap().list_leg_ids().len(), 4);
+
+    // Each flavour carries exactly its own summaries.
+    assert!(nominal.winner.robust.is_none() && nominal.winner.transient.is_none());
+    assert!(robust.winner.robust.is_some() && robust.winner.transient.is_none());
+    assert!(transient.winner.transient.is_some() && transient.winner.robust.is_none());
+    assert!(both.winner.robust.is_some() && both.winner.transient.is_some());
+
+    // Every flavour replays on a second pass, from its own artifact.
+    assert!(run(Engine::open(&dir).unwrap()).replayed);
+    assert!(run(Engine::open(&dir).unwrap().with_variation(Some(vcfg.clone()))).replayed);
+    assert!(run(Engine::open(&dir).unwrap().with_transient(Some(tcfg.clone()))).replayed);
+    assert!(run(Engine::open(&dir)
+        .unwrap()
+        .with_variation(Some(vcfg))
+        .with_transient(Some(tcfg.clone())))
+    .replayed);
+
+    // A disabled transient config is spec-identical to the nominal path:
+    // `--horizon 0` replays the nominal artifact.
+    let off = TransientConfig { horizon_s: 0.0, ..tcfg };
+    let disabled = run(Engine::open(&dir).unwrap().with_transient(Some(off)));
+    assert!(disabled.replayed, "horizon 0 must replay the nominal leg");
+    assert!(disabled.winner.transient.is_none());
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,235 @@
+//! Integration: the [`TransientPlan`] implicit-Euler stepping contract
+//! (DESIGN.md §13).
+//!
+//! * **Steady-state golden** — stepping to t→∞ under constant power
+//!   reproduces the steady plan solve on all three technology stacks: at
+//!   the fixed point the capacitance terms of `(G + C/dt) T_{n+1} =
+//!   P + (C/dt) T_n` cancel, leaving `G T = P` exactly.
+//! * **First-order convergence** — halving `dt` halves the time-stepping
+//!   error against a fine-step reference (backward Euler is O(dt)).
+//! * **Zero allocation** — after plan construction, `step_into` /
+//!   `step_scaled` perform zero heap allocations, asserted with the same
+//!   counting global allocator as `tests/thermal_plan.rs`.  The bench
+//!   harness JSON points at this test by name
+//!   (`zero_alloc_asserted_by`), so renaming it is a contract change.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use hem3d::thermal::{
+    stack_tau_s, GridParams, LayerStack, ThermalGrid, ThermalSolver, TransientPlan,
+};
+
+// ---------------------------------------------------------------------------
+// Counting allocator (same shape as tests/thermal_plan.rs: thread-local
+// counters so the parallel test harness cannot interfere).
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.with(|a| a.get()) {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.with(|a| a.get()) {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Count this thread's heap allocations across `f`.
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    ALLOCS.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    let r = f();
+    ARMED.with(|a| a.set(false));
+    (ALLOCS.with(|c| c.get()), r)
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+fn campaign_grid(stack: &LayerStack) -> ThermalGrid {
+    ThermalGrid::new(stack.z(), 8, 8, GridParams::from_stack(stack))
+}
+
+/// Deterministic top-tier-heavy power field (the campaign's hot shape).
+fn power_for(grid: &ThermalGrid, stack: &LayerStack, scale: f64) -> Vec<f64> {
+    let cells = grid.z * grid.y * grid.x;
+    let mut p = vec![0.0; cells];
+    let plane = grid.y * grid.x;
+    let zl = stack.tier_layer(3);
+    for i in 0..plane {
+        p[zl * plane + i] = scale * (0.3 + 0.07 * (i % 7) as f64);
+    }
+    let z0 = stack.tier_layer(0);
+    for i in 0..plane / 2 {
+        p[z0 * plane + i] += 0.1 * scale;
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Steady-state golden
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_limit_reproduces_the_steady_plan_solve_on_all_stacks() {
+    for stack in [LayerStack::m3d(), LayerStack::tsv(true), LayerStack::tsv(false)] {
+        let grid = campaign_grid(&stack);
+        let p = power_for(&grid, &stack, 1.0);
+        let steady = ThermalSolver::new(&grid).solve_peak(&p, 400);
+
+        // dt far beyond every stack time constant: each implicit step is a
+        // near-steady solve and the iteration contracts hard onto the
+        // fixed point.
+        let tau = stack_tau_s(&stack);
+        let mut plan = TransientPlan::new(&grid, &stack.cap(), 100.0 * tau);
+        let mut last = 0.0;
+        for _ in 0..40 {
+            last = plan.step_scaled(&p, 1.0, 400);
+        }
+        let rel = (last - steady).abs() / steady.abs().max(1e-12);
+        assert!(
+            rel < 2e-2,
+            "stack z={}: t->inf peak rise {last:.4} vs steady {steady:.4} (rel {rel:.3e})",
+            stack.z()
+        );
+    }
+}
+
+#[test]
+fn warm_up_is_monotone_and_stays_below_the_steady_solution() {
+    // From ambient under constant power, backward Euler rises monotonically
+    // and never overshoots the steady solve (M-matrix monotonicity).
+    let stack = LayerStack::m3d();
+    let grid = campaign_grid(&stack);
+    let p = power_for(&grid, &stack, 1.0);
+    let steady = ThermalSolver::new(&grid).solve_peak(&p, 400);
+    let tau = stack_tau_s(&stack);
+    let mut plan = TransientPlan::new(&grid, &stack.cap(), tau / 4.0);
+    let mut prev = 0.0;
+    for step in 0..32 {
+        let peak = plan.step_scaled(&p, 1.0, 400);
+        assert!(peak >= prev - 1e-12, "step {step}: {peak} < {prev}");
+        assert!(peak <= steady * (1.0 + 1e-6), "step {step}: {peak} overshoots {steady}");
+        prev = peak;
+    }
+    // After 8 tau the state is essentially steady.
+    assert!(prev > 0.95 * steady, "after 8 tau: {prev} vs steady {steady}");
+}
+
+// ---------------------------------------------------------------------------
+// First-order convergence in dt
+// ---------------------------------------------------------------------------
+
+#[test]
+fn halving_dt_roughly_halves_the_time_stepping_error() {
+    let stack = LayerStack::m3d();
+    let tau = stack_tau_s(&stack);
+    let t_star = 2.0 * tau; // fixed physical time, mid-transient
+
+    // Peak rise at t* for a given step count covering [0, t*].
+    let peak_at = |steps: usize| -> f64 {
+        let mut plan = TransientPlan::for_stack(&stack, 4, 4, t_star / steps as f64);
+        let cells = plan.cells();
+        let plane = 16;
+        let mut p = vec![0.0; cells];
+        let zl = stack.tier_layer(3);
+        for i in 0..plane {
+            p[zl * plane + i] = 0.2 + 0.05 * (i % 3) as f64;
+        }
+        let mut last = 0.0;
+        for _ in 0..steps {
+            last = plan.step_scaled(&p, 1.0, 300);
+        }
+        last
+    };
+
+    let reference = peak_at(256); // dt = t*/256, near-exact in time
+    let coarse = peak_at(16);
+    let fine = peak_at(32);
+    let err_coarse = (coarse - reference).abs();
+    let err_fine = (fine - reference).abs();
+    assert!(
+        err_fine < err_coarse,
+        "halving dt must reduce the error: {err_fine} !< {err_coarse}"
+    );
+    let ratio = err_coarse / err_fine.max(1e-15);
+    assert!(
+        (1.4..=3.5).contains(&ratio),
+        "backward Euler is first order: expected error ratio ~2, got {ratio:.2} \
+         (coarse {err_coarse:.3e}, fine {err_fine:.3e})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Zero-allocation contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_step_performs_zero_heap_allocations() {
+    let stack = LayerStack::m3d();
+    let mut plan = TransientPlan::for_stack(&stack, 8, 8, 2.0e-3);
+    let grid = campaign_grid(&stack);
+    let p = power_for(&grid, &stack, 1.0);
+    let mut out = vec![0.0; plan.cells()];
+
+    // Warm call outside the measurement: the DSE/validation loops always
+    // step an already-used plan.
+    plan.step_into(&p, 120, &mut out);
+    plan.step_scaled(&p, 0.7, 120);
+    plan.reset();
+
+    let (allocs, _) = count_allocs(|| {
+        plan.step_into(&p, 120, &mut out);
+        let peak = plan.step_scaled(&p, 0.7, 120);
+        assert!(peak > 0.0);
+    });
+    assert_eq!(allocs, 0, "transient step allocated {allocs} times");
+}
+
+#[test]
+fn step_into_output_is_the_next_state_and_reset_restarts_from_ambient() {
+    let stack = LayerStack::tsv(true);
+    let grid = campaign_grid(&stack);
+    let p = power_for(&grid, &stack, 1.0);
+    let mut plan = TransientPlan::new(&grid, &stack.cap(), 1.0e-3);
+    let mut out = vec![0.0; plan.cells()];
+
+    plan.step_into(&p, 120, &mut out);
+    for (a, b) in out.iter().zip(plan.state().iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "step output must become the plan state");
+    }
+    let first = out.clone();
+
+    // A second step from the warmed state differs; after reset the plan
+    // reproduces its first step bit-for-bit.
+    plan.step_into(&p, 120, &mut out);
+    assert!(out.iter().zip(first.iter()).any(|(a, b)| a.to_bits() != b.to_bits()));
+    plan.reset();
+    assert!(plan.state().iter().all(|&t| t == 0.0));
+    plan.step_into(&p, 120, &mut out);
+    for (i, (a, b)) in out.iter().zip(first.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "cell {i}: reset must restore the ambient start");
+    }
+}

@@ -41,6 +41,7 @@ fn robust_leg(world: &LegWorld, workers: usize, v: &VariationConfig) -> LegResul
         9,
         None,
         Some(v),
+        None,
     )
     .0
 }
@@ -114,6 +115,7 @@ fn sigma_zero_is_bit_identical_to_the_nominal_path() {
         5,
         None,
         Some(&off),
+        None,
     )
     .0;
     assert_legs_identical(&nominal, &zero);
