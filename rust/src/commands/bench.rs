@@ -16,7 +16,11 @@
 //!   aggregate into a `RobustScore`);
 //! * **transient** — one zero-alloc implicit-Euler step and one whole
 //!   throttled DTM scenario on the campaign grid (the `--transient`
-//!   validation inner loop).
+//!   validation inner loop);
+//! * **ladder** — one robust greedy local-search leg run twice from the
+//!   same seed, exhaustive vs through the multi-fidelity ladder
+//!   (DESIGN.md §14); the fronts are asserted bit-identical before the
+//!   L2 robust-MC eval reduction is reported.
 //!
 //! With `--json` the results land in `BENCH_hotpaths.json` at the repo
 //! root (override with `--out`), giving CI a perf trajectory to archive.
@@ -223,6 +227,56 @@ pub fn run(args: &Args) -> Result<()> {
         100.0 * tstats.sustained_frac
     );
 
+    // ---- ladder: multi-fidelity robust DSE leg ----------------------------
+    // One robust greedy local-search leg, run twice from the same seed:
+    // exhaustive (every probe pays the full robust Monte Carlo) vs through
+    // the multi-fidelity ladder (certified L0 bounds resolve dominated
+    // probes without MC).  Same rule as the thermal trust check above: the
+    // fronts must be bit-identical before the reduction means anything.
+    use hem3d::opt::{local_search, LocalConfig, Mode, Problem};
+    let lcfg = LocalConfig {
+        neighbors_per_step: 8,
+        patience: 2,
+        max_steps: if quick { 6 } else { 12 },
+    };
+    let ladder_leg = |ladder: bool| {
+        let problem = Problem::new(&ctx, Mode::Pt)
+            .with_workers(workers)
+            .with_variation(&vcfg)
+            .with_ladder(ladder);
+        let reference = problem.reference(&design);
+        let mut lrng = Rng::seed_from_u64(seed ^ 0x1add);
+        let t0 = std::time::Instant::now();
+        let res = local_search(&problem, design.clone(), &reference, &lcfg, &mut lrng);
+        let secs = t0.elapsed().as_secs_f64();
+        (res, problem.eval_count(), problem.ladder_stats(), secs)
+    };
+    let (res_ex, evals_ex, _, secs_ex) = ladder_leg(false);
+    let (res_ld, evals_ld, (l0_resolved, promoted), secs_ld) = ladder_leg(true);
+    anyhow::ensure!(
+        res_ex.final_cost.to_bits() == res_ld.final_cost.to_bits()
+            && res_ex.pareto.members.len() == res_ld.pareto.members.len()
+            && res_ex.pareto.members.iter().zip(res_ld.pareto.members.iter()).all(|(a, b)| {
+                a.obj.iter().zip(b.obj.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+            }),
+        "ladder leg diverged from the exhaustive leg"
+    );
+    anyhow::ensure!(
+        evals_ex == evals_ld,
+        "ladder changed the distinct-design eval count ({evals_ld} vs {evals_ex})"
+    );
+    // Exact-rung (L1/L2) computations the ladder actually paid for:
+    // every distinct design is counted once, certified bounds stay at L0,
+    // and a later promotion upgrades one of them to the exact rung.
+    let exact_evals = evals_ld - l0_resolved + promoted;
+    let reduction = evals_ex as f64 / (exact_evals as f64).max(1.0);
+    println!(
+        "ladder: {exact_evals}/{evals_ex} robust evals ({l0_resolved} certified at L0, \
+         {promoted} promoted) -> {reduction:.1}x fewer, front bit-identical, \
+         {:.2}s vs {:.2}s",
+        secs_ld, secs_ex
+    );
+
     if args.flag("json") {
         let out = args.opt_or("out", "BENCH_hotpaths.json");
         let json = Json::obj(vec![
@@ -277,6 +331,19 @@ pub fn run(args: &Args) -> Result<()> {
                     ("sigma", Json::num(vcfg.sigma)),
                     ("tier_shift", Json::num(vcfg.tier_shift)),
                     ("timing_yield", Json::num(timing_yield)),
+                ]),
+            ),
+            (
+                "ladder",
+                Json::obj(vec![
+                    ("bit_identical_to_exhaustive", Json::Bool(true)),
+                    ("certified_l0", Json::num(l0_resolved as f64)),
+                    ("exact_evals", Json::num(exact_evals as f64)),
+                    ("exhaustive_evals", Json::num(evals_ex as f64)),
+                    ("promoted", Json::num(promoted as f64)),
+                    ("reduction", Json::num(reduction)),
+                    ("secs_exhaustive", Json::num(secs_ex)),
+                    ("secs_ladder", Json::num(secs_ld)),
                 ]),
             ),
             (

@@ -83,8 +83,9 @@ pub fn transient_from_args(args: &Args) -> Option<hem3d::thermal::TransientConfi
 }
 
 /// Resolve the engine from `--run-dir` / `--name` / `--force` plus the
-/// `--robust` variation knobs and the `--transient` DTM knobs; `None` for
-/// both dir options means an ephemeral (non-persisted) campaign.
+/// `--robust` variation knobs, the `--transient` DTM knobs, and the
+/// `--ladder` multi-fidelity switch; `None` for both dir options means an
+/// ephemeral (non-persisted) campaign.
 pub fn engine_from_args(args: &Args) -> Result<Engine> {
     let engine = match run_dir_from_args(args) {
         Some(dir) => Engine::open_with(dir, args.flag("force"))?,
@@ -92,7 +93,8 @@ pub fn engine_from_args(args: &Args) -> Result<Engine> {
     };
     Ok(engine
         .with_variation(variation_from_args(args))
-        .with_transient(transient_from_args(args)))
+        .with_transient(transient_from_args(args))
+        .with_ladder(args.flag("ladder")))
 }
 
 /// Regenerate the requested figures into `--out`.
@@ -131,6 +133,12 @@ pub fn run(args: &Args) -> Result<()> {
             t.dt_s,
             t.ambient_c,
             t.controller.desc()
+        );
+    }
+    if args.flag("ladder") {
+        log_info!(
+            "multi-fidelity ladder: L0 certified bounds / budgeted MC \
+             (bit-exact; identity on nominal legs)"
         );
     }
     let engine = engine_from_args(args)?;

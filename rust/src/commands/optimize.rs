@@ -77,6 +77,16 @@ pub fn run(args: &Args) -> Result<()> {
             t.controller.desc()
         );
     }
+    if args.flag("ladder") {
+        if variation.is_some() {
+            log_info!(
+                "multi-fidelity ladder: L0 certified bounds skip dominated \
+                 probes; validation uses surrogate-ranked budgeted MC"
+            );
+        } else {
+            log_info!("--ladder is inert without --robust (nominal scoring has one rung)");
+        }
+    }
     let world = LegWorld::new(&bench, tech, seed);
     let engine = super::campaign::engine_from_args(args)?;
     let leg = engine.run_leg(&world, mode, algo, selection, &effort, seed);

@@ -9,10 +9,13 @@ use crate::arch::encode::EncodeCtx;
 use crate::arch::geometry::Geometry;
 use crate::arch::tile::TileSet;
 use crate::config::{ArchConfig, Tech, TechParams};
+use crate::eval::features::features;
 use crate::noc::topology;
 use crate::opt::amosa::AmosaIter;
 use crate::opt::moo_stage::IterRecord;
-use crate::opt::{amosa, moo_stage, AmosaConfig, Mode, ParetoSet, Problem, StageConfig};
+use crate::opt::{
+    amosa, moo_stage, AmosaConfig, Mode, ParetoSet, Problem, RegTree, StageConfig, TreeConfig,
+};
 use crate::perf::PerfCoeffs;
 use crate::runtime::evaluator::EvalKey;
 use crate::thermal::{TransientConfig, TransientStats};
@@ -20,7 +23,7 @@ use crate::traffic::{benchmark, generate, BenchProfile, Trace};
 use crate::util::Rng;
 use crate::variation::{RobustEt, VariationConfig};
 
-use super::validate::validate_candidate_full;
+use super::validate::{validate_candidate_budgeted, validate_candidate_full};
 
 /// Which optimizer drives a leg.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -326,7 +329,7 @@ pub fn run_leg(
     effort: &Effort,
     seed: u64,
 ) -> LegResult {
-    run_leg_warm(world, mode, algo, selection, effort, seed, None, None, None).0
+    run_leg_warm(world, mode, algo, selection, effort, seed, None, None, None, false).0
 }
 
 /// [`run_leg`] with an optional warm-start snapshot, additionally returning
@@ -352,6 +355,17 @@ pub fn run_leg(
 /// transient reduction, every validated candidate carries a
 /// [`TransientStats`] summary from the full-grid stepper, and a disabled
 /// configuration (`horizon == 0`) is bit-identical to passing `None`.
+///
+/// `ladder` enables the multi-fidelity evaluation ladder (`--ladder`,
+/// DESIGN.md §14) on robust legs: DSE probes may settle at a certified
+/// L0 lower bound when that provably cannot change the optimizer's
+/// hypervolume, and the validation stage budgets each candidate's Monte
+/// Carlo fan-out against a surrogate-ranked, fully-validated reference
+/// candidate.  Both reductions are *sound*: the optimizer trajectory,
+/// Pareto front, history records, eval counts and selected winner are
+/// bit-identical to the exhaustive run — only per-candidate
+/// [`RobustEt::samples`] of provably-losing candidates shrinks.  On
+/// nominal legs `ladder` is the identity.
 #[allow(clippy::too_many_arguments)]
 pub fn run_leg_warm(
     world: &LegWorld,
@@ -363,6 +377,7 @@ pub fn run_leg_warm(
     warm: Option<Arc<HashMap<EvalKey, crate::eval::objectives::Scores>>>,
     variation: Option<&VariationConfig>,
     transient: Option<&TransientConfig>,
+    ladder: bool,
 ) -> (LegResult, Vec<(EvalKey, crate::eval::objectives::Scores)>) {
     let ctx = world.encode_ctx();
     let mut problem = Problem::new(&ctx, mode).with_workers(effort.workers);
@@ -376,6 +391,8 @@ pub fn run_leg_warm(
     if let Some(tcfg) = transient {
         problem = problem.with_transient(tcfg);
     }
+    // After `with_variation`: the ladder is an identity on nominal legs.
+    problem = problem.with_ladder(ladder);
     let start = Design::with_identity_placement(
         world.cfg.n_tiles(),
         topology::mesh_links(&world.cfg),
@@ -418,11 +435,70 @@ pub fn run_leg_warm(
     let coeffs = PerfCoeffs::default();
     let vmodel = problem.variation_model();
     let tcfg = problem.transient_config().map(|cfg| (cfg, world.cfg.t_threshold_c));
-    let mut candidates: Vec<Validated> = crate::util::threadpool::scope_map(
-        members,
-        effort.workers,
-        |m| validate_candidate_full(&ctx, &world.profile, &m.design, &coeffs, vmodel, tcfg),
-    );
+    let mut candidates: Vec<Validated> = if problem.ladder_enabled()
+        && selection == Selection::MinP95Edp
+        && !members.is_empty()
+    {
+        // Ladder validation stage (DESIGN.md §14): a regression-tree
+        // surrogate trained on the *full* pre-cap front (order-canonical
+        // fit, so member collection order cannot matter) ranks the capped
+        // members by predicted p95 latency.  The best-ranked candidate
+        // validates with the full Monte Carlo fan-out first; when it
+        // clears the yield floor, its p95 EDP budgets every other
+        // candidate's fan-out — sampling stops as soon as losing to the
+        // reference is *certain*, which provably never changes the
+        // selected winner or its statistics (see
+        // `variation::robust_et_budgeted`).  A mis-ranked surrogate only
+        // costs samples (a poor reference truncates less), never
+        // correctness.
+        let geo = ctx.geo;
+        let tiles = ctx.tiles;
+        let stack = &ctx.stack;
+        let train_x: Vec<Vec<f64>> =
+            pareto.members.iter().map(|m| features(&m.design, geo, tiles, stack)).collect();
+        let train_y: Vec<f64> = pareto.members.iter().map(|m| m.obj[0]).collect();
+        let tree = RegTree::fit_canonical(&train_x, &train_y, &TreeConfig::default());
+        let mut ri = 0usize;
+        let mut best = f64::INFINITY;
+        for (i, m) in members.iter().enumerate() {
+            let pred = tree.predict(&features(&m.design, geo, tiles, stack));
+            if pred < best {
+                best = pred;
+                ri = i;
+            }
+        }
+        let reference = validate_candidate_full(
+            &ctx,
+            &world.profile,
+            &members[ri].design,
+            &coeffs,
+            vmodel,
+            tcfg,
+        );
+        let budget =
+            reference.robust.as_ref().filter(|r| r.meets_yield()).map(|r| r.p95_edp);
+        let indexed: Vec<(usize, &crate::opt::Solution)> =
+            members.into_iter().enumerate().collect();
+        crate::util::threadpool::scope_map(indexed, effort.workers, |(i, m)| {
+            if i == ri {
+                reference.clone()
+            } else {
+                validate_candidate_budgeted(
+                    &ctx,
+                    &world.profile,
+                    &m.design,
+                    &coeffs,
+                    vmodel,
+                    tcfg,
+                    budget,
+                )
+            }
+        })
+    } else {
+        crate::util::threadpool::scope_map(members, effort.workers, |m| {
+            validate_candidate_full(&ctx, &world.profile, &m.design, &coeffs, vmodel, tcfg)
+        })
+    };
 
     // Winner per the selection rule.
     let winner = select(&mut candidates, selection, world.cfg.t_threshold_c);

@@ -15,5 +15,6 @@ pub use campaign::{
 pub use validate::{
     detailed_peak_temp, detailed_peak_temp_with, noc_validate, noc_validate_cfg, power_grid,
     power_grid_into, thermal_plan, trace_replay_rates, transient_stats, validate_candidate,
-    validate_candidate_full, validate_candidate_robust, worst_window_index,
+    validate_candidate_budgeted, validate_candidate_full, validate_candidate_robust,
+    worst_window_index,
 };

@@ -233,13 +233,37 @@ pub fn validate_candidate_full(
     variation: Option<&crate::variation::VariationModel>,
     transient: Option<(&TransientConfig, f64)>,
 ) -> super::campaign::Validated {
+    validate_candidate_budgeted(ctx, profile, design, coeffs, variation, transient, None)
+}
+
+/// [`validate_candidate_full`] with an optional Monte Carlo budget: when
+/// `ref_p95_edp` carries the p95 EDP of a fully validated, yield-meeting
+/// reference candidate, the robust ET fan-out runs through
+/// [`crate::variation::robust_et_budgeted`] and stops sampling as soon as
+/// losing to that reference is *certain* (see its certificates).  The
+/// ladder's validation stage uses this to spend full Monte Carlo effort
+/// only on candidates that might actually win; `None` is bit-identical to
+/// [`validate_candidate_full`].  Everything outside the robust summary
+/// (ET model, detailed thermal fixed point, transient stats) is exact
+/// either way.
+pub fn validate_candidate_budgeted(
+    ctx: &EncodeCtx<'_>,
+    profile: &crate::traffic::BenchProfile,
+    design: &Design,
+    coeffs: &crate::perf::PerfCoeffs,
+    variation: Option<&crate::variation::VariationModel>,
+    transient: Option<(&TransientConfig, f64)>,
+    ref_p95_edp: Option<f64>,
+) -> super::campaign::Validated {
     let routing = Routing::build(design);
     let scores = crate::eval::objectives::evaluate(ctx, design, &routing);
     let et = crate::perf::exec_time(ctx, profile, design, &routing, &scores, coeffs);
     let temp = detailed_peak_temp(ctx, design);
     let robust = variation.map(|model| {
-        let effects = crate::variation::mc_effects(ctx, design, model, 1);
-        crate::variation::robust_et(et.total, &effects)
+        // The sample fan-out runs serially (and in index order, which the
+        // early-stop certificates rely on): candidates are already spread
+        // over the worker pool by the leg runner.
+        crate::variation::robust_et_budgeted(ctx, design, et.total, model, ref_p95_edp)
     });
     let transient =
         transient.map(|(cfg, threshold_c)| transient_stats(ctx, design, cfg, threshold_c));

@@ -50,18 +50,19 @@ COMMANDS:
              [--artifacts DIR|none] [--workers N]
              [--run-dir DIR | --name NAME] [--force]
              [--robust] [--variation-sigma X] [--tier-shift X]
-             [--mc-samples N] [--mc-seed N]
+             [--mc-samples N] [--mc-seed N] [--ladder]
              [--transient] [--horizon S] [--dt S] [--ambient C]
              [--throttle --trip C --relief X |
               --sprint-rest --sprint-steps N --rest-steps N --rest-scale X]
   bench      Hot-path benchmark harness (thermal planned-vs-seed, moo
-             scoring, NoC sim, variation MC, transient stepper)
+             scoring, NoC sim, variation MC, transient stepper,
+             multi-fidelity ladder leg)
              [--json] [--quick] [--out FILE] [--seed N] [--workers N]
   campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
              [--seed N] [--benches a,b,...] [--effort quick|full]
              [--workers N] [--run-dir DIR | --name NAME] [--force]
              [--robust] [--variation-sigma X] [--tier-shift X]
-             [--mc-samples N] [--mc-seed N]
+             [--mc-samples N] [--mc-seed N] [--ladder]
              [--transient] [--horizon S] [--dt S] [--ambient C]
              [--throttle --trip C --relief X |
               --sprint-rest --sprint-steps N --rest-steps N --rest-scale X]
@@ -83,6 +84,14 @@ Global: [--log error|warn|info|debug]
         M3D upper tiers systematically derated by --tier-shift per tier)
         and optimizes p95 objectives / p95 EDP under a timing-yield
         floor.  --variation-sigma 0 is bit-identical to the nominal path.
+        --ladder (with --robust) scores through the multi-fidelity
+        evaluation ladder: a certified analytic lower bound (L0) resolves
+        probes that provably cannot change the Pareto front, skipping
+        their Monte Carlo rung, and validation ranks candidates with a
+        regression-tree surrogate so non-winning candidates run budgeted
+        (early-stopped) MC.  Results are bit-identical to the exhaustive
+        path — same fronts, winners, figures and eval counts — just
+        cheaper; without --robust the flag is inert.
         --transient evaluates designs under a transient DTM scenario:
         implicit-Euler stepping of the thermal grid over --horizon seconds
         in --dt steps from --ambient, with an optional DVFS controller

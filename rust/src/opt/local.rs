@@ -59,9 +59,19 @@ pub fn local_search(
     cfg: &LocalConfig,
     rng: &mut Rng,
 ) -> LocalResult {
+    // Multi-fidelity ladder protocol (DESIGN.md §14): start from a blank
+    // certification snapshot (the start design must score exactly), then
+    // republish the front after every mutation.  Publishing only happens
+    // here — between scoring batches — so certification decisions inside
+    // a batch are independent of worker scheduling, and because the
+    // ladder only skips candidates whose PHV contribution is provably
+    // zero, the trajectory below is bit-identical with the ladder on or
+    // off.  On nominal problems both calls are no-ops.
+    problem.ladder_reset();
     let mut front = ParetoSet::new(32);
     let start_obj = problem.objectives(&start);
     front.insert(start_obj, &start);
+    problem.ladder_publish(&front, reference);
 
     let objs = |f: &ParetoSet| -> Vec<Vec<f64>> {
         f.members.iter().map(|m| m.obj.clone()).collect()
@@ -111,6 +121,7 @@ pub fn local_search(
             stall += 1;
             current = best_design;
         }
+        problem.ladder_publish(&front, reference);
         trajectory.push((current.clone(), cost));
         progress.push((problem.eval_count(), cost));
     }

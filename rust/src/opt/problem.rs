@@ -1,12 +1,15 @@
 //! MOO problem definition (Eq. 9): objective extraction for the PO and PT
 //! flavours, shared evaluation plumbing, and evaluation counting.
 
+use super::pareto::{dominates, ParetoSet};
 use crate::arch::design::Design;
 use crate::arch::encode::{design_key, EncodeCtx};
-use crate::eval::objectives::{evaluate_sparse, Scores, SparseTraffic};
+use crate::arch::tile::TileKind;
+use crate::eval::objectives::{evaluate_sparse, leak_40c, Scores, SparseTraffic};
 use crate::noc::routing::Routing;
 use crate::runtime::{EvalCache, EvalKey, ScenarioKey, TransientKey, VariationKey};
 use crate::thermal::{cheap_transient, stack_tau_s, TransientConfig};
+use crate::util::stats::percentile;
 use crate::variation::{robust_evaluate, VariationConfig, VariationModel};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -54,6 +57,75 @@ impl Mode {
     }
 }
 
+/// Published frontier snapshot the multi-fidelity ladder certifies skips
+/// against (DESIGN.md §14): the exact objective vectors of the
+/// optimizer's current Pareto members plus the PHV reference box.
+///
+/// Both parts matter because `opt::phv::hypervolume` runs in two stages:
+/// it first *clips* every point not strictly inside the reference box,
+/// then drops dominated points.  A candidate may therefore settle at the
+/// L0 bound exactly when the bound already proves the true point cannot
+/// survive either stage — in which case the candidate's PHV contribution
+/// is identically zero in the ladder run *and* the exhaustive run, and
+/// the two searches stay bit-identical.
+#[derive(Debug, Clone, Default)]
+pub struct LadderSnapshot {
+    /// PHV reference box the optimizer clips against.
+    reference: Vec<f64>,
+    /// Exact objective vectors of the current front members.
+    front: Vec<Vec<f64>>,
+}
+
+impl LadderSnapshot {
+    /// Snapshot that certifies nothing (every probe pays the exact rung).
+    fn empty() -> LadderSnapshot {
+        LadderSnapshot { reference: Vec::new(), front: Vec::new() }
+    }
+
+    /// Whether a certified componentwise lower bound `lb_obj` proves the
+    /// true objective vector contributes nothing to the hypervolume of
+    /// any front containing this snapshot's members:
+    ///
+    /// * a coordinate at/outside the reference box (`lb[i] >= r[i]`)
+    ///   means the true point (`true[i] >= lb[i]`) is clipped before the
+    ///   dominance pass, exactly as the bound itself would be; or
+    /// * a front member *strictly inside the box* that dominates the
+    ///   bound also dominates the true point (`m <= lb <= true`, with the
+    ///   strict coordinate carried by transitivity), so `non_dominated`
+    ///   drops both identically.  The in-box condition is load-bearing: a
+    ///   member outside the box is clipped before it can dominate anyone.
+    ///
+    /// An empty snapshot certifies nothing (the length guard fails).
+    pub fn certifies_dominated(&self, lb_obj: &[f64]) -> bool {
+        if self.reference.len() != lb_obj.len() {
+            return false;
+        }
+        if lb_obj.iter().zip(self.reference.iter()).any(|(x, r)| x >= r) {
+            return true;
+        }
+        self.front.iter().any(|m| {
+            m.len() == lb_obj.len()
+                && m.iter().zip(self.reference.iter()).all(|(x, r)| x < r)
+                && dominates(m, lb_obj)
+        })
+    }
+}
+
+/// Shared mutable ladder state: the certification snapshot plus rung
+/// counters.  One per `Problem`; the optimizer swaps the snapshot
+/// *between* scoring batches and worker threads read it concurrently
+/// inside a batch, so certification never depends on scheduling.
+struct LadderState {
+    /// Current frontier snapshot (Arc-swapped so readers only pay a
+    /// pointer clone under the read lock).
+    snapshot: std::sync::RwLock<std::sync::Arc<LadderSnapshot>>,
+    /// Designs whose first probe settled at the L0 bound.
+    bounds: AtomicU64,
+    /// L0-settled designs later promoted to the exact rung (a re-probe
+    /// found the frontier had moved past their certificate).
+    promoted: AtomicU64,
+}
+
 /// The DSE problem: evaluation context + mode + bookkeeping.
 ///
 /// `Problem` is `Sync`: the optimizers score independent candidates on
@@ -93,6 +165,9 @@ pub struct Problem<'a> {
     /// [`TransientKey`] so transient and steady cache entries can never
     /// collide.  The second element is the stack time constant `tau` [s].
     transient: Option<(TransientConfig, f64)>,
+    /// Multi-fidelity ladder state; `None` scores every probe at the
+    /// exact rung (see [`Problem::with_ladder`]).
+    ladder: Option<LadderState>,
     evals: AtomicU64,
     cache: EvalCache,
 }
@@ -119,6 +194,7 @@ impl<'a> Problem<'a> {
             scenario,
             variation: None,
             transient: None,
+            ladder: None,
             evals: AtomicU64::new(0),
             cache: EvalCache::new(),
         }
@@ -189,6 +265,75 @@ impl<'a> Problem<'a> {
         self
     }
 
+    /// Builder-style multi-fidelity ladder (DESIGN.md §14): when enabled
+    /// on a robust problem, [`Problem::score`] may resolve a candidate at
+    /// the L0 analytic-lower-bound rung instead of paying the full Monte
+    /// Carlo rung, whenever the bound proves the candidate cannot change
+    /// the optimizer's hypervolume against the published frontier
+    /// snapshot ([`Problem::ladder_publish`]).  Because the bound is a
+    /// certified componentwise lower bound and certification implies a
+    /// zero PHV contribution for bound *and* true point alike, a ladder
+    /// run is bit-identical to the exhaustive run — same fronts, same
+    /// winners, same eval counts — just cheaper.
+    ///
+    /// The ladder is the identity on nominal problems (there is no
+    /// expensive rung to skip), mirroring the `--variation-sigma 0`
+    /// contract; call this *after* [`Problem::with_variation`].
+    pub fn with_ladder(mut self, enabled: bool) -> Self {
+        self.ladder = (enabled && self.variation.is_some()).then(|| LadderState {
+            snapshot: std::sync::RwLock::new(std::sync::Arc::new(LadderSnapshot::empty())),
+            bounds: AtomicU64::new(0),
+            promoted: AtomicU64::new(0),
+        });
+        self
+    }
+
+    /// Whether the ladder is active (robust scenario and enabled).
+    pub fn ladder_enabled(&self) -> bool {
+        self.ladder.is_some()
+    }
+
+    /// Clear the certification snapshot: until the next
+    /// [`Problem::ladder_publish`], every probe resolves at the exact
+    /// rung.  Optimizers call this on entry so a frontier left over from
+    /// a previous stage never certifies skips against the wrong search
+    /// state (the start design in particular must score exactly).
+    pub fn ladder_reset(&self) {
+        if let Some(state) = &self.ladder {
+            *state.snapshot.write().unwrap() = std::sync::Arc::new(LadderSnapshot::empty());
+        }
+    }
+
+    /// Publish the optimizer's current front and PHV reference box as the
+    /// certification snapshot.  Must only be called *between* scoring
+    /// batches (`opt::local::local_search` publishes after every front
+    /// mutation): the snapshot is constant within a batch, so every
+    /// certification decision — and with it every score — is independent
+    /// of worker count and scheduling.
+    pub fn ladder_publish(&self, front: &ParetoSet, reference: &[f64]) {
+        if let Some(state) = &self.ladder {
+            let snap = LadderSnapshot {
+                reference: reference.to_vec(),
+                front: front.members.iter().map(|s| s.obj.clone()).collect(),
+            };
+            *state.snapshot.write().unwrap() = std::sync::Arc::new(snap);
+        }
+    }
+
+    /// Ladder rung counters `(l0_resolved, promoted)`: designs whose
+    /// first probe settled at the L0 bound, and the subset later promoted
+    /// to the exact rung when the frontier moved past their certificate.
+    /// Exact-rung evaluations paid by this problem therefore equal
+    /// `eval_count() - l0_resolved + promoted`.
+    pub fn ladder_stats(&self) -> (u64, u64) {
+        match &self.ladder {
+            Some(s) => {
+                (s.bounds.load(Ordering::Relaxed), s.promoted.load(Ordering::Relaxed))
+            }
+            None => (0, 0),
+        }
+    }
+
     /// Full-score evaluation: cached designs replay their scores; fresh
     /// designs build routing, evaluate, and count toward the budget.
     ///
@@ -199,52 +344,218 @@ impl<'a> Problem<'a> {
     /// Snapshot-seeded entries short-circuit the computation on the miss
     /// path but take the same insert-and-count route.
     pub fn score(&self, design: &Design) -> Scores {
-        let key = EvalKey { design: design_key(design), scenario: self.scenario.clone() };
+        let key = EvalKey::exact(design_key(design), self.scenario.clone());
         if let Some(cached) = self.cache.get(&key) {
             return cached;
         }
+        if let Some(state) = &self.ladder {
+            return self.score_ladder(state, key, design);
+        }
         let scores = match self.cache.warm_lookup(&key) {
             Some(warm) => warm,
-            None => {
-                let routing = Routing::build(design);
-                let nominal = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
-                let projected = match &self.variation {
-                    None => nominal,
-                    // Robust mode: the cached value *is* the p95 Monte
-                    // Carlo projection (the variation key in the scenario
-                    // is what makes that sound).  The MC fan-out runs
-                    // serially here — candidates are already spread over
-                    // the worker pool, and sample order is fixed, so the
-                    // projection is identical for any `--workers`.
-                    Some(model) => {
-                        robust_evaluate(self.ctx, design, &nominal, model, 1).p95
-                    }
-                };
-                match &self.transient {
-                    None => projected,
-                    // Transient mode composes after the robust projection:
-                    // `tmax` becomes the cheap-RC peak rise of the design's
-                    // per-window power envelope under the DTM controller,
-                    // and latency is penalised by the throughput the
-                    // controller gives up (the transient key in the
-                    // scenario is what makes caching this sound).
-                    Some((cfg, tau)) => {
-                        let rises =
-                            crate::eval::objectives::window_peak_rises(self.ctx, design);
-                        let ct = cheap_transient(&rises, *tau, cfg);
-                        Scores {
-                            lat: projected.lat / ct.sustained_frac.max(1e-9),
-                            tmax: ct.peak_rise,
-                            ..projected
-                        }
-                    }
-                }
-            }
+            None => self.compute_exact(design),
         };
         if self.cache.insert(key, scores) {
             self.evals.fetch_add(1, Ordering::Relaxed);
         }
         scores
+    }
+
+    /// Exact-rung evaluation from scratch: routing + nominal objectives,
+    /// then the scenario's robust/transient projections.
+    fn compute_exact(&self, design: &Design) -> Scores {
+        let routing = Routing::build(design);
+        let nominal = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
+        self.finish_exact(design, nominal)
+    }
+
+    /// Exact-rung projections over already-computed nominal scores (split
+    /// from [`Problem::compute_exact`] so the ladder reuses the nominal
+    /// point it built for the L0 bound when a candidate fails to
+    /// certify, instead of paying routing + nominal twice).
+    fn finish_exact(&self, design: &Design, nominal: Scores) -> Scores {
+        let projected = match &self.variation {
+            None => nominal,
+            // Robust mode: the cached value *is* the p95 Monte
+            // Carlo projection (the variation key in the scenario
+            // is what makes that sound).  The MC fan-out runs
+            // serially here — candidates are already spread over
+            // the worker pool, and sample order is fixed, so the
+            // projection is identical for any `--workers`.
+            Some(model) => robust_evaluate(self.ctx, design, &nominal, model, 1).p95,
+        };
+        match &self.transient {
+            None => projected,
+            // Transient mode composes after the robust projection:
+            // `tmax` becomes the cheap-RC peak rise of the design's
+            // per-window power envelope under the DTM controller,
+            // and latency is penalised by the throughput the
+            // controller gives up (the transient key in the
+            // scenario is what makes caching this sound).
+            Some((cfg, tau)) => {
+                let rises = crate::eval::objectives::window_peak_rises(self.ctx, design);
+                let ct = cheap_transient(&rises, *tau, cfg);
+                Scores {
+                    lat: projected.lat / ct.sustained_frac.max(1e-9),
+                    tmax: ct.peak_rise,
+                    ..projected
+                }
+            }
+        }
+    }
+
+    /// Ladder-rung scoring (DESIGN.md §14).  Resolution order:
+    ///
+    /// 1. A live L0 entry re-certifies against the *current* snapshot:
+    ///    if the certificate still holds, the bound replays; if the
+    ///    frontier moved past it, the design promotes to the exact rung
+    ///    (warm-served or computed, inserted under the exact key, *not*
+    ///    recounted — its first probe already counted).
+    /// 2. A fresh probe computes (or warm-replays — the bound is a pure
+    ///    function of design + scenario, so a warm replay is bitwise
+    ///    identical) the L0 bound, and settles there iff the snapshot
+    ///    certifies the true point cannot change the optimizer's
+    ///    hypervolume; otherwise it pays the exact rung.
+    ///
+    /// The eval counter fires exactly once per design — on its first
+    /// live insert, whichever rung that lands on — so `eval_count` (and
+    /// with it every optimizer trajectory and history record) is
+    /// identical to the exhaustive run's.
+    fn score_ladder(&self, state: &LadderState, key: EvalKey, design: &Design) -> Scores {
+        let bound_key = EvalKey::bound(key.design.clone(), key.scenario.clone());
+        let snapshot = state.snapshot.read().unwrap().clone();
+        if let Some(lb) = self.cache.get(&bound_key) {
+            if snapshot.certifies_dominated(&self.mode.objectives(&lb)) {
+                return lb;
+            }
+            // Stale bound: the frontier moved and the certificate no
+            // longer holds — promote to the exact rung.
+            let scores = match self.cache.warm_lookup(&key) {
+                Some(warm) => warm,
+                None => self.compute_exact(design),
+            };
+            if self.cache.insert(key, scores) {
+                state.promoted.fetch_add(1, Ordering::Relaxed);
+            }
+            return scores;
+        }
+        let (lb, nominal) = match self.cache.warm_lookup(&bound_key) {
+            Some(warm) => (warm, None),
+            None => {
+                let routing = Routing::build(design);
+                let nominal = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
+                (self.ladder_bound(design, &nominal), Some(nominal))
+            }
+        };
+        if snapshot.certifies_dominated(&self.mode.objectives(&lb)) {
+            if self.cache.insert(bound_key, lb) {
+                self.evals.fetch_add(1, Ordering::Relaxed);
+                state.bounds.fetch_add(1, Ordering::Relaxed);
+            }
+            return lb;
+        }
+        let scores = match self.cache.warm_lookup(&key) {
+            Some(warm) => warm,
+            None => match nominal {
+                Some(nominal) => self.finish_exact(design, nominal),
+                None => self.compute_exact(design),
+            },
+        };
+        if self.cache.insert(key, scores) {
+            self.evals.fetch_add(1, Ordering::Relaxed);
+        }
+        scores
+    }
+
+    /// L0 rung: certified componentwise lower bound on the exact robust
+    /// scores of `design`, at a fraction of the Monte Carlo cost.
+    ///
+    /// * `lat` is *bit-exact*: the p95 latency stretch only needs the
+    ///   worst per-sample delay factor, replicated here with the same
+    ///   scan order and fold as `variation::sample_effects` +
+    ///   `robust_score`.
+    /// * `umean`/`usigma` are bit-exact (variation does not move them).
+    /// * `tmax` decomposes the per-sample stack accumulation as
+    ///   `S(w, s) = A(w, s) + C_k(s)`: `A` is the leakage-nominal
+    ///   per-stack power (sample-independent — accumulated *once* over
+    ///   all windows instead of once per sample) and `C_k` the sample's
+    ///   window-independent leakage correction, so
+    ///   `max_{w,s} S = max_s (max_w A + C_k)` exactly.  The only defect
+    ///   vs the fused walk in `thermal_power_leak_derated` is
+    ///   floating-point reassociation (tens of ulps on short non-negative
+    ///   sums); the `1 - 1e-9` margin swamps it and certifies `<=`.
+    /// * Transient scenarios reshape the bound exactly like the exact
+    ///   rung (sample-independent transforms of exact components), so
+    ///   the robust+transient bound is fully bit-exact.
+    fn ladder_bound(&self, design: &Design, nominal: &Scores) -> Scores {
+        let model =
+            self.variation.as_ref().expect("ladder bounds need a variation model");
+        let ctx = self.ctx;
+        let n = design.n_tiles();
+        let n_stacks = ctx.geo.rows * ctx.geo.cols;
+
+        let mut max_a = vec![0.0f64; n_stacks];
+        let mut per_stack = vec![0.0f64; n_stacks];
+        let mut windows = 0usize;
+        for win in ctx.trace.windows.iter().take(crate::runtime::dims::N_WINDOWS) {
+            per_stack.iter_mut().for_each(|x| *x = 0.0);
+            for pos in 0..n {
+                let tile = design.tile_at[pos];
+                let p40 = ctx.power.tile_power(ctx.tiles.kind(tile), win.activity[tile]);
+                per_stack[ctx.geo.stack_of(pos)] +=
+                    p40 * ctx.stack.coeff_per_tier[ctx.geo.tier_of(pos)];
+            }
+            for (m, &t) in max_a.iter_mut().zip(per_stack.iter()) {
+                *m = (*m).max(t);
+            }
+            windows += 1;
+        }
+
+        let samples = model.cfg.samples as u64;
+        let mut lats = Vec::with_capacity(samples as usize);
+        let mut tmaxes = Vec::with_capacity(samples as usize);
+        let mut corr = vec![0.0f64; n_stacks];
+        for k in 0..samples {
+            let map = model.map(k);
+            let mut worst = f64::MIN;
+            corr.iter_mut().for_each(|x| *x = 0.0);
+            for pos in 0..n {
+                let kind = ctx.tiles.kind(design.tile_at[pos]);
+                if kind != TileKind::Llc {
+                    // Same scan as `sample_effects`: SRAM-dominated LLC
+                    // logic never sets the clock.
+                    worst = worst.max(map.delay_factor[pos]);
+                }
+                corr[ctx.geo.stack_of(pos)] += leak_40c(ctx, kind)
+                    * (map.leak_factor[pos] - 1.0)
+                    * ctx.stack.coeff_per_tier[ctx.geo.tier_of(pos)];
+            }
+            lats.push(nominal.lat * worst.max(1.0));
+            let joint = max_a
+                .iter()
+                .zip(corr.iter())
+                .map(|(a, c)| a + c)
+                .fold(0.0f64, f64::max);
+            tmaxes.push(if windows == 0 { 0.0 } else { joint * (1.0 - 1e-9) });
+        }
+        let bound = Scores {
+            lat: percentile(&lats, 95.0),
+            umean: nominal.umean,
+            usigma: nominal.usigma,
+            tmax: percentile(&tmaxes, 95.0),
+        };
+        match &self.transient {
+            None => bound,
+            Some((cfg, tau)) => {
+                let rises = crate::eval::objectives::window_peak_rises(ctx, design);
+                let ct = cheap_transient(&rises, *tau, cfg);
+                Scores {
+                    lat: bound.lat / ct.sustained_frac.max(1e-9),
+                    tmax: ct.peak_rise,
+                    ..bound
+                }
+            }
+        }
     }
 
     /// Objective vector under the current mode.
@@ -489,6 +800,170 @@ mod tests {
         let replay = p_rest.score(&d);
         assert_eq!(replay, s_rest);
         assert_eq!(p_rest.eval_count(), 1);
+    }
+
+    #[test]
+    fn snapshot_certification_covers_clip_and_dominance_arms() {
+        // Empty snapshot (and any length mismatch): certifies nothing.
+        assert!(!LadderSnapshot::empty().certifies_dominated(&[1.0, 2.0]));
+        let snap = LadderSnapshot {
+            reference: vec![10.0, 10.0],
+            front: vec![vec![2.0, 2.0], vec![20.0, 1.0]],
+        };
+        assert!(!snap.certifies_dominated(&[1.0]));
+        // Dominated by the in-box member [2, 2].
+        assert!(snap.certifies_dominated(&[3.0, 2.0]));
+        // Equality is not domination: the true point could tie into the
+        // front, so it must be evaluated exactly.
+        assert!(!snap.certifies_dominated(&[2.0, 2.0]));
+        // A coordinate at/outside the reference box certifies on its own
+        // (the true point is clipped before the dominance pass).
+        assert!(snap.certifies_dominated(&[10.0, 0.5]));
+        // In-box and non-dominated: must pay the exact rung.
+        assert!(!snap.certifies_dominated(&[1.0, 1.0]));
+    }
+
+    #[test]
+    fn ladder_bound_is_certified_and_latency_exact() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 6);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let nominal = Problem::new(&ctx, Mode::Pt).score(&d);
+        let vcfg = crate::variation::VariationConfig::default();
+        let p = Problem::new(&ctx, Mode::Pt).with_variation(&vcfg).with_ladder(true);
+        assert!(p.ladder_enabled());
+        let exact = p.score(&d); // empty snapshot: exact rung
+        let bound = p.ladder_bound(&d, &nominal);
+
+        // lat / umean / usigma are bit-exact; tmax is a true lower bound
+        // that stays within the (tiny) certification margin of exact.
+        assert_eq!(bound.lat.to_bits(), exact.lat.to_bits());
+        assert_eq!(bound.umean.to_bits(), exact.umean.to_bits());
+        assert_eq!(bound.usigma.to_bits(), exact.usigma.to_bits());
+        assert!(bound.tmax > 0.0 && bound.tmax <= exact.tmax);
+        assert!(bound.tmax > exact.tmax * (1.0 - 1e-6), "bound should be tight");
+    }
+
+    #[test]
+    fn ladder_bound_under_transient_is_fully_exact() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 6);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let nominal = Problem::new(&ctx, Mode::Pt).score(&d);
+        let vcfg = crate::variation::VariationConfig::default();
+        let tcfg = TransientConfig { horizon_s: 10.0, ..TransientConfig::default() };
+        let p = Problem::new(&ctx, Mode::Pt)
+            .with_variation(&vcfg)
+            .with_transient(&tcfg)
+            .with_ladder(true);
+        let exact = p.score(&d);
+        let bound = p.ladder_bound(&d, &nominal);
+        // The transient reshape replaces tmax by the exact cheap-RC peak
+        // and stretches the (bit-exact) latency: the whole bound is exact.
+        assert_eq!(bound.lat.to_bits(), exact.lat.to_bits());
+        assert_eq!(bound.tmax.to_bits(), exact.tmax.to_bits());
+    }
+
+    #[test]
+    fn ladder_skips_certified_probes_and_promotes_stale_bounds() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 6);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d1 = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let mut d2 = d1.clone();
+        d2.swap_positions(0, 63);
+
+        let vcfg = crate::variation::VariationConfig::default();
+        let exhaustive = Problem::new(&ctx, Mode::Pt).with_variation(&vcfg);
+        let p = Problem::new(&ctx, Mode::Pt).with_variation(&vcfg).with_ladder(true);
+
+        let s1 = p.score(&d1); // empty snapshot: exact
+        assert_eq!(s1, exhaustive.score(&d1));
+        assert_eq!(p.eval_count(), 1);
+        assert_eq!(p.ladder_stats(), (0, 0));
+
+        // Publish a front whose member dominates everything in the box:
+        // the next fresh probe settles at the L0 bound but still counts.
+        let reference = p.reference(&d1);
+        let mut front = ParetoSet::new(0);
+        front.insert(vec![0.0; 4], &d1);
+        p.ladder_publish(&front, &reference);
+        let s2 = p.score(&d2);
+        assert_eq!(p.eval_count(), 2, "L0-settled designs still count as evals");
+        assert_eq!(p.ladder_stats(), (1, 0));
+
+        // The bound really lower-bounds the exhaustive score (lat exact).
+        let e2 = exhaustive.score(&d2);
+        assert_eq!(s2.lat.to_bits(), e2.lat.to_bits());
+        assert!(s2.tmax <= e2.tmax);
+
+        // Re-probe under the same snapshot replays the bound, no recount.
+        assert_eq!(p.score(&d2), s2);
+        assert_eq!(p.eval_count(), 2);
+        assert_eq!(p.ladder_stats(), (1, 0));
+
+        // Frontier reset invalidates the certificate: the re-probe
+        // promotes to the exact rung — bit-identical to the exhaustive
+        // problem — without recounting.
+        p.ladder_reset();
+        let s2x = p.score(&d2);
+        assert_eq!(s2x, e2);
+        assert_eq!(p.eval_count(), 2, "promotion must not recount");
+        assert_eq!(p.ladder_stats(), (1, 1));
+        // Subsequent probes replay the exact entry.
+        assert_eq!(p.score(&d2), s2x);
+        assert_eq!(p.ladder_stats(), (1, 1));
+    }
+
+    #[test]
+    fn empty_front_with_tiny_reference_certifies_by_clipping() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 6);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let vcfg = crate::variation::VariationConfig::default();
+        let p = Problem::new(&ctx, Mode::Pt).with_variation(&vcfg).with_ladder(true);
+        // An empty front certifies nothing by dominance, but a bound
+        // outside the reference box is clipped all the same.
+        p.ladder_publish(&ParetoSet::new(0), &[1e-12, 1e-12, 1e-12, 1e-12]);
+        p.score(&d);
+        assert_eq!(p.eval_count(), 1);
+        assert_eq!(p.ladder_stats(), (1, 0));
+    }
+
+    #[test]
+    fn nominal_problem_ignores_the_ladder() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("knn").unwrap(), &tiles, cfg.windows, 1);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let nominal = Problem::new(&ctx, Mode::Pt).score(&d);
+        let p = Problem::new(&ctx, Mode::Pt).with_ladder(true);
+        assert!(!p.ladder_enabled(), "no variation model: nothing to skip");
+        let s = p.score(&d);
+        assert_eq!(s, nominal);
+        assert_eq!(p.ladder_stats(), (0, 0));
     }
 
     #[test]

@@ -40,6 +40,30 @@ impl RegTree {
         tree
     }
 
+    /// [`RegTree::fit`] over a canonical reordering of the training set:
+    /// rows are sorted by the lexicographic order of their feature bits
+    /// (target bits as tie-break) before fitting, so the trained tree —
+    /// and every prediction — is invariant to the insertion order of the
+    /// samples.  The ladder's validation-stage surrogate trains on Pareto
+    /// members whose collection order is an implementation detail of the
+    /// optimizer; canonicalising here keeps the surrogate's reference
+    /// ranking, and with it the whole validation schedule, deterministic.
+    /// Rows with identical (features, target) bits are interchangeable,
+    /// so the stable sort's residual order cannot matter.
+    pub fn fit_canonical(x: &[Vec<f64>], y: &[f64], cfg: &TreeConfig) -> RegTree {
+        assert_eq!(x.len(), y.len());
+        let mut order: Vec<usize> = (0..x.len()).collect();
+        order.sort_by(|&a, &b| {
+            let row = |i: usize| {
+                x[i].iter().map(|v| v.to_bits()).chain(std::iter::once(y[i].to_bits()))
+            };
+            row(a).cmp(row(b))
+        });
+        let xs: Vec<Vec<f64>> = order.iter().map(|&i| x[i].clone()).collect();
+        let ys: Vec<f64> = order.iter().map(|&i| y[i]).collect();
+        RegTree::fit(&xs, &ys, cfg)
+    }
+
     fn build(
         &mut self,
         x: &[Vec<f64>],
@@ -174,5 +198,69 @@ mod tests {
         let tree = RegTree::fit(&x, &y, &TreeConfig { max_depth: 10, min_leaf: 5 });
         // With min_leaf 5 over 10 samples, only one split is possible.
         assert!(tree.n_nodes() <= 3);
+    }
+
+    #[test]
+    fn canonical_fit_is_invariant_to_insertion_order() {
+        let mut rng = Rng::seed_from_u64(11);
+        let x: Vec<Vec<f64>> = (0..120).map(|_| vec![rng.f64() * 3.0, rng.f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|v| v[0] * v[0] - 0.5 * v[1]).collect();
+
+        // A second copy in a scrambled (deterministic) order.
+        let mut perm: Vec<usize> = (0..x.len()).collect();
+        for i in (1..perm.len()).rev() {
+            let j = (rng.f64() * (i + 1) as f64) as usize % (i + 1);
+            perm.swap(i, j);
+        }
+        let xp: Vec<Vec<f64>> = perm.iter().map(|&i| x[i].clone()).collect();
+        let yp: Vec<f64> = perm.iter().map(|&i| y[i]).collect();
+
+        let cfg = TreeConfig::default();
+        let a = RegTree::fit_canonical(&x, &y, &cfg);
+        let b = RegTree::fit_canonical(&xp, &yp, &cfg);
+        assert_eq!(a.n_nodes(), b.n_nodes());
+        let mut probe = Rng::seed_from_u64(12);
+        for _ in 0..200 {
+            let q = [probe.f64() * 3.0, probe.f64()];
+            assert_eq!(
+                a.predict(&q).to_bits(),
+                b.predict(&q).to_bits(),
+                "prediction depends on insertion order at {q:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_fit_equals_fit_on_sorted_input_and_is_deterministic() {
+        // Worker-count analogue: fitting the same data twice (any
+        // presentation) must give bit-identical trees.
+        let x: Vec<Vec<f64>> = (0..40).map(|i| vec![(i % 7) as f64, (i % 5) as f64]).collect();
+        let y: Vec<f64> = (0..40).map(|i| (i % 3) as f64).collect();
+        let cfg = TreeConfig::default();
+        let a = RegTree::fit_canonical(&x, &y, &cfg);
+        let b = RegTree::fit_canonical(&x, &y, &cfg);
+        for q in x.iter() {
+            assert_eq!(a.predict(q).to_bits(), b.predict(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        // Single sample: one leaf, predicts the lone target everywhere.
+        let tree = RegTree::fit_canonical(&[vec![1.0, 2.0]], &[3.5], &TreeConfig::default());
+        assert_eq!(tree.n_nodes(), 1);
+        assert_eq!(tree.predict(&[0.0, 0.0]), 3.5);
+
+        // Constant targets through the canonical path: single leaf.
+        let x = vec![vec![1.0], vec![2.0], vec![3.0], vec![4.0]];
+        let tree = RegTree::fit_canonical(&x, &[7.0; 4], &TreeConfig::default());
+        assert_eq!(tree.n_nodes(), 1);
+        assert_eq!(tree.predict(&[2.5]), 7.0);
+
+        // Identical rows (zero-variance features): no split possible.
+        let x = vec![vec![1.0, 1.0]; 9];
+        let y = vec![2.0; 9];
+        let tree = RegTree::fit_canonical(&x, &y, &TreeConfig::default());
+        assert_eq!(tree.n_nodes(), 1);
     }
 }

@@ -408,9 +408,80 @@ impl ScenarioKey {
 /// reader would strip a transient line's horizon/controller fields and
 /// replay throttle-transformed scores for a steady probe, so v2 snapshots
 /// are likewise retired.
-pub const CACHE_SCHEMA_VERSION: u64 = 3;
+///
+/// v4: the key gained its [`Fidelity`] rung (DESIGN.md §14) — a v3 reader
+/// would strip the fidelity tag from a ladder line and could replay an L0
+/// analytic *lower bound* as if it were an exact evaluation, so v3
+/// snapshots are retired wholesale (the loader reports them with a
+/// version-specific warning and the engine compacts them away).
+pub const CACHE_SCHEMA_VERSION: u64 = 4;
 
-/// Full cache key: canonical design encoding plus the evaluation scenario.
+/// Fidelity rung of a cached evaluation — which model of the §14
+/// multi-fidelity ladder produced the [`Scores`] under this key.
+///
+/// The rung is part of [`EvalKey`], so a certified analytic lower bound
+/// (`L0Bound`) and an exact evaluation of the same design under the same
+/// scenario are *distinct cache entries* and can never replay for each
+/// other.  Exact entries record which exact model applies to their
+/// scenario: `L1Nominal` for nominal/transient scoring, `L2Robust` when
+/// the scenario carries a [`VariationKey`] (the full Monte Carlo rung) —
+/// redundant with the scenario itself (see [`Fidelity::exact_for`]), but
+/// persisted explicitly so mixed-fidelity `cache.jsonl` stores stay
+/// self-describing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fidelity {
+    /// L0: certified analytic lower bound on the exact objective vector
+    /// (componentwise `bound <= exact`), recorded when the ladder proves a
+    /// candidate dominated without paying the exact rung.
+    L0Bound,
+    /// L1: exact nominal evaluation (routing + sparse objectives, plus the
+    /// transient reshape when the scenario carries a transient key).
+    L1Nominal,
+    /// L2: exact robust evaluation (full Monte Carlo p95 projection).
+    L2Robust,
+}
+
+impl Fidelity {
+    /// The exact rung for a scenario: L2 iff the scenario is
+    /// variation-keyed (robust MC), L1 otherwise.  The transient reshape
+    /// does not add a rung — it is a deterministic transform of whichever
+    /// exact rung the scenario already demands.
+    pub fn exact_for(scenario: &ScenarioKey) -> Fidelity {
+        if scenario.variation.is_some() {
+            Fidelity::L2Robust
+        } else {
+            Fidelity::L1Nominal
+        }
+    }
+
+    /// Snapshot tag (`"l0"`/`"l1"`/`"l2"`, the `"fid"` field of a
+    /// `cache.jsonl` line).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Fidelity::L0Bound => "l0",
+            Fidelity::L1Nominal => "l1",
+            Fidelity::L2Robust => "l2",
+        }
+    }
+
+    /// Parse a snapshot tag back (the loader).
+    pub fn from_tag(tag: &str) -> Option<Fidelity> {
+        match tag {
+            "l0" => Some(Fidelity::L0Bound),
+            "l1" => Some(Fidelity::L1Nominal),
+            "l2" => Some(Fidelity::L2Robust),
+            _ => None,
+        }
+    }
+
+    /// Whether this entry holds a lower bound rather than exact scores.
+    pub fn is_bound(&self) -> bool {
+        matches!(self, Fidelity::L0Bound)
+    }
+}
+
+/// Full cache key: canonical design encoding plus the evaluation scenario
+/// plus the fidelity rung that produced the scores.
 ///
 /// The scenario sits behind an [`Arc`] because it is constant per cache
 /// owner (one `opt::Problem` = one scenario) while `score` builds a key
@@ -423,6 +494,22 @@ pub struct EvalKey {
     pub design: DesignKey,
     /// The evaluation scenario (workload + tech + fabric).
     pub scenario: Arc<ScenarioKey>,
+    /// Which ladder rung produced the scores under this key.
+    pub fidelity: Fidelity,
+}
+
+impl EvalKey {
+    /// Key of the scenario's *exact* evaluation (L2 for variation-keyed
+    /// scenarios, L1 otherwise) — the rung every non-ladder probe uses.
+    pub fn exact(design: DesignKey, scenario: Arc<ScenarioKey>) -> EvalKey {
+        let fidelity = Fidelity::exact_for(&scenario);
+        EvalKey { design, scenario, fidelity }
+    }
+
+    /// Key of the L0 analytic lower bound for the same (design, scenario).
+    pub fn bound(design: DesignKey, scenario: Arc<ScenarioKey>) -> EvalKey {
+        EvalKey { design, scenario, fidelity: Fidelity::L0Bound }
+    }
 }
 
 /// Thread-safe memoization cache for design evaluations, keyed by the
@@ -566,10 +653,7 @@ mod cache_tests {
     }
 
     fn key_of(d: &Design) -> EvalKey {
-        EvalKey {
-            design: design_key(d),
-            scenario: Arc::new(ScenarioKey::trace("bp", "m3d", 8)),
-        }
+        EvalKey::exact(design_key(d), Arc::new(ScenarioKey::trace("bp", "m3d", 8)))
     }
 
     #[test]
@@ -625,7 +709,7 @@ mod cache_tests {
         let with_scenario = |f: &dyn Fn(&mut ScenarioKey)| {
             let mut s = (*base.scenario).clone();
             f(&mut s);
-            EvalKey { design: base.design.clone(), scenario: Arc::new(s) }
+            EvalKey::exact(base.design.clone(), Arc::new(s))
         };
         let other_bench = with_scenario(&|s| s.workload = "lv".to_string());
         assert!(cache.get(&other_bench).is_none());
@@ -665,7 +749,7 @@ mod cache_tests {
         let with_scenario = |f: &dyn Fn(&mut ScenarioKey)| {
             let mut s = (*base.scenario).clone();
             f(&mut s);
-            EvalKey { design: base.design.clone(), scenario: Arc::new(s) }
+            EvalKey::exact(base.design.clone(), Arc::new(s))
         };
         let throttle = Controller::Throttle { trip_c: 85.0, relief: 0.7 };
         let transient = with_scenario(&|s| {
@@ -709,5 +793,40 @@ mod cache_tests {
             ..crate::thermal::TransientConfig::default()
         };
         assert_eq!(TransientKey::from_config(&off), None);
+    }
+
+    #[test]
+    fn fidelity_rungs_never_share_entries() {
+        // An L0 lower bound and the exact evaluation of the same design
+        // under the same scenario are distinct cache entries: a bound must
+        // never replay as exact scores or vice versa.
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let cache = EvalCache::new();
+        let exact = key_of(&d);
+        assert_eq!(exact.fidelity, Fidelity::L1Nominal);
+        let bound = EvalKey::bound(exact.design.clone(), exact.scenario.clone());
+        assert!(bound.fidelity.is_bound());
+        assert_ne!(exact, bound);
+
+        cache.insert(bound.clone(), scores(0.5));
+        assert!(cache.get(&exact).is_none(), "a bound must not replay as exact");
+        cache.insert(exact.clone(), scores(1.0));
+        assert_eq!(cache.get(&bound).unwrap(), scores(0.5));
+        assert_eq!(cache.get(&exact).unwrap(), scores(1.0));
+        assert_eq!(cache.len(), 2);
+
+        // The exact rung is derived from the scenario: variation-keyed
+        // scenarios are L2, everything else L1; tags round-trip.
+        let robust_scenario = Arc::new(
+            ScenarioKey::trace("bp", "m3d", 8)
+                .with_variation(Some(VariationKey::from_parts(0.05, 0.03, 16, 1))),
+        );
+        let robust = EvalKey::exact(exact.design.clone(), robust_scenario);
+        assert_eq!(robust.fidelity, Fidelity::L2Robust);
+        for f in [Fidelity::L0Bound, Fidelity::L1Nominal, Fidelity::L2Robust] {
+            assert_eq!(Fidelity::from_tag(f.tag()), Some(f));
+        }
+        assert_eq!(Fidelity::from_tag("l9"), None);
     }
 }

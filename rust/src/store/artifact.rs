@@ -252,6 +252,15 @@ pub struct LegSpec {
     pub effort_fp: String,
     /// The evaluation scenario (workload + tech + fabric config).
     pub scenario: ScenarioKey,
+    /// Whether the leg ran with the multi-fidelity evaluation ladder
+    /// enabled (DESIGN.md §14).  The ladder is proven result-invariant,
+    /// but ladder legs write L0 bound entries into the shared cache
+    /// snapshot, so they keep their own artifact identity: a ladder leg
+    /// resumes byte-identically from a ladder artifact and an exhaustive
+    /// leg from an exhaustive one.  Nominal scenarios normalize this to
+    /// `false` (the ladder only stages robust MC), so `--ladder` on a
+    /// nominal campaign replays nominal artifacts byte-for-byte.
+    pub ladder: bool,
 }
 
 impl LegSpec {
@@ -291,7 +300,17 @@ impl LegSpec {
             )
             .with_variation(vkey)
             .with_transient(tkey),
+            ladder: false,
         }
+    }
+
+    /// Mark the spec as a ladder leg.  Normalized against the scenario:
+    /// the ladder only stages robust Monte Carlo, so a request on a
+    /// nominal (no-variation) scenario keeps the nominal identity and
+    /// replays nominal artifacts unchanged.
+    pub fn with_ladder(mut self, ladder: bool) -> LegSpec {
+        self.ladder = ladder && self.scenario.variation.is_some();
+        self
     }
 
     /// Deterministic leg ID: a human-readable prefix plus a 16-hex FNV-1a
@@ -322,8 +341,9 @@ impl LegSpec {
                 t.controller().desc()
             ),
         };
+        let ladder = if self.ladder { "|ladder" } else { "" };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}{}{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}{}{}{}",
             self.bench,
             self.tech.name(),
             self.mode.name(),
@@ -338,6 +358,7 @@ impl LegSpec {
             self.scenario.vc_depth,
             variation,
             transient,
+            ladder,
         );
         format!(
             "{}-{}-{}-{}-{:016x}",
@@ -353,7 +374,9 @@ impl LegSpec {
         // Seeds are arbitrary u64s; Json numbers are f64-backed, so values
         // >= 2^53 would round and the spec would never compare equal on
         // replay.  Decimal strings are exact for the full u64 range.
-        Json::obj(vec![
+        // The `ladder` key is present only when true, so pre-ladder
+        // artifacts compare spec-equal without rewriting.
+        let mut fields = vec![
             ("algo", Json::str(self.algo.name())),
             ("bench", Json::str(&self.bench)),
             ("effort_fp", Json::str(&self.effort_fp)),
@@ -363,7 +386,11 @@ impl LegSpec {
             ("selection", Json::str(self.selection.name())),
             ("tech", Json::str(self.tech.name())),
             ("world_seed", Json::str(&self.world_seed.to_string())),
-        ])
+        ];
+        if self.ladder {
+            fields.push(("ladder", Json::bool(true)));
+        }
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json) -> Option<LegSpec> {
@@ -377,6 +404,7 @@ impl LegSpec {
             opt_seed: j.get("opt_seed")?.as_str()?.parse().ok()?,
             effort_fp: j.get("effort_fp")?.as_str()?.to_string(),
             scenario: scenario_from_json(j.get("scenario")?)?,
+            ladder: j.get("ladder").and_then(Json::as_bool).unwrap_or(false),
         })
     }
 }
@@ -804,6 +832,45 @@ mod tests {
         let mut off = VariationConfig::default();
         off.sigma = 0.0;
         assert_eq!(nominal, mk(Some(&off)));
+    }
+
+    #[test]
+    fn ladder_is_leg_identity_only_under_variation() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        let vcfg = VariationConfig::default();
+        let mk = |v: Option<&VariationConfig>, ladder: bool| {
+            LegSpec::new(
+                &world,
+                Mode::Pt,
+                Algo::MooStage,
+                Selection::MinP95Edp,
+                &effort,
+                7,
+                v,
+                None,
+            )
+            .with_ladder(ladder)
+        };
+        // Robust ladder legs get their own artifacts...
+        let exhaustive = mk(Some(&vcfg), false);
+        let ladder = mk(Some(&vcfg), true);
+        assert!(ladder.ladder);
+        assert_ne!(exhaustive.leg_id(), ladder.leg_id());
+        // ...and round-trip with the flag intact.
+        let j = crate::util::json::parse(&ladder.to_json().to_string()).unwrap();
+        assert_eq!(LegSpec::from_json(&j).unwrap(), ladder);
+        // Nominal scenarios normalize the flag away: `--ladder` without
+        // `--robust` replays nominal artifacts byte-for-byte.
+        let nominal = mk(None, false);
+        let nominal_ladder = mk(None, true);
+        assert!(!nominal_ladder.ladder);
+        assert_eq!(nominal.leg_id(), nominal_ladder.leg_id());
+        assert_eq!(nominal.to_json().to_string(), nominal_ladder.to_json().to_string());
+        // Pre-ladder artifacts (no "ladder" key) parse as non-ladder specs.
+        let j = crate::util::json::parse(&exhaustive.to_json().to_string()).unwrap();
+        assert!(j.get("ladder").is_none());
+        assert_eq!(LegSpec::from_json(&j).unwrap(), exhaustive);
     }
 
     #[test]

@@ -79,6 +79,10 @@ pub struct Engine {
     /// (`--transient`); a disabled configuration (`horizon == 0`)
     /// behaves exactly like `None`.
     transient: Option<TransientConfig>,
+    /// Multi-fidelity evaluation ladder (`--ladder`); an identity on
+    /// nominal legs (see `Problem::with_ladder`), so it only becomes part
+    /// of a leg's identity when variation is active.
+    ladder: bool,
     shared: Mutex<Shared>,
 }
 
@@ -92,6 +96,7 @@ impl Engine {
             warm: Arc::new(HashMap::new()),
             variation: None,
             transient: None,
+            ladder: false,
             shared: Mutex::new(Shared::default()),
         }
     }
@@ -114,6 +119,19 @@ impl Engine {
     /// one run directory without colliding.
     pub fn with_transient(mut self, transient: Option<TransientConfig>) -> Engine {
         self.transient = transient;
+        self
+    }
+
+    /// Builder-style multi-fidelity ladder: every robust leg run by this
+    /// engine scores through the L0 bound / L1 nominal / L2 robust-MC
+    /// ladder (see `Problem::with_ladder`) and validates candidates with
+    /// the surrogate-ranked budgeted Monte Carlo.  Results are bit-exact
+    /// with the exhaustive path; only the leg ID gains a `|ladder` marker
+    /// so ladder and exhaustive artifacts coexist without aliasing their
+    /// differently-shaped caches.  On nominal legs the flag is inert and
+    /// the leg ID is unchanged.
+    pub fn with_ladder(mut self, ladder: bool) -> Engine {
+        self.ladder = ladder;
         self
     }
 
@@ -160,6 +178,7 @@ impl Engine {
             warm: Arc::new(warm),
             variation: None,
             transient: None,
+            ladder: false,
             shared: Mutex::new(Shared { known, summaries: Vec::new() }),
         })
     }
@@ -187,13 +206,14 @@ impl Engine {
         let Some(store) = &self.store else {
             let (leg, _) = run_leg_warm(
                 world, mode, algo, selection, effort, seed, None, variation, transient,
+                self.ladder,
             );
             self.push_summary(String::new(), &leg);
             return leg;
         };
 
-        let spec =
-            LegSpec::new(world, mode, algo, selection, effort, seed, variation, transient);
+        let spec = LegSpec::new(world, mode, algo, selection, effort, seed, variation, transient)
+            .with_ladder(self.ladder);
         let id = spec.leg_id();
 
         if !self.force {
@@ -222,6 +242,7 @@ impl Engine {
             Some(self.warm.clone()),
             variation,
             transient,
+            self.ladder,
         );
 
         if let Err(e) = store.save_leg(&id, &artifact::leg_json(&leg, &spec)) {

@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 use crate::arch::design::Link;
 use crate::arch::encode::DesignKey;
 use crate::eval::objectives::Scores;
-use crate::runtime::evaluator::{EvalKey, CACHE_SCHEMA_VERSION};
+use crate::runtime::evaluator::{EvalKey, Fidelity, CACHE_SCHEMA_VERSION};
 use crate::util::json::{self, Json};
 
 use super::artifact::{scenario_from_json, scenario_json};
@@ -211,20 +211,37 @@ impl RunStore {
         };
         let mut map = HashMap::new();
         let mut skipped = 0usize;
+        let mut stale_v3 = 0usize;
         for line in raw.lines() {
             if line.trim().is_empty() {
                 continue;
             }
-            match json::parse(line).ok().and_then(|j| cache_entry_from_json(&j)) {
+            let parsed = json::parse(line).ok();
+            match parsed.as_ref().and_then(cache_entry_from_json) {
                 Some((k, s)) => {
                     map.insert(k, s);
                 }
-                None => skipped += 1,
+                None => {
+                    skipped += 1;
+                    if parsed.and_then(|j| j.get("v").and_then(Json::as_u64)) == Some(3) {
+                        stale_v3 += 1;
+                    }
+                }
             }
         }
-        if skipped > 0 {
+        if stale_v3 > 0 {
             crate::log_warn!(
-                "run store: skipped {skipped} stale/corrupt cache line(s) in {}",
+                "run store: {stale_v3} cache line(s) in {} use schema v3 (pre-fidelity); \
+                 current schema v{CACHE_SCHEMA_VERSION} tags every entry with its ladder rung \
+                 (\"fid\") — the stale lines are ignored and will be compacted away, their \
+                 designs re-evaluate once",
+                self.cache_path().display()
+            );
+        }
+        if skipped > stale_v3 {
+            crate::log_warn!(
+                "run store: skipped {} stale/corrupt cache line(s) in {}",
+                skipped - stale_v3,
                 self.cache_path().display()
             );
         }
@@ -241,6 +258,7 @@ impl RunStore {
 
 fn cache_line(key: &EvalKey, scores: &Scores) -> Json {
     Json::obj(vec![
+        ("fid", Json::str(key.fidelity.tag())),
         (
             "design",
             Json::obj(vec![
@@ -292,6 +310,7 @@ fn cache_entry_from_json(j: &Json) -> Option<(EvalKey, Scores)> {
     let key = EvalKey {
         design: DesignKey::from_parts(tiles, links),
         scenario: std::sync::Arc::new(scenario_from_json(j.get("scenario")?)?),
+        fidelity: Fidelity::from_tag(j.get("fid")?.as_str()?)?,
     };
     let s = j.get("scores")?;
     let scores = Scores {
@@ -322,10 +341,8 @@ mod tests {
         let cfg = ArchConfig::paper();
         let mut d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
         d.swap_positions(0, (seed as usize % 63) + 1);
-        let key = EvalKey {
-            design: design_key(&d),
-            scenario: std::sync::Arc::new(ScenarioKey::trace("bp", "m3d", 8)),
-        };
+        let key =
+            EvalKey::exact(design_key(&d), std::sync::Arc::new(ScenarioKey::trace("bp", "m3d", 8)));
         let x = seed as f64 * 0.25 + 0.125;
         (key, Scores { lat: x, umean: 2.0 * x, usigma: 3.0 * x, tmax: 4.0 * x })
     }
@@ -360,14 +377,15 @@ mod tests {
         use crate::runtime::evaluator::VariationKey;
         let store = tmp_store("variation");
         let (key, s) = entry(1);
-        let robust_key = EvalKey {
-            design: key.design.clone(),
-            scenario: std::sync::Arc::new(
+        let robust_key = EvalKey::exact(
+            key.design.clone(),
+            std::sync::Arc::new(
                 (*key.scenario)
                     .clone()
                     .with_variation(Some(VariationKey::from_parts(0.05, 0.03, 16, u64::MAX))),
             ),
-        };
+        );
+        assert_eq!(robust_key.fidelity, Fidelity::L2Robust);
         let robust_scores = Scores { lat: 9.0, umean: s.umean, usigma: s.usigma, tmax: 11.0 };
         let entries = vec![(key.clone(), s), (robust_key.clone(), robust_scores)];
         store.save_cache(entries.iter().map(|(k, v)| (k, v))).unwrap();
@@ -415,6 +433,78 @@ mod tests {
         drop(f);
         let (loaded, skipped) = store.load_cache();
         assert_eq!((loaded.len(), skipped), (3, 1));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn mixed_fidelity_entries_roundtrip_without_aliasing() {
+        // One snapshot holding all three ladder rungs of the same design:
+        // an L0 bound, the L1 nominal exact entry, and an L2 robust exact
+        // entry — three distinct lines, three distinct keys, each line
+        // carrying its "fid" tag.
+        use crate::runtime::evaluator::VariationKey;
+        let store = tmp_store("fidelity");
+        let (l1_key, l1_scores) = entry(1);
+        let l0_key = EvalKey::bound(l1_key.design.clone(), l1_key.scenario.clone());
+        let l0_scores = Scores { lat: 0.5, umean: 0.5, usigma: 0.5, tmax: 0.5 };
+        let l2_key = EvalKey::exact(
+            l1_key.design.clone(),
+            std::sync::Arc::new(
+                (*l1_key.scenario)
+                    .clone()
+                    .with_variation(Some(VariationKey::from_parts(0.05, 0.03, 16, 1))),
+            ),
+        );
+        let l2_scores = Scores { lat: 2.0, umean: 2.0, usigma: 2.0, tmax: 2.0 };
+        let entries = vec![
+            (l0_key.clone(), l0_scores),
+            (l1_key.clone(), l1_scores),
+            (l2_key.clone(), l2_scores),
+        ];
+        store.save_cache(entries.iter().map(|(k, v)| (k, v))).unwrap();
+
+        let raw = std::fs::read_to_string(store.root().join("cache.jsonl")).unwrap();
+        for tag in ["\"fid\":\"l0\"", "\"fid\":\"l1\"", "\"fid\":\"l2\""] {
+            assert!(raw.contains(tag), "snapshot must carry {tag}");
+        }
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!((loaded.len(), skipped), (3, 0));
+        assert_eq!(loaded.get(&l0_key), Some(&l0_scores));
+        assert_eq!(loaded.get(&l1_key), Some(&l1_scores));
+        assert_eq!(loaded.get(&l2_key), Some(&l2_scores));
+
+        // Deterministic re-save, exactly like single-rung snapshots.
+        store.save_cache(loaded.iter()).unwrap();
+        assert_eq!(raw, std::fs::read_to_string(store.root().join("cache.jsonl")).unwrap());
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn schema_v3_lines_are_rejected_gracefully() {
+        // A pre-fidelity (v3) snapshot — no "fid" field, "v":3 — must not
+        // load (it could replay a bound as exact), must not be fatal, and
+        // must leave current-schema lines intact.
+        let store = tmp_store("v3");
+        let entries: Vec<(EvalKey, Scores)> = (1..=2).map(entry).collect();
+        store.save_cache(entries.iter().map(|(k, s)| (k, s))).unwrap();
+        let path = store.root().join("cache.jsonl");
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        // Forge a v3 line from a current one: drop the fidelity tag and
+        // rewind the version — exactly what a PR-6-era store contains.
+        let v3 = raw
+            .lines()
+            .next()
+            .unwrap()
+            .replace("\"fid\":\"l1\",", "")
+            .replace(&format!("\"v\":{CACHE_SCHEMA_VERSION}"), "\"v\":3");
+        assert!(json::parse(&v3).is_ok(), "the forged v3 line must stay parseable");
+        raw.push_str(&format!("{v3}\n"));
+        std::fs::write(&path, raw).unwrap();
+
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!(loaded.len(), 2, "current-schema entries survive");
+        assert_eq!(skipped, 1, "the v3 line is counted as skipped");
+        assert!(loaded.keys().all(|k| !k.fidelity.is_bound()));
         std::fs::remove_dir_all(store.root()).ok();
     }
 

@@ -140,4 +140,32 @@ mod tests {
         assert_eq!(std_pop(&[]), 0.0);
         assert!(percentile(&[], 50.0).is_nan());
     }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Single sample: every percentile is that sample, bit-for-bit.
+        let one = [3.25];
+        for p in [0.0, 7.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&one, p).to_bits(), 3.25f64.to_bits());
+        }
+        // All-equal samples: interpolation between equal order statistics
+        // returns the common value exactly (the `lo == hi` short-circuit
+        // and the `v[lo] + frac * 0` path agree bitwise).
+        let same = [0.1; 7];
+        for p in [0.0, 33.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&same, p).to_bits(), 0.1f64.to_bits());
+        }
+        // Exact-rank hits do not interpolate: p95 over 21 samples lands
+        // on rank 19 exactly.
+        let xs: Vec<f64> = (0..21).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 95.0).to_bits(), 19.0f64.to_bits());
+        // Monotonicity in p.
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut prev = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let v = percentile(&xs, p as f64);
+            assert!(v >= prev, "percentile not monotone at p={p}");
+            prev = v;
+        }
+    }
 }

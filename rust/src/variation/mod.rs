@@ -25,6 +25,7 @@ pub mod sample;
 
 pub use model::{VariationConfig, VariationModel};
 pub use monte_carlo::{
-    mc_effects, robust_et, robust_evaluate, robust_score, RobustEt, RobustScore, SampleEffects,
+    mc_effects, robust_et, robust_et_budgeted, robust_evaluate, robust_score, RobustEt,
+    RobustScore, SampleEffects,
 };
 pub use sample::{sample_map, VariationMap};

@@ -196,6 +196,81 @@ pub fn robust_et(et_nominal: f64, effects: &[SampleEffects]) -> RobustEt {
     }
 }
 
+/// Budget-aware robust ET validation: sample in index order and stop
+/// early once the outcome against a reference candidate is *certain*,
+/// instead of always paying the full Monte Carlo fan-out.  This is the
+/// ladder's surrogate-guided variance reduction for the validation stage
+/// (`coordinator::campaign`): the surrogate picks a reference candidate,
+/// the reference validates fully, and every other candidate only samples
+/// until it is provably beaten.
+///
+/// With `ref_p95_edp == None` this is bit-identical to
+/// `robust_et(et_nominal, &mc_effects(ctx, design, model, workers))` for
+/// any worker count (same samples, same order, same aggregation).
+///
+/// With a reference `B` (the p95 EDP of a *fully validated, yield-meeting*
+/// candidate), sampling stops after `n` of `N` samples only when one of
+/// two certain-loss certificates holds (`r = N - n` remaining):
+///
+/// * **Yield hopeless**: `(passed + r) / N < MIN_YIELD`.  Even if every
+///   remaining instance passes, the full run fails the yield gate — and
+///   so does the truncated report (`passed/n <= (passed + r)/N / 1 < ...`;
+///   algebraically `(p + r)/N < Y` implies `p/(N - r) < Y` for `Y <= 1`),
+///   so the feasibility verdict a selector reads never flips.
+/// * **EDP hopeless**: with `lo = floor(0.95 * (N - 1))` (the exact rank
+///   `util::stats::percentile` interpolates from), `lo >= r` and the
+///   observed order statistic `sorted_edps[lo - r] > B`.  The `r` missing
+///   samples can at best occupy the ranks below, so the full-run rank-`lo`
+///   EDP — and with it the interpolated p95 — certainly exceeds `B`; the
+///   truncated report's own p95 rank `floor(0.95 * (n - 1)) >= lo - r`
+///   exceeds `B` too, so the candidate loses the min-p95-EDP comparison
+///   in the truncated and the full run alike.
+///
+/// Consequently the MinP95Edp winner can never truncate: its full p95 EDP
+/// is at most the reference's (`<= B`) and it meets yield, contradicting
+/// both certificates — the winner's reported statistics are always the
+/// full-fan-out values, bit-identical to the exhaustive run's.
+///
+/// The returned [`RobustEt::samples`] reports how many samples were
+/// actually aggregated (honest truncation accounting).
+pub fn robust_et_budgeted(
+    ctx: &EncodeCtx<'_>,
+    design: &Design,
+    et_nominal: f64,
+    model: &VariationModel,
+    ref_p95_edp: Option<f64>,
+) -> RobustEt {
+    let total = model.cfg.samples;
+    let lo = ((95.0 / 100.0) * (total as f64 - 1.0)).floor() as usize;
+    let mut effects: Vec<SampleEffects> = Vec::with_capacity(total);
+    let mut sorted_edps: Vec<f64> = Vec::with_capacity(total);
+    let mut passed = 0usize;
+    for k in 0..total as u64 {
+        let e = sample_effects(ctx, design, model, k);
+        let et = et_nominal * e.perf_factor();
+        let edp = e.chip_power_w * et * et;
+        let at = sorted_edps.partition_point(|&x| x < edp);
+        sorted_edps.insert(at, edp);
+        if e.meets_fmax() {
+            passed += 1;
+        }
+        effects.push(e);
+        let remaining = total - effects.len();
+        if remaining == 0 {
+            break;
+        }
+        if let Some(reference) = ref_p95_edp {
+            let yield_hopeless =
+                ((passed + remaining) as f64) / (total as f64) < MIN_YIELD;
+            let edp_hopeless = lo >= remaining && sorted_edps[lo - remaining] > reference;
+            if yield_hopeless || edp_hopeless {
+                break;
+            }
+        }
+    }
+    robust_et(et_nominal, &effects)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -320,5 +395,84 @@ mod tests {
         assert!(r.p95_edp > 0.0);
         // 1.15 misses the 12% fmax guardband (1/1.15 < 0.88); the rest pass.
         assert!((r.timing_yield - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budgeted_without_reference_is_bit_identical_to_exhaustive() {
+        let w = world(TechParams::m3d());
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let model = VariationModel::new(&VariationConfig::default(), &w.tech, &w.geo);
+        let d = Design::with_identity_placement(w.cfg.n_tiles(), topology::mesh_links(&w.cfg));
+        let et = 2.5e-3;
+        let full = robust_et(et, &mc_effects(&ctx, &d, &model, 4));
+        let budgeted = robust_et_budgeted(&ctx, &d, et, &model, None);
+        assert_eq!(budgeted, full, "no budget: must replay the exhaustive aggregation");
+        assert_eq!(budgeted.samples, model.cfg.samples as u32);
+    }
+
+    #[test]
+    fn budgeted_truncation_never_flips_the_selection_verdict() {
+        let w = world(TechParams::m3d());
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let model = VariationModel::new(
+            &VariationConfig { samples: 32, ..VariationConfig::default() },
+            &w.tech,
+            &w.geo,
+        );
+        let d = Design::with_identity_placement(w.cfg.n_tiles(), topology::mesh_links(&w.cfg));
+        let et = 2.5e-3;
+        let full = robust_et(et, &mc_effects(&ctx, &d, &model, 1));
+
+        // Sweep references below, at, and above the candidate's true p95
+        // EDP.  Whatever the truncation, the predicate the MinP95Edp
+        // selector evaluates — "feasible and strictly cheaper than the
+        // reference" — must agree with the full fan-out's.
+        let mut truncated_somewhere = false;
+        for scale in [0.2, 0.9, 1.0, 1.1, 5.0] {
+            let reference = full.p95_edp * scale;
+            let b = robust_et_budgeted(&ctx, &d, et, &model, Some(reference));
+            assert!(b.samples as usize <= model.cfg.samples);
+            truncated_somewhere |= (b.samples as usize) < model.cfg.samples;
+            let full_beats = full.meets_yield() && full.p95_edp < reference;
+            let trunc_beats = b.meets_yield() && b.p95_edp < reference;
+            assert_eq!(
+                trunc_beats, full_beats,
+                "verdict flipped at scale {scale}: truncated {b:?} vs full {full:?}"
+            );
+            // A run that went the distance must be the exhaustive run.
+            if b.samples as usize == model.cfg.samples {
+                assert_eq!(b, full);
+            }
+        }
+        // A reference far below the candidate's tail must actually stop
+        // early — otherwise the ladder saves nothing.
+        assert!(truncated_somewhere, "tiny reference never truncated");
+        let b = robust_et_budgeted(&ctx, &d, et, &model, Some(full.p95_edp * 0.2));
+        assert!((b.samples as usize) < model.cfg.samples);
+        assert!(b.p95_edp > full.p95_edp * 0.2, "truncated report must still lose");
+    }
+
+    #[test]
+    fn budgeted_winner_is_never_truncated() {
+        // A yield-meeting candidate whose true p95 EDP is at or below the
+        // reference can never satisfy either certain-loss certificate, so
+        // the would-be winner always reports full-fan-out statistics.
+        // TSV has no systematic inter-tier shift, so the identity design
+        // comfortably clears the yield floor here.
+        let w = world(TechParams::tsv());
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let model = VariationModel::new(
+            &VariationConfig { samples: 32, ..VariationConfig::default() },
+            &w.tech,
+            &w.geo,
+        );
+        let d = Design::with_identity_placement(w.cfg.n_tiles(), topology::mesh_links(&w.cfg));
+        let et = 2.5e-3;
+        let full = robust_et(et, &mc_effects(&ctx, &d, &model, 1));
+        assert!(full.meets_yield(), "premise: the winner-side candidate is feasible");
+        for scale in [1.0, 1.5, 10.0] {
+            let b = robust_et_budgeted(&ctx, &d, et, &model, Some(full.p95_edp * scale));
+            assert_eq!(b, full, "winner-side candidate truncated at scale {scale}");
+        }
     }
 }

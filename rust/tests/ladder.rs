@@ -1,0 +1,216 @@
+//! Integration: the multi-fidelity evaluation ladder (DESIGN.md §14).
+//!
+//! Pins the ladder's promotion-soundness contract:
+//! * a robust leg through the ladder is bit-identical to the exhaustive
+//!   leg — same Pareto fronts, same validated candidates and MC
+//!   summaries, same winner, same PHV/eval trajectories,
+//! * nominal legs (and therefore nominal figure campaigns) are untouched
+//!   by `--ladder`, byte for byte,
+//! * ladder legs keep the `--workers` bit-identity contract (the
+//!   certification snapshot only moves between scoring batches),
+//! * ladder and exhaustive robust artifacts coexist in one run store —
+//!   distinct leg identities, independent resume, mixed-fidelity
+//!   `cache.jsonl` lines.
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{
+    run_leg, run_leg_warm, Algo, Effort, LegResult, LegWorld, Selection,
+};
+use hem3d::coordinator::figures;
+use hem3d::opt::Mode;
+use hem3d::store::Engine;
+use hem3d::variation::VariationConfig;
+
+fn tiny(workers: usize) -> Effort {
+    let mut e = Effort::quick();
+    e.stage.max_iters = 2;
+    e.stage.local.max_steps = 5;
+    e.stage.local.neighbors_per_step = 5;
+    e.stage.meta_candidates = 6;
+    e.amosa.t_final = 0.4;
+    e.amosa.iters_per_temp = 8;
+    e.validate_cap = 3;
+    e.workers = workers;
+    e
+}
+
+fn vcfg(samples: usize) -> VariationConfig {
+    VariationConfig { samples, ..VariationConfig::default() }
+}
+
+fn robust_leg(
+    world: &LegWorld,
+    workers: usize,
+    v: &VariationConfig,
+    seed: u64,
+    ladder: bool,
+) -> LegResult {
+    run_leg_warm(
+        world,
+        Mode::Pt,
+        Algo::MooStage,
+        Selection::MinP95Edp,
+        &tiny(workers),
+        seed,
+        None,
+        Some(v),
+        None,
+        ladder,
+    )
+    .0
+}
+
+/// Bit-level equality of everything a leg reports except wall-clock
+/// times, including the pre-validation Pareto front.
+fn assert_legs_identical(a: &LegResult, b: &LegResult) {
+    assert_eq!(a.evals, b.evals, "distinct-evaluation counts diverged");
+    assert_eq!(a.front.members.len(), b.front.members.len(), "front sizes diverged");
+    for (x, y) in a.front.members.iter().zip(b.front.members.iter()) {
+        assert_eq!(x.obj.len(), y.obj.len());
+        for (ox, oy) in x.obj.iter().zip(y.obj.iter()) {
+            assert_eq!(ox.to_bits(), oy.to_bits(), "front objective diverged");
+        }
+        assert_eq!(x.design.tile_at, y.design.tile_at);
+        assert_eq!(x.design.links, y.design.links);
+    }
+    assert_eq!(a.winner.et.to_bits(), b.winner.et.to_bits());
+    assert_eq!(a.winner.temp_c.to_bits(), b.winner.temp_c.to_bits());
+    assert_eq!(a.winner.design.tile_at, b.winner.design.tile_at);
+    assert_eq!(a.winner.design.links, b.winner.design.links);
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    for (x, y) in a.candidates.iter().zip(b.candidates.iter()) {
+        assert_eq!(x.et.to_bits(), y.et.to_bits());
+        assert_eq!(x.temp_c.to_bits(), y.temp_c.to_bits());
+        assert_eq!(x.design.tile_at, y.design.tile_at);
+        match (&x.robust, &y.robust) {
+            (Some(rx), Some(ry)) => {
+                assert_eq!(rx.samples, ry.samples, "MC summaries ran different depths");
+                assert_eq!(rx.mean_et.to_bits(), ry.mean_et.to_bits());
+                assert_eq!(rx.p50_et.to_bits(), ry.p50_et.to_bits());
+                assert_eq!(rx.p95_et.to_bits(), ry.p95_et.to_bits());
+                assert_eq!(rx.p95_edp.to_bits(), ry.p95_edp.to_bits());
+                assert_eq!(rx.timing_yield.to_bits(), ry.timing_yield.to_bits());
+            }
+            (None, None) => {}
+            _ => panic!("robust summaries diverged between runs"),
+        }
+    }
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "PHV trajectory diverged");
+        assert_eq!(x.1, y.1, "eval trajectory diverged");
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hem3d_ladder_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn seed42_robust_leg_through_the_ladder_is_bit_identical() {
+    // The headline soundness property: certified L0 skips and the
+    // surrogate-ranked budgeted validation change *nothing* observable —
+    // Pareto set, candidates, MC summaries, winner and trajectories all
+    // match the full-fidelity leg bit for bit at the campaign seed.
+    let world = LegWorld::new("knn", Tech::M3d, 42);
+    let v = vcfg(6);
+    let exhaustive = robust_leg(&world, 1, &v, 42, false);
+    let laddered = robust_leg(&world, 1, &v, 42, true);
+    assert_legs_identical(&exhaustive, &laddered);
+    // The winner still carries the exhaustive-depth MC summary: winners
+    // are validated at full fidelity, never through the budgeted path.
+    let r = laddered.winner.robust.expect("robust leg must carry MC summaries");
+    assert_eq!(r.samples, v.samples as u32);
+}
+
+#[test]
+fn nominal_leg_and_figures_ignore_the_ladder() {
+    // Without variation there is no expensive rung to stage, so the
+    // ladder must be the identity: same leg, and the same figure JSON —
+    // the literal campaign output — byte for byte.
+    let world = LegWorld::new("bp", Tech::M3d, 5);
+    let nominal = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny(1), 5);
+    let laddered = run_leg_warm(
+        &world,
+        Mode::Pt,
+        Algo::MooStage,
+        Selection::MinEtUnderTth,
+        &tiny(1),
+        5,
+        None,
+        None,
+        None,
+        true,
+    )
+    .0;
+    assert_legs_identical(&nominal, &laddered);
+
+    let benches = ["knn", "nw"];
+    let plain = figures::fig8_json(&figures::fig8(&benches, &tiny(1), 11)).to_pretty();
+    let engine = Engine::ephemeral().with_ladder(true);
+    let stored = figures::fig8_json(&figures::fig8_stored(&engine, &benches, &tiny(1), 11))
+        .to_pretty();
+    assert_eq!(plain, stored, "fig8 JSON diverged under --ladder");
+}
+
+#[test]
+fn ladder_leg_is_identical_for_1_and_8_workers() {
+    // The snapshot-publish protocol only moves the certification state
+    // between scoring batches, so certified skips — like everything else
+    // in a leg — must be independent of worker count and scheduling.
+    let world = LegWorld::new("knn", Tech::M3d, 9);
+    let v = vcfg(6);
+    let serial = robust_leg(&world, 1, &v, 9, true);
+    let parallel = robust_leg(&world, 8, &v, 9, true);
+    assert_legs_identical(&serial, &parallel);
+}
+
+#[test]
+fn ladder_and_exhaustive_robust_legs_coexist_and_resume_in_one_store() {
+    let dir = tmp_dir("mixed");
+    let world = LegWorld::new("bp", Tech::M3d, 7);
+    let v = vcfg(4);
+    let effort = tiny(1);
+
+    // Ladder leg computes and persists under its own identity.
+    let ladder_engine =
+        Engine::open(&dir).unwrap().with_variation(Some(v.clone())).with_ladder(true);
+    let laddered =
+        ladder_engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7);
+    assert!(!laddered.replayed);
+
+    // The exhaustive twin does not alias the ladder artifact...
+    let full_engine = Engine::open(&dir).unwrap().with_variation(Some(v.clone()));
+    let exhaustive =
+        full_engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7);
+    assert!(!exhaustive.replayed, "exhaustive leg must not replay the ladder artifact");
+    assert_eq!(full_engine.store().unwrap().list_leg_ids().len(), 2);
+    // ...and both paths report identical results (the soundness property,
+    // here observed through the store-backed engine).
+    assert_legs_identical(&laddered, &exhaustive);
+
+    // The shared snapshot is mixed-fidelity: self-describing `fid` tags,
+    // with the ladder's certified L0 bound entries alongside exact l2
+    // lines.  Loading it back keeps the rungs apart.
+    let snapshot = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+    assert!(snapshot.contains("\"fid\""), "cache.jsonl lines must carry fidelity tags");
+    assert!(snapshot.contains("\"l2\""), "robust legs must persist exact l2 entries");
+    let (loaded, skipped) = full_engine.store().unwrap().load_cache();
+    assert_eq!(skipped, 0, "mixed-fidelity snapshot must load cleanly");
+    assert!(loaded.keys().all(|k| k.scenario.variation.is_some()));
+
+    // Both legs replay from their own artifacts on a second pass.
+    let again_ladder =
+        Engine::open(&dir).unwrap().with_variation(Some(v.clone())).with_ladder(true);
+    let replayed =
+        again_ladder.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7);
+    assert!(replayed.replayed, "ladder leg must replay from the store");
+    assert_legs_identical(&laddered, &replayed);
+    let again_full = Engine::open(&dir).unwrap().with_variation(Some(v));
+    assert!(again_full
+        .run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 7)
+        .replayed);
+    std::fs::remove_dir_all(&dir).ok();
+}
