@@ -14,6 +14,9 @@
 //! * **variation** — one Monte Carlo robustness evaluation (the
 //!   `--robust` DSE inner step: sample maps, derate, re-run thermal,
 //!   aggregate into a `RobustScore`);
+//! * **faults** — one degraded-mode fault Monte Carlo (the `--faults`
+//!   DSE inner step: sample fault sets, rebuild masked escape-tree
+//!   routing per sample, walk the degraded fabric, aggregate);
 //! * **transient** — one zero-alloc implicit-Euler step and one whole
 //!   throttled DTM scenario on the campaign grid (the `--transient`
 //!   validation inner loop);
@@ -192,6 +195,31 @@ pub fn run(args: &Args) -> Result<()> {
         100.0 * timing_yield
     );
 
+    // ---- faults: one degraded-mode fault Monte Carlo ----------------------
+    // The `--faults` DSE inner step: sample deterministic fault sets,
+    // rebuild the masked escape-tree routing per sample, walk the degraded
+    // fabric, aggregate into a `FaultScore`.
+    let fcfg = hem3d::faults::FaultConfig::default();
+    let fmodel = hem3d::faults::FaultModel::new(&fcfg, &geo);
+    let mut conn_yield = 0.0f64;
+    let t_faults = bench(
+        &format!("fault MC degraded eval ({} samples)", fcfg.samples),
+        warmup,
+        reps,
+        || {
+            let effects =
+                hem3d::faults::fault_effects(&ctx, &sparse, &design, &fmodel, workers);
+            let fs = hem3d::faults::fault_score(&nominal, &effects);
+            conn_yield = fs.connectivity_yield;
+        },
+    );
+    println!(
+        "faults {:.2} ms/degraded eval ({} samples, connectivity yield {:.0}%)",
+        t_faults * 1e3,
+        fcfg.samples,
+        100.0 * conn_yield
+    );
+
     // ---- transient: implicit-Euler stepping + DTM scenario ----------------
     // The `--transient` validation inner loop: one zero-alloc implicit-Euler
     // step on the campaign grid, and one whole throttled scenario
@@ -331,6 +359,17 @@ pub fn run(args: &Args) -> Result<()> {
                     ("sigma", Json::num(vcfg.sigma)),
                     ("tier_shift", Json::num(vcfg.tier_shift)),
                     ("timing_yield", Json::num(timing_yield)),
+                ]),
+            ),
+            (
+                "faults",
+                Json::obj(vec![
+                    ("connectivity_yield", Json::num(conn_yield)),
+                    ("degraded_eval_s", Json::num(t_faults)),
+                    ("link_rate", Json::num(fcfg.link_rate)),
+                    ("miv_rate", Json::num(fcfg.miv_rate)),
+                    ("mc_samples", Json::num(fcfg.samples as f64)),
+                    ("router_rate", Json::num(fcfg.router_rate)),
                 ]),
             ),
             (

@@ -82,10 +82,31 @@ pub fn transient_from_args(args: &Args) -> Option<hem3d::thermal::TransientConfi
     cfg.enabled().then_some(cfg)
 }
 
+/// Resolve the fault-injection scenario shared by `optimize` and
+/// `campaign`: `--faults` enables it, `--miv-fault-rate` /
+/// `--link-fault-rate` / `--router-fault-rate` set the per-sample fault
+/// probabilities, `--fault-samples` / `--fault-seed` shape the degraded-
+/// mode Monte Carlo, and setting all three rates to 0 disables the
+/// subsystem entirely (bit-identical nominal results, DESIGN.md §15).
+pub fn faults_from_args(args: &Args) -> Option<hem3d::faults::FaultConfig> {
+    if !args.flag("faults") {
+        return None;
+    }
+    let d = hem3d::faults::FaultConfig::default();
+    let cfg = hem3d::faults::FaultConfig {
+        miv_rate: args.f64_or("miv-fault-rate", d.miv_rate),
+        link_rate: args.f64_or("link-fault-rate", d.link_rate),
+        router_rate: args.f64_or("router-fault-rate", d.router_rate),
+        samples: args.usize_or("fault-samples", d.samples).max(1),
+        seed: args.u64_or("fault-seed", d.seed),
+    };
+    cfg.enabled().then_some(cfg)
+}
+
 /// Resolve the engine from `--run-dir` / `--name` / `--force` plus the
-/// `--robust` variation knobs, the `--transient` DTM knobs, and the
-/// `--ladder` multi-fidelity switch; `None` for both dir options means an
-/// ephemeral (non-persisted) campaign.
+/// `--robust` variation knobs, the `--transient` DTM knobs, the `--faults`
+/// injection knobs, and the `--ladder` multi-fidelity switch; `None` for
+/// both dir options means an ephemeral (non-persisted) campaign.
 pub fn engine_from_args(args: &Args) -> Result<Engine> {
     let engine = match run_dir_from_args(args) {
         Some(dir) => Engine::open_with(dir, args.flag("force"))?,
@@ -94,6 +115,7 @@ pub fn engine_from_args(args: &Args) -> Result<Engine> {
     Ok(engine
         .with_variation(variation_from_args(args))
         .with_transient(transient_from_args(args))
+        .with_faults(faults_from_args(args))
         .with_ladder(args.flag("ladder")))
 }
 
@@ -135,6 +157,17 @@ pub fn run(args: &Args) -> Result<()> {
             t.controller.desc()
         );
     }
+    let faults = faults_from_args(args);
+    if let Some(fc) = &faults {
+        log_info!(
+            "fault campaign: miv-rate={} link-rate={} router-rate={} samples={} seed={}",
+            fc.miv_rate,
+            fc.link_rate,
+            fc.router_rate,
+            fc.samples,
+            fc.seed
+        );
+    }
     if args.flag("ladder") {
         log_info!(
             "multi-fidelity ladder: L0 certified bounds / budgeted MC \
@@ -158,6 +191,13 @@ pub fn run(args: &Args) -> Result<()> {
             ("benches", Json::arr(benches.iter().map(|b| Json::str(b)))),
             ("effort", Json::str(&effort_name)),
             ("effort_fp", Json::str(&effort.fingerprint())),
+            (
+                "faults",
+                match faults.as_ref().and_then(hem3d::runtime::FaultKey::from_config) {
+                    Some(fk) => hem3d::store::artifact::fault_key_json(&fk),
+                    None => Json::Null,
+                },
+            ),
             ("figs", Json::arr(figs.iter().map(|&x| Json::num(x as f64)))),
             ("kind", Json::str("campaign")),
             ("schema", Json::num(hem3d::store::ARTIFACT_SCHEMA_VERSION as f64)),

@@ -44,12 +44,17 @@ pub fn run(args: &Args) -> Result<()> {
     }
 
     let variation = super::campaign::variation_from_args(args);
-    let selection = match (&variation, mode) {
+    let faults = super::campaign::faults_from_args(args);
+    let selection = match (&faults, &variation, mode) {
+        // Fault mode optimizes resilience: the winner is the cheapest
+        // p95 ET-under-faults among candidates clearing the connectivity-
+        // yield floor.
+        (Some(_), _, _) => Selection::MinP95EtFaults,
         // Robust mode optimizes the pessimistic tail: the winner is the
         // cheapest p95 EDP among candidates clearing the yield floor.
-        (Some(_), _) => Selection::MinP95Edp,
-        (None, Mode::Po) => Selection::MinEt,
-        (None, Mode::Pt) => Selection::MinEtUnderTth,
+        (None, Some(_), _) => Selection::MinP95Edp,
+        (None, None, Mode::Po) => Selection::MinEt,
+        (None, None, Mode::Pt) => Selection::MinEtUnderTth,
     };
 
     log_info!(
@@ -75,6 +80,16 @@ pub fn run(args: &Args) -> Result<()> {
             t.dt_s,
             t.ambient_c,
             t.controller.desc()
+        );
+    }
+    if let Some(fc) = &faults {
+        log_info!(
+            "fault mode: miv-rate={} link-rate={} router-rate={} samples={} seed={}",
+            fc.miv_rate,
+            fc.link_rate,
+            fc.router_rate,
+            fc.samples,
+            fc.seed
         );
     }
     if args.flag("ladder") {
@@ -124,6 +139,15 @@ pub fn run(args: &Args) -> Result<()> {
                 100.0 * t.sustained_frac
             );
         }
+        if let Some(fs) = &c.faults {
+            println!(
+                "         faults: conn-yield={:.0}%  p95ET={:.4}  retention={:.0}%  slope={:.4}",
+                100.0 * fs.connectivity_yield,
+                fs.p95_et,
+                100.0 * fs.mean_retention,
+                fs.degradation_slope
+            );
+        }
     }
     println!("  winner: ET={:.4}  T={:.1}C", leg.winner.et, leg.winner.temp_c);
     if let Some(r) = &leg.winner.robust {
@@ -136,6 +160,19 @@ pub fn run(args: &Args) -> Result<()> {
         println!(
             "  winner transient summary: peak={:.1}C  final={:.1}C  time over threshold={:.3}s  sustained throughput={:.0}%",
             t.peak_c, t.final_c, t.time_over_s, 100.0 * t.sustained_frac
+        );
+    }
+    if let Some(fs) = &leg.winner.faults {
+        println!(
+            "  winner fault summary ({} samples): connectivity yield={:.0}%  p95 lat={:.4}  mean ET={:.4}  p95 ET={:.4}  retention={:.0}%  degradation slope={:.4}  mean dead links={:.2}",
+            fs.samples,
+            100.0 * fs.connectivity_yield,
+            fs.p95_lat,
+            fs.mean_et,
+            fs.p95_et,
+            100.0 * fs.mean_retention,
+            fs.degradation_slope,
+            fs.mean_dead_links
         );
     }
 

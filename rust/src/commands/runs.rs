@@ -99,8 +99,10 @@ fn show(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     let mut robust_winners: Vec<String> = Vec::new();
     for id in &ids {
+        // A missing or unparseable artifact yields an error row, never a
+        // failed command: inspection continues over the surviving legs.
         let Some(doc) = store.load_leg(id) else {
-            rows.push(vec![id.clone(), "unreadable".into()]);
+            rows.push(vec![id.clone(), "error: missing/unparseable artifact".into()]);
             continue;
         };
         match artifact::leg_from_json(&doc) {
@@ -132,6 +134,17 @@ fn show(args: &Args) -> Result<()> {
                     ),
                     None => "-".into(),
                 };
+                let faults = match &s.faults {
+                    Some(fk) => format!(
+                        "miv={} link={} rtr={} n={} seed={}",
+                        fk.miv_rate(),
+                        fk.link_rate(),
+                        fk.router_rate(),
+                        fk.samples,
+                        fk.seed
+                    ),
+                    None => "-".into(),
+                };
                 if let Some(t) = &leg.winner.transient {
                     robust_winners.push(format!(
                         "{id}: winner transient peak={}C final={}C over-threshold={}s sustained={:.0}%",
@@ -151,6 +164,17 @@ fn show(args: &Args) -> Result<()> {
                         100.0 * r.timing_yield
                     ));
                 }
+                if let Some(fs) = &leg.winner.faults {
+                    robust_winners.push(format!(
+                        "{id}: winner faults ({} samples) conn-yield={:.0}% p95 lat={} p95 ET={} retention={:.0}% slope={}",
+                        fs.samples,
+                        100.0 * fs.connectivity_yield,
+                        f(fs.p95_lat, 4),
+                        f(fs.p95_et, 4),
+                        100.0 * fs.mean_retention,
+                        f(fs.degradation_slope, 4)
+                    ));
+                }
                 rows.push(vec![
                     id.clone(),
                     leg.mode.name().into(),
@@ -158,6 +182,7 @@ fn show(args: &Args) -> Result<()> {
                     scenario,
                     variation,
                     transient,
+                    faults,
                     leg.evals.to_string(),
                     format!("{}/{}", leg.cache.hits, leg.cache.warm_hits),
                     leg.front.members.len().to_string(),
@@ -166,7 +191,7 @@ fn show(args: &Args) -> Result<()> {
                     f(leg.opt_seconds, 2),
                 ])
             }
-            Err(e) => rows.push(vec![id.clone(), e]),
+            Err(e) => rows.push(vec![id.clone(), format!("error: {e}")]),
         }
     }
     println!(
@@ -179,6 +204,7 @@ fn show(args: &Args) -> Result<()> {
                 "scenario",
                 "variation",
                 "transient",
+                "faults",
                 "evals",
                 "hits/warm",
                 "front",

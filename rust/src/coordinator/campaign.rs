@@ -10,6 +10,7 @@ use crate::arch::geometry::Geometry;
 use crate::arch::tile::TileSet;
 use crate::config::{ArchConfig, Tech, TechParams};
 use crate::eval::features::features;
+use crate::faults::{FaultConfig, FaultStats};
 use crate::noc::topology;
 use crate::opt::amosa::AmosaIter;
 use crate::opt::moo_stage::IterRecord;
@@ -67,6 +68,11 @@ pub enum Selection {
     /// (`--robust`; falls back to the highest-yield candidate when none
     /// clear the floor, and to plain min-ET when no robust data exists).
     MinP95Edp,
+    /// argmin p95 ET-under-faults among candidates meeting the
+    /// connectivity-yield floor (`--faults`; falls back to the
+    /// highest-connectivity candidate when none clear the floor, and to
+    /// plain min-ET when no fault data exists).
+    MinP95EtFaults,
 }
 
 impl Selection {
@@ -77,6 +83,7 @@ impl Selection {
             Selection::MinEtUnderTth => "min-et-under-tth",
             Selection::MinEtTempProduct => "min-et-temp-product",
             Selection::MinP95Edp => "min-p95-edp",
+            Selection::MinP95EtFaults => "min-p95-et-faults",
         }
     }
 
@@ -87,6 +94,7 @@ impl Selection {
             "min-et-under-tth" => Some(Selection::MinEtUnderTth),
             "min-et-temp-product" => Some(Selection::MinEtTempProduct),
             "min-p95-edp" => Some(Selection::MinP95Edp),
+            "min-p95-et-faults" => Some(Selection::MinP95EtFaults),
             _ => None,
         }
     }
@@ -105,6 +113,8 @@ pub struct Validated {
     pub robust: Option<RobustEt>,
     /// Full-grid transient DTM summary (transient legs only).
     pub transient: Option<TransientStats>,
+    /// Degraded-mode fault Monte Carlo summary (fault legs only).
+    pub faults: Option<FaultStats>,
 }
 
 /// Full optimizer trajectory, preserved per-algorithm so a leg artifact
@@ -329,7 +339,7 @@ pub fn run_leg(
     effort: &Effort,
     seed: u64,
 ) -> LegResult {
-    run_leg_warm(world, mode, algo, selection, effort, seed, None, None, None, false).0
+    run_leg_warm(world, mode, algo, selection, effort, seed, None, None, None, None, false).0
 }
 
 /// [`run_leg`] with an optional warm-start snapshot, additionally returning
@@ -356,6 +366,13 @@ pub fn run_leg(
 /// [`TransientStats`] summary from the full-grid stepper, and a disabled
 /// configuration (`horizon == 0`) is bit-identical to passing `None`.
 ///
+/// `faults` switches the leg to degraded-mode scoring (`--faults`,
+/// DESIGN.md §15): candidate latency objectives carry the fault Monte
+/// Carlo's yield-weighted p95 stretch, every validated candidate carries a
+/// [`FaultStats`] summary (connectivity yield, p95 ET under faults,
+/// graceful-degradation slope), and a disabled configuration (all rates
+/// zero) is bit-identical to passing `None`.
+///
 /// `ladder` enables the multi-fidelity evaluation ladder (`--ladder`,
 /// DESIGN.md §14) on robust legs: DSE probes may settle at a certified
 /// L0 lower bound when that provably cannot change the optimizer's
@@ -377,6 +394,7 @@ pub fn run_leg_warm(
     warm: Option<Arc<HashMap<EvalKey, crate::eval::objectives::Scores>>>,
     variation: Option<&VariationConfig>,
     transient: Option<&TransientConfig>,
+    faults: Option<&FaultConfig>,
     ladder: bool,
 ) -> (LegResult, Vec<(EvalKey, crate::eval::objectives::Scores)>) {
     let ctx = world.encode_ctx();
@@ -390,6 +408,9 @@ pub fn run_leg_warm(
     }
     if let Some(tcfg) = transient {
         problem = problem.with_transient(tcfg);
+    }
+    if let Some(fcfg) = faults {
+        problem = problem.with_faults(fcfg);
     }
     // After `with_variation`: the ladder is an identity on nominal legs.
     problem = problem.with_ladder(ladder);
@@ -435,6 +456,7 @@ pub fn run_leg_warm(
     let coeffs = PerfCoeffs::default();
     let vmodel = problem.variation_model();
     let tcfg = problem.transient_config().map(|cfg| (cfg, world.cfg.t_threshold_c));
+    let fmodel = problem.fault_model();
     let mut candidates: Vec<Validated> = if problem.ladder_enabled()
         && selection == Selection::MinP95Edp
         && !members.is_empty()
@@ -474,6 +496,7 @@ pub fn run_leg_warm(
             &coeffs,
             vmodel,
             tcfg,
+            fmodel,
         );
         let budget =
             reference.robust.as_ref().filter(|r| r.meets_yield()).map(|r| r.p95_edp);
@@ -490,13 +513,22 @@ pub fn run_leg_warm(
                     &coeffs,
                     vmodel,
                     tcfg,
+                    fmodel,
                     budget,
                 )
             }
         })
     } else {
         crate::util::threadpool::scope_map(members, effort.workers, |m| {
-            validate_candidate_full(&ctx, &world.profile, &m.design, &coeffs, vmodel, tcfg)
+            validate_candidate_full(
+                &ctx,
+                &world.profile,
+                &m.design,
+                &coeffs,
+                vmodel,
+                tcfg,
+                fmodel,
+            )
         })
     };
 
@@ -603,6 +635,35 @@ fn select(candidates: &mut [Validated], selection: Selection, t_th: f64) -> Vali
                     .unwrap_or_else(|| pick(&mut candidates.iter()).unwrap())
             })
         }
+        Selection::MinP95EtFaults => {
+            // Resilience rule (DESIGN.md §15): cheapest p95 ET-under-faults
+            // among candidates clearing the connectivity-yield floor; if
+            // none clear it, the highest-connectivity candidate; without
+            // fault data (a nominal leg asked for the fault rule), plain
+            // min-ET.
+            let p95_et = |c: &&Validated| c.faults.map(|f| f.p95_et).unwrap_or(f64::MAX);
+            let feasible = candidates
+                .iter()
+                .filter(|c| c.faults.map(|f| f.meets_conn_yield()).unwrap_or(false))
+                .min_by(|a, b| p95_et(a).partial_cmp(&p95_et(b)).unwrap())
+                .cloned();
+            feasible.unwrap_or_else(|| {
+                candidates
+                    .iter()
+                    .filter(|c| c.faults.is_some())
+                    .max_by(|a, b| {
+                        let y =
+                            |c: &&Validated| c.faults.map(|f| f.connectivity_yield).unwrap();
+                        y(a).partial_cmp(&y(b)).unwrap().then_with(|| {
+                            // Tie-break on cheaper ET under faults so a
+                            // full-yield tie is still deterministic.
+                            p95_et(b).partial_cmp(&p95_et(a)).unwrap()
+                        })
+                    })
+                    .cloned()
+                    .unwrap_or_else(|| pick(&mut candidates.iter()).unwrap())
+            })
+        }
     }
 }
 
@@ -634,6 +695,7 @@ mod tests {
                 temp_c: 95.0,
                 robust: None,
                 transient: None,
+                faults: None,
             },
             Validated {
                 design: Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]),
@@ -641,6 +703,7 @@ mod tests {
                 temp_c: 70.0,
                 robust: None,
                 transient: None,
+                faults: None,
             },
         ];
         let w = select(&mut cands, Selection::MinEtUnderTth, 85.0);
@@ -671,26 +734,70 @@ mod tests {
         // inclusive, so 0.4 misses and 0.5 would meet): the cheapest
         // feasible candidate wins.
         let mut cands = vec![
-            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.4), transient: None },
-            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9), transient: None },
-            Validated { design: d(), et: 1.1, temp_c: 70.0, robust: r(90.0, 1.0), transient: None },
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.4), transient: None, faults: None },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9), transient: None, faults: None },
+            Validated { design: d(), et: 1.1, temp_c: 70.0, robust: r(90.0, 1.0), transient: None, faults: None },
         ];
         let w = select(&mut cands, Selection::MinP95Edp, 85.0);
         assert_eq!(w.robust.unwrap().p95_edp, 80.0);
         // The floor is inclusive: exactly MIN_YIELD is feasible.
         let mut edge = vec![
-            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.5), transient: None },
-            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9), transient: None },
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.5), transient: None, faults: None },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.9), transient: None, faults: None },
         ];
         let w = select(&mut edge, Selection::MinP95Edp, 85.0);
         assert_eq!(w.robust.unwrap().p95_edp, 50.0);
         // No candidate clears the floor: highest yield wins.
         let mut low = vec![
-            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.2), transient: None },
-            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.4), transient: None },
+            Validated { design: d(), et: 0.9, temp_c: 70.0, robust: r(50.0, 0.2), transient: None, faults: None },
+            Validated { design: d(), et: 1.0, temp_c: 70.0, robust: r(80.0, 0.4), transient: None, faults: None },
         ];
         let w = select(&mut low, Selection::MinP95Edp, 85.0);
         assert_eq!(w.robust.unwrap().timing_yield, 0.4);
+    }
+
+    #[test]
+    fn fault_selection_prefers_connectivity_then_p95_et() {
+        let d = || Design::with_identity_placement(2, vec![crate::arch::design::Link::new(0, 1)]);
+        let f = |p95_et: f64, yld: f64| {
+            Some(crate::faults::FaultStats {
+                samples: 8,
+                connected: (yld * 8.0) as u32,
+                connectivity_yield: yld,
+                p95_lat: 1.0,
+                mean_et: p95_et * 0.9,
+                p95_et,
+                mean_retention: 0.8,
+                degradation_slope: 0.01,
+                mean_dead_links: 1.0,
+            })
+        };
+        let v = |et: f64, faults| Validated {
+            design: d(),
+            et,
+            temp_c: 70.0,
+            robust: None,
+            transient: None,
+            faults,
+        };
+        // The cheapest p95 ET misses the connectivity floor (MIN_CONN_YIELD
+        // = 0.5, inclusive): the cheapest *feasible* candidate wins.
+        let mut cands = vec![v(0.9, f(50.0, 0.4)), v(1.0, f(80.0, 0.9)), v(1.1, f(90.0, 1.0))];
+        let w = select(&mut cands, Selection::MinP95EtFaults, 85.0);
+        assert_eq!(w.faults.unwrap().p95_et, 80.0);
+        // The floor is inclusive: exactly MIN_CONN_YIELD is feasible.
+        let mut edge = vec![v(0.9, f(50.0, 0.5)), v(1.0, f(80.0, 0.9))];
+        let w = select(&mut edge, Selection::MinP95EtFaults, 85.0);
+        assert_eq!(w.faults.unwrap().p95_et, 50.0);
+        // No candidate clears the floor: highest connectivity wins, ties
+        // broken toward the cheaper fault tail.
+        let mut low = vec![v(0.9, f(50.0, 0.2)), v(1.0, f(80.0, 0.4)), v(1.1, f(60.0, 0.4))];
+        let w = select(&mut low, Selection::MinP95EtFaults, 85.0);
+        assert_eq!(w.faults.unwrap().p95_et, 60.0);
+        // Without fault data the rule degrades to plain min-ET.
+        let mut none = vec![v(1.2, None), v(0.7, None)];
+        let w = select(&mut none, Selection::MinP95EtFaults, 85.0);
+        assert_eq!(w.et, 0.7);
     }
 
     #[test]

@@ -202,7 +202,7 @@ pub fn validate_candidate(
     design: &Design,
     coeffs: &crate::perf::PerfCoeffs,
 ) -> super::campaign::Validated {
-    validate_candidate_full(ctx, profile, design, coeffs, None, None)
+    validate_candidate_full(ctx, profile, design, coeffs, None, None, None)
 }
 
 /// [`validate_candidate`] with an optional variation model: when present,
@@ -218,13 +218,16 @@ pub fn validate_candidate_robust(
     coeffs: &crate::perf::PerfCoeffs,
     variation: Option<&crate::variation::VariationModel>,
 ) -> super::campaign::Validated {
-    validate_candidate_full(ctx, profile, design, coeffs, variation, None)
+    validate_candidate_full(ctx, profile, design, coeffs, variation, None, None)
 }
 
-/// [`validate_candidate_robust`] with an optional transient DTM scenario:
-/// when present, the candidate additionally gets its full-grid
-/// [`TransientStats`] (peak/final temperature, time over the given
-/// threshold, sustained-throughput fraction) from [`transient_stats`].
+/// [`validate_candidate_robust`] with an optional transient DTM scenario
+/// and an optional fault model: when present, the candidate additionally
+/// gets its full-grid [`TransientStats`] (peak/final temperature, time
+/// over the given threshold, sustained-throughput fraction) from
+/// [`transient_stats`], and its degraded-mode
+/// [`crate::faults::FaultStats`] (connectivity yield, p95 latency/ET
+/// under faults, graceful-degradation slope) from the fault Monte Carlo.
 pub fn validate_candidate_full(
     ctx: &EncodeCtx<'_>,
     profile: &crate::traffic::BenchProfile,
@@ -232,8 +235,9 @@ pub fn validate_candidate_full(
     coeffs: &crate::perf::PerfCoeffs,
     variation: Option<&crate::variation::VariationModel>,
     transient: Option<(&TransientConfig, f64)>,
+    faults: Option<&crate::faults::FaultModel>,
 ) -> super::campaign::Validated {
-    validate_candidate_budgeted(ctx, profile, design, coeffs, variation, transient, None)
+    validate_candidate_budgeted(ctx, profile, design, coeffs, variation, transient, faults, None)
 }
 
 /// [`validate_candidate_full`] with an optional Monte Carlo budget: when
@@ -246,6 +250,7 @@ pub fn validate_candidate_full(
 /// [`validate_candidate_full`].  Everything outside the robust summary
 /// (ET model, detailed thermal fixed point, transient stats) is exact
 /// either way.
+#[allow(clippy::too_many_arguments)]
 pub fn validate_candidate_budgeted(
     ctx: &EncodeCtx<'_>,
     profile: &crate::traffic::BenchProfile,
@@ -253,6 +258,7 @@ pub fn validate_candidate_budgeted(
     coeffs: &crate::perf::PerfCoeffs,
     variation: Option<&crate::variation::VariationModel>,
     transient: Option<(&TransientConfig, f64)>,
+    faults: Option<&crate::faults::FaultModel>,
     ref_p95_edp: Option<f64>,
 ) -> super::campaign::Validated {
     let routing = Routing::build(design);
@@ -267,12 +273,25 @@ pub fn validate_candidate_budgeted(
     });
     let transient =
         transient.map(|(cfg, threshold_c)| transient_stats(ctx, design, cfg, threshold_c));
+    let faults = faults.map(|model| {
+        // Same serial fan-out rationale as the robust summary above; the
+        // traffic extraction is per-candidate here (validation runs once
+        // per Pareto member, not in the DSE hot loop).
+        let traffic = crate::eval::objectives::SparseTraffic::from_trace_tiles(
+            ctx.trace,
+            crate::runtime::evaluator::dims::N_WINDOWS,
+            Some(ctx.tiles),
+        );
+        let effects = crate::faults::fault_effects(ctx, &traffic, design, model, 1);
+        crate::faults::fault_stats(&scores, et.total, &effects)
+    });
     super::campaign::Validated {
         design: design.clone(),
         et: et.total,
         temp_c: temp,
         robust,
         transient,
+        faults,
     }
 }
 

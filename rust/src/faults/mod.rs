@@ -1,0 +1,18 @@
+//! Fault-injection subsystem (DESIGN.md §15): deterministic MIV /
+//! planar-link / router fault sampling, masked rerouting over the
+//! surviving NoC graph, and the degraded-mode Monte Carlo that scores
+//! connectivity yield and graceful degradation.
+//!
+//! Mirrors the `variation` subsystem's shape: a `FaultConfig` the CLI
+//! fills in, a precomputed `FaultModel` bound to the design grid, a pure
+//! per-(seed, index) sampler, and a worker-fanned harness whose
+//! aggregation is bit-identical for any `--workers` count.
+
+pub mod model;
+pub mod monte_carlo;
+
+pub use model::{FaultConfig, FaultModel, FaultSet, DISCONNECT_PENALTY, MIN_CONN_YIELD};
+pub use monte_carlo::{
+    fault_effects, fault_score, fault_stats, sample_fault_effects, FaultEffects, FaultScore,
+    FaultStats,
+};

@@ -1,0 +1,264 @@
+//! Fault model: per-entity Bernoulli fault draws, pure in
+//! `(fault seed, sample index, entity identity)`.
+//!
+//! MIV (vertical) links, planar links and whole routers fail at distinct
+//! rates — an MIV defect is the M3D-specific failure mode (the monolithic
+//! inter-tier via is the densest, least-repairable structure in the
+//! stack), while planar wires and router logic fail at conventional
+//! rates.  Draws are keyed by the entity's *identity* (link endpoints,
+//! router position), not its index in a particular design's link list, so
+//! two designs sharing a link see the same fault environment — local DSE
+//! perturbations are compared under consistent fault sets.
+
+use crate::arch::design::Design;
+use crate::arch::geometry::Geometry;
+
+/// Connectivity-yield floor for the resilience-aware winner selection —
+/// a candidate whose surviving fabric disconnects in more than half the
+/// sampled fault sets is not a usable design, whatever its tail latency
+/// (the fault-side analogue of `variation::MIN_YIELD`).
+pub const MIN_CONN_YIELD: f64 = 0.5;
+
+/// Finite score penalty applied when *no* sampled fault set leaves the
+/// fabric connected: large enough to push the design behind any working
+/// one, finite so cached scores stay JSON-round-trippable (`Json::num`
+/// serializes infinities as null).
+pub const DISCONNECT_PENALTY: f64 = 1e9;
+
+/// Fault-injection configuration (the `--faults` CLI knobs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Per-sample fault probability of a vertical (MIV) link.
+    pub miv_rate: f64,
+    /// Per-sample fault probability of a planar (same-tier) link.
+    pub link_rate: f64,
+    /// Per-sample fault probability of a whole router.
+    pub router_rate: f64,
+    /// Monte Carlo fault sets per design.
+    pub samples: usize,
+    /// Fault-stream seed.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        // MIV defects dominate (the M3D-specific mode); router logic is
+        // the hardest block to lose and the rarest to fail.
+        FaultConfig { miv_rate: 0.02, link_rate: 0.005, router_rate: 0.002, samples: 16, seed: 1 }
+    }
+}
+
+impl FaultConfig {
+    /// Whether the subsystem is active.  All rates zero means *disabled*:
+    /// `FaultKey::from_config` returns `None`, scenario keys and leg IDs
+    /// are unchanged, and results are bit-identical to a nominal run (the
+    /// `--horizon 0` pattern, DESIGN.md §13/§15).
+    pub fn enabled(&self) -> bool {
+        self.miv_rate > 0.0 || self.link_rate > 0.0 || self.router_rate > 0.0
+    }
+}
+
+/// One sampled fault set, aligned with a specific design.
+#[derive(Debug, Clone)]
+pub struct FaultSet {
+    /// `dead_link[i]` — link `design.links[i]` is unusable, either from
+    /// its own fault draw or because an endpoint router died.
+    pub dead_link: Vec<bool>,
+    /// `dead_router[pos]` — the router at `pos` is faulted.
+    pub dead_router: Vec<bool>,
+    /// Count of unusable links (including router-induced deaths).
+    pub dead_links: usize,
+    /// Count of faulted routers.
+    pub dead_routers: usize,
+}
+
+impl FaultSet {
+    /// Whether the set faults anything at all.
+    pub fn any(&self) -> bool {
+        self.dead_links > 0 || self.dead_routers > 0
+    }
+}
+
+/// Fault sampler bound to a grid: classifies each link as MIV (endpoints
+/// on different tiers) or planar and draws per-entity faults.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    /// The configuration this model samples from.
+    pub cfg: FaultConfig,
+    /// Positions per tier (`rows * cols`) — the vertical-link classifier.
+    per_tier: usize,
+}
+
+/// Draw-stream discriminators: link and router draws must never alias
+/// even when a router position equals a packed link identity.
+const STREAM_LINK: u64 = 0x4c49_4e4b; // "LINK"
+const STREAM_ROUTER: u64 = 0x5254_4552; // "RTER"
+
+/// Stream seed for sample `k` (same SplitMix-style mix as
+/// `variation::sample`): consecutive indices land in unrelated streams.
+fn sample_seed(seed: u64, sample_idx: u64) -> u64 {
+    seed ^ sample_idx.wrapping_add(1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Uniform draw in `[0, 1)`, pure in `(seed, stream, entity)`:
+/// SplitMix64 finalizer over the mixed key, top 53 bits as the mantissa.
+fn unit_draw(seed: u64, stream: u64, entity: u64) -> f64 {
+    let mut x = seed
+        ^ stream.wrapping_mul(0xbf58_476d_1ce4_e5b9)
+        ^ entity.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultModel {
+    /// Model over a configuration and the placement grid.
+    pub fn new(cfg: &FaultConfig, geo: &Geometry) -> FaultModel {
+        FaultModel { cfg: *cfg, per_tier: geo.rows * geo.cols }
+    }
+
+    /// Whether a link crosses tiers (an MIV in M3D, a TSV bundle in TSV).
+    pub fn is_vertical(&self, a: usize, b: usize) -> bool {
+        a / self.per_tier != b / self.per_tier
+    }
+
+    /// Draw the `sample_idx`-th fault set for `design`.  Deterministic in
+    /// `(cfg.seed, sample_idx)` and the design's link/router identities
+    /// alone — worker scheduling can never change a sample.
+    pub fn sample(&self, design: &Design, sample_idx: u64) -> FaultSet {
+        let s = sample_seed(self.cfg.seed, sample_idx);
+        let n = design.n_tiles();
+        let mut dead_router = vec![false; n];
+        let mut dead_routers = 0usize;
+        if self.cfg.router_rate > 0.0 {
+            for (pos, dead) in dead_router.iter_mut().enumerate() {
+                if unit_draw(s, STREAM_ROUTER, pos as u64) < self.cfg.router_rate {
+                    *dead = true;
+                    dead_routers += 1;
+                }
+            }
+        }
+        let mut dead_link = vec![false; design.links.len()];
+        let mut dead_links = 0usize;
+        for (i, l) in design.links.iter().enumerate() {
+            let (a, b) = l.ends();
+            let rate = if self.is_vertical(a, b) { self.cfg.miv_rate } else { self.cfg.link_rate };
+            let entity = ((a as u64) << 16) | b as u64;
+            let dead = (rate > 0.0 && unit_draw(s, STREAM_LINK, entity) < rate)
+                || dead_router[a]
+                || dead_router[b];
+            if dead {
+                dead_link[i] = true;
+                dead_links += 1;
+            }
+        }
+        FaultSet { dead_link, dead_router, dead_links, dead_routers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, TechParams};
+    use crate::noc::topology;
+
+    fn setup() -> (Geometry, Design) {
+        let cfg = ArchConfig::paper();
+        let geo = Geometry::new(&cfg, &TechParams::m3d());
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        (geo, d)
+    }
+
+    #[test]
+    fn samples_are_deterministic_per_seed_and_index() {
+        let (geo, d) = setup();
+        let m = FaultModel::new(&FaultConfig { miv_rate: 0.3, link_rate: 0.2, router_rate: 0.05, samples: 8, seed: 7 }, &geo);
+        let a = m.sample(&d, 2);
+        let b = m.sample(&d, 2);
+        assert_eq!(a.dead_link, b.dead_link);
+        assert_eq!(a.dead_router, b.dead_router);
+        let c = m.sample(&d, 3);
+        assert!(a.dead_link != c.dead_link || a.dead_router != c.dead_router);
+        let m2 = FaultModel::new(&FaultConfig { seed: 8, ..m.cfg }, &geo);
+        let e = m2.sample(&d, 2);
+        assert!(a.dead_link != e.dead_link || a.dead_router != e.dead_router);
+    }
+
+    #[test]
+    fn rates_gate_their_fault_classes() {
+        let (geo, d) = setup();
+        // MIV-only faults: every dead link must be vertical.
+        let miv_only = FaultModel::new(
+            &FaultConfig { miv_rate: 0.5, link_rate: 0.0, router_rate: 0.0, samples: 4, seed: 1 },
+            &geo,
+        );
+        let mut saw_dead = false;
+        for k in 0..8 {
+            let fs = miv_only.sample(&d, k);
+            assert_eq!(fs.dead_routers, 0);
+            for (i, l) in d.links.iter().enumerate() {
+                if fs.dead_link[i] {
+                    saw_dead = true;
+                    let (a, b) = l.ends();
+                    assert!(miv_only.is_vertical(a, b), "planar link died under miv-only rates");
+                }
+            }
+        }
+        assert!(saw_dead, "0.5 MIV rate drew no faults in 8 samples");
+        // All-zero rates: the empty fault set, every sample.
+        let off = FaultModel::new(
+            &FaultConfig { miv_rate: 0.0, link_rate: 0.0, router_rate: 0.0, samples: 4, seed: 1 },
+            &geo,
+        );
+        assert!(!off.cfg.enabled());
+        for k in 0..4 {
+            assert!(!off.sample(&d, k).any());
+        }
+    }
+
+    #[test]
+    fn dead_routers_kill_their_incident_links() {
+        let (geo, d) = setup();
+        let m = FaultModel::new(
+            &FaultConfig { miv_rate: 0.0, link_rate: 0.0, router_rate: 0.2, samples: 4, seed: 3 },
+            &geo,
+        );
+        let mut saw_router_death = false;
+        for k in 0..8 {
+            let fs = m.sample(&d, k);
+            saw_router_death |= fs.dead_routers > 0;
+            for (i, l) in d.links.iter().enumerate() {
+                let (a, b) = l.ends();
+                assert_eq!(
+                    fs.dead_link[i],
+                    fs.dead_router[a] || fs.dead_router[b],
+                    "link deadness must track endpoint routers when link rates are zero"
+                );
+            }
+        }
+        assert!(saw_router_death);
+    }
+
+    #[test]
+    fn fault_environment_is_shared_across_designs() {
+        // Two designs sharing a link identity draw the same fault for it.
+        let (geo, d) = setup();
+        let m = FaultModel::new(
+            &FaultConfig { miv_rate: 0.4, link_rate: 0.3, router_rate: 0.0, samples: 4, seed: 9 },
+            &geo,
+        );
+        let mut perturbed = d.clone();
+        let last = perturbed.links.len() - 1;
+        assert!(perturbed.replace_link(last, crate::arch::design::Link::new(0, 5)));
+        let fa = m.sample(&d, 1);
+        let fb = m.sample(&perturbed, 1);
+        for (i, l) in d.links.iter().enumerate() {
+            if let Some(j) = perturbed.links.iter().position(|x| x == l) {
+                assert_eq!(fa.dead_link[i], fb.dead_link[j], "shared link {l:?} drew differently");
+            }
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! Degraded-mode Monte Carlo: fan N sampled fault sets over the worker
+//! pool, reroute each surviving fabric, re-run the latency/utilisation
+//! objectives over the delivered traffic and aggregate connectivity
+//! yield, tail latency/ET and the graceful-degradation slope.
+//!
+//! Determinism contract (the same one `variation::monte_carlo` pins):
+//! fault set `k` is a pure function of `(cfg.seed, k)` and the design's
+//! link/router identities, `scope_map` returns results in input order,
+//! and every aggregation folds in index order — bit-identical for any
+//! worker count.  A fault-free sample evaluates to *exactly* the nominal
+//! objectives (same walk, same accumulation order), which is what makes
+//! the fault reshape an exact identity when no fault is drawn.
+
+use crate::arch::design::Design;
+use crate::arch::encode::EncodeCtx;
+use crate::eval::objectives::{Scores, SparseTraffic};
+use crate::noc::routing::Routing;
+use crate::util::stats::{mean, percentile};
+use crate::util::threadpool::scope_map;
+
+use super::model::{FaultModel, DISCONNECT_PENALTY, MIN_CONN_YIELD};
+
+/// Per-sample outcome of one fault set applied to one design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEffects {
+    /// Whether the surviving fabric still connects every live router *and*
+    /// delivers some CPU<->LLC traffic.  A disconnected sample carries no
+    /// degraded objectives — it is a connectivity-yield failure.
+    pub connected: bool,
+    /// Unusable links in the sample (own faults + router-induced).
+    pub dead_links: usize,
+    /// Faulted routers in the sample.
+    pub dead_routers: usize,
+    /// Degraded Eq. (1) latency objective over the *delivered* CPU<->LLC
+    /// traffic, renormalised to the full traffic mass (equals the nominal
+    /// objective bit-for-bit when the sample draws no fault).
+    pub lat: f64,
+    /// Fraction of the total traffic mass with both endpoints alive.
+    pub delivered_frac: f64,
+    /// Throughput retention proxy in `[0, 1]`: delivered mass scaled by
+    /// the saturation-throughput ratio `nominal umax / degraded umax`
+    /// (rerouting concentrates load on survivors, so the hottest link's
+    /// utilisation bounds the sustainable injection rate).
+    pub retention: f64,
+}
+
+impl FaultEffects {
+    /// The disconnected-sample constant for a given fault set size.
+    fn disconnected(dead_links: usize, dead_routers: usize) -> FaultEffects {
+        FaultEffects {
+            connected: false,
+            dead_links,
+            dead_routers,
+            lat: 0.0,
+            delivered_frac: 0.0,
+            retention: 0.0,
+        }
+    }
+}
+
+/// Degraded objective walk: `eval::objectives::evaluate_sparse`'s pair
+/// loop restricted to pairs whose endpoints survive, over a masked
+/// routing.  Returns `(lat, umax, delivered_frac, delivered_cpu_llc)`.
+fn degraded_walk(
+    ctx: &EncodeCtx<'_>,
+    traffic: &SparseTraffic,
+    design: &Design,
+    routing: &Routing,
+    dead_router: &[bool],
+) -> (f64, f64, f64, bool) {
+    let n_links = design.links.len();
+    let n_windows = traffic.n_windows;
+    let tiles = ctx.tiles;
+    let c = tiles.n_cpu as f64;
+    let m = tiles.n_llc as f64;
+    let r = ctx.tech.router_stages;
+    let inv_cm = 1.0 / (c * m);
+
+    let mut lat_acc = 0.0f64;
+    let mut u = vec![0.0f64; n_windows * n_links];
+    let mut total_mass = 0.0f64;
+    let mut delivered_mass = 0.0f64;
+    let mut cpu_total = 0.0f64;
+    let mut cpu_delivered = 0.0f64;
+
+    for (p_idx, &(i, j)) in traffic.pairs.iter().enumerate() {
+        let (i, j) = (i as usize, j as usize);
+        let (pi, pj) = (design.pos_of[i], design.pos_of[j]);
+        let rate_mass = traffic.mean_rate[p_idx];
+        total_mass += rate_mass;
+        if traffic.is_cpu_llc[p_idx] {
+            cpu_total += rate_mass;
+        }
+        if dead_router[pi] || dead_router[pj] {
+            continue; // lost traffic: endpoints offline
+        }
+        delivered_mass += rate_mass;
+        let rates = &traffic.rates[p_idx * n_windows..(p_idx + 1) * n_windows];
+        routing.for_each_path_link(pi, pj, |l| {
+            for w in 0..n_windows {
+                u[w * n_links + l] += rates[w];
+            }
+        });
+        if traffic.is_cpu_llc[p_idx] {
+            cpu_delivered += rate_mass;
+            let h = routing.hop_count(pi, pj) as f64;
+            let d = ctx.geo.dist_mm(pi, pj) * ctx.tech.link_delay_cyc_per_mm;
+            lat_acc += (r * h + d) * inv_cm * rate_mass;
+        }
+    }
+
+    let umax = u.iter().copied().fold(0.0f64, f64::max);
+    let delivered_frac = if total_mass > 0.0 { delivered_mass / total_mass } else { 1.0 };
+    if cpu_delivered <= 0.0 {
+        return (0.0, umax, delivered_frac, false);
+    }
+    // Renormalise the delivered latency mass to the full Eq. (1) weight:
+    // lost traffic is charged the delivered traffic's mean latency.  With
+    // nothing lost the ratio is exactly 1.0 and `lat` is the nominal
+    // objective bit-for-bit.
+    let lat = lat_acc / (cpu_delivered / cpu_total);
+    (lat, umax, delivered_frac, true)
+}
+
+/// Peak link utilisation of the *nominal* (fault-free) fabric — the
+/// saturation baseline every sample's retention is measured against.
+pub fn nominal_umax(
+    ctx: &EncodeCtx<'_>,
+    traffic: &SparseTraffic,
+    design: &Design,
+    routing: &Routing,
+) -> f64 {
+    let alive = vec![false; design.n_tiles()];
+    degraded_walk(ctx, traffic, design, routing, &alive).1
+}
+
+/// Effects of the `k`-th sampled fault set on one design.
+pub fn sample_fault_effects(
+    ctx: &EncodeCtx<'_>,
+    traffic: &SparseTraffic,
+    design: &Design,
+    model: &FaultModel,
+    nom_umax: f64,
+    k: u64,
+) -> FaultEffects {
+    let fs = model.sample(design, k);
+    let Some(masked) = Routing::build_masked(design, &fs.dead_link, &fs.dead_router) else {
+        return FaultEffects::disconnected(fs.dead_links, fs.dead_routers);
+    };
+    let (lat, umax, delivered_frac, cpu_alive) =
+        degraded_walk(ctx, traffic, design, &masked, &fs.dead_router);
+    if !cpu_alive {
+        return FaultEffects::disconnected(fs.dead_links, fs.dead_routers);
+    }
+    let sat_ratio = if umax > 0.0 { (nom_umax / umax).min(1.0) } else { 1.0 };
+    FaultEffects {
+        connected: true,
+        dead_links: fs.dead_links,
+        dead_routers: fs.dead_routers,
+        lat,
+        delivered_frac,
+        retention: delivered_frac * sat_ratio,
+    }
+}
+
+/// Compute the per-sample effects of every fault set, fanned over
+/// `workers` threads (results in sample order regardless of count).
+pub fn fault_effects(
+    ctx: &EncodeCtx<'_>,
+    traffic: &SparseTraffic,
+    design: &Design,
+    model: &FaultModel,
+    workers: usize,
+) -> Vec<FaultEffects> {
+    let routing = Routing::build(design);
+    let nom_umax = nominal_umax(ctx, traffic, design, &routing);
+    let idxs: Vec<u64> = (0..model.cfg.samples as u64).collect();
+    scope_map(idxs, workers, |k| {
+        sample_fault_effects(ctx, traffic, design, model, nom_umax, k)
+    })
+}
+
+/// Scoring projection of the fault Monte Carlo — what
+/// `Problem::with_faults` folds into the cached objectives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultScore {
+    /// Samples aggregated.
+    pub samples: u32,
+    /// Samples whose surviving fabric stayed connected.
+    pub connected: u32,
+    /// `connected / samples`.
+    pub connectivity_yield: f64,
+    /// 95th-percentile degraded latency over connected samples.
+    pub p95_lat: f64,
+    /// Multiplier applied to the latency objective: tail stretch divided
+    /// by the connectivity yield ([`DISCONNECT_PENALTY`] when no sample
+    /// stays connected).  Exactly `1.0` when every sample is fault-free.
+    pub lat_factor: f64,
+}
+
+/// Aggregate sampled fault effects into the scoring projection.
+pub fn fault_score(nominal: &Scores, effects: &[FaultEffects]) -> FaultScore {
+    assert!(!effects.is_empty(), "fault_score needs at least one sample");
+    let samples = effects.len() as u32;
+    let lats: Vec<f64> = effects.iter().filter(|e| e.connected).map(|e| e.lat).collect();
+    let connected = lats.len() as u32;
+    let connectivity_yield = connected as f64 / samples as f64;
+    if lats.is_empty() {
+        return FaultScore {
+            samples,
+            connected,
+            connectivity_yield,
+            p95_lat: nominal.lat * DISCONNECT_PENALTY,
+            lat_factor: DISCONNECT_PENALTY,
+        };
+    }
+    let p95_lat = percentile(&lats, 95.0);
+    let stretch = if nominal.lat > 0.0 { p95_lat / nominal.lat } else { 1.0 };
+    FaultScore {
+        samples,
+        connected,
+        connectivity_yield,
+        p95_lat,
+        lat_factor: stretch / connectivity_yield,
+    }
+}
+
+/// Validated-candidate fault statistics — what the leg artifacts persist
+/// per Pareto member and the resilience-aware winner selection reads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultStats {
+    /// Samples aggregated.
+    pub samples: u32,
+    /// Samples whose surviving fabric stayed connected.
+    pub connected: u32,
+    /// `connected / samples` — the connectivity yield.
+    pub connectivity_yield: f64,
+    /// 95th-percentile degraded latency objective (connected samples).
+    pub p95_lat: f64,
+    /// Mean execution time under faults (nominal ET scaled by each
+    /// sample's latency stretch).
+    pub mean_et: f64,
+    /// 95th-percentile execution time under faults.
+    pub p95_et: f64,
+    /// Mean throughput retention over *all* samples (disconnected
+    /// samples retain nothing).
+    pub mean_retention: f64,
+    /// Graceful-degradation slope: mean throughput-retention loss per
+    /// dead link over the faulty-but-connected samples (0 when every
+    /// sample is fault-free).
+    pub degradation_slope: f64,
+    /// Mean unusable links per sample.
+    pub mean_dead_links: f64,
+}
+
+impl FaultStats {
+    /// Whether the candidate clears the [`MIN_CONN_YIELD`] floor.
+    pub fn meets_conn_yield(&self) -> bool {
+        self.connectivity_yield >= MIN_CONN_YIELD
+    }
+}
+
+/// Aggregate sampled fault effects against the nominal objectives and the
+/// nominal execution time.
+pub fn fault_stats(nominal: &Scores, et_nominal: f64, effects: &[FaultEffects]) -> FaultStats {
+    assert!(!effects.is_empty(), "fault_stats needs at least one sample");
+    let samples = effects.len() as u32;
+    let lats: Vec<f64> = effects.iter().filter(|e| e.connected).map(|e| e.lat).collect();
+    let connected = lats.len() as u32;
+    let connectivity_yield = connected as f64 / samples as f64;
+    let retentions: Vec<f64> = effects.iter().map(|e| e.retention).collect();
+    let dead_links: Vec<f64> = effects.iter().map(|e| e.dead_links as f64).collect();
+    let slopes: Vec<f64> = effects
+        .iter()
+        .filter(|e| e.connected && e.dead_links > 0)
+        .map(|e| (1.0 - e.retention) / e.dead_links as f64)
+        .collect();
+    let (p95_lat, mean_et, p95_et) = if lats.is_empty() {
+        (
+            nominal.lat * DISCONNECT_PENALTY,
+            et_nominal * DISCONNECT_PENALTY,
+            et_nominal * DISCONNECT_PENALTY,
+        )
+    } else {
+        let ets: Vec<f64> = lats
+            .iter()
+            .map(|&l| if nominal.lat > 0.0 { et_nominal * (l / nominal.lat) } else { et_nominal })
+            .collect();
+        (percentile(&lats, 95.0), mean(&ets), percentile(&ets, 95.0))
+    };
+    FaultStats {
+        samples,
+        connected,
+        connectivity_yield,
+        p95_lat,
+        mean_et,
+        p95_et,
+        mean_retention: mean(&retentions),
+        degradation_slope: if slopes.is_empty() { 0.0 } else { mean(&slopes) },
+        mean_dead_links: mean(&dead_links),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{geometry::Geometry, tile::TileSet};
+    use crate::config::{ArchConfig, TechParams};
+    use crate::faults::model::FaultConfig;
+    use crate::noc::topology;
+    use crate::runtime::dims::N_WINDOWS;
+    use crate::traffic::{benchmark, generate};
+
+    struct World {
+        cfg: ArchConfig,
+        tech: TechParams,
+        geo: Geometry,
+        tiles: TileSet,
+        trace: crate::traffic::Trace,
+    }
+
+    fn world() -> World {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 5);
+        World { cfg, tech, geo, tiles, trace }
+    }
+
+    fn effects_for(w: &World, fcfg: &FaultConfig, workers: usize) -> Vec<FaultEffects> {
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let traffic =
+            SparseTraffic::from_trace_tiles(&w.trace, N_WINDOWS, Some(&w.tiles));
+        let model = FaultModel::new(fcfg, &w.geo);
+        let d = Design::with_identity_placement(w.cfg.n_tiles(), topology::mesh_links(&w.cfg));
+        fault_effects(&ctx, &traffic, &d, &model, workers)
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_distribution() {
+        let w = world();
+        let fcfg = FaultConfig { miv_rate: 0.05, link_rate: 0.02, router_rate: 0.01, samples: 12, seed: 4 };
+        let serial = effects_for(&w, &fcfg, 1);
+        let parallel = effects_for(&w, &fcfg, 8);
+        assert_eq!(serial, parallel, "fault MC must be worker-invariant");
+    }
+
+    #[test]
+    fn fault_free_samples_reproduce_the_nominal_objective_bit_for_bit() {
+        let w = world();
+        // Rates > 0 (subsystem enabled) but small enough that some samples
+        // draw nothing; those must sit exactly on the nominal point.
+        let fcfg = FaultConfig { miv_rate: 0.01, link_rate: 0.002, router_rate: 0.0, samples: 24, seed: 2 };
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let d = Design::with_identity_placement(w.cfg.n_tiles(), topology::mesh_links(&w.cfg));
+        let r = Routing::build(&d);
+        let nominal = crate::eval::objectives::evaluate(&ctx, &d, &r);
+        let effects = effects_for(&w, &fcfg, 1);
+        let model = FaultModel::new(&fcfg, &w.geo);
+        let mut saw_clean = false;
+        for (k, e) in effects.iter().enumerate() {
+            if !model.sample(&d, k as u64).any() {
+                saw_clean = true;
+                assert_eq!(e.lat.to_bits(), nominal.lat.to_bits(), "clean sample lat drifted");
+                assert_eq!(e.retention.to_bits(), 1.0f64.to_bits());
+                assert_eq!(e.delivered_frac.to_bits(), 1.0f64.to_bits());
+            }
+        }
+        assert!(saw_clean, "no fault-free sample at these rates; pick a different seed");
+        // And if *every* sample is clean the score factor is exactly 1.
+        let clean = vec![
+            FaultEffects {
+                connected: true,
+                dead_links: 0,
+                dead_routers: 0,
+                lat: nominal.lat,
+                delivered_frac: 1.0,
+                retention: 1.0,
+            };
+            8
+        ];
+        let score = fault_score(&nominal, &clean);
+        assert_eq!(score.lat_factor.to_bits(), 1.0f64.to_bits());
+        assert_eq!(score.connectivity_yield, 1.0);
+    }
+
+    #[test]
+    fn faults_stretch_the_tail_and_degrade_retention() {
+        let w = world();
+        let fcfg = FaultConfig { miv_rate: 0.25, link_rate: 0.1, router_rate: 0.0, samples: 16, seed: 6 };
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let d = Design::with_identity_placement(w.cfg.n_tiles(), topology::mesh_links(&w.cfg));
+        let r = Routing::build(&d);
+        let nominal = crate::eval::objectives::evaluate(&ctx, &d, &r);
+        let effects = effects_for(&w, &fcfg, 1);
+        assert!(effects.iter().any(|e| e.dead_links > 0), "rates this high must draw faults");
+        let score = fault_score(&nominal, &effects);
+        assert!(score.p95_lat >= nominal.lat, "rerouted tail cannot beat nominal");
+        assert!(score.lat_factor >= 1.0);
+        let stats = fault_stats(&nominal, 2.5e-3, &effects);
+        assert!(stats.mean_retention <= 1.0 && stats.mean_retention > 0.0);
+        assert!(stats.degradation_slope >= 0.0);
+        assert!(stats.mean_dead_links > 0.0);
+        assert!(stats.p95_et >= stats.mean_et * 0.5);
+    }
+
+    #[test]
+    fn disconnection_is_scored_not_panicked() {
+        // A line topology with a guaranteed cut: every sample that kills
+        // any interior link disconnects.  Extreme rates make all samples
+        // disconnect; the aggregation must stay finite and report yield 0.
+        let w = world();
+        let ctx = crate::arch::encode::EncodeCtx::new(&w.geo, &w.tech, &w.tiles, &w.trace);
+        let traffic = SparseTraffic::from_trace_tiles(&w.trace, N_WINDOWS, Some(&w.tiles));
+        let n = w.cfg.n_tiles();
+        let line: Vec<crate::arch::design::Link> =
+            (0..n - 1).map(|i| crate::arch::design::Link::new(i, i + 1)).collect();
+        let d = Design::with_identity_placement(n, line);
+        let model = FaultModel::new(
+            &FaultConfig { miv_rate: 0.999, link_rate: 0.999, router_rate: 0.0, samples: 6, seed: 1 },
+            &w.geo,
+        );
+        let effects = fault_effects(&ctx, &traffic, &d, &model, 2);
+        assert!(effects.iter().all(|e| !e.connected), "0.999 rates must sever a line");
+        let r = Routing::build(&d);
+        let nominal = crate::eval::objectives::evaluate(&ctx, &d, &r);
+        let score = fault_score(&nominal, &effects);
+        assert_eq!(score.connectivity_yield, 0.0);
+        assert_eq!(score.lat_factor, DISCONNECT_PENALTY);
+        assert!(score.p95_lat.is_finite());
+        let stats = fault_stats(&nominal, 2.5e-3, &effects);
+        assert!(!stats.meets_conn_yield());
+        assert!(stats.p95_et.is_finite() && stats.mean_et.is_finite());
+        assert_eq!(stats.mean_retention, 0.0);
+    }
+}

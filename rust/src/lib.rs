@@ -19,6 +19,7 @@ pub mod arch;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod faults;
 pub mod noc;
 pub mod opt;
 pub mod perf;

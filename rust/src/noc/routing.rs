@@ -146,6 +146,157 @@ impl Routing {
         }
     }
 
+    /// Build all-pairs routes over the *surviving* subgraph of a design
+    /// under a fault set (DESIGN.md §15): links with `dead_link[i]` set and
+    /// routers with `dead_router[pos]` set are excluded from the BFS, the
+    /// escape spanning tree is recomputed over the survivors (rooted at the
+    /// smallest-index live router, so the no-fault mask reproduces `build`
+    /// bit-identically), and `None` is returned when the live routers are
+    /// not mutually connected — the caller scores that sample as a
+    /// connectivity failure instead of panicking.
+    ///
+    /// Tables for dead routers hold `u16::MAX` sentinels; callers must
+    /// only route between live endpoints (degraded-mode evaluation filters
+    /// traffic to surviving pairs).  Dead links are absent from `link_of`,
+    /// so any path that traversed one would trip the path-walk debug
+    /// assertion.
+    pub fn build_masked(
+        design: &Design,
+        dead_link: &[bool],
+        dead_router: &[bool],
+    ) -> Option<Routing> {
+        let n = design.n_tiles();
+        debug_assert_eq!(dead_link.len(), design.links.len());
+        debug_assert_eq!(dead_router.len(), n);
+        let root = (0..n).find(|&p| !dead_router[p])?;
+        let n_live = dead_router.iter().filter(|&&d| !d).count();
+
+        // Surviving adjacency: same sorted-neighbour determinism as
+        // `Design::adjacency`, minus dead links and links incident to dead
+        // routers.
+        let mut adj = vec![Vec::new(); n];
+        for (i, l) in design.links.iter().enumerate() {
+            let (a, b) = l.ends();
+            if dead_link[i] || dead_router[a] || dead_router[b] {
+                continue;
+            }
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        for v in adj.iter_mut() {
+            v.sort_unstable();
+        }
+
+        let mut hops = vec![u16::MAX; n * n];
+        let mut next_hop = vec![u16::MAX; n * n];
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..n {
+            if dead_router[s] {
+                continue;
+            }
+            let base = s * n;
+            hops[base + s] = 0;
+            next_hop[base + s] = s as u16;
+            queue.clear();
+            queue.push_back(s);
+            let mut reached = 1usize;
+            while let Some(u) = queue.pop_front() {
+                for &v in &adj[u] {
+                    if hops[base + v] == u16::MAX {
+                        hops[base + v] = hops[base + u] + 1;
+                        next_hop[base + v] =
+                            if u == s { v as u16 } else { next_hop[base + u] };
+                        queue.push_back(v);
+                        reached += 1;
+                    }
+                }
+            }
+            if reached != n_live {
+                return None;
+            }
+        }
+
+        let mut link_of = vec![u16::MAX; n * n];
+        for (i, l) in design.links.iter().enumerate() {
+            let (a, b) = l.ends();
+            if dead_link[i] || dead_router[a] || dead_router[b] {
+                continue;
+            }
+            link_of[a * n + b] = i as u16;
+            link_of[b * n + a] = i as u16;
+        }
+
+        // Escape spanning tree over the survivors, rooted at the smallest
+        // live router (root 0 when no router is dead, matching `build`).
+        let mut tree_parent = vec![u16::MAX; n];
+        let mut tree_depth = vec![0u16; n];
+        tree_parent[root] = root as u16;
+        queue.clear();
+        queue.push_back(root);
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u] {
+                if tree_parent[v] == u16::MAX {
+                    tree_parent[v] = u as u16;
+                    tree_depth[v] = tree_depth[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+
+        // Per-pair escape next hops among live routers: identical
+        // chain-marking scheme as `build`, with `root` in place of 0.
+        let mut escape_next = vec![u16::MAX; n * n];
+        let mut chain_child = vec![u16::MAX; n];
+        for d in 0..n {
+            if dead_router[d] {
+                continue;
+            }
+            let mut cur = d;
+            loop {
+                if cur == d {
+                    chain_child[cur] = d as u16;
+                }
+                if cur == root {
+                    break;
+                }
+                let p = tree_parent[cur] as usize;
+                chain_child[p] = cur as u16;
+                cur = p;
+            }
+            for u in 0..n {
+                if dead_router[u] {
+                    continue;
+                }
+                escape_next[u * n + d] = if u == d {
+                    u as u16
+                } else if chain_child[u] != u16::MAX {
+                    chain_child[u]
+                } else {
+                    tree_parent[u]
+                };
+            }
+            let mut cur = d;
+            loop {
+                chain_child[cur] = u16::MAX;
+                if cur == root {
+                    break;
+                }
+                cur = tree_parent[cur] as usize;
+            }
+        }
+
+        Some(Routing {
+            n,
+            hops,
+            next_hop,
+            link_of,
+            links: design.links.clone(),
+            tree_parent,
+            tree_depth,
+            escape_next,
+        })
+    }
+
     /// Next hop on the spanning-tree escape route u -> d (u on the
     /// diagonal).  Escape routes climb to the lowest common ancestor of
     /// `u` and `d`, then descend — never up after down — which keeps the
@@ -369,6 +520,75 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn unmasked_build_masked_reproduces_build_exactly() {
+        let cfg = ArchConfig::paper();
+        let geo = crate::arch::geometry::Geometry::new(&cfg, &crate::config::TechParams::m3d());
+        let mut rng = crate::util::Rng::seed_from_u64(17);
+        let designs = vec![
+            Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg)),
+            Design::with_identity_placement(
+                cfg.n_tiles(),
+                topology::swnoc_links(&cfg, &geo, 1.8, &mut rng),
+            ),
+        ];
+        for d in designs {
+            let r = Routing::build(&d);
+            let dead_link = vec![false; d.links.len()];
+            let dead_router = vec![false; d.n_tiles()];
+            let m = Routing::build_masked(&d, &dead_link, &dead_router).unwrap();
+            assert_eq!(r.hops, m.hops);
+            assert_eq!(r.next_hop, m.next_hop);
+            assert_eq!(r.link_of, m.link_of);
+            assert_eq!(r.tree_parent, m.tree_parent);
+            assert_eq!(r.tree_depth, m.tree_depth);
+            assert_eq!(r.escape_next, m.escape_next);
+        }
+    }
+
+    #[test]
+    fn masked_routes_avoid_dead_links_and_reroute() {
+        // Square 0-1-2-3 with a chord: killing one edge forces the detour.
+        let links = vec![Link::new(0, 1), Link::new(1, 2), Link::new(2, 3), Link::new(0, 3)];
+        let d = Design::with_identity_placement(4, links);
+        let idx01 = d.links.iter().position(|l| l.ends() == (0, 1)).unwrap();
+        let mut dead_link = vec![false; d.links.len()];
+        dead_link[idx01] = true;
+        let r = Routing::build_masked(&d, &dead_link, &[false; 4]).unwrap();
+        assert_eq!(r.path(0, 1), vec![0, 3, 2, 1]);
+        for s in 0..4 {
+            for t in 0..4 {
+                for l in r.path_links(s, t) {
+                    assert!(!dead_link[l], "path {s}->{t} crosses dead link");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_build_detects_disconnection_and_dead_roots() {
+        // Line 0-1-2-3: cutting 1-2 splits the survivors.
+        let links = vec![Link::new(0, 1), Link::new(1, 2), Link::new(2, 3)];
+        let d = Design::with_identity_placement(4, links);
+        let idx = d.links.iter().position(|l| l.ends() == (1, 2)).unwrap();
+        let mut dead_link = vec![false; d.links.len()];
+        dead_link[idx] = true;
+        assert!(Routing::build_masked(&d, &dead_link, &[false; 4]).is_none());
+        // Killing router 1 isolates 0 from {2, 3}.
+        let alive_links = vec![false; d.links.len()];
+        assert!(
+            Routing::build_masked(&d, &alive_links, &[false, true, false, false]).is_none()
+        );
+        // Killing an *endpoint* router keeps the rest connected; the
+        // escape tree re-roots at the smallest survivor.
+        let r = Routing::build_masked(&d, &alive_links, &[true, false, false, false]).unwrap();
+        assert_eq!(r.tree_parent[1], 1, "tree re-roots at router 1");
+        assert_eq!(r.path(1, 3), vec![1, 2, 3]);
+        assert_eq!(r.hops[1 * 4 + 0], u16::MAX, "dead router stays unreached");
+        // All routers dead: no root to build from.
+        assert!(Routing::build_masked(&d, &alive_links, &[true; 4]).is_none());
     }
 
     #[test]

@@ -23,7 +23,14 @@
 //!   head flits blocked for [`SimConfig::escape_patience`] cycles fall
 //!   back to VC 0, the *escape* channel restricted to spanning-tree routes
 //!   whose acyclic channel-dependency graph makes the fabric deadlock-free
-//!   for `vcs >= 2` (DESIGN.md §8.4; `vcs == 1` is the calibration mode).
+//!   for `vcs >= 2` (DESIGN.md §8.4; `vcs == 1` is the calibration mode);
+//! * degraded fabrics (DESIGN.md §15) need no simulator changes: a
+//!   [`Routing::build_masked`] table routes only over surviving links and
+//!   rebuilds the escape tree over the surviving graph, so dead channels
+//!   simply carry no traffic.  Callers must keep dead routers out of the
+//!   offered traffic (degraded-mode evaluation filters to live pairs);
+//!   the deadlock-freedom argument is unchanged because it only ever
+//!   relied on the escape layer being a tree.
 
 use super::packet::{Delivery, Flit, Packet};
 use super::routing::Routing;

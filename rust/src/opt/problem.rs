@@ -6,8 +6,9 @@ use crate::arch::design::Design;
 use crate::arch::encode::{design_key, EncodeCtx};
 use crate::arch::tile::TileKind;
 use crate::eval::objectives::{evaluate_sparse, leak_40c, Scores, SparseTraffic};
+use crate::faults::{fault_effects, fault_score, FaultConfig, FaultModel};
 use crate::noc::routing::Routing;
-use crate::runtime::{EvalCache, EvalKey, ScenarioKey, TransientKey, VariationKey};
+use crate::runtime::{EvalCache, EvalKey, FaultKey, ScenarioKey, TransientKey, VariationKey};
 use crate::thermal::{cheap_transient, stack_tau_s, TransientConfig};
 use crate::util::stats::percentile;
 use crate::variation::{robust_evaluate, VariationConfig, VariationModel};
@@ -165,6 +166,12 @@ pub struct Problem<'a> {
     /// [`TransientKey`] so transient and steady cache entries can never
     /// collide.  The second element is the stack time constant `tau` [s].
     transient: Option<(TransientConfig, f64)>,
+    /// Fault-injection model; `None` scores the pristine fabric.  When
+    /// set, [`Problem::score`] multiplies latency by the degraded-mode
+    /// Monte Carlo's yield-weighted p95 stretch factor (DESIGN.md §15),
+    /// and the scenario carries the matching [`FaultKey`] so degraded and
+    /// nominal cache entries can never collide.
+    faults: Option<FaultModel>,
     /// Multi-fidelity ladder state; `None` scores every probe at the
     /// exact rung (see [`Problem::with_ladder`]).
     ladder: Option<LadderState>,
@@ -194,6 +201,7 @@ impl<'a> Problem<'a> {
             scenario,
             variation: None,
             transient: None,
+            faults: None,
             ladder: None,
             evals: AtomicU64::new(0),
             cache: EvalCache::new(),
@@ -239,6 +247,25 @@ impl<'a> Problem<'a> {
     /// The transient scenario configuration, when active.
     pub fn transient_config(&self) -> Option<&TransientConfig> {
         self.transient.as_ref().map(|(cfg, _)| cfg)
+    }
+
+    /// Builder-style fault-injection mode: score designs under the
+    /// degraded-mode fault Monte Carlo of `cfg` instead of the pristine
+    /// fabric.  A disabled configuration (all rates zero) is the identity
+    /// — no fault key, no model, bit-identical nominal results — which is
+    /// the all-`--*-fault-rate 0` contract (DESIGN.md §15).
+    pub fn with_faults(mut self, cfg: &FaultConfig) -> Self {
+        let Some(key) = FaultKey::from_config(cfg) else {
+            return self;
+        };
+        self.scenario = std::sync::Arc::new((*self.scenario).clone().with_faults(Some(key)));
+        self.faults = Some(FaultModel::new(cfg, self.ctx.geo));
+        self
+    }
+
+    /// The fault-injection model, when active.
+    pub fn fault_model(&self) -> Option<&FaultModel> {
+        self.faults.as_ref()
     }
 
     /// Builder-style worker-count override, with the same resolution rule
@@ -384,7 +411,7 @@ impl<'a> Problem<'a> {
             // projection is identical for any `--workers`.
             Some(model) => robust_evaluate(self.ctx, design, &nominal, model, 1).p95,
         };
-        match &self.transient {
+        let shaped = match &self.transient {
             None => projected,
             // Transient mode composes after the robust projection:
             // `tmax` becomes the cheap-RC peak rise of the design's
@@ -400,6 +427,23 @@ impl<'a> Problem<'a> {
                     tmax: ct.peak_rise,
                     ..projected
                 }
+            }
+        };
+        match &self.faults {
+            None => shaped,
+            // Fault mode composes last: latency is multiplied by the
+            // yield-weighted p95 stretch of the degraded-mode fault Monte
+            // Carlo, computed against the *pure nominal* scores so the
+            // factor is independent of the robust/transient reshapes (the
+            // fault key in the scenario is what makes caching this
+            // sound).  The MC fans out serially here for the same reason
+            // as the robust projection above — candidates already spread
+            // over the worker pool, and the fold order is fixed, so the
+            // factor is identical for any `--workers`.
+            Some(model) => {
+                let effects = fault_effects(self.ctx, &self.traffic, design, model, 1);
+                let fs = fault_score(&nominal, &effects);
+                Scores { lat: shaped.lat * fs.lat_factor, ..shaped }
             }
         }
     }
@@ -544,7 +588,7 @@ impl<'a> Problem<'a> {
             usigma: nominal.usigma,
             tmax: percentile(&tmaxes, 95.0),
         };
-        match &self.transient {
+        let shaped = match &self.transient {
             None => bound,
             Some((cfg, tau)) => {
                 let rises = crate::eval::objectives::window_peak_rises(ctx, design);
@@ -554,6 +598,19 @@ impl<'a> Problem<'a> {
                     tmax: ct.peak_rise,
                     ..bound
                 }
+            }
+        };
+        // Fault scenarios reshape the bound with the *identical* factor
+        // the exact rung applies — a pure function of (design, nominal)
+        // alone — so the bound's latency stays bit-exact under faults and
+        // certification remains sound.  (The fault MC is paid at both
+        // rungs; the ladder still skips the robust Monte Carlo.)
+        match &self.faults {
+            None => shaped,
+            Some(model) => {
+                let effects = fault_effects(ctx, &self.traffic, design, model, 1);
+                let fs = fault_score(nominal, &effects);
+                Scores { lat: shaped.lat * fs.lat_factor, ..shaped }
             }
         }
     }
@@ -800,6 +857,57 @@ mod tests {
         let replay = p_rest.score(&d);
         assert_eq!(replay, s_rest);
         assert_eq!(p_rest.eval_count(), 1);
+    }
+
+    #[test]
+    fn fault_mode_stretches_latency_and_zero_rates_are_identity() {
+        let cfg = ArchConfig::paper();
+        let tech = TechParams::m3d();
+        let geo = Geometry::new(&cfg, &tech);
+        let tiles = TileSet::from_arch(&cfg);
+        let trace = generate(&benchmark("bp").unwrap(), &tiles, cfg.windows, 6);
+        let ctx = crate::arch::encode::EncodeCtx::new(&geo, &tech, &tiles, &trace);
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+
+        let nominal = Problem::new(&ctx, Mode::Pt).score(&d);
+
+        // All rates zero disable the subsystem: same key, same bits.
+        let off = crate::faults::FaultConfig {
+            miv_rate: 0.0,
+            link_rate: 0.0,
+            router_rate: 0.0,
+            ..crate::faults::FaultConfig::default()
+        };
+        let p_off = Problem::new(&ctx, Mode::Pt).with_faults(&off);
+        assert!(p_off.scenario.faults.is_none());
+        assert!(p_off.fault_model().is_none());
+        let s_off = p_off.score(&d);
+        assert_eq!(s_off.lat.to_bits(), nominal.lat.to_bits());
+        assert_eq!(s_off.tmax.to_bits(), nominal.tmax.to_bits());
+
+        // Active fault rates key the scenario and stretch latency (the
+        // factor is >= the pure tail stretch; the load/thermal objectives
+        // are untouched — faults reshape only the latency coordinate).
+        let on = crate::faults::FaultConfig {
+            miv_rate: 0.25,
+            link_rate: 0.1,
+            router_rate: 0.02,
+            samples: 8,
+            seed: 3,
+        };
+        let p_on = Problem::new(&ctx, Mode::Pt).with_faults(&on);
+        assert!(p_on.scenario.faults.is_some());
+        let s_on = p_on.score(&d);
+        assert!(s_on.lat.is_finite());
+        assert!(s_on.lat >= nominal.lat, "degradation can only stretch latency");
+        assert_eq!(s_on.umean.to_bits(), nominal.umean.to_bits());
+        assert_eq!(s_on.usigma.to_bits(), nominal.usigma.to_bits());
+        assert_eq!(s_on.tmax.to_bits(), nominal.tmax.to_bits());
+        assert_eq!(p_on.eval_count(), 1);
+        // Re-probe replays the cached degraded projection.
+        let replay = p_on.score(&d);
+        assert_eq!(replay, s_on);
+        assert_eq!(p_on.eval_count(), 1);
     }
 
     #[test]

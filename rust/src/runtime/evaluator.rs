@@ -338,6 +338,89 @@ impl TransientKey {
     }
 }
 
+/// The fault-injection component of a scenario (DESIGN.md §15.4):
+/// everything that determines a *degraded-mode* evaluation's scores beyond
+/// the nominal scenario — the three per-entity fault rates, the Monte
+/// Carlo fan-out and the fault-stream seed.  Present only when fault
+/// injection is enabled; nominal evaluations carry `None`, so their keys
+/// and serialized snapshot lines are unchanged, and a degraded score can
+/// never replay for a fault-free probe or vice versa.
+///
+/// Rates are stored as IEEE-754 bit patterns for the same reason as
+/// [`VariationKey`]: two configurations score identically iff their
+/// parameters are the same floats.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FaultKey {
+    miv_bits: u64,
+    link_bits: u64,
+    router_bits: u64,
+    /// Monte Carlo fault sets aggregated per evaluation.
+    pub samples: u32,
+    /// Seed of the fault-draw streams.
+    pub seed: u64,
+}
+
+impl FaultKey {
+    /// Key of an active fault configuration; `None` when the configuration
+    /// is disabled (all rates zero), which is what makes all-zero `--faults`
+    /// rates bit-identical to the nominal path.
+    pub fn from_config(cfg: &crate::faults::FaultConfig) -> Option<FaultKey> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(Self::from_parts(
+            cfg.miv_rate,
+            cfg.link_rate,
+            cfg.router_rate,
+            cfg.samples as u32,
+            cfg.seed,
+        ))
+    }
+
+    /// Build a key from raw field values (the snapshot loader).
+    pub fn from_parts(
+        miv_rate: f64,
+        link_rate: f64,
+        router_rate: f64,
+        samples: u32,
+        seed: u64,
+    ) -> FaultKey {
+        FaultKey {
+            miv_bits: miv_rate.to_bits(),
+            link_bits: link_rate.to_bits(),
+            router_bits: router_rate.to_bits(),
+            samples,
+            seed,
+        }
+    }
+
+    /// Per-sample MIV (vertical-link) fault probability.
+    pub fn miv_rate(&self) -> f64 {
+        f64::from_bits(self.miv_bits)
+    }
+
+    /// Per-sample planar-link fault probability.
+    pub fn link_rate(&self) -> f64 {
+        f64::from_bits(self.link_bits)
+    }
+
+    /// Per-sample whole-router fault probability.
+    pub fn router_rate(&self) -> f64 {
+        f64::from_bits(self.router_bits)
+    }
+
+    /// Reconstruct the full configuration the key encodes.
+    pub fn to_config(&self) -> crate::faults::FaultConfig {
+        crate::faults::FaultConfig {
+            miv_rate: self.miv_rate(),
+            link_rate: self.link_rate(),
+            router_rate: self.router_rate(),
+            samples: self.samples as usize,
+            seed: self.seed,
+        }
+    }
+}
+
 /// The evaluation *scenario*: everything besides the design itself that the
 /// objective scores depend on — workload, technology, the NoC fabric
 /// configuration (DESIGN.md §1.3), and the Monte Carlo variation
@@ -362,6 +445,8 @@ pub struct ScenarioKey {
     pub variation: Option<VariationKey>,
     /// Transient/DTM scenario configuration; `None` for steady scoring.
     pub transient: Option<TransientKey>,
+    /// Fault-injection configuration; `None` for fault-free scoring.
+    pub faults: Option<FaultKey>,
 }
 
 impl ScenarioKey {
@@ -376,6 +461,7 @@ impl ScenarioKey {
             vc_depth: cfg.vc_depth as u16,
             variation: None,
             transient: None,
+            faults: None,
         }
     }
 
@@ -390,6 +476,13 @@ impl ScenarioKey {
     /// when the configuration is disabled — see [`TransientKey`]).
     pub fn with_transient(mut self, transient: Option<TransientKey>) -> Self {
         self.transient = transient;
+        self
+    }
+
+    /// The same scenario with a fault-injection component attached
+    /// (`None` when the configuration is disabled — see [`FaultKey`]).
+    pub fn with_faults(mut self, faults: Option<FaultKey>) -> Self {
+        self.faults = faults;
         self
     }
 }
@@ -414,7 +507,13 @@ impl ScenarioKey {
 /// analytic *lower bound* as if it were an exact evaluation, so v3
 /// snapshots are retired wholesale (the loader reports them with a
 /// version-specific warning and the engine compacts them away).
-pub const CACHE_SCHEMA_VERSION: u64 = 4;
+///
+/// v5: the scenario gained its optional [`FaultKey`] component (DESIGN.md
+/// §15) — a v4 reader would strip a fault line's rates/seed fields and
+/// replay degraded-under-faults scores for a nominal probe, so v4
+/// snapshots are likewise retired (version-specific warning, compacted on
+/// the next engine open).
+pub const CACHE_SCHEMA_VERSION: u64 = 5;
 
 /// Fidelity rung of a cached evaluation — which model of the §14
 /// multi-fidelity ladder produced the [`Scores`] under this key.
@@ -793,6 +892,53 @@ mod cache_tests {
             ..crate::thermal::TransientConfig::default()
         };
         assert_eq!(TransientKey::from_config(&off), None);
+    }
+
+    #[test]
+    fn fault_scenarios_never_share_entries_with_nominal_ones() {
+        let cfg = ArchConfig::paper();
+        let d = Design::with_identity_placement(cfg.n_tiles(), topology::mesh_links(&cfg));
+        let cache = EvalCache::new();
+        let base = key_of(&d);
+        cache.insert(base.clone(), scores(1.0));
+
+        let with_scenario = |f: &dyn Fn(&mut ScenarioKey)| {
+            let mut s = (*base.scenario).clone();
+            f(&mut s);
+            EvalKey::exact(base.design.clone(), Arc::new(s))
+        };
+        let faulted = with_scenario(&|s| {
+            s.faults = Some(FaultKey::from_parts(0.02, 0.005, 0.002, 16, 1))
+        });
+        // A degraded-under-faults probe never replays the nominal scores...
+        assert!(cache.get(&faulted).is_none());
+        cache.insert(faulted.clone(), scores(5.0));
+        // ...nor leaks back, and every fault knob is identity-bearing:
+        // each rate, the sample count, and the fault seed all separate.
+        assert_eq!(cache.get(&base).unwrap(), scores(1.0));
+        for other in [
+            FaultKey::from_parts(0.04, 0.005, 0.002, 16, 1),
+            FaultKey::from_parts(0.02, 0.010, 0.002, 16, 1),
+            FaultKey::from_parts(0.02, 0.005, 0.004, 16, 1),
+            FaultKey::from_parts(0.02, 0.005, 0.002, 32, 1),
+            FaultKey::from_parts(0.02, 0.005, 0.002, 16, 2),
+        ] {
+            let k = with_scenario(&|s| s.faults = Some(other.clone()));
+            assert!(cache.get(&k).is_none(), "{other:?} must not alias");
+        }
+        assert_eq!(cache.get(&faulted).unwrap(), scores(5.0));
+        // The key round-trips its configuration exactly.
+        let key = FaultKey::from_parts(0.02, 0.005, 0.002, 16, 1);
+        let cfg2 = key.to_config();
+        assert_eq!(FaultKey::from_config(&cfg2), Some(key));
+        // Disabled (all-rates-zero) configurations produce no key at all.
+        let off = crate::faults::FaultConfig {
+            miv_rate: 0.0,
+            link_rate: 0.0,
+            router_rate: 0.0,
+            ..crate::faults::FaultConfig::default()
+        };
+        assert_eq!(FaultKey::from_config(&off), None);
     }
 
     #[test]

@@ -9,6 +9,6 @@ pub mod evaluator;
 
 pub use client::{literal_f32, LoadedComputation, Runtime};
 pub use evaluator::{
-    dims, EvalCache, EvalKey, Evaluator, Fidelity, MooBatch, MooScores, ScenarioKey,
-    TransientKey, VariationKey,
+    dims, EvalCache, EvalKey, Evaluator, FaultKey, Fidelity, MooBatch, MooScores,
+    ScenarioKey, TransientKey, VariationKey,
 };

@@ -14,8 +14,9 @@ use crate::coordinator::campaign::{
 };
 use crate::opt::amosa::AmosaIter;
 use crate::opt::moo_stage::IterRecord;
+use crate::faults::{FaultConfig, FaultStats};
 use crate::opt::{Mode, ParetoSet, Solution};
-use crate::runtime::evaluator::{ScenarioKey, TransientKey, VariationKey};
+use crate::runtime::evaluator::{FaultKey, ScenarioKey, TransientKey, VariationKey};
 use crate::thermal::{Controller, TransientConfig, TransientStats};
 use crate::util::json::Json;
 use crate::variation::{RobustEt, VariationConfig};
@@ -115,8 +116,9 @@ pub fn pareto_from_json(j: &Json) -> Option<ParetoSet> {
 }
 
 /// Validated candidate -> `{"design": ..., "et": x, "temp_c": y}` plus a
-/// `"robust"` Monte Carlo summary when the leg ran under variation and a
-/// `"transient"` stepper summary when it ran a DTM scenario.
+/// `"robust"` Monte Carlo summary when the leg ran under variation, a
+/// `"transient"` stepper summary when it ran a DTM scenario, and a
+/// `"faults"` degraded-mode summary when it ran fault injection.
 pub fn validated_json(v: &Validated) -> Json {
     let mut fields = vec![
         ("design", design_json(&v.design)),
@@ -128,6 +130,9 @@ pub fn validated_json(v: &Validated) -> Json {
     }
     if let Some(t) = &v.transient {
         fields.push(("transient", transient_stats_json(t)));
+    }
+    if let Some(f) = &v.faults {
+        fields.push(("faults", fault_stats_json(f)));
     }
     Json::obj(fields)
 }
@@ -142,12 +147,17 @@ pub fn validated_from_json(j: &Json) -> Option<Validated> {
         Some(t) => Some(transient_stats_from_json(t)?),
         None => None,
     };
+    let faults = match j.get("faults") {
+        Some(f) => Some(fault_stats_from_json(f)?),
+        None => None,
+    };
     Some(Validated {
         design: design_from_json(j.get("design")?)?,
         et: j.get("et")?.as_f64()?,
         temp_c: j.get("temp_c")?.as_f64()?,
         robust,
         transient,
+        faults,
     })
 }
 
@@ -270,7 +280,9 @@ impl LegSpec {
     /// identical to `None`, so `--variation-sigma 0` replays nominal
     /// artifacts.  The same rule holds for `transient`: a disabled
     /// configuration (`horizon == 0` or `dt == 0`) is spec-identical to
-    /// `None`.
+    /// `None` — and for `faults`: a configuration with all rates zero is
+    /// spec-identical to `None`, so `--miv-fault-rate 0 --link-fault-rate 0
+    /// --router-fault-rate 0` replays nominal artifacts.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         world: &LegWorld,
@@ -281,9 +293,11 @@ impl LegSpec {
         opt_seed: u64,
         variation: Option<&VariationConfig>,
         transient: Option<&TransientConfig>,
+        faults: Option<&FaultConfig>,
     ) -> LegSpec {
         let vkey = variation.and_then(VariationKey::from_config);
         let tkey = transient.and_then(TransientKey::from_config);
+        let fkey = faults.and_then(FaultKey::from_config);
         LegSpec {
             bench: world.profile.name.to_string(),
             tech: world.tech.tech,
@@ -299,7 +313,8 @@ impl LegSpec {
                 world.trace.windows.len(),
             )
             .with_variation(vkey)
-            .with_transient(tkey),
+            .with_transient(tkey)
+            .with_faults(fkey),
             ladder: false,
         }
     }
@@ -341,9 +356,20 @@ impl LegSpec {
                 t.controller().desc()
             ),
         };
+        let faults = match &self.scenario.faults {
+            None => String::new(),
+            Some(f) => format!(
+                "|flt:{},{},{},{},{}",
+                f.miv_rate(),
+                f.link_rate(),
+                f.router_rate(),
+                f.samples,
+                f.seed
+            ),
+        };
         let ladder = if self.ladder { "|ladder" } else { "" };
         let canon = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}{}{}{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}{}{}{}{}",
             self.bench,
             self.tech.name(),
             self.mode.name(),
@@ -358,6 +384,7 @@ impl LegSpec {
             self.scenario.vc_depth,
             variation,
             transient,
+            faults,
             ladder,
         );
         format!(
@@ -426,6 +453,9 @@ pub fn scenario_json(s: &ScenarioKey) -> Json {
     if let Some(t) = &s.transient {
         fields.push(("transient", transient_key_json(t)));
     }
+    if let Some(f) = &s.faults {
+        fields.push(("faults", fault_key_json(f)));
+    }
     Json::obj(fields)
 }
 
@@ -439,6 +469,10 @@ pub fn scenario_from_json(j: &Json) -> Option<ScenarioKey> {
         Some(t) => Some(transient_key_from_json(t)?),
         None => None,
     };
+    let faults = match j.get("faults") {
+        Some(f) => Some(fault_key_from_json(f)?),
+        None => None,
+    };
     Some(ScenarioKey {
         workload: j.get("workload")?.as_str()?.to_string(),
         // Round-trip through `Tech` to recover the &'static str the key
@@ -449,6 +483,7 @@ pub fn scenario_from_json(j: &Json) -> Option<ScenarioKey> {
         vc_depth: j.get("vc_depth")?.as_u64()? as u16,
         variation,
         transient,
+        faults,
     })
 }
 
@@ -498,6 +533,60 @@ pub fn transient_key_json(t: &TransientKey) -> Json {
         ("dt_s", Json::num(t.dt_s())),
         ("horizon_s", Json::num(t.horizon_s())),
     ])
+}
+
+/// FaultKey -> JSON.  The three rates are finite f64s, which `util::json`
+/// round-trips exactly; the seed follows the decimal-string rule every
+/// other u64 seed in the store uses.
+pub fn fault_key_json(f: &FaultKey) -> Json {
+    Json::obj(vec![
+        ("link_rate", Json::num(f.link_rate())),
+        ("miv_rate", Json::num(f.miv_rate())),
+        ("router_rate", Json::num(f.router_rate())),
+        ("samples", Json::num(f.samples as f64)),
+        ("seed", Json::str(&f.seed.to_string())),
+    ])
+}
+
+/// Parse a key serialized by [`fault_key_json`].
+pub fn fault_key_from_json(j: &Json) -> Option<FaultKey> {
+    Some(FaultKey::from_parts(
+        j.get("miv_rate")?.as_f64()?,
+        j.get("link_rate")?.as_f64()?,
+        j.get("router_rate")?.as_f64()?,
+        j.get("samples")?.as_u64()? as u32,
+        j.get("seed")?.as_str()?.parse().ok()?,
+    ))
+}
+
+/// FaultStats -> JSON (per-candidate degraded-mode fault-MC summary).
+pub fn fault_stats_json(f: &FaultStats) -> Json {
+    Json::obj(vec![
+        ("connected", Json::num(f.connected as f64)),
+        ("connectivity_yield", Json::num(f.connectivity_yield)),
+        ("degradation_slope", Json::num(f.degradation_slope)),
+        ("mean_dead_links", Json::num(f.mean_dead_links)),
+        ("mean_et", Json::num(f.mean_et)),
+        ("mean_retention", Json::num(f.mean_retention)),
+        ("p95_et", Json::num(f.p95_et)),
+        ("p95_lat", Json::num(f.p95_lat)),
+        ("samples", Json::num(f.samples as f64)),
+    ])
+}
+
+/// Parse a summary serialized by [`fault_stats_json`].
+pub fn fault_stats_from_json(j: &Json) -> Option<FaultStats> {
+    Some(FaultStats {
+        samples: j.get("samples")?.as_u64()? as u32,
+        connected: j.get("connected")?.as_u64()? as u32,
+        connectivity_yield: j.get("connectivity_yield")?.as_f64()?,
+        p95_lat: j.get("p95_lat")?.as_f64()?,
+        mean_et: j.get("mean_et")?.as_f64()?,
+        p95_et: j.get("p95_et")?.as_f64()?,
+        mean_retention: j.get("mean_retention")?.as_f64()?,
+        degradation_slope: j.get("degradation_slope")?.as_f64()?,
+        mean_dead_links: j.get("mean_dead_links")?.as_f64()?,
+    })
 }
 
 /// Parse a key serialized by [`transient_key_json`].
@@ -647,6 +736,7 @@ mod tests {
             0,
             None,
             None,
+            None,
         );
         spec.opt_seed = u64::MAX;
         let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
@@ -667,6 +757,7 @@ mod tests {
             &effort,
             7,
             Some(&vcfg),
+            None,
             None,
         );
         assert!(spec.scenario.variation.is_some());
@@ -693,6 +784,7 @@ mod tests {
                 7,
                 None,
                 Some(&tcfg),
+                None,
             );
             assert!(spec.scenario.transient.is_some());
             let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
@@ -710,6 +802,7 @@ mod tests {
             7,
             Some(&vcfg),
             Some(&tcfg),
+            None,
         );
         assert!(both.scenario.variation.is_some() && both.scenario.transient.is_some());
         let j = crate::util::json::parse(&both.to_json().to_string()).unwrap();
@@ -729,6 +822,7 @@ mod tests {
             7,
             None,
             None,
+            None,
         );
         let id = spec.leg_id();
         assert!(id.starts_with("bp-m3d-pt-moo-stage-"));
@@ -740,6 +834,7 @@ mod tests {
             Selection::MinEtUnderTth,
             &effort,
             7,
+            None,
             None,
             None,
         );
@@ -754,6 +849,7 @@ mod tests {
             7,
             None,
             None,
+            None,
         );
         assert_ne!(id, sel.leg_id());
         let seed = LegSpec::new(
@@ -763,6 +859,7 @@ mod tests {
             Selection::MinEtUnderTth,
             &effort,
             8,
+            None,
             None,
             None,
         );
@@ -778,6 +875,7 @@ mod tests {
             7,
             None,
             None,
+            None,
         );
         assert_ne!(id, eff.leg_id());
         // Workers are NOT identity.
@@ -788,6 +886,7 @@ mod tests {
             Selection::MinEtUnderTth,
             &effort.clone().with_workers(8),
             7,
+            None,
             None,
             None,
         );
@@ -807,6 +906,7 @@ mod tests {
                 &effort,
                 7,
                 v,
+                None,
                 None,
             )
             .leg_id()
@@ -849,6 +949,7 @@ mod tests {
                 7,
                 v,
                 None,
+                None,
             )
             .with_ladder(ladder)
         };
@@ -887,6 +988,7 @@ mod tests {
                 7,
                 None,
                 t,
+                None,
             )
             .leg_id()
         };
@@ -914,5 +1016,130 @@ mod tests {
         let mut off = TransientConfig::default();
         off.horizon_s = 0.0;
         assert_eq!(nominal, mk(Some(&off)));
+    }
+
+    #[test]
+    fn fault_spec_roundtrips_and_composes_with_other_scenarios() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        let mut fcfg = FaultConfig::default();
+        fcfg.seed = u64::MAX; // decimal-string rule must hold for fault seeds
+        let spec = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinP95EtFaults,
+            &effort,
+            7,
+            None,
+            None,
+            Some(&fcfg),
+        );
+        assert!(spec.scenario.faults.is_some());
+        let j = crate::util::json::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(LegSpec::from_json(&j).unwrap(), spec);
+        // Faults compose with variation + transient: all three scenario
+        // components survive the round trip.
+        let vcfg = VariationConfig::default();
+        let tcfg = TransientConfig::default();
+        let all = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinP95EtFaults,
+            &effort,
+            7,
+            Some(&vcfg),
+            Some(&tcfg),
+            Some(&fcfg),
+        );
+        assert!(
+            all.scenario.variation.is_some()
+                && all.scenario.transient.is_some()
+                && all.scenario.faults.is_some()
+        );
+        let j = crate::util::json::parse(&all.to_json().to_string()).unwrap();
+        assert_eq!(LegSpec::from_json(&j).unwrap(), all);
+    }
+
+    #[test]
+    fn faults_are_leg_identity_and_zero_rates_are_nominal() {
+        let world = LegWorld::new("bp", Tech::M3d, 7);
+        let effort = Effort::quick();
+        let mk = |f: Option<&FaultConfig>| {
+            LegSpec::new(
+                &world,
+                Mode::Pt,
+                Algo::MooStage,
+                Selection::MinP95EtFaults,
+                &effort,
+                7,
+                None,
+                None,
+                f,
+            )
+            .leg_id()
+        };
+        let nominal = mk(None);
+        let faulty = mk(Some(&FaultConfig::default()));
+        assert_ne!(nominal, faulty, "fault legs need their own artifacts");
+        // Every fault knob is identity.
+        let mut miv = FaultConfig::default();
+        miv.miv_rate += 0.01;
+        assert_ne!(faulty, mk(Some(&miv)));
+        let mut link = FaultConfig::default();
+        link.link_rate += 0.01;
+        assert_ne!(faulty, mk(Some(&link)));
+        let mut router = FaultConfig::default();
+        router.router_rate += 0.01;
+        assert_ne!(faulty, mk(Some(&router)));
+        let mut samples = FaultConfig::default();
+        samples.samples *= 2;
+        assert_ne!(faulty, mk(Some(&samples)));
+        let mut seed = FaultConfig::default();
+        seed.seed += 1;
+        assert_ne!(faulty, mk(Some(&seed)));
+        // All rates zero disables the subsystem: spec-identical to
+        // nominal, so a zero-rate `--faults` campaign replays nominal
+        // artifacts byte-for-byte.
+        let off = FaultConfig {
+            miv_rate: 0.0,
+            link_rate: 0.0,
+            router_rate: 0.0,
+            ..FaultConfig::default()
+        };
+        assert_eq!(nominal, mk(Some(&off)));
+        let spec_off = LegSpec::new(
+            &world,
+            Mode::Pt,
+            Algo::MooStage,
+            Selection::MinP95EtFaults,
+            &effort,
+            7,
+            None,
+            None,
+            Some(&off),
+        );
+        assert!(spec_off.scenario.faults.is_none());
+    }
+
+    #[test]
+    fn fault_stats_roundtrip_is_byte_stable() {
+        let stats = FaultStats {
+            samples: 16,
+            connected: 14,
+            connectivity_yield: 0.875,
+            p95_lat: 123.456,
+            mean_et: 0.0321,
+            p95_et: 0.0456,
+            mean_retention: 0.91,
+            degradation_slope: 0.0125,
+            mean_dead_links: 1.75,
+        };
+        let s = fault_stats_json(&stats).to_string();
+        let j = crate::util::json::parse(&s).unwrap();
+        let back = fault_stats_from_json(&j).unwrap();
+        assert_eq!(back, stats);
+        assert_eq!(fault_stats_json(&back).to_string(), s);
     }
 }

@@ -25,6 +25,7 @@ use crate::coordinator::campaign::{
     run_leg_warm, Algo, Effort, LegCacheStats, LegResult, LegWorld, Selection,
 };
 use crate::eval::objectives::Scores;
+use crate::faults::FaultConfig;
 use crate::opt::Mode;
 use crate::runtime::evaluator::EvalKey;
 use crate::thermal::TransientConfig;
@@ -79,6 +80,10 @@ pub struct Engine {
     /// (`--transient`); a disabled configuration (`horizon == 0`)
     /// behaves exactly like `None`.
     transient: Option<TransientConfig>,
+    /// Fault-injection scenario applied to every leg this engine runs
+    /// (`--faults`); a disabled configuration (all rates zero) behaves
+    /// exactly like `None`.
+    faults: Option<FaultConfig>,
     /// Multi-fidelity evaluation ladder (`--ladder`); an identity on
     /// nominal legs (see `Problem::with_ladder`), so it only becomes part
     /// of a leg's identity when variation is active.
@@ -96,6 +101,7 @@ impl Engine {
             warm: Arc::new(HashMap::new()),
             variation: None,
             transient: None,
+            faults: None,
             ladder: false,
             shared: Mutex::new(Shared::default()),
         }
@@ -119,6 +125,17 @@ impl Engine {
     /// one run directory without colliding.
     pub fn with_transient(mut self, transient: Option<TransientConfig>) -> Engine {
         self.transient = transient;
+        self
+    }
+
+    /// Builder-style fault-injection mode: every leg run by this engine
+    /// scores and validates under the degraded-mode fault Monte Carlo
+    /// (see `Problem::with_faults` and the [`crate::faults`] subsystem).
+    /// Fault legs have their own deterministic IDs — the fault key is
+    /// part of the leg spec's scenario — so fault, transient, robust and
+    /// nominal artifacts coexist in one run directory without colliding.
+    pub fn with_faults(mut self, faults: Option<FaultConfig>) -> Engine {
+        self.faults = faults;
         self
     }
 
@@ -178,6 +195,7 @@ impl Engine {
             warm: Arc::new(warm),
             variation: None,
             transient: None,
+            faults: None,
             ladder: false,
             shared: Mutex::new(Shared { known, summaries: Vec::new() }),
         })
@@ -203,17 +221,19 @@ impl Engine {
     ) -> LegResult {
         let variation = self.variation.as_ref();
         let transient = self.transient.as_ref();
+        let faults = self.faults.as_ref();
         let Some(store) = &self.store else {
             let (leg, _) = run_leg_warm(
-                world, mode, algo, selection, effort, seed, None, variation, transient,
+                world, mode, algo, selection, effort, seed, None, variation, transient, faults,
                 self.ladder,
             );
             self.push_summary(String::new(), &leg);
             return leg;
         };
 
-        let spec = LegSpec::new(world, mode, algo, selection, effort, seed, variation, transient)
-            .with_ladder(self.ladder);
+        let spec =
+            LegSpec::new(world, mode, algo, selection, effort, seed, variation, transient, faults)
+                .with_ladder(self.ladder);
         let id = spec.leg_id();
 
         if !self.force {
@@ -242,6 +262,7 @@ impl Engine {
             Some(self.warm.clone()),
             variation,
             transient,
+            faults,
             self.ladder,
         );
 

@@ -5,8 +5,11 @@
 //! written to a `.tmp` sibling and `rename`d into place, so a reader (or
 //! a campaign killed mid-write) never observes a torn document — at worst
 //! the run dir holds the previous complete version plus an orphaned
-//! `.tmp`.  The cache snapshot is line-oriented and append-only; a torn
-//! final line is skipped (and counted) on load.
+//! `.tmp` (swept on the next writer-mode open).  The cache snapshot is
+//! line-oriented and append-only; a torn final line is skipped (and
+//! counted) on load, and every rejected line is preserved verbatim in
+//! `cache.quarantine.jsonl` for post-mortem inspection before compaction
+//! rewrites the snapshot.
 
 use std::collections::HashMap;
 use std::io;
@@ -27,11 +30,41 @@ pub struct RunStore {
 }
 
 impl RunStore {
-    /// Open (creating if needed) a run directory.
+    /// Open (creating if needed) a run directory.  Writer-mode open also
+    /// sweeps orphaned `*.tmp.*` siblings left behind by a writer killed
+    /// between `write` and `rename` (see [`RunStore::atomic_write`]).
     pub fn open(root: impl Into<PathBuf>) -> io::Result<RunStore> {
         let root = root.into();
         std::fs::create_dir_all(root.join("legs"))?;
-        Ok(RunStore { root })
+        let store = RunStore { root };
+        store.sweep_tmp();
+        Ok(store)
+    }
+
+    /// Remove orphaned atomic-write temporaries.  Only the writer-mode
+    /// constructor sweeps — read-only inspection (`open_existing`) must
+    /// not mutate arbitrary directories.  Best-effort: an unremovable
+    /// tmp never fails the open.
+    fn sweep_tmp(&self) {
+        let mut removed = 0usize;
+        for dir in [self.root.clone(), self.root.join("legs")] {
+            let Ok(rd) = std::fs::read_dir(&dir) else { continue };
+            for e in rd.filter_map(|e| e.ok()) {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.contains(".tmp.")
+                    && e.path().is_file()
+                    && std::fs::remove_file(e.path()).is_ok()
+                {
+                    removed += 1;
+                }
+            }
+        }
+        if removed > 0 {
+            crate::log_warn!(
+                "run store {}: swept {removed} orphaned tmp file(s) from an interrupted write",
+                self.name()
+            );
+        }
     }
 
     /// Open an existing run directory without creating anything — for
@@ -74,6 +107,10 @@ impl RunStore {
 
     fn cache_path(&self) -> PathBuf {
         self.root.join("cache.jsonl")
+    }
+
+    fn quarantine_path(&self) -> PathBuf {
+        self.root.join("cache.quarantine.jsonl")
     }
 
     fn leg_path(&self, id: &str) -> PathBuf {
@@ -202,16 +239,20 @@ impl RunStore {
     /// Load the eval-cache snapshot.  Tolerant by design: unparseable or
     /// version-mismatched lines are skipped (counted in the return), so a
     /// snapshot from an older schema degrades to a cold start instead of
-    /// failing the campaign or replaying wrong scores.  Later lines win
-    /// over earlier ones for the same key (append semantics).
+    /// failing the campaign or replaying wrong scores.  Every rejected
+    /// line is appended verbatim to `cache.quarantine.jsonl` before the
+    /// engine's compaction rewrites the snapshot, so the evidence of what
+    /// was dropped survives for inspection.  Later lines win over earlier
+    /// ones for the same key (append semantics).
     pub fn load_cache(&self) -> (HashMap<EvalKey, Scores>, usize) {
         let raw = match std::fs::read_to_string(self.cache_path()) {
             Ok(r) => r,
             Err(_) => return (HashMap::new(), 0),
         };
         let mut map = HashMap::new();
-        let mut skipped = 0usize;
+        let mut rejected: Vec<&str> = Vec::new();
         let mut stale_v3 = 0usize;
+        let mut stale_v4 = 0usize;
         for line in raw.lines() {
             if line.trim().is_empty() {
                 continue;
@@ -222,13 +263,16 @@ impl RunStore {
                     map.insert(k, s);
                 }
                 None => {
-                    skipped += 1;
-                    if parsed.and_then(|j| j.get("v").and_then(Json::as_u64)) == Some(3) {
-                        stale_v3 += 1;
+                    rejected.push(line);
+                    match parsed.and_then(|j| j.get("v").and_then(Json::as_u64)) {
+                        Some(3) => stale_v3 += 1,
+                        Some(4) => stale_v4 += 1,
+                        _ => {}
                     }
                 }
             }
         }
+        let skipped = rejected.len();
         if stale_v3 > 0 {
             crate::log_warn!(
                 "run store: {stale_v3} cache line(s) in {} use schema v3 (pre-fidelity); \
@@ -238,14 +282,47 @@ impl RunStore {
                 self.cache_path().display()
             );
         }
-        if skipped > stale_v3 {
+        if stale_v4 > 0 {
             crate::log_warn!(
-                "run store: skipped {} stale/corrupt cache line(s) in {}",
-                skipped - stale_v3,
+                "run store: {stale_v4} cache line(s) in {} use schema v4 (pre-faults); \
+                 current schema v{CACHE_SCHEMA_VERSION} scenarios carry an optional fault key \
+                 — the stale lines are ignored and will be compacted away, their designs \
+                 re-evaluate once",
                 self.cache_path().display()
             );
         }
+        if skipped > stale_v3 + stale_v4 {
+            crate::log_warn!(
+                "run store: skipped {} stale/corrupt cache line(s) in {}",
+                skipped - stale_v3 - stale_v4,
+                self.cache_path().display()
+            );
+        }
+        if !rejected.is_empty() {
+            match self.quarantine_lines(&rejected) {
+                Ok(()) => crate::log_warn!(
+                    "run store: {} rejected cache line(s) quarantined to {}",
+                    rejected.len(),
+                    self.quarantine_path().display()
+                ),
+                Err(e) => {
+                    crate::log_warn!("run store: cache quarantine append failed: {e}")
+                }
+            }
+        }
         (map, skipped)
+    }
+
+    /// Append rejected snapshot lines verbatim to the quarantine file.
+    fn quarantine_lines(&self, lines: &[&str]) -> io::Result<()> {
+        use std::io::Write as _;
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.quarantine_path())?;
+        let mut body = lines.join("\n");
+        body.push('\n');
+        file.write_all(body.as_bytes())
     }
 
     /// Number of entries currently in the snapshot file (cheap line count).
@@ -505,6 +582,66 @@ mod tests {
         assert_eq!(loaded.len(), 2, "current-schema entries survive");
         assert_eq!(skipped, 1, "the v3 line is counted as skipped");
         assert!(loaded.keys().all(|k| !k.fidelity.is_bound()));
+        // The rejected line is preserved verbatim in the quarantine file.
+        let q = std::fs::read_to_string(store.root().join("cache.quarantine.jsonl")).unwrap();
+        assert_eq!(q, format!("{v3}\n"));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn schema_v4_lines_are_rejected_with_their_own_warning() {
+        // A pre-faults (v4) snapshot line — current layout except the
+        // version field — must be skipped like any stale schema and land
+        // in quarantine; current-schema lines load untouched.
+        let store = tmp_store("v4");
+        let entries: Vec<(EvalKey, Scores)> = (1..=2).map(entry).collect();
+        store.save_cache(entries.iter().map(|(k, s)| (k, s))).unwrap();
+        let path = store.root().join("cache.jsonl");
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        let v4 = raw
+            .lines()
+            .next()
+            .unwrap()
+            .replace(&format!("\"v\":{CACHE_SCHEMA_VERSION}"), "\"v\":4");
+        assert!(json::parse(&v4).is_ok(), "the forged v4 line must stay parseable");
+        raw.push_str(&format!("{v4}\n"));
+        std::fs::write(&path, raw).unwrap();
+
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!((loaded.len(), skipped), (2, 1));
+        let q = std::fs::read_to_string(store.root().join("cache.quarantine.jsonl")).unwrap();
+        assert_eq!(q, format!("{v4}\n"));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn corrupt_lines_are_quarantined_and_orphaned_tmps_swept() {
+        let store = tmp_store("quarantine");
+        let entries: Vec<(EvalKey, Scores)> = (1..=2).map(entry).collect();
+        store.save_cache(entries.iter().map(|(k, s)| (k, s))).unwrap();
+        let path = store.root().join("cache.jsonl");
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        raw.push_str("{not json\n");
+        raw.push_str("{\"v\":999}\n");
+        std::fs::write(&path, raw).unwrap();
+
+        let (loaded, skipped) = store.load_cache();
+        assert_eq!((loaded.len(), skipped), (2, 2));
+        let q = std::fs::read_to_string(store.root().join("cache.quarantine.jsonl")).unwrap();
+        assert_eq!(q, "{not json\n{\"v\":999}\n");
+
+        // Orphaned atomic-write temporaries (a writer killed between
+        // write and rename) are swept on the next writer-mode open; the
+        // snapshot and quarantine files survive untouched.
+        std::fs::write(store.root().join("manifest.tmp.999.0"), "{").unwrap();
+        std::fs::write(store.root().join("legs").join("x.tmp.999.1"), "{").unwrap();
+        let reopened = RunStore::open(store.root().to_path_buf()).unwrap();
+        assert!(!reopened.root().join("manifest.tmp.999.0").exists());
+        assert!(!reopened.root().join("legs").join("x.tmp.999.1").exists());
+        assert!(reopened.root().join("cache.jsonl").exists());
+        assert!(reopened.root().join("cache.quarantine.jsonl").exists());
+        let (again, skipped_again) = reopened.load_cache();
+        assert_eq!((again.len(), skipped_again), (2, 2));
         std::fs::remove_dir_all(store.root()).ok();
     }
 

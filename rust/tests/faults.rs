@@ -1,0 +1,255 @@
+//! Integration: the fault-injection subsystem (DESIGN.md §15).
+//!
+//! Pins the resilience-harness contract:
+//! * a fault leg is bit-identical for any `--workers` count at a fixed
+//!   `--fault-seed` (fault sets are indexed, not scheduled),
+//! * all-zero fault rates degrade to the nominal path bit-for-bit and
+//!   replay a nominal store's artifacts byte-identically,
+//! * fault legs coexist and resume beside nominal / robust / transient /
+//!   ladder legs in one run store without colliding,
+//! * a fault set that disconnects the fabric is a scored failure
+//!   (connectivity-yield miss + latency penalty), never a panic.
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{
+    run_leg, run_leg_warm, Algo, Effort, LegResult, LegWorld, Selection,
+};
+use hem3d::faults::FaultConfig;
+use hem3d::opt::Mode;
+use hem3d::store::Engine;
+use hem3d::thermal::TransientConfig;
+use hem3d::variation::VariationConfig;
+
+fn tiny(workers: usize) -> Effort {
+    let mut e = Effort::quick();
+    e.stage.max_iters = 2;
+    e.stage.local.max_steps = 5;
+    e.stage.local.neighbors_per_step = 5;
+    e.stage.meta_candidates = 6;
+    e.amosa.t_final = 0.4;
+    e.amosa.iters_per_temp = 8;
+    e.validate_cap = 3;
+    e.workers = workers;
+    e
+}
+
+fn fcfg(samples: usize, seed: u64) -> FaultConfig {
+    FaultConfig { samples, seed, ..FaultConfig::default() }
+}
+
+fn fault_leg(world: &LegWorld, workers: usize, fc: &FaultConfig) -> LegResult {
+    run_leg_warm(
+        world,
+        Mode::Pt,
+        Algo::MooStage,
+        Selection::MinP95EtFaults,
+        &tiny(workers),
+        11,
+        None,
+        None,
+        None,
+        Some(fc),
+        false,
+    )
+    .0
+}
+
+fn assert_legs_identical(a: &LegResult, b: &LegResult) {
+    assert_eq!(a.evals, b.evals, "distinct-evaluation counts diverged");
+    assert_eq!(a.winner.et.to_bits(), b.winner.et.to_bits());
+    assert_eq!(a.winner.temp_c.to_bits(), b.winner.temp_c.to_bits());
+    assert_eq!(a.winner.design.tile_at, b.winner.design.tile_at);
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    for (x, y) in a.candidates.iter().zip(b.candidates.iter()) {
+        assert_eq!(x.et.to_bits(), y.et.to_bits());
+        assert_eq!(x.design.tile_at, y.design.tile_at);
+        match (&x.faults, &y.faults) {
+            (Some(fx), Some(fy)) => {
+                assert_eq!(fx.samples, fy.samples);
+                assert_eq!(fx.connected, fy.connected);
+                assert_eq!(fx.connectivity_yield.to_bits(), fy.connectivity_yield.to_bits());
+                assert_eq!(fx.p95_lat.to_bits(), fy.p95_lat.to_bits());
+                assert_eq!(fx.mean_et.to_bits(), fy.mean_et.to_bits());
+                assert_eq!(fx.p95_et.to_bits(), fy.p95_et.to_bits());
+                assert_eq!(fx.mean_retention.to_bits(), fy.mean_retention.to_bits());
+                assert_eq!(fx.degradation_slope.to_bits(), fy.degradation_slope.to_bits());
+                assert_eq!(fx.mean_dead_links.to_bits(), fy.mean_dead_links.to_bits());
+            }
+            (None, None) => {}
+            _ => panic!("fault summaries diverged between runs"),
+        }
+    }
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "PHV trajectory diverged");
+        assert_eq!(x.1, y.1, "eval trajectory diverged");
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hem3d_faults_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn fault_leg_is_identical_for_1_and_8_workers() {
+    let world = LegWorld::new("knn", Tech::M3d, 11);
+    let fc = fcfg(6, 3);
+    let serial = fault_leg(&world, 1, &fc);
+    let parallel = fault_leg(&world, 8, &fc);
+    assert_legs_identical(&serial, &parallel);
+    // And the fault summaries are actually present and sane.
+    assert!(serial.winner.faults.is_some(), "fault leg must carry degraded-mode stats");
+    for c in &serial.candidates {
+        let fs = c.faults.expect("every validated candidate has fault stats");
+        assert_eq!(fs.samples, fc.samples as u32);
+        assert!((0.0..=1.0).contains(&fs.connectivity_yield));
+        assert!((0.0..=1.0).contains(&fs.mean_retention));
+        assert!(fs.p95_lat.is_finite() && fs.p95_et.is_finite());
+        assert!(fs.degradation_slope >= 0.0);
+    }
+}
+
+#[test]
+fn zero_rates_are_bit_identical_to_the_nominal_path() {
+    let world = LegWorld::new("bp", Tech::M3d, 5);
+    // Nominal leg through the plain path...
+    let nominal = run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny(1), 5);
+    // ...vs the "fault" path with all rates 0 under the same selection:
+    // the fault layer must vanish entirely.
+    let off = FaultConfig {
+        miv_rate: 0.0,
+        link_rate: 0.0,
+        router_rate: 0.0,
+        ..FaultConfig::default()
+    };
+    let zero = run_leg_warm(
+        &world,
+        Mode::Pt,
+        Algo::MooStage,
+        Selection::MinEtUnderTth,
+        &tiny(1),
+        5,
+        None,
+        None,
+        None,
+        Some(&off),
+        false,
+    )
+    .0;
+    assert_legs_identical(&nominal, &zero);
+    assert!(zero.winner.faults.is_none(), "zero rates must not attach fault stats");
+}
+
+#[test]
+fn zero_rate_fault_campaign_replays_a_nominal_store_byte_identically() {
+    let dir = tmp_dir("zero_replay");
+    let world = LegWorld::new("bp", Tech::M3d, 7);
+    let effort = tiny(1);
+
+    // Nominal campaign writes the store.
+    let first = Engine::open(&dir).unwrap();
+    let leg = first.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 7);
+    assert!(!leg.replayed);
+    let id = first.store().unwrap().list_leg_ids()[0].clone();
+    let artifact_path = dir.join("legs").join(format!("{id}.json"));
+    let artifact_bytes = std::fs::read(&artifact_path).unwrap();
+    let snapshot = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+
+    // A `--faults` campaign with all rates 0 is spec-identical: it
+    // replays the nominal artifact and leaves every byte alone.
+    let off = FaultConfig {
+        miv_rate: 0.0,
+        link_rate: 0.0,
+        router_rate: 0.0,
+        ..FaultConfig::default()
+    };
+    let second = Engine::open(&dir).unwrap().with_faults(Some(off));
+    let replayed =
+        second.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 7);
+    assert!(replayed.replayed, "zero-rate fault leg must replay the nominal artifact");
+    assert_legs_identical(&leg, &replayed);
+    assert_eq!(artifact_bytes, std::fs::read(&artifact_path).unwrap());
+    assert_eq!(snapshot, std::fs::read_to_string(dir.join("cache.jsonl")).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fault_legs_resume_and_coexist_with_every_other_scenario_flavour() {
+    let dir = tmp_dir("mixed");
+    let world = LegWorld::new("bp", Tech::Tsv, 3);
+    let effort = tiny(1);
+    let fc = fcfg(4, 1);
+    let vc = VariationConfig { samples: 4, ..VariationConfig::default() };
+
+    // Five flavours into one store: nominal, robust, transient, robust
+    // ladder, faults.
+    let nominal = Engine::open(&dir).unwrap();
+    nominal.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3);
+    let robust = Engine::open(&dir).unwrap().with_variation(Some(vc.clone()));
+    robust.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 3);
+    let transient = Engine::open(&dir).unwrap().with_transient(Some(TransientConfig::default()));
+    transient.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3);
+    let ladder = Engine::open(&dir).unwrap().with_variation(Some(vc.clone())).with_ladder(true);
+    ladder.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95Edp, &effort, 3);
+    let faulty = Engine::open(&dir).unwrap().with_faults(Some(fc.clone()));
+    let fault_leg =
+        faulty.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95EtFaults, &effort, 3);
+    assert!(!fault_leg.replayed, "the fault leg must not replay any other flavour");
+    assert!(fault_leg.winner.faults.is_some());
+    assert_eq!(faulty.store().unwrap().list_leg_ids().len(), 5, "five distinct artifacts");
+
+    // The snapshot holds fault-keyed entries beside the other flavours'.
+    let snapshot = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+    assert!(snapshot.contains("\"faults\""), "cache.jsonl must key fault entries");
+    let (loaded, skipped) = faulty.store().unwrap().load_cache();
+    assert_eq!(skipped, 0);
+    assert!(loaded.keys().any(|k| k.scenario.faults.is_some()));
+    assert!(loaded.keys().any(|k| k.scenario.faults.is_none()));
+
+    // Every flavour replays from its own artifact on a second pass.
+    assert!(Engine::open(&dir)
+        .unwrap()
+        .run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &effort, 3)
+        .replayed);
+    let again = Engine::open(&dir).unwrap().with_faults(Some(fc.clone()));
+    let replayed =
+        again.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95EtFaults, &effort, 3);
+    assert!(replayed.replayed, "fault leg must replay from the store");
+    assert_legs_identical(&fault_leg, &replayed);
+
+    // A different fault seed is a different leg identity: computes fresh.
+    let other = FaultConfig { seed: 99, ..fc };
+    let fresh = Engine::open(&dir).unwrap().with_faults(Some(other));
+    assert!(!fresh
+        .run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinP95EtFaults, &effort, 3)
+        .replayed);
+    assert_eq!(fresh.store().unwrap().list_leg_ids().len(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn disconnecting_fault_rates_are_scored_not_fatal() {
+    // Rates high enough that every Monte Carlo sample severs the fabric:
+    // the leg must complete with finite scores, a zero connectivity
+    // yield and a winner picked by the max-yield fallback — no panics.
+    let world = LegWorld::new("bp", Tech::M3d, 5);
+    let fc = FaultConfig {
+        miv_rate: 0.999,
+        link_rate: 0.999,
+        router_rate: 0.5,
+        samples: 4,
+        seed: 2,
+    };
+    let leg = fault_leg(&world, 2, &fc);
+    assert!(leg.winner.et.is_finite());
+    let fs = leg.winner.faults.expect("fault stats survive total disconnection");
+    assert!(!fs.meets_conn_yield(), "0.999 rates cannot clear the yield floor");
+    assert!(fs.p95_lat.is_finite() && fs.p95_et.is_finite() && fs.mean_et.is_finite());
+    assert!(fs.mean_retention < 1.0);
+    for c in &leg.candidates {
+        let f = c.faults.expect("every candidate keeps fault stats");
+        assert!(f.p95_et.is_finite(), "disconnection must be a finite scored failure");
+    }
+}

@@ -55,6 +55,7 @@ fn robust_leg(
         None,
         Some(v),
         None,
+        None,
         ladder,
     )
     .0
@@ -139,6 +140,7 @@ fn nominal_leg_and_figures_ignore_the_ladder() {
         Selection::MinEtUnderTth,
         &tiny(1),
         5,
+        None,
         None,
         None,
         None,

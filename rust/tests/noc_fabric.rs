@@ -15,6 +15,7 @@
 
 use hem3d::arch::design::Design;
 use hem3d::config::{ArchConfig, TechParams};
+use hem3d::faults::{FaultConfig, FaultModel};
 use hem3d::noc::routing::Routing;
 use hem3d::noc::sim::{NocSim, SimConfig, SimStats};
 use hem3d::noc::topology;
@@ -148,6 +149,157 @@ fn assert_stats_identical(a: &SimStats, b: &SimStats, tag: &str) {
     assert_eq!(a.escape_packets, b.escape_packets, "{tag}: escape count diverged");
     for (x, y) in a.channel_utilization.iter().zip(&b.channel_utilization) {
         assert_eq!(x.to_bits(), y.to_bits(), "{tag}: utilization diverged");
+    }
+}
+
+/// Sampled fault sets for the masked-rerouting properties: heavy enough
+/// rates that most samples kill something, light enough that connected
+/// survivors are common.
+fn fault_samples(design: &Design, router_rate: f64) -> Vec<hem3d::faults::FaultSet> {
+    let cfg = ArchConfig::tiny();
+    let geo = hem3d::arch::Geometry::new(&cfg, &TechParams::m3d());
+    let fc = FaultConfig {
+        miv_rate: 0.15,
+        link_rate: 0.08,
+        router_rate,
+        samples: 12,
+        seed: 13,
+    };
+    let model = FaultModel::new(&fc, &geo);
+    (0..fc.samples as u64).map(|k| model.sample(design, k)).collect()
+}
+
+#[test]
+fn masked_routes_never_traverse_dead_links_or_routers() {
+    // Rerouting invariant (DESIGN.md §15): on every topology kind, for
+    // every connected sampled fault set, no primary path and no escape
+    // route of a live pair touches a dead link or a dead router.
+    let mut connected = 0usize;
+    for (name, design) in all_topologies() {
+        for (k, fs) in fault_samples(&design, 0.05).into_iter().enumerate() {
+            let Some(r) = Routing::build_masked(&design, &fs.dead_link, &fs.dead_router) else {
+                continue; // scored as a connectivity failure upstream
+            };
+            connected += 1;
+            for s in 0..r.n {
+                for d in 0..r.n {
+                    if fs.dead_router[s] || fs.dead_router[d] || s == d {
+                        continue;
+                    }
+                    for (w, l) in r.path(s, d).windows(2).zip(r.path_links(s, d)) {
+                        assert!(!fs.dead_link[l], "{name}/{k}: path {s}->{d} uses dead link {l}");
+                        assert!(
+                            !fs.dead_router[w[0]] && !fs.dead_router[w[1]],
+                            "{name}/{k}: path {s}->{d} visits a dead router"
+                        );
+                    }
+                    // Escape route: live hops only, and each hop is a live
+                    // link of the surviving graph.
+                    let mut cur = s;
+                    let mut hops = 0;
+                    while cur != d {
+                        let nxt = r.escape_next_hop(cur, d);
+                        assert!(
+                            !fs.dead_router[nxt],
+                            "{name}/{k}: escape {s}->{d} visits dead router {nxt}"
+                        );
+                        let live_link = design.links.iter().enumerate().any(|(i, l)| {
+                            !fs.dead_link[i] && {
+                                let (a, b) = l.ends();
+                                (a, b) == (cur.min(nxt), cur.max(nxt))
+                            }
+                        });
+                        assert!(
+                            live_link,
+                            "{name}/{k}: escape hop {cur}->{nxt} is not a surviving link"
+                        );
+                        cur = nxt;
+                        hops += 1;
+                        assert!(hops <= 2 * r.n, "{name}/{k}: escape {s}->{d} loops");
+                    }
+                }
+            }
+        }
+    }
+    assert!(connected > 10, "only {connected} connected samples; rates too hot to test");
+}
+
+#[test]
+fn masked_escape_tree_stays_acyclic_on_surviving_graphs() {
+    // The escape VC's deadlock freedom rests on the rebuilt spanning tree
+    // being a tree: every live router's parent chain reaches the (re-)root
+    // without revisiting, and depths count down monotonically.
+    for (name, design) in all_topologies() {
+        for (k, fs) in fault_samples(&design, 0.1).into_iter().enumerate() {
+            let Some(r) = Routing::build_masked(&design, &fs.dead_link, &fs.dead_router) else {
+                continue;
+            };
+            let root = (0..r.n).find(|&p| !fs.dead_router[p]).unwrap();
+            assert_eq!(r.tree_parent[root] as usize, root, "{name}/{k}: wrong root");
+            assert_eq!(r.tree_depth[root], 0);
+            for u in 0..r.n {
+                if fs.dead_router[u] {
+                    continue;
+                }
+                let mut cur = u;
+                let mut steps = 0;
+                while cur != root {
+                    let p = r.tree_parent[cur] as usize;
+                    assert!(!fs.dead_router[p], "{name}/{k}: dead parent on the tree");
+                    assert_eq!(
+                        r.tree_depth[cur],
+                        r.tree_depth[p] + 1,
+                        "{name}/{k}: depth skips a level at {cur}"
+                    );
+                    cur = p;
+                    steps += 1;
+                    assert!(steps <= r.n, "{name}/{k}: parent chain of {u} cycles");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fabric_keeps_delivering_under_link_faults() {
+    // Deadlock smoke on degraded fabrics: link-only faults keep every
+    // router live (so the full traffic matrix stays routable) while the
+    // escape tree reroutes around the dead links — sustained delivery
+    // means the rebuilt escape layer still breaks cycles.
+    for (name, design) in all_topologies() {
+        // Three faulty-but-connected samples per topology keep the debug-
+        // build runtime in line with the nominal deadlock smoke above.
+        let mut smoked = 0usize;
+        for (k, fs) in fault_samples(&design, 0.0).into_iter().enumerate() {
+            if !fs.any() || smoked >= 3 {
+                continue;
+            }
+            let Some(routing) = Routing::build_masked(&design, &fs.dead_link, &fs.dead_router)
+            else {
+                continue;
+            };
+            smoked += 1;
+            let cfg = SimConfig {
+                vcs: 2,
+                vc_depth: 1,
+                inject_cap: 32,
+                audit: true,
+                ..SimConfig::default()
+            };
+            let mut sim = NocSim::new(&design, &routing, cfg);
+            let (rate, flits) = hotspot_load(routing.n, 0.3);
+            let mut rng_a = Rng::seed_from_u64(5);
+            let mut rng_b = Rng::seed_from_u64(5);
+            let half = sim.run(&rate, &flits, 3_000, &mut rng_a);
+            let full = sim.run(&rate, &flits, 6_000, &mut rng_b);
+            assert!(half.delivered > 0, "{name}/{k}: nothing delivered on degraded fabric");
+            assert!(
+                full.delivered as f64 >= half.delivered as f64 * 1.5,
+                "{name}/{k}: degraded fabric nearly stalled ({} vs {})",
+                full.delivered,
+                half.delivered
+            );
+        }
     }
 }
 

@@ -117,6 +117,7 @@ fn throttled_transient_leg_is_identical_for_1_and_4_workers() {
             None,
             None,
             Some(&tcfg),
+            None,
             false,
         )
         .0

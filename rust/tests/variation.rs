@@ -42,6 +42,7 @@ fn robust_leg(world: &LegWorld, workers: usize, v: &VariationConfig) -> LegResul
         None,
         Some(v),
         None,
+        None,
         false,
     )
     .0
@@ -116,6 +117,7 @@ fn sigma_zero_is_bit_identical_to_the_nominal_path() {
         5,
         None,
         Some(&off),
+        None,
         None,
         false,
     )
