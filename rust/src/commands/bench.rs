@@ -23,7 +23,12 @@
 //! * **ladder** — one robust greedy local-search leg run twice from the
 //!   same seed, exhaustive vs through the multi-fidelity ladder
 //!   (DESIGN.md §14); the fronts are asserted bit-identical before the
-//!   L2 robust-MC eval reduction is reported.
+//!   L2 robust-MC eval reduction is reported;
+//! * **scheduler** — a deliberately skewed nested workload (1 heavy +
+//!   3 light stealable batches) through the old static split map and the
+//!   work-stealing pool (DESIGN.md §16); both are asserted bit-identical
+//!   to the serial map before the makespan ratio and steal telemetry are
+//!   reported.
 //!
 //! With `--json` the results land in `BENCH_hotpaths.json` at the repo
 //! root (override with `--out`), giving CI a perf trajectory to archive.
@@ -305,6 +310,89 @@ pub fn run(args: &Args) -> Result<()> {
         secs_ld, secs_ex
     );
 
+    // ---- scheduler: work-stealing vs static split on a skewed workload ----
+    // 1 heavy + 3 light nested batches (DESIGN.md §16).  The old static
+    // map splits the worker budget up front — outer min(W, legs) threads,
+    // each leg's inner fan-out pinned to W/outer — so the heavy leg's
+    // units grind on their slice while the light-leg threads exit early.
+    // The work-stealing pool keeps all W workers available: finished
+    // workers steal the heavy leg's remaining units.  Same trust rule as
+    // the thermal leg: both paths must be bit-identical to the serial map
+    // (determinism by reduction order, not schedule) before the timings
+    // mean anything.
+    use hem3d::util::scheduler::{ws_map_named, ws_map_pool_report, PoolReport};
+    use hem3d::util::threadpool::scope_map_shared_queue;
+    fn spin(mut x: u64, iters: u64) -> u64 {
+        for _ in 0..iters {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+        }
+        x
+    }
+    let heavy_units: usize = if quick { 8 } else { 16 };
+    let light_units: usize = 4;
+    let heavy_iters: u64 = 1_500_000;
+    let light_iters: u64 = heavy_iters / 8;
+    let sched_legs: Vec<Vec<(u64, u64)>> = (0..4usize)
+        .map(|leg| {
+            let (units, iters) =
+                if leg == 0 { (heavy_units, heavy_iters) } else { (light_units, light_iters) };
+            (0..units as u64).map(|u| (seed ^ ((leg as u64) << 32) ^ (u + 1), iters)).collect()
+        })
+        .collect();
+    let serial_ref: Vec<Vec<u64>> = sched_legs
+        .iter()
+        .map(|units| units.iter().map(|&(s, it)| spin(s, it)).collect())
+        .collect();
+    // The skew only shows with real parallelism: with the default
+    // `--workers 1` the leg still runs a small multi-worker pool (the
+    // comparison is meaningless serially), capped so laptop CI stays fast.
+    let sched_workers = if workers > 1 {
+        workers
+    } else {
+        hem3d::util::threadpool::default_workers().min(4).max(2)
+    };
+    let sched_reps = reps.min(5).max(3);
+    let mut static_best = f64::INFINITY;
+    let mut ws_best = f64::INFINITY;
+    let mut steals_total = 0u64;
+    let mut tasks_total = 0u64;
+    let mut idle_total = 0u64;
+    let mut last_report = PoolReport::default();
+    for _ in 0..sched_reps {
+        // Static baseline: the pre-scheduler worker-budget split, nested
+        // through the kept shared-queue implementation.
+        let outer = sched_workers.min(sched_legs.len()).max(1);
+        let inner_w = (sched_workers / outer).max(1);
+        let t0 = std::time::Instant::now();
+        let got = scope_map_shared_queue(sched_legs.clone(), outer, |units| {
+            scope_map_shared_queue(units, inner_w, |(s, it)| spin(s, it))
+        });
+        static_best = static_best.min(t0.elapsed().as_secs_f64());
+        anyhow::ensure!(got == serial_ref, "static map diverged from the serial map");
+
+        let t0 = std::time::Instant::now();
+        let (got, report) =
+            ws_map_pool_report("bench-leg", sched_legs.clone(), sched_workers, |units| {
+                ws_map_named("bench-unit", units, sched_workers, |(s, it)| spin(s, it))
+            });
+        ws_best = ws_best.min(t0.elapsed().as_secs_f64());
+        anyhow::ensure!(got == serial_ref, "work-stealing map diverged from the serial map");
+        steals_total += report.steals();
+        tasks_total += report.tasks();
+        idle_total += report.idle_ns();
+        last_report = report;
+    }
+    let makespan_ratio = static_best / ws_best.max(1e-12);
+    println!(
+        "scheduler: skewed workload ({heavy_units} heavy + 3x{light_units} light units, \
+         {sched_workers} workers) static {:.1} ms vs work-stealing {:.1} ms \
+         -> {makespan_ratio:.2}x, {steals_total} steals over {sched_reps} reps",
+        static_best * 1e3,
+        ws_best * 1e3
+    );
+
     if args.flag("json") {
         let out = args.opt_or("out", "BENCH_hotpaths.json");
         let json = Json::obj(vec![
@@ -383,6 +471,31 @@ pub fn run(args: &Args) -> Result<()> {
                     ("reduction", Json::num(reduction)),
                     ("secs_exhaustive", Json::num(secs_ex)),
                     ("secs_ladder", Json::num(secs_ld)),
+                ]),
+            ),
+            (
+                "scheduler",
+                Json::obj(vec![
+                    ("bit_identical_to_serial", Json::Bool(true)),
+                    ("heavy_units", Json::num(heavy_units as f64)),
+                    ("idle_ns", Json::num(idle_total as f64)),
+                    ("light_legs", Json::num(3.0)),
+                    ("light_units", Json::num(light_units as f64)),
+                    ("makespan_ratio", Json::num(makespan_ratio)),
+                    (
+                        "per_worker_steals",
+                        Json::arr(last_report.per_worker.iter().map(|w| Json::num(w.steals as f64))),
+                    ),
+                    (
+                        "per_worker_tasks",
+                        Json::arr(last_report.per_worker.iter().map(|w| Json::num(w.tasks as f64))),
+                    ),
+                    ("reps", Json::num(sched_reps as f64)),
+                    ("static_makespan_s", Json::num(static_best)),
+                    ("steals", Json::num(steals_total as f64)),
+                    ("tasks", Json::num(tasks_total as f64)),
+                    ("workers", Json::num(sched_workers as f64)),
+                    ("ws_makespan_s", Json::num(ws_best)),
                 ]),
             ),
             (

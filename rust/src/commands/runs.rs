@@ -175,6 +175,18 @@ fn show(args: &Args) -> Result<()> {
                         f(fs.degradation_slope, 4)
                     ));
                 }
+                // Per-leg throughput: evaluations per optimisation-wall
+                // second, so scheduler wins show up on real campaign runs
+                // and not only in the bench harness.  Replayed legs did
+                // no fresh evals this process — their stored opt_seconds
+                // describe the original computation, so the rate stays
+                // meaningful; a ~0s wall (pure replay artifacts) prints
+                // "-" instead of a nonsense rate.
+                let evals_per_s = if leg.opt_seconds > 1e-9 {
+                    f(leg.evals as f64 / leg.opt_seconds, 1)
+                } else {
+                    "-".into()
+                };
                 rows.push(vec![
                     id.clone(),
                     leg.mode.name().into(),
@@ -189,6 +201,7 @@ fn show(args: &Args) -> Result<()> {
                     f(leg.winner.et, 4),
                     f(leg.winner.temp_c, 1),
                     f(leg.opt_seconds, 2),
+                    evals_per_s,
                 ])
             }
             Err(e) => rows.push(vec![id.clone(), format!("error: {e}")]),
@@ -210,7 +223,8 @@ fn show(args: &Args) -> Result<()> {
                 "front",
                 "winner ET",
                 "T [C]",
-                "secs"
+                "secs",
+                "evals/s"
             ],
             &rows
         )

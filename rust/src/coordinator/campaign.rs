@@ -451,8 +451,11 @@ pub fn run_leg_warm(
 
     // Each member's validation (routing + ET model + detailed thermal
     // fixed point, plus the robust Monte Carlo summary when variation is
-    // active) is independent and pure, so fan it out; `scope_map`
-    // preserves order, keeping the winner selection deterministic.
+    // active) is independent and pure, so fan it out; the work-stealing
+    // map preserves input order, keeping the winner selection
+    // deterministic, and inside an enclosing figure pool these batches
+    // (and their nested MC fan-outs) are stealable by idle workers from
+    // other legs (DESIGN.md §16).
     let coeffs = PerfCoeffs::default();
     let vmodel = problem.variation_model();
     let tcfg = problem.transient_config().map(|cfg| (cfg, world.cfg.t_threshold_c));
@@ -502,7 +505,7 @@ pub fn run_leg_warm(
             reference.robust.as_ref().filter(|r| r.meets_yield()).map(|r| r.p95_edp);
         let indexed: Vec<(usize, &crate::opt::Solution)> =
             members.into_iter().enumerate().collect();
-        crate::util::threadpool::scope_map(indexed, effort.workers, |(i, m)| {
+        crate::util::scheduler::ws_map_named("validate-candidate", indexed, effort.workers, |(i, m)| {
             if i == ri {
                 reference.clone()
             } else {
@@ -519,7 +522,7 @@ pub fn run_leg_warm(
             }
         })
     } else {
-        crate::util::threadpool::scope_map(members, effort.workers, |m| {
+        crate::util::scheduler::ws_map_named("validate-candidate", members, effort.workers, |m| {
             validate_candidate_full(
                 &ctx,
                 &world.profile,

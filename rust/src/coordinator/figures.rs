@@ -6,31 +6,38 @@ use crate::config::Tech;
 use crate::opt::Mode;
 use crate::store::Engine;
 use crate::util::json::Json;
-use crate::util::threadpool::scope_map;
+use crate::util::scheduler::ws_map_pool;
 
 use super::campaign::{Algo, Effort, LegWorld, Selection};
 
 /// The six Rodinia benchmarks of §5.1, in figure order.
 pub const BENCHES: [&str; 6] = ["bp", "nw", "lv", "lud", "knn", "pf"];
 
-/// Fan the per-benchmark legs of one figure over `effort.workers` threads.
+/// Fan the per-benchmark legs of one figure over a shared work-stealing
+/// pool of `effort.workers` threads (DESIGN.md §16).
 ///
-/// Each benchmark's legs are fully independent (own `LegWorld`, own seeds),
-/// and `scope_map` returns results in input order, so the assembled figure
-/// is bit-identical to the serial one.  The worker budget is *split*, not
-/// multiplied, across the nesting: with W workers and B benchmarks the
-/// outer fan-out takes min(W, B) threads and each leg's inner stages get
-/// the remaining W / min(W, B) — total concurrency stays ~W.  (Worker
-/// counts never affect results, so the split is free to vary.)
+/// Each benchmark's legs are fully independent (own `LegWorld`, own
+/// seeds), and the pool returns results in input order, so the assembled
+/// figure is bit-identical to the serial one.  Unlike the old static
+/// split (outer `min(W, B)` threads, each leg pinned to the leftover
+/// `W / min(W, B)`), the pool keeps *all* W workers available to every
+/// leg: a leg's inner fan-outs — candidate scoring, MC samples,
+/// validation — are stealable batches, so a worker that finishes its own
+/// legs immediately backfills a straggler leg's work instead of idling.
+/// This is the cross-leg pipeline: one long robust leg no longer bounds
+/// the figure's makespan at W/B-way parallelism.  The deterministic
+/// leg-ID ordering is untouched — legs still *start* in input order and
+/// results assemble by index; only execution interleaves.
+///
+/// The `Effort` passed down keeps its worker count: nested `ws_map`
+/// calls inside a pool ignore it and share the pool's budget (worker
+/// counts never affect results, so this is free to vary).
 fn map_benches<R: Send>(
     benches: &[&str],
     effort: &Effort,
     f: impl Fn(&str, &Effort) -> R + Sync,
 ) -> Vec<R> {
-    let outer = effort.workers.min(benches.len()).max(1);
-    let mut inner = effort.clone();
-    inner.workers = (effort.workers / outer).max(1);
-    scope_map(benches.to_vec(), outer, |b| f(b, &inner))
+    ws_map_pool("figure-leg", benches.to_vec(), effort.workers, |b| f(b, effort))
 }
 
 /// Fig 7 row: MOO-STAGE vs AMOSA convergence speed-up for one benchmark.

@@ -5,9 +5,10 @@
 //!
 //! Determinism contract (the same one `variation::monte_carlo` pins):
 //! fault set `k` is a pure function of `(cfg.seed, k)` and the design's
-//! link/router identities, `scope_map` returns results in input order,
-//! and every aggregation folds in index order — bit-identical for any
-//! worker count.  A fault-free sample evaluates to *exactly* the nominal
+//! link/router identities, the work-stealing map (`ws_map_named`,
+//! DESIGN.md §16) returns results in input order, and every aggregation
+//! folds in index order — bit-identical for any worker count and any
+//! steal schedule.  A fault-free sample evaluates to *exactly* the nominal
 //! objectives (same walk, same accumulation order), which is what makes
 //! the fault reshape an exact identity when no fault is drawn.
 
@@ -15,8 +16,8 @@ use crate::arch::design::Design;
 use crate::arch::encode::EncodeCtx;
 use crate::eval::objectives::{Scores, SparseTraffic};
 use crate::noc::routing::Routing;
+use crate::util::scheduler::ws_map_named;
 use crate::util::stats::{mean, percentile};
-use crate::util::threadpool::scope_map;
 
 use super::model::{FaultModel, DISCONNECT_PENALTY, MIN_CONN_YIELD};
 
@@ -175,7 +176,7 @@ pub fn fault_effects(
     let routing = Routing::build(design);
     let nom_umax = nominal_umax(ctx, traffic, design, &routing);
     let idxs: Vec<u64> = (0..model.cfg.samples as u64).collect();
-    scope_map(idxs, workers, |k| {
+    ws_map_named("fault-mc-sample", idxs, workers, |k| {
         sample_fault_effects(ctx, traffic, design, model, nom_umax, k)
     })
 }

@@ -49,9 +49,12 @@ pub struct LocalResult {
 ///
 /// Candidate *generation* stays serial (it owns the rng), but candidate
 /// *scoring* — the expensive routing build + objective evaluation — fans
-/// out over `problem.workers` threads via `scope_map`, which preserves
-/// input order; the greedy selection then runs serially over the ordered
-/// results, so the chosen trajectory is bit-identical for any worker count.
+/// out through the work-stealing scheduler (`ws_map_named`, DESIGN.md
+/// §16), which preserves input order; the greedy selection then runs
+/// serially over the ordered results, so the chosen trajectory is
+/// bit-identical for any worker count and any steal schedule.  Inside an
+/// enclosing pool (a campaign figure leg) the batch is stealable, so idle
+/// workers from finished legs backfill this leg's scoring.
 pub fn local_search(
     problem: &Problem<'_>,
     start: Design,
@@ -90,7 +93,8 @@ pub fn local_search(
         // Score candidates (routing + objectives) in parallel, in order.
         let cand_designs: Vec<Design> =
             candidates.into_iter().map(|(design, _)| design).collect();
-        let scored: Vec<(Design, Vec<f64>)> = crate::util::threadpool::scope_map(
+        let scored: Vec<(Design, Vec<f64>)> = crate::util::scheduler::ws_map_named(
+            "candidate-scoring",
             cand_designs,
             problem.workers,
             |design| {

@@ -11,6 +11,7 @@ pub mod json;
 pub mod logger;
 pub mod prop;
 pub mod rng;
+pub mod scheduler;
 pub mod stats;
 pub mod threadpool;
 

@@ -1,0 +1,814 @@
+//! Work-stealing evaluation scheduler (DESIGN.md §16).
+//!
+//! The static `scope_map` shared-queue map (PR 1) balances *one flat batch*
+//! well, but nested fan-outs — a figure assembly mapping over benchmark
+//! legs, each leg mapping over Monte Carlo samples — had to *split* the
+//! worker budget up front: with 8 workers and 4 legs, a robust leg whose
+//! MC fan-out costs ~30x a nominal eval ground away on its 2-thread share
+//! while the other 6 workers sat idle.  This module replaces that with a
+//! single shared pool per top-level fan-out:
+//!
+//! * each worker owns a Chase-Lev-style deque (lock-free owner push/pop at
+//!   the bottom, CAS steal at the top; growable ring buffer, no external
+//!   crates);
+//! * a *nested* `ws_map` call from inside a pool worker does not spawn
+//!   threads: it pushes its jobs onto the calling worker's own deque and
+//!   executes them LIFO, while idle workers steal them FIFO from the other
+//!   end — so a long robust/fault MC leg is automatically backfilled by
+//!   every worker that ran out of its own legs (cross-leg pipelining);
+//! * while waiting for its batch to drain, a nested caller *helps*: it
+//!   executes any job it can pop or steal, so the pool never idles a
+//!   thread that still has runnable work anywhere.
+//!
+//! # Determinism: by reduction order, not by schedule
+//!
+//! Which worker executes a job, and in which order jobs interleave, is
+//! nondeterministic.  Results are not: every job writes its result into an
+//! index-addressed slot of its batch, and the batch returns `Vec<R>` in
+//! input order — exactly the contract the static `scope_map` had.  As long
+//! as the mapped function is pure (the standing §6 contract), every
+//! statistic downstream is bit-identical for any worker count and any
+//! steal schedule (`tests/parallel_determinism.rs`, `tests/variation.rs`,
+//! `tests/faults.rs`, `tests/ladder.rs`, `tests/scheduler.rs`).
+//!
+//! # Batch granularity
+//!
+//! A job should cost well over the ~1 us scheduling overhead (push + steal
+//! CAS + slot write).  Call sites follow two rules: *per-item* jobs where
+//! one item is already expensive (candidate scoring ~ms, MC samples ~ms),
+//! and *contiguous chunks* where items are cheap (`solve_peak_batch_par`
+//! chunks designs so each job amortises one plan build).  Nothing here
+//! re-chunks behind the caller's back — granularity is the call site's
+//! decision, the scheduler only balances it.
+//!
+//! # Telemetry
+//!
+//! Every pool counts per-worker executed tasks, steals and idle
+//! nanoseconds ([`PoolReport`]), and the same counters accumulate
+//! process-wide ([`stats`]) so `hem3d bench --json` can report scheduler
+//! behaviour for any leg (the `scheduler` bench leg asserts steals
+//! actually happen on a skewed workload).
+//!
+//! # Panics
+//!
+//! A panicking job does not poison the pool: the panic is caught, the
+//! batch drains fully, and the batch initiator re-raises the panic naming
+//! the batch label and the job index (`"variation-mc-sample[17]
+//! panicked: ..."`), so a dying eval names the design/sample that died.
+//! Nested batches chain naturally: the leg job that observed the sample
+//! panic re-panics, and the outer batch names the leg on top.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Chase-Lev deque
+// ---------------------------------------------------------------------------
+
+/// Result of a steal attempt on a [`Deque`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Steal {
+    /// The deque looked empty.
+    Empty,
+    /// Lost a race with the owner or another thief; worth re-probing.
+    Retry,
+    /// Stole the oldest element.
+    Data(usize),
+}
+
+/// Growable ring buffer of `usize` slots.  Cells are atomics so a stale
+/// thief read after the owner wraps or grows is a *defined* read of a
+/// stale value — which the subsequent `top` CAS then rejects.
+struct Buf {
+    mask: usize,
+    data: Box<[AtomicUsize]>,
+}
+
+impl Buf {
+    fn new(cap: usize) -> Box<Buf> {
+        debug_assert!(cap.is_power_of_two());
+        Box::new(Buf {
+            mask: cap - 1,
+            data: (0..cap).map(|_| AtomicUsize::new(0)).collect(),
+        })
+    }
+
+    #[inline]
+    fn get(&self, i: isize) -> usize {
+        self.data[(i as usize) & self.mask].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn put(&self, i: isize, v: usize) {
+        self.data[(i as usize) & self.mask].store(v, Ordering::Relaxed);
+    }
+}
+
+/// Chase-Lev work-stealing deque of `usize` values (the pool stores raw
+/// job pointers in it; the tests store plain payloads).
+///
+/// Single logical owner: exactly one thread may call [`Deque::push`] /
+/// [`Deque::pop`] at a time (the worker that owns it); any number of
+/// threads may [`Deque::steal`] concurrently.  Violating the single-owner
+/// rule cannot corrupt memory (all slots are atomics, retired buffers live
+/// until drop) but loses the LIFO/FIFO guarantees.
+///
+/// The orderings follow Lê/Pop/Cohen/Nardelli, "Correct and Efficient
+/// Work-Stealing for Weak Memory Models" (PPoPP'13): `push` publishes with
+/// a release fence, `pop` reserves the bottom slot and then synchronises
+/// with thieves through a SeqCst fence + `top` CAS on the last element,
+/// `steal` CASes `top` SeqCst so at most one consumer wins each index.
+/// Grown-out buffers are retired, not freed, until the deque drops, so a
+/// thief holding a stale buffer pointer only ever reads stale *values*.
+pub struct Deque {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: AtomicPtr<Buf>,
+    retired: Mutex<Vec<*mut Buf>>,
+}
+
+// Raw buffer pointers are shared across threads by design; all access is
+// through atomics and retired buffers outlive every reader.
+unsafe impl Send for Deque {}
+unsafe impl Sync for Deque {}
+
+impl Default for Deque {
+    fn default() -> Self {
+        Deque::with_capacity(64)
+    }
+}
+
+impl Deque {
+    /// Deque with an initial ring capacity (rounded up to a power of two).
+    /// Pushing past capacity grows the ring (doubling); capacity only
+    /// bounds allocation, never correctness.
+    pub fn with_capacity(cap: usize) -> Deque {
+        let cap = cap.next_power_of_two().max(2);
+        Deque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Box::into_raw(Buf::new(cap))),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Number of elements currently visible (approximate under races).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Whether the deque looks empty (approximate under races).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner-only: push `v` at the bottom.
+    pub fn push(&self, v: usize) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        if b - t > buf.mask as isize {
+            buf = self.grow(t, b);
+        }
+        buf.put(b, v);
+        std::sync::atomic::fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only: pop the most recently pushed element (LIFO).
+    pub fn pop(&self) -> Option<usize> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        self.bottom.store(b, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let v = buf.get(b);
+            if t == b {
+                // Last element: race the thieves for it.
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                return won.then_some(v);
+            }
+            Some(v)
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Thief: steal the oldest element (FIFO end).  Safe from any thread.
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let buf = unsafe { &*self.buf.load(Ordering::Acquire) };
+            let v = buf.get(t);
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_err()
+            {
+                return Steal::Retry;
+            }
+            Steal::Data(v)
+        } else {
+            Steal::Empty
+        }
+    }
+
+    /// Owner-only (called from `push`): double the ring, copying the live
+    /// range `t..b`, and retire the old buffer until drop.
+    fn grow(&self, t: isize, b: isize) -> &Buf {
+        let old_ptr = self.buf.load(Ordering::Relaxed);
+        let old = unsafe { &*old_ptr };
+        let new = Buf::new((old.mask + 1) * 2);
+        for i in t..b {
+            new.put(i, old.get(i));
+        }
+        let new_ptr = Box::into_raw(new);
+        self.buf.store(new_ptr, Ordering::Release);
+        self.retired.lock().unwrap().push(old_ptr);
+        unsafe { &*new_ptr }
+    }
+}
+
+impl Drop for Deque {
+    fn drop(&mut self) {
+        unsafe {
+            drop(Box::from_raw(self.buf.load(Ordering::Relaxed)));
+            for p in self.retired.get_mut().unwrap().drain(..) {
+                drop(Box::from_raw(p));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry
+// ---------------------------------------------------------------------------
+
+/// Process-wide cumulative scheduler counters (see [`stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Jobs executed through pools (serial fallbacks are not counted).
+    pub tasks: u64,
+    /// Successful steals (a job executed by a worker that did not own it).
+    pub steals: u64,
+    /// Nanoseconds workers spent finding no runnable job anywhere.
+    pub idle_ns: u64,
+    /// Top-level pools created.
+    pub pools: u64,
+    /// Stealable batches submitted (root + nested).
+    pub batches: u64,
+}
+
+static G_TASKS: AtomicU64 = AtomicU64::new(0);
+static G_STEALS: AtomicU64 = AtomicU64::new(0);
+static G_IDLE_NS: AtomicU64 = AtomicU64::new(0);
+static G_POOLS: AtomicU64 = AtomicU64::new(0);
+static G_BATCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative scheduler counters since process start.  Monotone: sample
+/// before and after a region and subtract to attribute work to it (what
+/// the `scheduler` bench leg does).
+pub fn stats() -> SchedStats {
+    SchedStats {
+        tasks: G_TASKS.load(Ordering::Relaxed),
+        steals: G_STEALS.load(Ordering::Relaxed),
+        idle_ns: G_IDLE_NS.load(Ordering::Relaxed),
+        pools: G_POOLS.load(Ordering::Relaxed),
+        batches: G_BATCHES.load(Ordering::Relaxed),
+    }
+}
+
+/// Per-worker counters of one pool run (returned by [`ws_map_pool_report`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerReport {
+    /// Jobs this worker executed (own + stolen).
+    pub tasks: u64,
+    /// Jobs this worker stole from another worker's deque.
+    pub steals: u64,
+    /// Nanoseconds this worker spent with no runnable job anywhere.
+    pub idle_ns: u64,
+}
+
+/// Aggregated telemetry of one top-level pool run.
+#[derive(Debug, Clone, Default)]
+pub struct PoolReport {
+    /// One entry per worker (index = worker id; worker 0 is the caller).
+    pub per_worker: Vec<WorkerReport>,
+}
+
+impl PoolReport {
+    /// Total jobs executed across workers.
+    pub fn tasks(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.tasks).sum()
+    }
+
+    /// Total successful steals across workers.
+    pub fn steals(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.steals).sum()
+    }
+
+    /// Total idle nanoseconds across workers.
+    pub fn idle_ns(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.idle_ns).sum()
+    }
+}
+
+struct WorkerCounters {
+    tasks: AtomicU64,
+    steals: AtomicU64,
+    idle_ns: AtomicU64,
+}
+
+// ---------------------------------------------------------------------------
+// Jobs and batches
+// ---------------------------------------------------------------------------
+
+/// Type-erased unit of work.  `run(ctx, index)` executes item `index` of
+/// the batch behind `ctx`.  Job values live in a `Vec` owned by the stack
+/// frame that submitted the batch; that frame only returns after the
+/// batch's `done` counter reaches its length, and a job is removed from a
+/// deque exactly once before it runs, so no deque ever holds a pointer to
+/// a dead frame.
+#[derive(Clone, Copy)]
+struct Job {
+    run: unsafe fn(*const (), usize),
+    ctx: *const (),
+    index: usize,
+}
+
+/// The shared, type-erased part of a batch: completion count and the first
+/// recorded panic.
+struct BatchHeader {
+    label: &'static str,
+    done: AtomicUsize,
+    panic: Mutex<Option<(usize, Box<dyn std::any::Any + Send>)>>,
+}
+
+/// One submitted map batch: items in, slots out, shared header.
+struct Batch<'f, T, R, F> {
+    f: &'f F,
+    items: Vec<std::cell::UnsafeCell<Option<T>>>,
+    out: Vec<std::cell::UnsafeCell<Option<R>>>,
+    header: BatchHeader,
+}
+
+impl<'f, T, R, F: Fn(T) -> R> Batch<'f, T, R, F> {
+    fn new(label: &'static str, items: Vec<T>, f: &'f F) -> Self {
+        let n = items.len();
+        Batch {
+            f,
+            items: items.into_iter().map(|x| std::cell::UnsafeCell::new(Some(x))).collect(),
+            out: (0..n).map(|_| std::cell::UnsafeCell::new(None)).collect(),
+            header: BatchHeader {
+                label,
+                done: AtomicUsize::new(0),
+                panic: Mutex::new(None),
+            },
+        }
+    }
+
+    fn jobs(&self) -> Vec<Job> {
+        (0..self.items.len())
+            .map(|i| Job {
+                run: run_one::<T, R, F>,
+                ctx: self as *const Self as *const (),
+                index: i,
+            })
+            .collect()
+    }
+
+    /// Collect results after `done == n`; re-raises a recorded panic with
+    /// the batch label and job index attached.
+    fn finish(self) -> Vec<R> {
+        debug_assert_eq!(self.header.done.load(Ordering::Acquire), self.out.len());
+        if let Some((index, payload)) = self.header.panic.into_inner().unwrap() {
+            panic!("{}[{index}] panicked: {}", self.header.label, panic_message(&payload));
+        }
+        self.out
+            .into_iter()
+            .map(|c| c.into_inner().expect("scheduler job left no result"))
+            .collect()
+    }
+}
+
+/// Best-effort human message from a panic payload.
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Execute item `index` of the batch behind `ctx`.  Called exactly once
+/// per (batch, index): the item is taken, the result written to its slot,
+/// and only then is `done` published (release) so the waiter's acquire
+/// load of `done` also acquires the slot write.
+unsafe fn run_one<T, R, F: Fn(T) -> R>(ctx: *const (), index: usize) {
+    let b = &*(ctx as *const Batch<'_, T, R, F>);
+    let item = (*b.items[index].get()).take().expect("scheduler job executed twice");
+    match catch_unwind(AssertUnwindSafe(|| (b.f)(item))) {
+        Ok(v) => *b.out[index].get() = Some(v),
+        Err(p) => {
+            let mut slot = b.header.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some((index, p));
+            }
+        }
+    }
+    b.header.done.fetch_add(1, Ordering::Release);
+}
+
+// ---------------------------------------------------------------------------
+// Pool
+// ---------------------------------------------------------------------------
+
+/// Shared state of one top-level pool: the worker deques, per-worker
+/// counters, and the shutdown latch the initiator flips once the root
+/// batch has drained.
+struct PoolCore {
+    deques: Box<[Deque]>,
+    counters: Box<[WorkerCounters]>,
+    shutdown: AtomicBool,
+}
+
+impl PoolCore {
+    fn new(workers: usize) -> PoolCore {
+        PoolCore {
+            deques: (0..workers).map(|_| Deque::default()).collect(),
+            counters: (0..workers)
+                .map(|_| WorkerCounters {
+                    tasks: AtomicU64::new(0),
+                    steals: AtomicU64::new(0),
+                    idle_ns: AtomicU64::new(0),
+                })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+}
+
+thread_local! {
+    /// `(worker index, pool)` while this thread runs inside a pool.  The
+    /// raw pointer is valid for exactly the span it is set: workers clear
+    /// it before their `thread::scope` closes over the pool's frame.
+    static WORKER: Cell<Option<(usize, *const PoolCore)>> = const { Cell::new(None) };
+}
+
+/// One full sweep over the other workers' deques; `Retry` re-probes the
+/// same victim a few times before moving on.
+fn steal_any(pool: &PoolCore, me: usize) -> Option<Job> {
+    let n = pool.deques.len();
+    for k in 1..n {
+        let victim = (me + k) % n;
+        let mut retries = 0;
+        loop {
+            match pool.deques[victim].steal() {
+                Steal::Data(p) => return Some(unsafe { *(p as *const Job) }),
+                Steal::Empty => break,
+                Steal::Retry => {
+                    retries += 1;
+                    if retries > 8 {
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Execute one job, attributing it to worker `me`.
+#[inline]
+fn execute(pool: &PoolCore, me: usize, job: Job, stolen: bool) {
+    pool.counters[me].tasks.fetch_add(1, Ordering::Relaxed);
+    G_TASKS.fetch_add(1, Ordering::Relaxed);
+    if stolen {
+        pool.counters[me].steals.fetch_add(1, Ordering::Relaxed);
+        G_STEALS.fetch_add(1, Ordering::Relaxed);
+    }
+    unsafe { (job.run)(job.ctx, job.index) };
+}
+
+/// Account an idle span that just ended (or is ending at exit).
+fn flush_idle(pool: &PoolCore, me: usize, idle_since: &mut Option<Instant>) {
+    if let Some(t0) = idle_since.take() {
+        let ns = t0.elapsed().as_nanos() as u64;
+        pool.counters[me].idle_ns.fetch_add(ns, Ordering::Relaxed);
+        G_IDLE_NS.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+/// Worker main loop.  `root_done` is `Some((counter, total))` only for
+/// worker 0 (the pool initiator), which exits once the root batch drains
+/// and then flips the shutdown latch for everyone else.
+fn worker_loop(pool: &PoolCore, me: usize, root_done: Option<(&AtomicUsize, usize)>) {
+    WORKER.with(|w| w.set(Some((me, pool as *const PoolCore))));
+    let mut idle_since: Option<Instant> = None;
+    loop {
+        if let Some((done, total)) = root_done {
+            if done.load(Ordering::Acquire) >= total {
+                break;
+            }
+        }
+        if let Some(p) = pool.deques[me].pop() {
+            flush_idle(pool, me, &mut idle_since);
+            execute(pool, me, unsafe { *(p as *const Job) }, false);
+        } else if let Some(job) = steal_any(pool, me) {
+            flush_idle(pool, me, &mut idle_since);
+            execute(pool, me, job, true);
+        } else {
+            if root_done.is_none() && pool.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            if idle_since.is_none() {
+                idle_since = Some(Instant::now());
+            }
+            std::thread::yield_now();
+        }
+    }
+    flush_idle(pool, me, &mut idle_since);
+    WORKER.with(|w| w.set(None));
+}
+
+/// Run a batch from *inside* a pool worker: push the jobs on the caller's
+/// own deque (stealable by everyone else), then execute/help until the
+/// batch drains.  While waiting it runs *any* runnable job — including
+/// jobs of other legs — which is what backfills idle workers and keeps
+/// the caller busy instead of blocked.
+fn run_nested<T, R, F>(
+    pool: &PoolCore,
+    me: usize,
+    label: &'static str,
+    items: Vec<T>,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let batch = Batch::new(label, items, &f);
+    let jobs = batch.jobs();
+    for job in &jobs {
+        pool.deques[me].push(job as *const Job as usize);
+    }
+    G_BATCHES.fetch_add(1, Ordering::Relaxed);
+    let mut idle_since: Option<Instant> = None;
+    while batch.header.done.load(Ordering::Acquire) < n {
+        if let Some(p) = pool.deques[me].pop() {
+            flush_idle(pool, me, &mut idle_since);
+            execute(pool, me, unsafe { *(p as *const Job) }, false);
+        } else if let Some(job) = steal_any(pool, me) {
+            flush_idle(pool, me, &mut idle_since);
+            execute(pool, me, job, true);
+        } else {
+            // Own jobs stolen and still in flight elsewhere; nothing else
+            // runnable right now.
+            if idle_since.is_none() {
+                idle_since = Some(Instant::now());
+            }
+            std::thread::yield_now();
+        }
+    }
+    flush_idle(pool, me, &mut idle_since);
+    drop(jobs);
+    batch.finish()
+}
+
+/// Run a batch as a fresh top-level pool of exactly `workers` threads
+/// (the caller participates as worker 0, so `workers - 1` are spawned).
+fn run_root<T, R, F>(label: &'static str, items: Vec<T>, workers: usize, f: F) -> (Vec<R>, PoolReport)
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let batch = Batch::new(label, items, &f);
+    let jobs = batch.jobs();
+    let pool = PoolCore::new(workers);
+    // Pre-spawn distribution: round-robin, owner rules trivially satisfied
+    // because no worker exists yet and `thread::scope` spawns give the
+    // deques a happens-before edge to their owners.
+    for (i, job) in jobs.iter().enumerate() {
+        pool.deques[i % workers].push(job as *const Job as usize);
+    }
+    G_POOLS.fetch_add(1, Ordering::Relaxed);
+    G_BATCHES.fetch_add(1, Ordering::Relaxed);
+    std::thread::scope(|s| {
+        for w in 1..workers {
+            let pool = &pool;
+            s.spawn(move || worker_loop(pool, w, None));
+        }
+        worker_loop(&pool, 0, Some((&batch.header.done, n)));
+        pool.shutdown.store(true, Ordering::Release);
+    });
+    let report = PoolReport {
+        per_worker: pool
+            .counters
+            .iter()
+            .map(|c| WorkerReport {
+                tasks: c.tasks.load(Ordering::Relaxed),
+                steals: c.steals.load(Ordering::Relaxed),
+                idle_ns: c.idle_ns.load(Ordering::Relaxed),
+            })
+            .collect(),
+    };
+    drop(jobs);
+    (batch.finish(), report)
+}
+
+// ---------------------------------------------------------------------------
+// Public map entry points
+// ---------------------------------------------------------------------------
+
+/// Parallel map with work stealing: applies `f` to each item, returning
+/// results in input order (determinism by reduction order — see the
+/// module docs).  Top-level calls run a pool of `min(workers, n)` threads;
+/// calls from inside a pool worker become stealable nested batches on the
+/// shared pool regardless of `workers` (the pool owns the thread budget).
+pub fn ws_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    ws_map_named("task", items, workers, f)
+}
+
+/// [`ws_map`] with a batch label used when naming a panicking job.
+pub fn ws_map_named<T, R, F>(label: &'static str, items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    if let Some((me, pool)) = WORKER.with(|w| w.get()) {
+        // Inside a pool: the pool pointer is valid for the worker's whole
+        // loop, which strictly contains this call.
+        return run_nested(unsafe { &*pool }, me, label, items, f);
+    }
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    run_root(label, items, workers.min(n), f).0
+}
+
+/// [`ws_map_named`] for fan-outs whose items spawn nested batches: the
+/// pool keeps *all* `workers` threads even when there are fewer items, so
+/// the extra workers immediately steal the items' nested jobs (this is
+/// what turns a figure assembly into a cross-leg pipeline).  Top-level
+/// only; nested calls behave exactly like [`ws_map_named`].
+pub fn ws_map_pool<T, R, F>(label: &'static str, items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    ws_map_pool_report(label, items, workers, f).0
+}
+
+/// [`ws_map_pool`] additionally returning the pool's per-worker telemetry.
+/// When the call is serial (one worker / one item) or nested in an outer
+/// pool, the report is empty — the outer pool owns the counters.
+pub fn ws_map_pool_report<T, R, F>(
+    label: &'static str,
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+) -> (Vec<R>, PoolReport)
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if let Some((me, pool)) = WORKER.with(|w| w.get()) {
+        if items.len() <= 1 {
+            return (items.into_iter().map(f).collect(), PoolReport::default());
+        }
+        return (
+            run_nested(unsafe { &*pool }, me, label, items, f),
+            PoolReport::default(),
+        );
+    }
+    if workers <= 1 || items.is_empty() {
+        return (items.into_iter().map(f).collect(), PoolReport::default());
+    }
+    run_root(label, items, workers, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deque_is_lifo_for_the_owner() {
+        let d = Deque::with_capacity(4);
+        for v in 1..=10usize {
+            d.push(v);
+        }
+        for v in (1..=10usize).rev() {
+            assert_eq!(d.pop(), Some(v));
+        }
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.pop(), None, "pop on empty must stay empty");
+    }
+
+    #[test]
+    fn deque_steals_fifo_and_grows() {
+        let d = Deque::with_capacity(2);
+        for v in 1..=9usize {
+            d.push(v); // forces repeated growth from cap 2
+        }
+        assert_eq!(d.steal(), Steal::Data(1));
+        assert_eq!(d.steal(), Steal::Data(2));
+        assert_eq!(d.pop(), Some(9));
+        assert_eq!(d.steal(), Steal::Data(3));
+        assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn empty_deque_reports_empty_to_thieves() {
+        let d = Deque::default();
+        assert_eq!(d.steal(), Steal::Empty);
+        d.push(7);
+        assert_eq!(d.pop(), Some(7));
+        assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn ws_map_matches_serial_in_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let serial: Vec<usize> = items.iter().map(|x| x * 3 + 1).collect();
+        let par = ws_map(items, 4, |x| x * 3 + 1);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn ws_map_handles_empty_and_single() {
+        assert!(ws_map(Vec::<usize>::new(), 4, |x| x).is_empty());
+        assert_eq!(ws_map(vec![5usize], 4, |x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn nested_maps_share_the_pool_and_stay_ordered() {
+        let (out, report) = ws_map_pool_report("outer", (0..4u64).collect(), 4, |leg| {
+            let inner: Vec<u64> = (0..16).map(|k| leg * 100 + k).collect();
+            ws_map_named("inner", inner, 4, |k| k * 7)
+        });
+        for (leg, row) in out.iter().enumerate() {
+            let want: Vec<u64> = (0..16).map(|k| (leg as u64 * 100 + k) * 7).collect();
+            assert_eq!(*row, want);
+        }
+        assert_eq!(report.per_worker.len(), 4);
+        assert_eq!(report.tasks(), 4 + 4 * 16, "4 legs + 64 nested jobs");
+    }
+
+    #[test]
+    fn panics_name_the_batch_and_index() {
+        let caught = std::panic::catch_unwind(|| {
+            ws_map_named("mc-sample", (0..32usize).collect(), 4, |k| {
+                if k == 17 {
+                    panic!("sample exploded");
+                }
+                k
+            })
+        });
+        let payload = caught.expect_err("the panic must propagate");
+        let msg = panic_message(&payload);
+        assert!(msg.contains("mc-sample[17]"), "panic message was: {msg}");
+        assert!(msg.contains("sample exploded"), "panic message was: {msg}");
+    }
+
+    #[test]
+    fn telemetry_counts_tasks() {
+        let before = stats();
+        let _ = ws_map((0..64usize).collect(), 4, |x| x + 1);
+        let after = stats();
+        assert!(after.tasks >= before.tasks + 64);
+        assert!(after.pools >= before.pools + 1);
+        assert!(after.batches >= before.batches + 1);
+    }
+}

@@ -1,18 +1,42 @@
-//! Fixed-size scoped work pool (rayon/tokio are unavailable offline).
+//! Parallel-map entry points (rayon/tokio are unavailable offline).
 //!
-//! The coordinator uses this to fan candidate evaluation and per-benchmark
-//! campaign legs across cores.  Work items are boxed closures pushed to a
-//! shared queue; `scope_map` provides the common "parallel map" shape with
-//! ordered results.
+//! [`scope_map`] is the historical API the coordinator uses to fan
+//! candidate evaluation and per-benchmark campaign legs across cores; it
+//! is now a thin wrapper over the work-stealing scheduler in
+//! [`crate::util::scheduler`] so every existing call site upgrades at
+//! once (stealable batches, cross-leg backfill, labeled panic
+//! propagation).  The original shared-queue implementation is kept as
+//! [`scope_map_shared_queue`] — it is the *static* baseline the
+//! `scheduler` bench leg races the work-stealing pool against, and a
+//! reference for what the old semantics were.
 
+use crate::util::scheduler;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 /// Parallel map: applies `f` to each item on up to `workers` OS threads,
-/// returning results in input order.  Falls back to a serial loop for
-/// `workers <= 1` or tiny inputs (avoids spawn overhead on 1-core hosts).
+/// returning results in input order (determinism by reduction order, not
+/// schedule).  Falls back to a serial loop for `workers <= 1` or tiny
+/// inputs.  Delegates to the work-stealing scheduler: when called from
+/// inside an enclosing pool the batch becomes stealable by idle workers
+/// instead of splitting the thread budget.
 pub fn scope_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    scheduler::ws_map(items, workers, f)
+}
+
+/// The pre-scheduler static map: one shared `Mutex<Vec>` queue drained by
+/// `workers` threads, results funneled through a channel.  Balances a
+/// single flat batch but cannot backfill across nested fan-outs — kept
+/// solely as the baseline for the `scheduler` bench leg and as executable
+/// documentation of the old behaviour.  New call sites should use
+/// [`scope_map`].
+pub fn scope_map_shared_queue<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
@@ -52,12 +76,17 @@ where
     })
 }
 
-/// Suggested worker count: respects HEM3D_WORKERS, defaults to available
-/// parallelism.
+/// Suggested worker count: respects `HEM3D_WORKERS` (documented in the
+/// README), defaults to available parallelism.  `HEM3D_WORKERS=0` is a
+/// configuration error someone will eventually make in a CI matrix, so it
+/// clamps to 1 (serial) explicitly rather than feeding 0 into pool math.
 pub fn default_workers() -> usize {
     if let Ok(s) = std::env::var("HEM3D_WORKERS") {
         if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
+            if n == 0 {
+                return 1;
+            }
+            return n;
         }
     }
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -92,5 +121,13 @@ mod tests {
     fn more_workers_than_items() {
         let out = scope_map(vec![1, 2], 16, |x| x * x);
         assert_eq!(out, vec![1, 4]);
+    }
+
+    #[test]
+    fn shared_queue_baseline_matches_scheduler() {
+        let items: Vec<usize> = (0..64).collect();
+        let a = scope_map_shared_queue(items.clone(), 4, |x| x * 7 + 3);
+        let b = scope_map(items, 4, |x| x * 7 + 3);
+        assert_eq!(a, b);
     }
 }

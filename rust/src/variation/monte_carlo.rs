@@ -3,17 +3,20 @@
 //! perf/thermal objectives and aggregate the distribution.
 //!
 //! Determinism contract: sample `k` is a pure function of
-//! `(cfg.seed, k)` (`sample::sample_map`), `scope_map` returns results in
-//! input order, and the aggregation folds them in index order — so every
-//! statistic here is bit-identical for any worker count (pinned by
-//! `tests/variation.rs`).
+//! `(cfg.seed, k)` (`sample::sample_map`), the work-stealing map
+//! (`ws_map_named`, DESIGN.md §16) returns results in input order, and
+//! the aggregation folds them in index order — so every statistic here is
+//! bit-identical for any worker count and any steal schedule (pinned by
+//! `tests/variation.rs`).  Inside an enclosing pool the sample batch is
+//! stealable, so idle workers from other campaign legs backfill a long
+//! robust fan-out instead of idling.
 
 use crate::arch::design::Design;
 use crate::arch::encode::EncodeCtx;
 use crate::arch::tile::TileKind;
 use crate::eval::objectives::{thermal_power_leak_derated, Scores};
+use crate::util::scheduler::ws_map_named;
 use crate::util::stats::{mean, percentile};
-use crate::util::threadpool::scope_map;
 
 use super::model::{VariationModel, FMAX_MARGIN, MIN_YIELD};
 
@@ -54,7 +57,9 @@ pub fn mc_effects(
     workers: usize,
 ) -> Vec<SampleEffects> {
     let idxs: Vec<u64> = (0..model.cfg.samples as u64).collect();
-    scope_map(idxs, workers, |k| sample_effects(ctx, design, model, k))
+    ws_map_named("variation-mc-sample", idxs, workers, |k| {
+        sample_effects(ctx, design, model, k)
+    })
 }
 
 /// Effects of the `k`-th sampled instance on one design.  The map itself

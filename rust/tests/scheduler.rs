@@ -1,0 +1,212 @@
+//! Work-stealing scheduler lockdown (DESIGN.md §16).
+//!
+//! Three layers:
+//!
+//! * **Deque properties** — the Chase-Lev deque under concurrent thieves:
+//!   every pushed element is consumed exactly once (no loss, no
+//!   duplication, across buffer growth — the ABA surface), and the
+//!   owner/thief race on the last element has exactly one winner.
+//! * **Determinism by reduction order** — a deliberately skewed nested
+//!   workload (one straggler leg + light legs, the shape the scheduler
+//!   exists for) is bit-identical to the serial map for any worker count.
+//! * **Scheduler behaviour** — idle workers actually steal the straggler
+//!   leg's batches, and a panicking job surfaces with its batch label and
+//!   index instead of an opaque pool error.
+
+use hem3d::util::scheduler::{ws_map_named, ws_map_pool, ws_map_pool_report, Deque, Steal};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Concurrent linearizability: one owner pushing (with interleaved pops)
+/// while three thieves steal.  The union of everything popped and stolen
+/// must be exactly the pushed multiset.  The tiny initial capacity forces
+/// repeated buffer growth under active thieves, which is where a stale
+/// buffer read or an ABA'd top index would lose or duplicate elements.
+#[test]
+fn concurrent_steals_conserve_the_multiset() {
+    const N: usize = 10_000;
+    let d = Deque::with_capacity(2);
+    let done = AtomicBool::new(false);
+    let taken: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            s.spawn(|| {
+                let mut local = Vec::new();
+                while !done.load(Ordering::Acquire) {
+                    match d.steal() {
+                        Steal::Data(v) => local.push(v),
+                        Steal::Retry => {}
+                        Steal::Empty => std::thread::yield_now(),
+                    }
+                }
+                // The owner has stopped; drain whatever is left.
+                loop {
+                    match d.steal() {
+                        Steal::Data(v) => local.push(v),
+                        Steal::Retry => {}
+                        Steal::Empty => break,
+                    }
+                }
+                taken.lock().unwrap().extend(local);
+            });
+        }
+        // Owner: push 1..=N, popping now and then (LIFO end) so both ends
+        // are contended, then drain from its own side.
+        let mut local = Vec::new();
+        for v in 1..=N {
+            d.push(v);
+            if v % 7 == 0 {
+                if let Some(x) = d.pop() {
+                    local.push(x);
+                }
+            }
+        }
+        while let Some(x) = d.pop() {
+            local.push(x);
+        }
+        done.store(true, Ordering::Release);
+        taken.lock().unwrap().extend(local);
+    });
+    let mut all = taken.into_inner().unwrap();
+    assert_eq!(all.len(), N, "elements lost or duplicated under concurrent stealing");
+    all.sort_unstable();
+    for (i, v) in all.iter().enumerate() {
+        assert_eq!(*v, i + 1, "multiset mismatch at sorted position {i}");
+    }
+}
+
+/// The pop-vs-steal race on a single remaining element: whatever the
+/// interleaving, exactly one side gets it and the other sees empty.
+#[test]
+fn last_element_races_to_exactly_one_winner() {
+    for round in 0..200usize {
+        let d = Deque::with_capacity(2);
+        d.push(round);
+        let wins = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| loop {
+                match d.steal() {
+                    Steal::Data(v) => {
+                        assert_eq!(v, round);
+                        wins.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    Steal::Retry => {}
+                    Steal::Empty => break,
+                }
+            });
+            if let Some(v) = d.pop() {
+                assert_eq!(v, round);
+                wins.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(wins.load(Ordering::Relaxed), 1, "round {round}: winner count");
+    }
+}
+
+/// Empty-deque edges: pops and steals on an emptied deque stay empty, and
+/// the deque is reusable after being drained from either end.
+#[test]
+fn drained_deque_stays_empty_for_both_ends() {
+    let d = Deque::with_capacity(4);
+    assert_eq!(d.steal(), Steal::Empty);
+    assert_eq!(d.pop(), None);
+    d.push(1);
+    d.push(2);
+    assert_eq!(d.steal(), Steal::Data(1));
+    assert_eq!(d.pop(), Some(2));
+    assert_eq!(d.pop(), None);
+    assert_eq!(d.steal(), Steal::Empty);
+    d.push(3);
+    assert_eq!(d.pop(), Some(3));
+    assert_eq!(d.steal(), Steal::Empty);
+}
+
+/// The skewed-workload checksum: one straggler leg, several light legs,
+/// nested through the pool exactly like a figure assembly.
+fn nested_checksum(workers: usize) -> Vec<Vec<u64>> {
+    let legs: Vec<Vec<u64>> = (0..5u64)
+        .map(|leg| {
+            let n = if leg == 0 { 48 } else { 6 };
+            (0..n).map(|u| (leg << 16) | u).collect()
+        })
+        .collect();
+    ws_map_pool("test-leg", legs, workers, |units| {
+        ws_map_named("test-unit", units, workers, |x| {
+            let mut h = x ^ 0x9e37_79b9_7f4a_7c15;
+            for _ in 0..200 {
+                h ^= h << 13;
+                h ^= h >> 7;
+                h ^= h << 17;
+            }
+            h
+        })
+    })
+}
+
+/// Determinism by reduction order, not schedule: the skewed nested
+/// workload must be bit-identical to the serial map for any worker count,
+/// whatever got stolen by whom.
+#[test]
+fn skewed_workload_is_bit_identical_to_serial() {
+    let serial = nested_checksum(1);
+    assert_eq!(serial.len(), 5);
+    for w in [2usize, 4, 8] {
+        assert_eq!(nested_checksum(w), serial, "workers={w} diverged from serial");
+    }
+}
+
+/// Cross-leg backfill: with one leg 12x the size of the others, workers
+/// that finish their own legs must steal the straggler's units (sleeping
+/// units yield the CPU, so this holds on single-core hosts too).
+#[test]
+fn idle_workers_steal_the_straggler_leg() {
+    let legs: Vec<usize> = vec![24, 2, 2, 2];
+    let (out, report) = ws_map_pool_report("steal-leg", legs, 4, |units| {
+        ws_map_named("steal-unit", (0..units).collect::<Vec<_>>(), 4, |u| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            u
+        })
+        .len()
+    });
+    assert_eq!(out, vec![24, 2, 2, 2], "reduction order broke under stealing");
+    assert_eq!(report.per_worker.len(), 4);
+    assert_eq!(report.tasks(), 4 + 24 + 6, "4 leg jobs + 30 unit jobs");
+    assert!(
+        report.steals() > 0,
+        "no steals on a 12x-skewed workload: the scheduler is being bypassed ({report:?})"
+    );
+}
+
+/// A panicking evaluation names the batch and the index that died — the
+/// contract that replaced `expect("worker dropped result")`.
+#[test]
+fn a_panicking_job_names_its_batch_and_index() {
+    let result = std::panic::catch_unwind(|| {
+        ws_map_named("eval-batch", (0..16usize).collect::<Vec<_>>(), 4, |k| {
+            if k == 7 {
+                panic!("boom");
+            }
+            k * 2
+        })
+    });
+    let payload = result.expect_err("the job panic must propagate to the caller");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("eval-batch[7]"), "panic message lacks the label/index: {msg}");
+    assert!(msg.contains("boom"), "panic message lacks the original payload: {msg}");
+}
+
+/// `HEM3D_WORKERS=0` is a configuration error, not a request for a
+/// zero-thread pool: it clamps to serial explicitly.
+#[test]
+fn hem3d_workers_zero_clamps_to_serial() {
+    std::env::set_var("HEM3D_WORKERS", "0");
+    assert_eq!(hem3d::util::threadpool::default_workers(), 1);
+    std::env::set_var("HEM3D_WORKERS", "3");
+    assert_eq!(hem3d::util::threadpool::default_workers(), 3);
+    std::env::remove_var("HEM3D_WORKERS");
+}
