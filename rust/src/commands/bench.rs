@@ -28,7 +28,10 @@
 //!   3 light stealable batches) through the old static split map and the
 //!   work-stealing pool (DESIGN.md §16); both are asserted bit-identical
 //!   to the serial map before the makespan ratio and steal telemetry are
-//!   reported.
+//!   reported;
+//! * **telemetry** — the DSE inner scoring step with the span recorder
+//!   disarmed vs armed (DESIGN.md §17); scores are asserted bit-identical
+//!   before the overhead ratio (CI-gated at 1.05) is reported.
 //!
 //! With `--json` the results land in `BENCH_hotpaths.json` at the repo
 //! root (override with `--out`), giving CI a perf trajectory to archive.
@@ -393,6 +396,68 @@ pub fn run(args: &Args) -> Result<()> {
         ws_best * 1e3
     );
 
+    // ---- telemetry: span-recorder overhead on the DSE inner step ----------
+    // The out-of-band contract priced (DESIGN.md §17): the same scoring
+    // batch with the span recorder disarmed vs armed must produce
+    // bit-identical scores, and the armed run must stay within a few
+    // percent of the disarmed one (CI gates overhead_ratio <= 1.05).
+    use hem3d::telemetry::spans;
+    let tele_n = if quick { 12 } else { 32 };
+    let tele_designs: Vec<Design> = (0..tele_n)
+        .map(|i| {
+            let mut d = design.clone();
+            d.swap_positions(i % cfg.n_tiles(), (i * 7 + 1) % cfg.n_tiles());
+            d
+        })
+        .collect();
+    let score_batch = || {
+        let mut acc = 0u64;
+        for d in &tele_designs {
+            let _span = hem3d::telemetry::span("bench-telemetry-score");
+            let r = Routing::build(d);
+            let s = evaluate_sparse(&ctx, d, &r, &sparse);
+            for x in s.as_vec() {
+                acc ^= x.to_bits();
+            }
+        }
+        acc
+    };
+    spans::set_enabled(false);
+    let acc_off = score_batch();
+    let t_off = bench(
+        &format!("telemetry disarmed scoring ({tele_n} designs)"),
+        warmup,
+        reps,
+        || {
+            let _ = score_batch();
+        },
+    );
+    spans::set_enabled(true);
+    let acc_on = score_batch();
+    let t_on = bench(
+        &format!("telemetry armed scoring ({tele_n} designs)"),
+        warmup,
+        reps,
+        || {
+            let _ = score_batch();
+        },
+    );
+    spans::set_enabled(false);
+    spans::flush_thread();
+    let tele_events = spans::drain().len();
+    let tele_identical = acc_off == acc_on;
+    anyhow::ensure!(
+        tele_identical,
+        "scores diverged with tracing armed (telemetry must be out-of-band)"
+    );
+    let overhead_ratio = t_on / t_off.max(1e-12);
+    println!(
+        "telemetry: disarmed {:.2} ms vs armed {:.2} ms -> {overhead_ratio:.3}x overhead, \
+         {tele_events} span events, scores bit-identical",
+        t_off * 1e3,
+        t_on * 1e3
+    );
+
     if args.flag("json") {
         let out = args.opt_or("out", "BENCH_hotpaths.json");
         let json = Json::obj(vec![
@@ -496,6 +561,17 @@ pub fn run(args: &Args) -> Result<()> {
                     ("tasks", Json::num(tasks_total as f64)),
                     ("workers", Json::num(sched_workers as f64)),
                     ("ws_makespan_s", Json::num(ws_best)),
+                ]),
+            ),
+            (
+                "telemetry",
+                Json::obj(vec![
+                    ("bit_identical_with_tracing", Json::Bool(tele_identical)),
+                    ("designs", Json::num(tele_n as f64)),
+                    ("events", Json::num(tele_events as f64)),
+                    ("off_s", Json::num(t_off)),
+                    ("on_s", Json::num(t_on)),
+                    ("overhead_ratio", Json::num(overhead_ratio)),
                 ]),
             ),
             (

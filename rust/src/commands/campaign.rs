@@ -28,6 +28,28 @@ pub fn run_dir_from_args(args: &Args) -> Option<String> {
     }
 }
 
+/// Arm the span recorder when `--trace-out PATH` is present (shared by
+/// `optimize` and `campaign`).  Returns the path so the caller can export
+/// with [`write_trace`] once the run completes.  Tracing is out-of-band:
+/// results are bit-identical with it on or off (DESIGN.md §17).
+pub fn trace_out_from_args(args: &Args) -> Option<String> {
+    let path = args.opt("trace-out")?.to_string();
+    hem3d::telemetry::spans::set_enabled(true);
+    log_info!("span tracing armed; Chrome trace will be written to {path}");
+    Some(path)
+}
+
+/// Export the accumulated spans as a Chrome trace-event file, if tracing
+/// was armed by [`trace_out_from_args`].
+pub fn write_trace(path: &Option<String>) {
+    let Some(p) = path else { return };
+    hem3d::telemetry::spans::set_enabled(false);
+    match hem3d::telemetry::spans::write_chrome_trace(p) {
+        Ok(n) => log_info!("trace: {n} events -> {p} (load in Perfetto / chrome://tracing)"),
+        Err(e) => hem3d::log_warn!("trace export failed: {e:#}"),
+    }
+}
+
 /// Resolve the Monte Carlo variation configuration shared by `optimize`
 /// and `campaign`: `--robust` enables it, `--variation-sigma` /
 /// `--tier-shift` / `--mc-samples` / `--mc-seed` tune it, and an explicit
@@ -136,6 +158,21 @@ pub fn run(args: &Args) -> Result<()> {
     }
     .with_workers(args.usize_or("workers", 1));
     log_info!("campaign workers: {}", effort.workers);
+
+    let trace_out = trace_out_from_args(args);
+    // Legs per figure per bench: fig7 runs tsv+m3d x two algos, fig8/10
+    // two modes, fig9 three variants.  Estimate only — drives the
+    // heartbeat's leg X/Y + ETA line, nothing else.
+    let legs_estimate: usize = figs
+        .iter()
+        .map(|f| match f {
+            7 => 4,
+            9 => 3,
+            _ => 2,
+        })
+        .sum::<usize>()
+        * benches.len();
+    hem3d::telemetry::heartbeat::enable(legs_estimate);
 
     let variation = variation_from_args(args);
     if let Some(v) = &variation {
@@ -344,6 +381,7 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
 
+    write_trace(&trace_out);
     print_leg_summary(&engine);
     println!("\nreports written to {out}/");
     Ok(())

@@ -102,9 +102,12 @@ pub fn run(args: &Args) -> Result<()> {
             log_info!("--ladder is inert without --robust (nominal scoring has one rung)");
         }
     }
+    let trace_out = super::campaign::trace_out_from_args(args);
+    hem3d::telemetry::heartbeat::enable(1);
     let world = LegWorld::new(&bench, tech, seed);
     let engine = super::campaign::engine_from_args(args)?;
     let leg = engine.run_leg(&world, mode, algo, selection, &effort, seed);
+    super::campaign::write_trace(&trace_out);
 
     println!("leg: bench={} tech={} mode={} algo={}", leg.bench, leg.tech.name(), leg.mode.name(), leg.algo.name());
     if leg.replayed {

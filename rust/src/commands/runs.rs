@@ -4,6 +4,10 @@
 //!   stored legs, cached evaluations, figure reports present.
 //! * `hem3d runs show <name> [--root runs]` (or `--run-dir DIR`) — the
 //!   manifest plus a per-leg table assembled from the stored artifacts.
+//!   With `--metrics`, each leg's telemetry sibling
+//!   (`legs/<id>.metrics.json`, DESIGN.md §17) is rendered as a cache
+//!   hit-rate line plus a per-site cost breakdown (calls and work units
+//!   per instrumented pipeline site).
 
 use anyhow::Result;
 use hem3d::coordinator::report::{f, table};
@@ -232,5 +236,76 @@ fn show(args: &Args) -> Result<()> {
     for line in robust_winners {
         println!("{line}");
     }
+    if args.flag("metrics") {
+        for id in &ids {
+            show_leg_metrics(&store, id);
+        }
+    }
     Ok(())
+}
+
+/// Render one leg's telemetry artifact: cache hit rates, scheduler batch
+/// shape, Monte Carlo volume, and the per-site cost breakdown.  Legs
+/// stored before the telemetry layer existed have no sibling artifact;
+/// that prints as a note, not an error.
+fn show_leg_metrics(store: &RunStore, id: &str) {
+    let Some(m) = store.load_leg_metrics(id) else {
+        println!("\nleg {id}: no metrics artifact (leg predates telemetry or write failed)");
+        return;
+    };
+    println!("\nleg {id} — metrics ({})", m.get("schema").and_then(|s| s.as_str()).unwrap_or("?"));
+    let num = |path: &[&str]| -> f64 {
+        let mut cur = &m;
+        for k in path {
+            match cur.get(k) {
+                Some(v) => cur = v,
+                None => return 0.0,
+            }
+        }
+        cur.as_f64().unwrap_or(0.0)
+    };
+    let probes = num(&["cache", "probes"]);
+    let hits = num(&["cache", "hits"]);
+    let warm = num(&["cache", "warm_hits"]);
+    let hit_rate = if probes > 0.0 { 100.0 * hits / probes } else { 0.0 };
+    println!(
+        "  cache: {probes:.0} probes, {:.0} misses, {hits:.0} hits ({hit_rate:.0}%), {warm:.0} warm-start",
+        num(&["cache", "misses"])
+    );
+    println!(
+        "  scheduler: {:.0} batches / {:.0} jobs submitted",
+        num(&["scheduler", "batches"]),
+        num(&["scheduler", "jobs"])
+    );
+    println!(
+        "  mc: variation {:.0} evals / {:.0} samples, faults {:.0} evals / {:.0} samples",
+        num(&["mc", "variation_evals"]),
+        num(&["mc", "variation_samples"]),
+        num(&["mc", "fault_evals"]),
+        num(&["mc", "fault_samples"])
+    );
+    let certified = num(&["ladder", "certified_l0"]);
+    let promoted = num(&["ladder", "promoted"]);
+    if certified > 0.0 || promoted > 0.0 {
+        println!("  ladder: {certified:.0} certified at L0, {promoted:.0} promoted");
+    }
+    if let Some(sites) = m.get("spans") {
+        let mut rows = Vec::new();
+        for site in hem3d::telemetry::Site::ALL {
+            let stat = |k: &str| {
+                sites
+                    .get(site.name())
+                    .and_then(|s| s.get(k))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0)
+            };
+            let (calls, units) = (stat("calls"), stat("units"));
+            if calls > 0.0 {
+                rows.push(vec![site.name().to_string(), f(calls, 0), f(units, 0)]);
+            }
+        }
+        if !rows.is_empty() {
+            println!("{}", table(&["site", "calls", "units"], &rows));
+        }
+    }
 }

@@ -19,6 +19,7 @@ use crate::opt::{
 };
 use crate::perf::PerfCoeffs;
 use crate::runtime::evaluator::EvalKey;
+use crate::telemetry::{self, Metrics, MetricsScope, Site};
 use crate::thermal::{TransientConfig, TransientStats};
 use crate::traffic::{benchmark, generate, BenchProfile, Trace};
 use crate::util::Rng;
@@ -383,6 +384,12 @@ pub fn run_leg(
 /// bit-identical to the exhaustive run — only per-candidate
 /// [`RobustEt::samples`] of provably-losing candidates shrinks.  On
 /// nominal legs `ladder` is the identity.
+///
+/// The third returned element is the leg's deterministic telemetry
+/// snapshot (`telemetry::Metrics::snapshot` — the `metrics.json` artifact
+/// the store engine persists beside the leg JSON).  It contains counts
+/// only, never timestamps, and is byte-identical across reruns and worker
+/// counts (DESIGN.md §17).
 #[allow(clippy::too_many_arguments)]
 pub fn run_leg_warm(
     world: &LegWorld,
@@ -396,9 +403,27 @@ pub fn run_leg_warm(
     transient: Option<&TransientConfig>,
     faults: Option<&FaultConfig>,
     ladder: bool,
-) -> (LegResult, Vec<(EvalKey, crate::eval::objectives::Scores)>) {
-    let ctx = world.encode_ctx();
-    let mut problem = Problem::new(&ctx, mode).with_workers(effort.workers);
+) -> (
+    LegResult,
+    Vec<(EvalKey, crate::eval::objectives::Scores)>,
+    crate::util::json::Json,
+) {
+    // Leg-level attribution scope: serial leg code (encode, the ladder's
+    // reference validation) records into this leg's registry.  Stealable
+    // job bodies never call `telemetry::record` under this scope — score
+    // jobs contain no record sites and the validation closures below
+    // install their own scope — so stolen work can never misattribute.
+    let metrics = Arc::new(Metrics::new());
+    let _leg_scope = MetricsScope::enter(&metrics);
+    let _leg_span = telemetry::span("leg");
+    let ctx = {
+        let _s = telemetry::span("encode");
+        world.encode_ctx()
+    };
+    let mut problem = Problem::new(&ctx, mode)
+        .with_workers(effort.workers)
+        .with_metrics(Arc::clone(&metrics));
+    telemetry::record(Site::Encode, 1);
     let store_backed = warm.is_some();
     if let Some(warm) = warm {
         problem = problem.with_warm_cache(warm);
@@ -421,14 +446,17 @@ pub fn run_leg_warm(
     let mut rng = Rng::seed_from_u64(seed);
 
     let t0 = std::time::Instant::now();
-    let (pareto, opt_history) = match algo {
-        Algo::MooStage => {
-            let res = moo_stage(&problem, start, &effort.stage, &mut rng);
-            (res.pareto, OptHistory::Stage(res.history))
-        }
-        Algo::Amosa => {
-            let res = amosa(&problem, start, &effort.amosa, &mut rng);
-            (res.pareto, OptHistory::Amosa(res.history))
+    let (pareto, opt_history) = {
+        let _s = telemetry::span("optimize");
+        match algo {
+            Algo::MooStage => {
+                let res = moo_stage(&problem, start, &effort.stage, &mut rng);
+                (res.pareto, OptHistory::Stage(res.history))
+            }
+            Algo::Amosa => {
+                let res = amosa(&problem, start, &effort.amosa, &mut rng);
+                (res.pareto, OptHistory::Amosa(res.history))
+            }
         }
     };
     let history = opt_history.points();
@@ -505,7 +533,12 @@ pub fn run_leg_warm(
             reference.robust.as_ref().filter(|r| r.meets_yield()).map(|r| r.p95_edp);
         let indexed: Vec<(usize, &crate::opt::Solution)> =
             members.into_iter().enumerate().collect();
+        metrics.batch(indexed.len() as u64);
         crate::util::scheduler::ws_map_named("validate-candidate", indexed, effort.workers, |(i, m)| {
+            // Per-candidate attribution scope: this closure may execute on
+            // a stolen worker whose thread-local scope belongs to another
+            // leg, so it installs (and restores) its own.
+            let _scope = MetricsScope::enter(&metrics);
             if i == ri {
                 reference.clone()
             } else {
@@ -522,7 +555,9 @@ pub fn run_leg_warm(
             }
         })
     } else {
+        metrics.batch(members.len() as u64);
         crate::util::scheduler::ws_map_named("validate-candidate", members, effort.workers, |m| {
+            let _scope = MetricsScope::enter(&metrics);
             validate_candidate_full(
                 &ctx,
                 &world.profile,
@@ -534,6 +569,15 @@ pub fn run_leg_warm(
             )
         })
     };
+
+    // MC fan-out distribution: per-candidate sample counts are
+    // deterministic (the budgeted early-stop depends only on design,
+    // model and budget) and the histogram is order-independent.
+    for c in &candidates {
+        if let Some(r) = &c.robust {
+            metrics.mc_fanout.record(r.samples as u64);
+        }
+    }
 
     // Winner per the selection rule.
     let winner = select(&mut candidates, selection, world.cfg.t_threshold_c);
@@ -560,7 +604,8 @@ pub fn run_leg_warm(
         cache,
         replayed: false,
     };
-    (leg, export)
+    let snapshot = metrics.snapshot();
+    (leg, export, snapshot)
 }
 
 /// Fig 7 metric: the paper compares the time each solver needs to reach a

@@ -10,6 +10,7 @@ use crate::noc::routing::Routing;
 use crate::noc::sim::{NocSim, SimConfig};
 use crate::power::leakage;
 use crate::runtime::evaluator::dims;
+use crate::telemetry::{self, Site};
 use crate::thermal::{
     simulate_with, GridParams, ThermalGrid, ThermalSolver, TransientConfig, TransientPlan,
     TransientStats, T_AMBIENT_C,
@@ -151,14 +152,18 @@ pub fn detailed_peak_temp_with(
     // Worst window for THIS design (placement-aware peak-rise envelope),
     // not by design-independent total chip power — see
     // [`worst_window_index`].
+    let _span = telemetry::span("thermal-solve");
     let worst = &ctx.trace.windows[worst_window_index(ctx, design)];
 
-    let (t_final, _iters) = leakage::fixed_point(
+    let (t_final, iters) = leakage::fixed_point(
         T_AMBIENT_C + 20.0,
         12,
         |t_peak| power_grid(ctx, design, worst, t_peak),
         |p| T_AMBIENT_C + solver.solve_peak(p, 600),
     );
+    // Units = leakage fixed-point iterations, a pure function of the
+    // design, so the tally is schedule-independent.
+    telemetry::record(Site::ThermalSolve, iters as u64);
     t_final
 }
 
@@ -174,6 +179,7 @@ pub fn transient_stats(
     cfg: &TransientConfig,
     threshold_c: f64,
 ) -> TransientStats {
+    let _span = telemetry::span("transient-sim");
     let stack = ctx.tech.layer_stack();
     let mut plan = TransientPlan::new(
         &ThermalGrid::new(
@@ -261,18 +267,33 @@ pub fn validate_candidate_budgeted(
     faults: Option<&crate::faults::FaultModel>,
     ref_p95_edp: Option<f64>,
 ) -> super::campaign::Validated {
+    let _span = telemetry::span("validate");
+    telemetry::record(Site::Validate, 1);
     let routing = Routing::build(design);
+    telemetry::record(Site::Routing, 1);
     let scores = crate::eval::objectives::evaluate(ctx, design, &routing);
+    telemetry::record(Site::SparseEval, 1);
     let et = crate::perf::exec_time(ctx, profile, design, &routing, &scores, coeffs);
     let temp = detailed_peak_temp(ctx, design);
     let robust = variation.map(|model| {
         // The sample fan-out runs serially (and in index order, which the
         // early-stop certificates rely on): candidates are already spread
         // over the worker pool by the leg runner.
-        crate::variation::robust_et_budgeted(ctx, design, et.total, model, ref_p95_edp)
+        let _s = telemetry::span("variation-mc");
+        let r = crate::variation::robust_et_budgeted(ctx, design, et.total, model, ref_p95_edp);
+        // Units = samples actually drawn — deterministic because the
+        // early-stop certificates depend only on (design, model, budget).
+        telemetry::record(Site::VariationMc, r.samples as u64);
+        r
     });
-    let transient =
-        transient.map(|(cfg, threshold_c)| transient_stats(ctx, design, cfg, threshold_c));
+    let transient = transient.map(|(cfg, threshold_c)| {
+        let stats = transient_stats(ctx, design, cfg, threshold_c);
+        telemetry::record(
+            Site::TransientSim,
+            (cfg.horizon_s / cfg.dt_s.max(1e-12)).ceil() as u64,
+        );
+        stats
+    });
     let faults = faults.map(|model| {
         // Same serial fan-out rationale as the robust summary above; the
         // traffic extraction is per-candidate here (validation runs once
@@ -283,6 +304,7 @@ pub fn validate_candidate_budgeted(
             Some(ctx.tiles),
         );
         let effects = crate::faults::fault_effects(ctx, &traffic, design, model, 1);
+        telemetry::record(Site::FaultMc, effects.len() as u64);
         crate::faults::fault_stats(&scores, et.total, &effects)
     });
     super::campaign::Validated {

@@ -135,6 +135,7 @@ pub fn evaluate_sparse(
     routing: &Routing,
     traffic: &SparseTraffic,
 ) -> Scores {
+    let _span = crate::telemetry::span("sparse-eval");
     EVAL_SCRATCH
         .with(|s| evaluate_sparse_with(ctx, design, routing, traffic, &mut s.borrow_mut()))
 }

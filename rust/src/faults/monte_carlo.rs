@@ -173,6 +173,7 @@ pub fn fault_effects(
     model: &FaultModel,
     workers: usize,
 ) -> Vec<FaultEffects> {
+    let _span = crate::telemetry::span("fault-mc");
     let routing = Routing::build(design);
     let nom_umax = nominal_umax(ctx, traffic, design, &routing);
     let idxs: Vec<u64> = (0..model.cfg.samples as u64).collect();

@@ -26,6 +26,7 @@ pub mod perf;
 pub mod power;
 pub mod runtime;
 pub mod store;
+pub mod telemetry;
 pub mod thermal;
 pub mod timing;
 pub mod traffic;

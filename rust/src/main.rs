@@ -47,7 +47,7 @@ COMMANDS:
              [--vcs N] [--vc-depth N] [--cycles N] [--seed N]
   optimize   Run one DSE leg [--bench NAME] [--tech tsv|m3d]
              [--algo moo-stage|amosa] [--mode po|pt] [--iters N] [--seed N]
-             [--artifacts DIR|none] [--workers N]
+             [--artifacts DIR|none] [--workers N] [--trace-out FILE]
              [--run-dir DIR | --name NAME] [--force]
              [--robust] [--variation-sigma X] [--tier-shift X]
              [--mc-samples N] [--mc-seed N] [--ladder]
@@ -56,21 +56,22 @@ COMMANDS:
               --sprint-rest --sprint-steps N --rest-steps N --rest-scale X]
   bench      Hot-path benchmark harness (thermal planned-vs-seed, moo
              scoring, NoC sim, variation MC, transient stepper,
-             multi-fidelity ladder leg)
+             multi-fidelity ladder leg, scheduler, telemetry overhead)
              [--json] [--quick] [--out FILE] [--seed N] [--workers N]
   campaign   Regenerate figure data [--figs 7,8,9,10] [--out DIR]
              [--seed N] [--benches a,b,...] [--effort quick|full]
-             [--workers N] [--run-dir DIR | --name NAME] [--force]
+             [--workers N] [--trace-out FILE]
+             [--run-dir DIR | --name NAME] [--force]
              [--robust] [--variation-sigma X] [--tier-shift X]
              [--mc-samples N] [--mc-seed N] [--ladder]
              [--transient] [--horizon S] [--dt S] [--ambient C]
              [--throttle --trip C --relief X |
               --sprint-rest --sprint-steps N --rest-steps N --rest-scale X]
   runs       Inspect persisted runs:  runs list [--root runs]
-             |  runs show <name> [--root runs | --run-dir DIR]
+             |  runs show <name> [--root runs | --run-dir DIR] [--metrics]
   help       Show this message
 
-Global: [--log error|warn|info|debug]
+Global: [--log error|warn|info|debug|trace]
         --workers N fans candidate evaluation / figure legs over N threads
         (default 1; 0 = all cores or HEM3D_WORKERS; results are
         bit-identical for any worker count)
@@ -101,6 +102,13 @@ Global: [--log error|warn|info|debug]
         throttling-adjusted latency; validated winners carry peak/final
         temperature, time over threshold and sustained throughput.
         --horizon 0 is bit-identical to the steady-state path.
+        --trace-out FILE records spans on the hot evaluation pipeline and
+        writes a Chrome trace-event JSON (load in Perfetto or
+        chrome://tracing; one lane per worker thread).  Telemetry is
+        strictly out-of-band: results are bit-identical with tracing on,
+        off or absent.  Store-backed legs also persist a deterministic
+        legs/<id>.metrics.json (cache hit rates, per-site cost breakdown)
+        — render it with `hem3d runs show <name> --metrics`.
 ";
 
 fn main() -> Result<()> {

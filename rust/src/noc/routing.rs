@@ -36,6 +36,7 @@ pub struct Routing {
 impl Routing {
     /// Build all-pairs routes for a connected design.
     pub fn build(design: &Design) -> Routing {
+        let _span = crate::telemetry::span("routing");
         let n = design.n_tiles();
         let adj = design.adjacency();
         let mut hops = vec![u16::MAX; n * n];

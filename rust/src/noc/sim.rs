@@ -358,6 +358,7 @@ impl<'a> NocSim<'a> {
     /// assert!(stats.mean_latency >= 8.0); // 2 hops x (3 stages + 1 wire)
     /// ```
     pub fn run(&mut self, rate: &[f64], flits: &[u16], cycles: u64, rng: &mut Rng) -> SimStats {
+        let _span = crate::telemetry::span("noc-sim");
         let n = self.routing.n;
         assert_eq!(rate.len(), n * n);
         assert_eq!(flits.len(), n * n);

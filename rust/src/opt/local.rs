@@ -93,6 +93,8 @@ pub fn local_search(
         // Score candidates (routing + objectives) in parallel, in order.
         let cand_designs: Vec<Design> =
             candidates.into_iter().map(|(design, _)| design).collect();
+        problem.metrics().batch(cand_designs.len() as u64);
+        let _span = crate::telemetry::span("score-batch");
         let scored: Vec<(Design, Vec<f64>)> = crate::util::scheduler::ws_map_named(
             "candidate-scoring",
             cand_designs,

@@ -9,6 +9,7 @@ use crate::eval::objectives::{evaluate_sparse, leak_40c, Scores, SparseTraffic};
 use crate::faults::{fault_effects, fault_score, FaultConfig, FaultModel};
 use crate::noc::routing::Routing;
 use crate::runtime::{EvalCache, EvalKey, FaultKey, ScenarioKey, TransientKey, VariationKey};
+use crate::telemetry::{heartbeat, Metrics};
 use crate::thermal::{cheap_transient, stack_tau_s, TransientConfig};
 use crate::util::stats::percentile;
 use crate::variation::{robust_evaluate, VariationConfig, VariationModel};
@@ -175,6 +176,11 @@ pub struct Problem<'a> {
     /// Multi-fidelity ladder state; `None` scores every probe at the
     /// exact rung (see [`Problem::with_ladder`]).
     ladder: Option<LadderState>,
+    /// Telemetry registry this problem mirrors its deterministic counters
+    /// into (probes, insert-gated evals/warm hits, ladder rung counts).
+    /// Always present — a fresh private registry unless the campaign
+    /// installed a shared per-leg one via [`Problem::with_metrics`].
+    metrics: std::sync::Arc<Metrics>,
     evals: AtomicU64,
     cache: EvalCache,
 }
@@ -203,9 +209,25 @@ impl<'a> Problem<'a> {
             transient: None,
             faults: None,
             ladder: None,
+            metrics: std::sync::Arc::new(Metrics::new()),
             evals: AtomicU64::new(0),
             cache: EvalCache::new(),
         }
+    }
+
+    /// Builder-style telemetry registry: mirror this problem's
+    /// deterministic counters (probes, insert-gated evals / warm hits,
+    /// ladder rung counts) into a shared per-leg [`Metrics`] instance so
+    /// the campaign can snapshot them into the leg's `metrics.json`
+    /// artifact.  Strictly out-of-band — scores are unaffected.
+    pub fn with_metrics(mut self, metrics: std::sync::Arc<Metrics>) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// The telemetry registry this problem records into.
+    pub fn metrics(&self) -> &std::sync::Arc<Metrics> {
+        &self.metrics
     }
 
     /// Builder-style robust mode: score designs by the p95 Monte Carlo
@@ -371,20 +393,28 @@ impl<'a> Problem<'a> {
     /// Snapshot-seeded entries short-circuit the computation on the miss
     /// path but take the same insert-and-count route.
     pub fn score(&self, design: &Design) -> Scores {
+        self.metrics.probes.add(1);
         let key = EvalKey::exact(design_key(design), self.scenario.clone());
         if let Some(cached) = self.cache.get(&key) {
+            heartbeat::probe(false);
             return cached;
         }
         if let Some(state) = &self.ladder {
             return self.score_ladder(state, key, design);
         }
-        let scores = match self.cache.warm_lookup(&key) {
-            Some(warm) => warm,
-            None => self.compute_exact(design),
+        let (scores, warm_served) = match self.cache.warm_lookup(&key) {
+            Some(warm) => (warm, true),
+            None => (self.compute_exact(design), false),
         };
-        if self.cache.insert(key, scores) {
+        let inserted = self.cache.insert(key, scores);
+        if inserted {
             self.evals.fetch_add(1, Ordering::Relaxed);
+            self.metrics.evals.add(1);
+            if warm_served {
+                self.metrics.warm_hits.add(1);
+            }
         }
+        heartbeat::probe(inserted);
         scores
     }
 
@@ -470,44 +500,67 @@ impl<'a> Problem<'a> {
         let snapshot = state.snapshot.read().unwrap().clone();
         if let Some(lb) = self.cache.get(&bound_key) {
             if snapshot.certifies_dominated(&self.mode.objectives(&lb)) {
+                heartbeat::probe(false);
                 return lb;
             }
             // Stale bound: the frontier moved and the certificate no
             // longer holds — promote to the exact rung.
-            let scores = match self.cache.warm_lookup(&key) {
-                Some(warm) => warm,
-                None => self.compute_exact(design),
+            let (scores, warm_served) = match self.cache.warm_lookup(&key) {
+                Some(warm) => (warm, true),
+                None => (self.compute_exact(design), false),
             };
-            if self.cache.insert(key, scores) {
+            let inserted = self.cache.insert(key, scores);
+            if inserted {
                 state.promoted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.promoted.add(1);
+                if warm_served {
+                    self.metrics.warm_hits.add(1);
+                }
             }
+            heartbeat::probe(inserted);
             return scores;
         }
-        let (lb, nominal) = match self.cache.warm_lookup(&bound_key) {
-            Some(warm) => (warm, None),
+        let (lb, nominal, bound_warm) = match self.cache.warm_lookup(&bound_key) {
+            Some(warm) => (warm, None, true),
             None => {
                 let routing = Routing::build(design);
                 let nominal = evaluate_sparse(self.ctx, design, &routing, &self.traffic);
-                (self.ladder_bound(design, &nominal), Some(nominal))
+                (self.ladder_bound(design, &nominal), Some(nominal), false)
             }
         };
         if snapshot.certifies_dominated(&self.mode.objectives(&lb)) {
-            if self.cache.insert(bound_key, lb) {
+            let inserted = self.cache.insert(bound_key, lb);
+            if inserted {
                 self.evals.fetch_add(1, Ordering::Relaxed);
                 state.bounds.fetch_add(1, Ordering::Relaxed);
+                self.metrics.evals.add(1);
+                self.metrics.certified_l0.add(1);
+                if bound_warm {
+                    self.metrics.warm_hits.add(1);
+                }
             }
+            heartbeat::probe(inserted);
             return lb;
         }
-        let scores = match self.cache.warm_lookup(&key) {
-            Some(warm) => warm,
-            None => match nominal {
-                Some(nominal) => self.finish_exact(design, nominal),
-                None => self.compute_exact(design),
-            },
+        let (scores, warm_served) = match self.cache.warm_lookup(&key) {
+            Some(warm) => (warm, true),
+            None => (
+                match nominal {
+                    Some(nominal) => self.finish_exact(design, nominal),
+                    None => self.compute_exact(design),
+                },
+                false,
+            ),
         };
-        if self.cache.insert(key, scores) {
+        let inserted = self.cache.insert(key, scores);
+        if inserted {
             self.evals.fetch_add(1, Ordering::Relaxed);
+            self.metrics.evals.add(1);
+            if warm_served {
+                self.metrics.warm_hits.add(1);
+            }
         }
+        heartbeat::probe(inserted);
         scores
     }
 
@@ -532,6 +585,9 @@ impl<'a> Problem<'a> {
     ///   rung (sample-independent transforms of exact components), so
     ///   the robust+transient bound is fully bit-exact.
     fn ladder_bound(&self, design: &Design, nominal: &Scores) -> Scores {
+        // Span only — this runs inside stealable score jobs, where a
+        // `telemetry::record` would count into a stolen thread's scope.
+        let _span = crate::telemetry::span("ladder-bound");
         let model =
             self.variation.as_ref().expect("ladder bounds need a variation model");
         let ctx = self.ctx;

@@ -223,10 +223,11 @@ impl Engine {
         let transient = self.transient.as_ref();
         let faults = self.faults.as_ref();
         let Some(store) = &self.store else {
-            let (leg, _) = run_leg_warm(
+            let (leg, _, _) = run_leg_warm(
                 world, mode, algo, selection, effort, seed, None, variation, transient, faults,
                 self.ladder,
             );
+            crate::telemetry::heartbeat::leg_done();
             self.push_summary(String::new(), &leg);
             return leg;
         };
@@ -241,6 +242,7 @@ impl Engine {
                 match artifact::leg_from_json(&doc) {
                     Ok((stored_spec, leg)) if stored_spec == spec => {
                         crate::log_info!("leg {id}: replayed from store");
+                        crate::telemetry::heartbeat::leg_done();
                         self.push_summary(id, &leg);
                         return leg;
                     }
@@ -252,7 +254,7 @@ impl Engine {
             }
         }
 
-        let (leg, export) = run_leg_warm(
+        let (leg, export, metrics) = run_leg_warm(
             world,
             mode,
             algo,
@@ -265,9 +267,15 @@ impl Engine {
             faults,
             self.ladder,
         );
+        crate::telemetry::heartbeat::leg_done();
 
         if let Err(e) = store.save_leg(&id, &artifact::leg_json(&leg, &spec)) {
             crate::log_warn!("leg {id}: artifact write failed: {e}");
+        }
+        // Telemetry sibling: deterministic counts only, never replayed —
+        // losing it costs observability, not correctness.
+        if let Err(e) = store.save_leg_metrics(&id, &metrics) {
+            crate::log_warn!("leg {id}: metrics write failed: {e}");
         }
         {
             // One lock covers dedup + append, serializing concurrent

@@ -117,6 +117,12 @@ impl RunStore {
         self.root.join("legs").join(format!("{id}.json"))
     }
 
+    /// Path of a leg's telemetry artifact (`legs/<id>.metrics.json`),
+    /// written beside the leg JSON (DESIGN.md §17).
+    pub fn leg_metrics_path(&self, id: &str) -> PathBuf {
+        self.root.join("legs").join(format!("{id}.metrics.json"))
+    }
+
     /// Atomically replace `path` with `content` (tmp + rename).  The tmp
     /// sibling name is unique per process and per call: two processes
     /// sharing one run dir (`optimize` + `campaign` on the same store) may
@@ -171,13 +177,31 @@ impl RunStore {
         }
     }
 
-    /// Sorted IDs of every stored leg.
+    /// Atomically write one leg's telemetry artifact (the deterministic
+    /// `telemetry::Metrics::snapshot` document).
+    pub fn save_leg_metrics(&self, id: &str, doc: &Json) -> io::Result<()> {
+        Self::atomic_write(&self.leg_metrics_path(id), &doc.to_pretty())
+    }
+
+    /// Load one leg's telemetry artifact, if present and parseable.
+    /// Metrics are observability-only, so any failure reads as "absent".
+    pub fn load_leg_metrics(&self, id: &str) -> Option<Json> {
+        let raw = std::fs::read_to_string(self.leg_metrics_path(id)).ok()?;
+        json::parse(&raw).ok()
+    }
+
+    /// Sorted IDs of every stored leg.  Telemetry siblings
+    /// (`<id>.metrics.json`) live in the same directory and are excluded —
+    /// they are artifacts *about* a leg, not legs.
     pub fn list_leg_ids(&self) -> Vec<String> {
         let mut ids: Vec<String> = std::fs::read_dir(self.root.join("legs"))
             .map(|rd| {
                 rd.filter_map(|e| e.ok())
                     .filter_map(|e| {
                         let name = e.file_name().to_string_lossy().into_owned();
+                        if name.ends_with(".metrics.json") {
+                            return None;
+                        }
                         name.strip_suffix(".json").map(|s| s.to_string())
                     })
                     .collect()
@@ -692,6 +716,24 @@ mod tests {
             .filter(|n| n.contains("tmp"))
             .collect();
         assert!(stray.is_empty(), "stray tmp files: {stray:?}");
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn leg_metrics_roundtrip_and_not_listed_as_leg() {
+        let store = tmp_store("metrics");
+        store.save_leg("fig8", &Json::obj(vec![("kind", Json::str("leg"))])).unwrap();
+        let doc = Json::obj(vec![
+            ("cache", Json::obj(vec![("probes", Json::num(3.0))])),
+            ("schema", Json::str("hem3d-metrics-v1")),
+        ]);
+        store.save_leg_metrics("fig8", &doc).unwrap();
+
+        let loaded = store.load_leg_metrics("fig8").expect("metrics load");
+        assert_eq!(loaded.to_pretty(), doc.to_pretty());
+        assert!(store.load_leg_metrics("nope").is_none());
+        // The sibling artifact must not alias as a leg called "fig8.metrics".
+        assert_eq!(store.list_leg_ids(), vec!["fig8".to_string()]);
         std::fs::remove_dir_all(store.root()).ok();
     }
 }

@@ -1,0 +1,109 @@
+//! Rate-limited stderr progress heartbeat for interactive runs.
+//!
+//! `campaign`/`optimize` can take minutes on large efforts with nothing on
+//! the terminal until a leg completes.  The heartbeat prints one stderr
+//! line every couple of seconds — evaluations done, evals/s, cache hit
+//! rate, leg progress, and an ETA once leg durations are observable.
+//!
+//! Strictly out-of-band: off by default, writes only to stderr (stdout
+//! reports and the CI greps are unaffected), and the disabled probe cost
+//! is one relaxed atomic load.  The enabled probe path is also cheap —
+//! two relaxed increments, with the emission check amortized to every
+//! 64th probe and gated behind a CAS on the last-emit timestamp so
+//! concurrent workers never double-print.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Master switch — the only state a disabled [`probe`] reads.
+static ON: AtomicBool = AtomicBool::new(false);
+/// Cache probes observed (score() entries).
+static PROBES: AtomicU64 = AtomicU64::new(0);
+/// Distinct evaluations observed (insert-gated misses).
+static EVALS: AtomicU64 = AtomicU64::new(0);
+/// Legs completed so far.
+static LEGS_DONE: AtomicU64 = AtomicU64::new(0);
+/// Total legs in the run (0 = unknown; no ETA shown).
+static LEGS_TOTAL: AtomicU64 = AtomicU64::new(0);
+/// Nanoseconds-since-start of the last emitted line (CAS-guarded).
+static LAST_NS: AtomicU64 = AtomicU64::new(0);
+/// Wall-clock origin for rates and the ETA.
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Minimum interval between printed lines.
+const INTERVAL_NS: u64 = 2_000_000_000;
+
+/// Turn the heartbeat on for a run of `total_legs` legs (0 if unknown —
+/// progress still prints, without the leg fraction and ETA).
+pub fn enable(total_legs: usize) {
+    let _ = START.get_or_init(Instant::now);
+    LEGS_TOTAL.store(total_legs as u64, Ordering::Relaxed);
+    ON.store(true, Ordering::Relaxed);
+}
+
+/// Record one cache probe (`evaluated` when it became a distinct
+/// evaluation), possibly emitting a progress line.  One relaxed load when
+/// the heartbeat is off.
+pub fn probe(evaluated: bool) {
+    if !ON.load(Ordering::Relaxed) {
+        return;
+    }
+    let n = PROBES.fetch_add(1, Ordering::Relaxed) + 1;
+    if evaluated {
+        EVALS.fetch_add(1, Ordering::Relaxed);
+    }
+    // Amortize the clock read: only every 64th probe may emit.
+    if n & 63 == 0 {
+        maybe_emit();
+    }
+}
+
+/// Record a completed leg and emit a line (leg boundaries always print).
+pub fn leg_done() {
+    if !ON.load(Ordering::Relaxed) {
+        return;
+    }
+    LEGS_DONE.fetch_add(1, Ordering::Relaxed);
+    // Reset the rate limiter so the boundary line always appears.
+    LAST_NS.store(0, Ordering::Relaxed);
+    maybe_emit();
+}
+
+fn maybe_emit() {
+    let start = START.get_or_init(Instant::now);
+    let now_ns = start.elapsed().as_nanos() as u64;
+    let last = LAST_NS.load(Ordering::Relaxed);
+    if now_ns.saturating_sub(last) < INTERVAL_NS && last != 0 {
+        return;
+    }
+    // One winner per interval; losers skip (another thread just printed).
+    if LAST_NS
+        .compare_exchange(last, now_ns.max(1), Ordering::Relaxed, Ordering::Relaxed)
+        .is_err()
+    {
+        return;
+    }
+    let probes = PROBES.load(Ordering::Relaxed);
+    let evals = EVALS.load(Ordering::Relaxed);
+    let done = LEGS_DONE.load(Ordering::Relaxed);
+    let total = LEGS_TOTAL.load(Ordering::Relaxed);
+    let secs = (now_ns as f64 / 1e9).max(1e-9);
+    let rate = evals as f64 / secs;
+    let hit_rate = if probes > 0 {
+        100.0 * (probes - evals.min(probes)) as f64 / probes as f64
+    } else {
+        0.0
+    };
+    let mut line = format!(
+        "[hem3d] {evals} evals ({rate:.1}/s) · {probes} probes · {hit_rate:.0}% cache hits"
+    );
+    if total > 0 {
+        line.push_str(&format!(" · leg {done}/{total}"));
+        if done > 0 && done < total {
+            let eta = secs / done as f64 * (total - done) as f64;
+            line.push_str(&format!(" · eta {eta:.0}s"));
+        }
+    }
+    eprintln!("{line}");
+}

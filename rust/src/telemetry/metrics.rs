@@ -1,0 +1,430 @@
+//! Unified metrics registry: per-leg counters with deterministic snapshots.
+//!
+//! One [`Metrics`] instance lives per campaign leg (owned by the leg's
+//! `opt::Problem` and shared with the validation stage), absorbing the
+//! counters that used to be scattered across the codebase — cache
+//! probe/hit/warm tallies, leg-local scheduler batch/job counts, ladder
+//! certification stats, per-stage pipeline call/unit counts and Monte
+//! Carlo sample tallies — behind one [`Counter`]/[`Histogram`] API.
+//!
+//! # Determinism contract (DESIGN.md §17)
+//!
+//! Everything a snapshot serializes is a pure function of the *work* a leg
+//! performs, never of the schedule that performed it, so `metrics.json` is
+//! byte-identical across reruns and across `--workers 1` vs `--workers 8`:
+//!
+//! * Cache counts are probe-derived, not lock-race-derived: `probes` is
+//!   counted once per `score()` call (the probe sequence is deterministic),
+//!   `misses` equals the insert-gated distinct-evaluation count (first
+//!   writer wins — worker-invariant by the same argument as
+//!   `Problem::eval_count`), and `hits = probes - misses`.  The raw
+//!   `EvalCache` hit/miss atomics are deliberately *not* exported: two
+//!   workers racing the same cold key both count a raw miss where a serial
+//!   run counts miss + hit.
+//! * Scheduler counts are the leg's own *submission-side* batch/job
+//!   tallies.  Steal and idle counters are schedule-dependent by nature
+//!   and stay out of the artifact — they remain observable through the
+//!   bench harness, the heartbeat, and the trace.
+//! * Stage ([`Site`]) counts are recorded through a thread-local
+//!   [`MetricsScope`] installed only around deterministic units of work
+//!   (the per-candidate validation closures and the serial leg body).
+//!   Code fanned as stealable jobs (MC samples) must not call [`record`]
+//!   directly; its caller records the deterministic aggregate instead.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// A monotone event counter (relaxed atomics — counts, not ordering).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter.
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n` events.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current count.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A power-of-two-bucketed histogram of recorded values.
+///
+/// Buckets are commutative counts, so the aggregate is independent of
+/// recording order — deterministic whenever the recorded multiset is.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    /// Bucket 0 holds zeros; bucket `i >= 1` holds `(2^(i-2), 2^(i-1)]`
+    /// (its label is `<=2^(i-1)`), with everything above `2^31` clamped
+    /// into the last bucket.
+    buckets: [Counter; 33],
+    sum: Counter,
+    count: Counter,
+}
+
+impl Histogram {
+    /// A zeroed histogram.
+    pub const fn new() -> Histogram {
+        const ZERO: Counter = Counter::new();
+        Histogram { buckets: [ZERO; 33], sum: ZERO, count: ZERO }
+    }
+
+    /// Record one value.
+    pub fn record(&self, value: u64) {
+        // ceil(log2(value)) + 1, with 0 in its own bucket.
+        let bucket = match value {
+            0 => 0,
+            v => (64 - (v - 1).leading_zeros()) as usize + 1,
+        };
+        self.buckets[bucket.min(32)].add(1);
+        self.sum.add(value);
+        self.count.add(1);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    /// Sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.get()
+    }
+
+    /// Snapshot as `{count, sum, buckets: {"<=N": count, ...}}` with only
+    /// the populated buckets serialized.
+    pub fn snapshot(&self) -> Json {
+        let mut buckets = Vec::new();
+        let labels: Vec<String> = (0..33u32)
+            .map(|i| {
+                if i == 0 {
+                    "<=0".to_string()
+                } else {
+                    format!("<={}", 1u64 << (i - 1).min(63))
+                }
+            })
+            .collect();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.get();
+            if n > 0 {
+                buckets.push((labels[i].as_str(), Json::num(n as f64)));
+            }
+        }
+        Json::obj(vec![
+            ("buckets", Json::obj(buckets)),
+            ("count", Json::num(self.count() as f64)),
+            ("sum", Json::num(self.sum() as f64)),
+        ])
+    }
+}
+
+/// Pipeline stages the registry attributes work to (the `spans` section of
+/// `metrics.json`; the trace recorder uses the same names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Traffic/tensor encoding (`EncodeCtx` construction).
+    Encode,
+    /// BFS routing table + escape-tree builds.
+    Routing,
+    /// Sparse objective evaluations (`evaluate_sparse`).
+    SparseEval,
+    /// Cycle-level wormhole NoC simulation.
+    NocSim,
+    /// Detailed steady-state thermal solves (units: Jacobi fine sweeps).
+    ThermalSolve,
+    /// Transient DTM scenario simulation (units: implicit-Euler steps).
+    TransientSim,
+    /// Static timing analysis runs.
+    Sta,
+    /// Variation Monte Carlo (units: chip-instance samples).
+    VariationMc,
+    /// Fault Monte Carlo (units: fault-set samples).
+    FaultMc,
+    /// Ladder L0 analytic bound computations.
+    LadderBound,
+    /// Per-candidate validation passes.
+    Validate,
+}
+
+impl Site {
+    /// Every site, in serialization order.
+    pub const ALL: [Site; 11] = [
+        Site::Encode,
+        Site::Routing,
+        Site::SparseEval,
+        Site::NocSim,
+        Site::ThermalSolve,
+        Site::TransientSim,
+        Site::Sta,
+        Site::VariationMc,
+        Site::FaultMc,
+        Site::LadderBound,
+        Site::Validate,
+    ];
+
+    /// Stable snake-ish name (shared with the span recorder).
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::Encode => "encode",
+            Site::Routing => "routing",
+            Site::SparseEval => "sparse-eval",
+            Site::NocSim => "noc-sim",
+            Site::ThermalSolve => "thermal-solve",
+            Site::TransientSim => "transient-sim",
+            Site::Sta => "sta",
+            Site::VariationMc => "variation-mc",
+            Site::FaultMc => "fault-mc",
+            Site::LadderBound => "ladder-bound",
+            Site::Validate => "validate",
+        }
+    }
+
+    fn index(self) -> usize {
+        Site::ALL.iter().position(|s| *s == self).unwrap()
+    }
+}
+
+/// Per-site call and work-unit counters.
+#[derive(Debug, Default)]
+struct SiteStats {
+    calls: Counter,
+    units: Counter,
+}
+
+/// The per-leg metrics registry.  Cheap to share (`Arc`), written with
+/// relaxed atomics from any thread, snapshotted once per leg.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// `score()` entries — the deterministic probe sequence.
+    pub probes: Counter,
+    /// Distinct evaluations (insert-gated; equals `Problem::eval_count`).
+    pub evals: Counter,
+    /// Distinct designs served from the warm (snapshot) cache.
+    pub warm_hits: Counter,
+    /// Ladder candidates resolved by a certified L0 bound.
+    pub certified_l0: Counter,
+    /// Stale L0 bounds later promoted to the exact rung.
+    pub promoted: Counter,
+    /// Leg-local scheduler batches submitted.
+    pub batches: Counter,
+    /// Leg-local scheduler jobs submitted.
+    pub jobs: Counter,
+    /// Distribution of MC fan-out sizes actually aggregated per candidate
+    /// (budgeted validation truncates; this is the honest tally).
+    pub mc_fanout: Histogram,
+    sites: [SiteStats; 11],
+}
+
+impl Metrics {
+    /// A zeroed registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Count one call at `site` performing `units` units of work.
+    pub fn record_site(&self, site: Site, units: u64) {
+        let s = &self.sites[site.index()];
+        s.calls.add(1);
+        s.units.add(units);
+    }
+
+    /// Count one leg-local scheduler batch of `jobs` jobs.
+    pub fn batch(&self, jobs: u64) {
+        self.batches.add(1);
+        self.jobs.add(jobs);
+    }
+
+    /// Calls and units recorded at `site`.
+    pub fn site(&self, site: Site) -> (u64, u64) {
+        let s = &self.sites[site.index()];
+        (s.calls.get(), s.units.get())
+    }
+
+    /// Serialize the deterministic snapshot — the per-leg `metrics.json`
+    /// artifact.  Top-level keys: `cache`, `scheduler`, `spans`, `mc`,
+    /// `ladder` (+ `schema`).  Counts only, never timestamps.
+    pub fn snapshot(&self) -> Json {
+        let probes = self.probes.get();
+        let misses = self.evals.get();
+        let spans = Json::Obj(
+            Site::ALL
+                .iter()
+                .map(|&site| {
+                    let (calls, units) = self.site(site);
+                    (
+                        site.name().to_string(),
+                        Json::obj(vec![
+                            ("calls", Json::num(calls as f64)),
+                            ("units", Json::num(units as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let (var_calls, var_samples) = self.site(Site::VariationMc);
+        let (fault_calls, fault_samples) = self.site(Site::FaultMc);
+        Json::obj(vec![
+            ("schema", Json::str("hem3d-metrics-v1")),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("probes", Json::num(probes as f64)),
+                    ("misses", Json::num(misses as f64)),
+                    ("hits", Json::num(probes.saturating_sub(misses) as f64)),
+                    ("warm_hits", Json::num(self.warm_hits.get() as f64)),
+                ]),
+            ),
+            (
+                "scheduler",
+                Json::obj(vec![
+                    ("batches", Json::num(self.batches.get() as f64)),
+                    ("jobs", Json::num(self.jobs.get() as f64)),
+                ]),
+            ),
+            ("spans", spans),
+            (
+                "mc",
+                Json::obj(vec![
+                    ("variation_evals", Json::num(var_calls as f64)),
+                    ("variation_samples", Json::num(var_samples as f64)),
+                    ("fault_evals", Json::num(fault_calls as f64)),
+                    ("fault_samples", Json::num(fault_samples as f64)),
+                    ("fanout", self.mc_fanout.snapshot()),
+                ]),
+            ),
+            (
+                "ladder",
+                Json::obj(vec![
+                    ("certified_l0", Json::num(self.certified_l0.get() as f64)),
+                    ("promoted", Json::num(self.promoted.get() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+thread_local! {
+    /// The registry work on this thread is currently attributed to.
+    static CURRENT: Cell<*const Metrics> = const { Cell::new(std::ptr::null()) };
+}
+
+/// RAII attribution scope: while alive, [`record`] on this thread counts
+/// into `metrics`.  Scopes nest (a stolen validation job installs its own
+/// scope over the thief's and restores it on completion), and the guard
+/// holds an `Arc` so the target outlives every recording.  Not `Send` —
+/// the installed pointer is thread-local.
+pub struct MetricsScope {
+    prev: *const Metrics,
+    _own: Arc<Metrics>,
+}
+
+impl MetricsScope {
+    /// Attribute [`record`] calls on this thread to `metrics` until drop.
+    pub fn enter(metrics: &Arc<Metrics>) -> MetricsScope {
+        let prev = CURRENT.with(|c| c.replace(Arc::as_ptr(metrics)));
+        MetricsScope { prev, _own: Arc::clone(metrics) }
+    }
+}
+
+impl Drop for MetricsScope {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Count one call at `site` (`units` units of work) into the registry the
+/// current thread is scoped to; a no-op (one TLS read) outside any scope.
+///
+/// Only call this from deterministic units of work — serial leg code or a
+/// closure that installed its own [`MetricsScope`] — never from code that
+/// runs as a stealable job under someone else's scope.
+pub fn record(site: Site, units: u64) {
+    let p = CURRENT.with(|c| c.get());
+    if p.is_null() {
+        return;
+    }
+    // SAFETY: a non-null pointer was installed by a live `MetricsScope` on
+    // this thread, whose `Arc` keeps the target alive until the scope
+    // drops (which resets the pointer first).
+    unsafe { &*p }.record_site(site, units);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_deterministic_and_derives_cache_hits() {
+        let m = Metrics::new();
+        m.probes.add(10);
+        m.evals.add(4);
+        m.warm_hits.add(1);
+        m.batch(3);
+        m.record_site(Site::Validate, 1);
+        m.record_site(Site::VariationMc, 16);
+        m.mc_fanout.record(16);
+        let a = m.snapshot();
+        let b = m.snapshot();
+        assert_eq!(a.to_pretty(), b.to_pretty());
+        let cache = a.get("cache").unwrap();
+        assert_eq!(cache.get("hits").unwrap().as_u64(), Some(6));
+        assert_eq!(cache.get("misses").unwrap().as_u64(), Some(4));
+        for key in ["cache", "scheduler", "spans", "mc", "ladder"] {
+            assert!(a.get(key).is_some(), "missing top-level key {key}");
+        }
+        assert_eq!(
+            a.get("mc").unwrap().get("variation_samples").unwrap().as_u64(),
+            Some(16)
+        );
+        // The document round-trips through the parser unchanged.
+        let reparsed = crate::util::json::parse(&a.to_pretty()).unwrap();
+        assert_eq!(reparsed.to_pretty(), a.to_pretty());
+    }
+
+    #[test]
+    fn scopes_nest_and_record_is_inert_outside_any_scope() {
+        record(Site::Encode, 7); // must not crash or count anywhere
+        let outer = Arc::new(Metrics::new());
+        let inner = Arc::new(Metrics::new());
+        {
+            let _o = MetricsScope::enter(&outer);
+            record(Site::Routing, 2);
+            {
+                let _i = MetricsScope::enter(&inner);
+                record(Site::Routing, 5);
+            }
+            record(Site::Routing, 1);
+        }
+        record(Site::Routing, 100);
+        assert_eq!(outer.site(Site::Routing), (2, 3));
+        assert_eq!(inner.site(Site::Routing), (1, 5));
+    }
+
+    #[test]
+    fn histogram_buckets_by_power_of_two() {
+        let h = Histogram::new();
+        for v in [0, 1, 2, 3, 4, 16, 16, 1 << 20] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum(), 0 + 1 + 2 + 3 + 4 + 16 + 16 + (1 << 20));
+        let snap = h.snapshot();
+        let buckets = snap.get("buckets").unwrap();
+        assert_eq!(buckets.get("<=0").unwrap().as_u64(), Some(1));
+        assert_eq!(buckets.get("<=1").unwrap().as_u64(), Some(1));
+        assert_eq!(buckets.get("<=2").unwrap().as_u64(), Some(1));
+        assert_eq!(buckets.get("<=4").unwrap().as_u64(), Some(2));
+        assert_eq!(buckets.get("<=16").unwrap().as_u64(), Some(2));
+        assert_eq!(buckets.get("<=1048576").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,39 @@
+//! Observability substrate: span tracing, unified metrics, heartbeat.
+//!
+//! Three cooperating layers, all dependency-free and all strictly
+//! *out-of-band* — nothing in this module may influence a result
+//! (DESIGN.md §17):
+//!
+//! * [`spans`] — a lock-free per-thread span recorder with RAII scope
+//!   guards over the hot pipeline (encode → routing → NoC sim → thermal
+//!   solve → transient sim → variation/fault MC → ladder → validation),
+//!   exported as Chrome trace-event JSON (`--trace-out trace.json`,
+//!   loadable in Perfetto / `chrome://tracing`) with one lane per OS
+//!   thread and worker-id annotations so steal schedules are visible.
+//!   Disabled (the default) it costs one relaxed atomic load per span
+//!   site and allocates nothing.
+//! * [`metrics`] — the unified counter registry: one [`metrics::Metrics`]
+//!   instance per campaign leg absorbing the previously scattered
+//!   counters (cache probe/hit/warm tallies, leg-local scheduler
+//!   batch/job counts, ladder certification stats, per-stage pipeline
+//!   counts, MC sample tallies) behind a single [`metrics::Counter`] /
+//!   [`metrics::Histogram`] API.  Snapshots serialize to the per-leg
+//!   `metrics.json` artifact beside the leg JSON in the run store —
+//!   deterministic *counts*, never timestamps, so artifacts are
+//!   byte-identical across reruns and worker counts.
+//! * [`heartbeat`] — a rate-limited stderr progress line (evals/s, cache
+//!   hit rate, leg progress, ETA) for interactive `campaign`/`optimize`
+//!   runs.  Off by default; never writes to stdout, so report piping and
+//!   the CI greps are unaffected.
+//!
+//! The contract every layer obeys: results are bit-identical with
+//! telemetry enabled, disabled, or absent; the disabled paths touch only
+//! relaxed atomics; and everything persisted is a pure function of the
+//! work performed, not of the schedule that performed it.
+
+pub mod heartbeat;
+pub mod metrics;
+pub mod spans;
+
+pub use metrics::{record, Metrics, MetricsScope, Site};
+pub use spans::{span, SpanGuard};

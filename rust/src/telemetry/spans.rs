@@ -1,0 +1,265 @@
+//! Lock-free span recorder with Chrome trace-event export.
+//!
+//! Recording model: every OS thread owns a lane (a monotonically assigned
+//! ordinal) and an event buffer in thread-local storage, so the hot path
+//! never takes a lock — a [`span`] on the enabled path appends one event
+//! to its own thread's buffer and bumps one global sequence counter.
+//! Buffers spill into the global sink when they reach capacity and when
+//! the thread exits (pool workers are scoped, so they always flush before
+//! an export can run).  Disabled — the default — a span site costs exactly
+//! one relaxed atomic load and allocates nothing.
+//!
+//! Timestamps come from one process-wide monotonic epoch, so per-lane
+//! timestamps are monotone by construction; RAII guards give LIFO begin/
+//! end nesting per lane even when a work-stealing worker executes stolen
+//! jobs inside an open span (the stolen job's spans nest fully within).
+//! Export sorts by `(lane, seq)` and emits Chrome trace-event JSON
+//! (`ph: B/E`, `pid` 0, `tid` = lane) plus a `thread_name` metadata record
+//! per lane carrying the scheduler worker index observed on that thread —
+//! load the file in Perfetto or `chrome://tracing` to see the steal
+//! schedule laid out per worker.
+//!
+//! Tracing is strictly out-of-band: no result anywhere depends on whether
+//! it is enabled (`tests/telemetry.rs` pins leg and figure artifacts
+//! byte-identical with tracing on vs off).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Global enable switch — the only state a disabled span site reads.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Next unassigned lane ordinal (one per OS thread that ever records).
+static NEXT_LANE: AtomicU32 = AtomicU32::new(0);
+/// Global event sequence — total order across lanes, emission order within.
+static SEQ: AtomicU64 = AtomicU64::new(0);
+/// Completed (flushed) events awaiting export.
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+/// Process-wide monotonic epoch all timestamps are measured from.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Buffered events per thread before spilling into the sink.
+const FLUSH_AT: usize = 4096;
+
+/// One recorded begin/end event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Lane (per-OS-thread ordinal) — the Chrome `tid`.
+    pub lane: u32,
+    /// Work-stealing worker index observed on this thread (0 = caller).
+    pub worker: u32,
+    /// Global emission sequence number.
+    pub seq: u64,
+    /// Nanoseconds since the process epoch.
+    pub ts_ns: u64,
+    /// `true` for a begin (`B`) event, `false` for an end (`E`).
+    pub begin: bool,
+    /// Span name (static: stage names, never per-item strings).
+    pub name: &'static str,
+}
+
+/// Per-thread lane + event buffer; flushes on capacity and on thread exit.
+struct LaneBuf {
+    lane: u32,
+    buf: Vec<Event>,
+}
+
+impl LaneBuf {
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            SINK.lock().unwrap().append(&mut self.buf);
+        }
+    }
+}
+
+impl Drop for LaneBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LANE_BUF: RefCell<LaneBuf> = RefCell::new(LaneBuf {
+        lane: NEXT_LANE.fetch_add(1, Ordering::Relaxed),
+        buf: Vec::new(),
+    });
+}
+
+/// Turn recording on or off.  Results never depend on this; only whether
+/// span sites append events does.
+pub fn set_enabled(on: bool) {
+    if on {
+        // Pin the epoch before the first event so ts 0 is "tracing began".
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether recording is currently on (one relaxed load — the full cost of
+/// a disabled span site).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn emit(name: &'static str, begin: bool) {
+    let ts_ns = EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64;
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let worker = crate::util::scheduler::current_worker().unwrap_or(0) as u32;
+    LANE_BUF.with(|cell| {
+        let mut lb = cell.borrow_mut();
+        let lane = lb.lane;
+        lb.buf.push(Event { lane, worker, seq, ts_ns, begin, name });
+        if lb.buf.len() >= FLUSH_AT {
+            lb.flush();
+        }
+    });
+}
+
+/// RAII span scope: emits the matching end event when dropped.
+///
+/// The guard remembers whether its begin event was actually recorded, so
+/// flipping [`set_enabled`] mid-span can never unbalance a lane: an end is
+/// emitted iff the begin was.
+#[must_use = "a span guard records its end event on drop"]
+pub struct SpanGuard {
+    name: &'static str,
+    armed: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            emit(self.name, false);
+        }
+    }
+}
+
+/// Open a span named `name` on the current thread's lane.  Disabled, this
+/// is one relaxed atomic load; enabled, one buffered event now and one
+/// when the returned guard drops.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { name, armed: false };
+    }
+    emit(name, true);
+    SpanGuard { name, armed: true }
+}
+
+/// Flush the calling thread's buffered events into the sink.
+pub fn flush_thread() {
+    LANE_BUF.with(|cell| cell.borrow_mut().flush());
+}
+
+/// Drain every flushed event (current thread's buffer included), sorted by
+/// `(lane, seq)` — per-lane emission order.  Threads still alive with
+/// buffered events keep them until their next flush; pool workers are
+/// scoped and have always exited (and therefore flushed) by export time.
+pub fn drain() -> Vec<Event> {
+    flush_thread();
+    let mut events = std::mem::take(&mut *SINK.lock().unwrap());
+    events.sort_by_key(|e| (e.lane, e.seq));
+    events
+}
+
+/// Drain all recorded events and write them as Chrome trace-event JSON
+/// (the `chrome://tracing` / Perfetto format): one `B`/`E` pair per span,
+/// `pid` 0, `tid` = lane, `ts` in microseconds, plus a `thread_name`
+/// metadata record per lane naming the work-stealing worker index the
+/// lane was observed on.  Returns the number of events written.
+pub fn write_chrome_trace(path: &str) -> anyhow::Result<usize> {
+    use std::fmt::Write as _;
+    let events = drain();
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    // One metadata record per lane: name the lane by the worker index its
+    // first event saw (pool threads keep one index for a pool's lifetime;
+    // the caller thread is worker 0 in every pool it drives).
+    let mut named_lane: Option<u32> = None;
+    for e in &events {
+        if named_lane != Some(e.lane) {
+            named_lane = Some(e.lane);
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"worker {} (lane {})\"}}}}",
+                e.lane, e.worker, e.lane
+            );
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"ph\":\"{}\",\"pid\":0,\"tid\":{},\"ts\":{:.3},\"name\":\"{}\"}}",
+            if e.begin { 'B' } else { 'E' },
+            e.lane,
+            e.ts_ns as f64 / 1e3,
+            e.name
+        );
+    }
+    out.push_str("]}");
+    std::fs::write(path, &out)?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // All span-recorder assertions live in one test: the recorder is
+    // process-global state, and unit tests in one binary run concurrently.
+    #[test]
+    fn disabled_records_nothing_enabled_balances_and_orders() {
+        assert!(!enabled());
+        {
+            let _g = span("cold");
+        }
+        // Nothing from the disabled path (other tests never enable spans).
+        flush_thread();
+
+        set_enabled(true);
+        {
+            let _outer = span("outer");
+            let _inner = span("inner");
+        }
+        // A guard opened while enabled still closes after disabling.
+        let hanging = span("hanging");
+        set_enabled(false);
+        drop(hanging);
+        {
+            let _g = span("post-disable");
+        }
+
+        let events = drain();
+        let names: Vec<(&str, bool)> = events.iter().map(|e| (e.name, e.begin)).collect();
+        assert!(!names.contains(&("cold", true)));
+        assert!(!names.contains(&("post-disable", true)));
+        // LIFO nesting: inner closes before outer; the mid-span disable
+        // still produced a balanced pair.
+        assert_eq!(
+            names,
+            vec![
+                ("outer", true),
+                ("inner", true),
+                ("inner", false),
+                ("outer", false),
+                ("hanging", true),
+                ("hanging", false),
+            ]
+        );
+        // Per-lane timestamps are monotone and seqs strictly increase.
+        for w in events.windows(2) {
+            assert!(w[0].ts_ns <= w[1].ts_ns);
+            assert!(w[0].seq < w[1].seq);
+        }
+        // Drain emptied the sink.
+        assert!(drain().is_empty());
+    }
+}

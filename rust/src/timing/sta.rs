@@ -89,6 +89,8 @@ pub struct BlockTiming {
 
 /// Time every path of a planar block; returns the critical result.
 pub fn time_block_planar(proc_: &Process, nl: &Netlist) -> BlockTiming {
+    let _span = crate::telemetry::span("sta");
+    crate::telemetry::record(crate::telemetry::Site::Sta, nl.paths.len() as u64);
     let mut crit = PathTiming { delay_ps: 0.0, gate_ps: 0.0, wire_ps: 0.0, repeaters: 0 };
     let mut total_rep = 0;
     for p in &nl.paths {

@@ -24,13 +24,27 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-/// Parse a level name; unknown names fall back to Info.
+/// Parse a level name; `trace` is accepted as an alias for `debug` (this
+/// logger has no finer tier).  An unknown name falls back to Info, but
+/// says so once instead of silently eating the typo (`--log inf`).
 pub fn level_from_str(s: &str) -> Level {
     match s {
         "error" => Level::Error,
         "warn" => Level::Warn,
-        "debug" => Level::Debug,
-        _ => Level::Info,
+        "info" => Level::Info,
+        "debug" | "trace" => Level::Debug,
+        other => {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                emit(
+                    Level::Warn,
+                    format_args!(
+                        "unknown log level '{other}' (expected error|warn|info|debug|trace); using info"
+                    ),
+                );
+            });
+            Level::Info
+        }
     }
 }
 
@@ -87,7 +101,14 @@ mod tests {
 
     #[test]
     fn level_parsing() {
+        assert_eq!(level_from_str("error"), Level::Error);
+        assert_eq!(level_from_str("warn"), Level::Warn);
+        assert_eq!(level_from_str("info"), Level::Info);
         assert_eq!(level_from_str("debug"), Level::Debug);
+        assert_eq!(level_from_str("trace"), Level::Debug, "trace aliases debug");
+        // Unknown names warn once (a Once, not asserted here) and fall
+        // back to Info rather than silently changing verbosity.
+        assert_eq!(level_from_str("nonsense"), Level::Info);
         assert_eq!(level_from_str("nonsense"), Level::Info);
     }
 }

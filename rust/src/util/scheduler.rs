@@ -470,6 +470,14 @@ thread_local! {
     static WORKER: Cell<Option<(usize, *const PoolCore)>> = const { Cell::new(None) };
 }
 
+/// Worker index of the pool the current thread is running inside, if any
+/// (`Some(0)` for the initiating thread while it drives a pool).  Used by
+/// the telemetry span recorder to annotate trace lanes; `None` outside any
+/// pool.
+pub fn current_worker() -> Option<usize> {
+    WORKER.with(|w| w.get().map(|(me, _)| me))
+}
+
 /// One full sweep over the other workers' deques; `Retry` re-probes the
 /// same victim a few times before moving on.
 fn steal_any(pool: &PoolCore, me: usize) -> Option<Job> {

@@ -56,6 +56,7 @@ pub fn mc_effects(
     model: &VariationModel,
     workers: usize,
 ) -> Vec<SampleEffects> {
+    let _span = crate::telemetry::span("variation-mc");
     let idxs: Vec<u64> = (0..model.cfg.samples as u64).collect();
     ws_map_named("variation-mc-sample", idxs, workers, |k| {
         sample_effects(ctx, design, model, k)

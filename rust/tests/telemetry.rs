@@ -1,0 +1,167 @@
+//! Integration: the telemetry layer is strictly out-of-band (DESIGN.md §17).
+//!
+//! * figure JSON — the literal campaign output — is byte-identical with
+//!   span tracing on vs off;
+//! * the exported Chrome trace is well-formed: every non-metadata event is
+//!   a `B`/`E` with balanced nesting and monotone timestamps per lane;
+//! * a leg's metrics snapshot is deterministic: byte-identical across
+//!   reruns and across worker counts (1 vs 8), because every counter is
+//!   insert-gated or submission-side, never schedule-dependent;
+//! * the store persists the snapshot beside the leg artifact and never
+//!   confuses it with a leg.
+//!
+//! The span recorder is process-global state and the test harness runs
+//! `#[test]` fns concurrently, so every test here serializes on one lock;
+//! only `spans_are_out_of_band_and_trace_is_well_formed` ever enables
+//! recording, and it disables it again before releasing the lock.
+
+use std::sync::Mutex;
+
+use hem3d::config::Tech;
+use hem3d::coordinator::campaign::{run_leg_warm, Algo, Effort, LegWorld, Selection};
+use hem3d::coordinator::figures;
+use hem3d::opt::Mode;
+use hem3d::store::Engine;
+use hem3d::telemetry::spans;
+use hem3d::util::json::{self, Json};
+use hem3d::variation::VariationConfig;
+
+static GLOBAL_STATE: Mutex<()> = Mutex::new(());
+
+fn tiny(workers: usize) -> Effort {
+    let mut e = Effort::quick();
+    e.stage.max_iters = 2;
+    e.stage.local.max_steps = 6;
+    e.stage.local.neighbors_per_step = 6;
+    e.stage.meta_candidates = 8;
+    e.validate_cap = 4;
+    e.workers = workers;
+    e
+}
+
+fn leg_metrics(world: &LegWorld, workers: usize, v: Option<&VariationConfig>) -> Json {
+    run_leg_warm(
+        world,
+        Mode::Pt,
+        Algo::MooStage,
+        Selection::MinEtUnderTth,
+        &tiny(workers),
+        world.seed,
+        None,
+        v,
+        None,
+        None,
+        false,
+    )
+    .2
+}
+
+#[test]
+fn spans_are_out_of_band_and_trace_is_well_formed() {
+    let _lock = GLOBAL_STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let benches = ["knn"];
+    spans::set_enabled(false);
+    let _ = spans::drain();
+
+    let off = figures::fig8_json(&figures::fig8(&benches, &tiny(2), 11)).to_pretty();
+    spans::set_enabled(true);
+    let on = figures::fig8_json(&figures::fig8(&benches, &tiny(2), 11)).to_pretty();
+    spans::set_enabled(false);
+    assert_eq!(off, on, "fig8 JSON must be byte-identical with tracing on vs off");
+
+    let path = std::env::temp_dir().join(format!("hem3d_trace_{}.json", std::process::id()));
+    let n = spans::write_chrome_trace(path.to_str().unwrap()).expect("trace export");
+    assert!(n > 0, "a traced campaign leg must record events");
+
+    let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).expect("trace parses");
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    let mut depth: std::collections::HashMap<u64, i64> = std::collections::HashMap::new();
+    let mut last_ts: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
+    let mut spans_seen = 0usize;
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("phase");
+        if ph == "M" {
+            continue; // thread_name metadata
+        }
+        let tid = e.get("tid").and_then(|t| t.as_f64()).expect("tid") as u64;
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("ts");
+        let prev = last_ts.insert(tid, ts).unwrap_or(0.0);
+        assert!(ts >= prev, "lane {tid}: timestamps must be monotone ({prev} -> {ts})");
+        let d = depth.entry(tid).or_insert(0);
+        match ph {
+            "B" => *d += 1,
+            "E" => {
+                *d -= 1;
+                assert!(*d >= 0, "lane {tid}: E without a matching B");
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+        spans_seen += 1;
+    }
+    assert_eq!(spans_seen, n, "every drained event appears in the file");
+    for (lane, d) in depth {
+        assert_eq!(d, 0, "lane {lane}: unbalanced B/E events");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn metrics_snapshot_is_deterministic_across_reruns_and_worker_counts() {
+    let _lock = GLOBAL_STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let world = LegWorld::new("bp", Tech::M3d, 3);
+    let m1 = leg_metrics(&world, 1, None).to_pretty();
+    let m1b = leg_metrics(&world, 1, None).to_pretty();
+    let m8 = leg_metrics(&world, 8, None).to_pretty();
+    assert_eq!(m1, m1b, "metrics must be identical across reruns");
+    assert_eq!(m1, m8, "metrics must be identical for 1 vs 8 workers");
+
+    let doc = json::parse(&m1).expect("snapshot parses");
+    assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some("hem3d-metrics-v1"));
+    for key in ["cache", "ladder", "mc", "scheduler", "spans"] {
+        assert!(doc.get(key).is_some(), "missing top-level key {key}");
+    }
+    let cache = doc.get("cache").unwrap();
+    let num = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    let (probes, misses, hits) =
+        (num(cache, "probes"), num(cache, "misses"), num(cache, "hits"));
+    assert!(probes > 0.0 && misses > 0.0, "a computed leg probes and evaluates");
+    assert_eq!(hits, probes - misses, "hits must be the derived complement");
+    let sched = doc.get("scheduler").unwrap();
+    assert!(num(sched, "batches") > 0.0 && num(sched, "jobs") > 0.0);
+}
+
+#[test]
+fn robust_leg_metrics_count_mc_volume_and_stay_worker_independent() {
+    let _lock = GLOBAL_STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let world = LegWorld::new("nw", Tech::M3d, 5);
+    let v = VariationConfig { samples: 6, ..VariationConfig::default() };
+    let m1 = leg_metrics(&world, 1, Some(&v)).to_pretty();
+    let m4 = leg_metrics(&world, 4, Some(&v)).to_pretty();
+    assert_eq!(m1, m4, "robust-leg metrics must be identical for 1 vs 4 workers");
+
+    let doc = json::parse(&m1).unwrap();
+    let mc = doc.get("mc").unwrap();
+    let num = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    assert!(num(mc, "variation_evals") > 0.0, "robust validation runs variation MC");
+    assert!(
+        num(mc, "variation_samples") >= num(mc, "variation_evals"),
+        "each MC eval draws at least one sample"
+    );
+}
+
+#[test]
+fn engine_persists_metrics_beside_leg_artifacts() {
+    let _lock = GLOBAL_STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = std::env::temp_dir().join(format!("hem3d_tele_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let engine = Engine::open(&dir).unwrap();
+    let world = LegWorld::new("bp", Tech::M3d, 3);
+    engine.run_leg(&world, Mode::Pt, Algo::MooStage, Selection::MinEtUnderTth, &tiny(2), 3);
+
+    let store = engine.store().unwrap();
+    let ids = store.list_leg_ids();
+    assert_eq!(ids.len(), 1, "one computed leg, one leg id (metrics sibling excluded)");
+    let m = store.load_leg_metrics(&ids[0]).expect("metrics artifact written beside the leg");
+    assert_eq!(m.get("schema").and_then(|s| s.as_str()), Some("hem3d-metrics-v1"));
+    std::fs::remove_dir_all(&dir).ok();
+}
